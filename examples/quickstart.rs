@@ -1,0 +1,68 @@
+//! Quickstart: the whole Stannis pipeline in one minute.
+//!
+//! 1. Algorithm 1 tunes batch sizes on the modeled testbed.
+//! 2. A real cluster (1 host + 2 CSDs) comes up on the AOT artifacts.
+//! 3. Twenty steps of *real* distributed training run: PJRT executes
+//!    each worker's train step, gradients cross the ring allreduce,
+//!    replicas stay in lockstep.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use stannis::config::ExperimentConfig;
+use stannis::coordinator::{tune, TuneConfig};
+use stannis::perfmodel::PerfModel;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. modeled tuning (paper Table I) ------------------------------
+    let mut model = PerfModel::default();
+    let t = tune(&mut model, "mobilenet_v2", &TuneConfig::default())?;
+    println!(
+        "Algorithm 1: newport bs {} ({:.2} img/s), host bs {} ({:.2} img/s)",
+        t.newport_bs, t.newport_ips, t.host_bs, t.host_ips
+    );
+
+    // --- 2. real cluster --------------------------------------------------
+    let cfg = ExperimentConfig {
+        network: "mobilenet_v2_s".into(),
+        num_csds: 2,
+        include_host: true,
+        bs_csd: 4,
+        bs_host: 16,
+        steps: 20,
+        public_images: 512,
+        private_per_csd: 128,
+        ..Default::default()
+    };
+    println!(
+        "\nbringing up: 1 host (bs {}) + {} CSDs (bs {}) on {}",
+        cfg.bs_host, cfg.num_csds, cfg.bs_csd, cfg.network
+    );
+    let cluster = stannis::cluster::Cluster::bring_up(cfg.clone())?;
+    println!(
+        "placement: {} steps/epoch, host {} imgs, {} per CSD (privacy-checked)",
+        cluster.placement.steps_per_epoch,
+        cluster.placement.host_ids.len(),
+        cluster.placement.csd_ids[0].len()
+    );
+
+    // --- 3. real training --------------------------------------------------
+    let mut trainer = cluster.trainer()?;
+    let report = trainer.train(cfg.steps)?;
+    println!("\nstep losses (mean across {} workers):", trainer.num_workers());
+    for (i, loss) in report.losses.iter().enumerate() {
+        if i % 4 == 0 || i + 1 == report.losses.len() {
+            println!("  step {i:>3}: {loss:.4}");
+        }
+    }
+    println!(
+        "\n{} images, loss {:.4} -> {:.4}, replica divergence {:.2e} (lockstep)",
+        report.images_processed,
+        report.first_loss(),
+        report.last_loss(),
+        report.max_replica_divergence
+    );
+    anyhow::ensure!(report.last_loss() < report.first_loss(), "loss must decrease");
+    println!("quickstart OK");
+    Ok(())
+}

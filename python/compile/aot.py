@@ -1,0 +1,140 @@
+"""AOT pipeline: lower every (network, entry-point, batch-size) to HLO text.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, consumed by the Rust runtime (rust/src/runtime/):
+
+  artifacts/<net>/init.hlo.txt            (seed:i32) -> (p0..pN)
+  artifacts/<net>/train_bs<B>.hlo.txt     (p0..pN, x, y) -> (loss, g0..gN)
+  artifacts/<net>/eval_bs<B>.hlo.txt      (p0..pN, x, y) -> (loss, correct)
+  artifacts/manifest.json                 parameter order/shapes, costs,
+                                          artifact paths, batch sizes
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    build_model,
+    example_args,
+    make_eval_step,
+    make_init_fn,
+    make_train_step,
+    spec_dicts,
+)
+from .models import MODEL_NAMES
+
+# Batch sizes compiled per network. The primary network gets the full
+# tuning ladder (Algorithm 1 probes these); the comparison networks get
+# the subset the fig6/fig7 real-exec integration tests use.
+PRIMARY = "mobilenet_v2_s"
+TRAIN_BS = {
+    "mobilenet_v2_s": [1, 2, 4, 8, 16, 32],
+    "nasnet_s": [2, 8, 16],
+    "inception_v3_s": [2, 8, 16],
+    "squeezenet_s": [2, 8, 16],
+}
+EVAL_BS = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, *args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_network_artifacts(name: str, out_dir: pathlib.Path, verbose: bool = True):
+    model = build_model(name)
+    net_dir = out_dir / name
+    net_dir.mkdir(parents=True, exist_ok=True)
+
+    entry: dict = {"train": {}, "eval": {}}
+
+    t0 = time.time()
+    init_text = lower_entry(
+        make_init_fn(model), jax.ShapeDtypeStruct((), jnp.int32)
+    )
+    (net_dir / "init.hlo.txt").write_text(init_text)
+    entry["init"] = f"{name}/init.hlo.txt"
+
+    train_step = make_train_step(model)
+    eval_step = make_eval_step(model)
+    for bs in TRAIN_BS[name]:
+        params, x, y = example_args(model, bs)
+        text = lower_entry(lambda p, xx, yy: train_step(p, xx, yy), params, x, y)
+        rel = f"{name}/train_bs{bs}.hlo.txt"
+        (net_dir / f"train_bs{bs}.hlo.txt").write_text(text)
+        entry["train"][str(bs)] = rel
+        if verbose:
+            print(f"  {rel}: {len(text) / 1e6:.2f} MB")
+
+    params, x, y = example_args(model, EVAL_BS)
+    eval_text = lower_entry(lambda p, xx, yy: eval_step(p, xx, yy), params, x, y)
+    (net_dir / f"eval_bs{EVAL_BS}.hlo.txt").write_text(eval_text)
+    entry["eval"][str(EVAL_BS)] = f"{name}/eval_bs{EVAL_BS}.hlo.txt"
+
+    entry.update(
+        params=spec_dicts(model),
+        param_count=model.net.param_count,
+        macs_per_image=model.net.macs,
+        flops_per_image=model.net.flops,
+        input_hw=model.input_hw,
+        num_classes=model.num_classes,
+        train_batch_sizes=TRAIN_BS[name],
+        eval_batch_size=EVAL_BS,
+    )
+    if verbose:
+        print(
+            f"{name}: {model.net.param_count} params, "
+            f"{model.net.macs / 1e6:.2f}M MACs/img ({time.time() - t0:.1f}s)"
+        )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--models", nargs="*", default=MODEL_NAMES, help="networks to lower"
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"version": 1, "primary": PRIMARY, "networks": {}}
+    for name in args.models:
+        manifest["networks"][name] = build_network_artifacts(name, out_dir)
+
+    blob = json.dumps(manifest, indent=2, sort_keys=True)
+    manifest["digest"] = hashlib.sha256(blob.encode()).hexdigest()[:16]
+    (out_dir / "manifest.json").write_text(
+        json.dumps(manifest, indent=2, sort_keys=True)
+    )
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

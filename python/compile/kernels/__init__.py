@@ -1,0 +1,12 @@
+"""L1 — Pallas kernels for the training hot-spot (see DESIGN.md §3).
+
+All kernels run with interpret=True so they lower to plain HLO the CPU
+PJRT client can execute; real-TPU perf is estimated from the BlockSpecs
+in DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+from .dwconv import dwconv3x3
+from .elementwise import bias_add, bias_relu6
+from .matmul import matmul, pointwise_conv
+
+__all__ = ["matmul", "pointwise_conv", "dwconv3x3", "bias_add", "bias_relu6"]

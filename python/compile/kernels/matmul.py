@@ -1,0 +1,125 @@
+"""Tiled matmul Pallas kernel — the MXU path for pointwise (1x1) convs.
+
+This is the hw-codesign adaptation of the paper's hot-spot (see
+DESIGN.md §Hardware-Adaptation): MobileNetV2's MAC budget is dominated by
+1x1 convolutions, which we express as a (m, k) @ (k, n) matmul over the
+NHWC pixel-major reshape. The BlockSpec streams (bm, bk) / (bk, bn)
+blocks HBM->VMEM and accumulates over the k grid axis — the role
+threadblock shared-memory tiling plays on GPU and loop blocking plays on
+the A53's L1 cache in the paper's own deployment.
+
+Autodiff: pallas_call with a program_id accumulator has no JVP rule, so
+`matmul` carries a custom VJP whose backward pass is two more calls of
+the *same* Pallas kernel (dx = g yᵀ, dy = xᵀ g) — the training hot loop
+stays on the kernel in both directions.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles (128x128 systolic array); bk sized so one
+# (bm, bk) + (bk, bn) + (bm, bn) working set stays well under VMEM
+# (3 * 128*256 * 4B = 384 KiB << 16 MiB).
+DEFAULT_BM = 128
+DEFAULT_BK = 256
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Grid (mi, ni, ki); accumulates partial products into o_ref."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def _matmul_impl(x, y, bm: int, bk: int, bn: int):
+    m, k = x.shape
+    _, n = y.shape
+
+    # Shrink tiles for small problems so the grid is never empty work.
+    bm = min(bm, _ceil_to(m, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    bn = min(bn, _ceil_to(n, 8))
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _matmul_vjp(x, y, bm, bk, bn):
+    return _matmul_impl(x, y, bm, bk, bn)
+
+
+def _matmul_fwd(x, y, bm, bk, bn):
+    return _matmul_impl(x, y, bm, bk, bn), (x, y)
+
+
+def _matmul_bwd(bm, bk, bn, res, g):
+    x, y = res
+    # dx = g @ yᵀ  (m,n)@(n,k); dy = xᵀ @ g  (k,m)@(m,n) — same kernel.
+    dx = _matmul_impl(g, y.T, bm, bk, bn)
+    dy = _matmul_impl(x.T, g, bm, bk, bn)
+    return dx, dy
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """(m, k) @ (k, n) -> (m, n) via the Pallas tiled kernel.
+
+    Shapes need not divide the tile sizes; inputs are zero-padded up to
+    the tile lattice and the result sliced back (exact for matmul).
+    Differentiable via the custom VJP above.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    return _matmul_vjp(x, y, bm, bk, bn)
+
+
+def pointwise_conv(x: jnp.ndarray, w: jnp.ndarray, **tile_kw) -> jnp.ndarray:
+    """1x1 convolution: (n, h, w, cin) x (cin, cout) -> (n, h, w, cout)."""
+    n, h, wd, cin = x.shape
+    out = matmul(x.reshape(n * h * wd, cin), w, **tile_kw)
+    return out.reshape(n, h, wd, w.shape[1])

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has an exact (up to float accumulation
+order) counterpart here; `python/tests/test_kernels.py` sweeps shapes and
+dtypes with hypothesis and asserts allclose between the two.
+
+Convention notes:
+  * All convolutions use NHWC activations and explicit padding (no
+    "SAME"/"VALID" strings) so the Pallas and jnp paths share one
+    unambiguous spatial contract.
+  * Depthwise convolution weights are (kh, kw, c); pointwise (1x1) conv
+    is expressed as a matmul over a (n*h*w, cin) reshape.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(m, k) @ (k, n) -> (m, n), f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def bias_relu6(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x + b (broadcast over last dim) followed by ReLU6 clamp."""
+    return jnp.clip(x + b, 0.0, 6.0)
+
+
+def bias_add(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return x + b
+
+
+def dwconv3x3(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Depthwise 3x3 convolution, NHWC, explicit pad=1 on both sides.
+
+    x: (n, h, w, c), w: (3, 3, c). With pad=1/k=3 the output spatial
+    size is floor((h - 1) / stride) + 1, matching the
+    pad-then-subsample identity the Pallas kernel relies on.
+    """
+    n, h, wd, c = x.shape
+    out = lax.conv_general_dilated(
+        x,
+        w.reshape(3, 3, 1, c),
+        window_strides=(stride, stride),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out.astype(x.dtype)
+
+
+def pointwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """1x1 convolution as matmul. x: (n, h, w, cin), w: (cin, cout)."""
+    n, h, wd, cin = x.shape
+    flat = x.reshape(n * h * wd, cin)
+    out = matmul(flat, w)
+    return out.reshape(n, h, wd, w.shape[1])
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """(n, h, w, c) -> (n, c)."""
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,96 @@
+"""L2 — training-step definitions lowered to the AOT artifacts.
+
+Three jittable entry points per network, each a pure function over a
+flat parameter list (order = manifest order = Rust PJRT argument order):
+
+  init_fn(seed)                -> (p0, ..., pN)
+  train_step(p..., x, y)       -> (loss, g0, ..., gN)
+  eval_step(p..., x, y)        -> (loss, correct_count)
+
+The SGD update itself happens in Rust *after* ring-allreduce of the
+gradients (DESIGN.md §6), so the artifact returns raw gradients — that
+is what makes the Rust allreduce a real reduction rather than a replay.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import BuiltModel, build_model  # noqa: F401  (re-export)
+
+
+def init_params(model: BuiltModel, seed) -> List[jnp.ndarray]:
+    """He-normal weights / zero biases, one fold per parameter index."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i, spec in enumerate(model.net.specs):
+        k = jax.random.fold_in(key, i)
+        if spec.init == "zero":
+            params.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.init == "fc":
+            fan_in = spec.shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params.append(std * jax.random.normal(k, spec.shape, jnp.float32))
+        else:  # "he"
+            fan_in = int(math.prod(spec.shape[:-1]))
+            std = math.sqrt(2.0 / max(1, fan_in))
+            params.append(std * jax.random.normal(k, spec.shape, jnp.float32))
+    return params
+
+
+def make_init_fn(model: BuiltModel) -> Callable:
+    def init_fn(seed: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+        return tuple(init_params(model, seed))
+
+    return init_fn
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy with integer labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def make_train_step(model: BuiltModel) -> Callable:
+    def loss_fn(params: List[jnp.ndarray], x: jnp.ndarray, y: jnp.ndarray):
+        return cross_entropy(model.apply(params, x), y)
+
+    def train_step(params, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(list(params), x, y)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(model: BuiltModel) -> Callable:
+    def eval_step(params, x, y):
+        logits = model.apply(list(params), x)
+        loss = cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.int32))
+        return loss, correct
+
+    return eval_step
+
+
+def example_args(model: BuiltModel, batch_size: int):
+    """ShapeDtypeStructs for lowering train/eval at a given batch size."""
+    params = tuple(
+        jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.net.specs
+    )
+    x = jax.ShapeDtypeStruct(
+        (batch_size, model.input_hw, model.input_hw, 3), jnp.float32
+    )
+    y = jax.ShapeDtypeStruct((batch_size,), jnp.int32)
+    return params, x, y
+
+
+def spec_dicts(model: BuiltModel) -> List[dict]:
+    return [
+        {"name": s.name, "shape": list(s.shape), "dtype": "f32", "init": s.init}
+        for s in model.net.specs
+    ]

@@ -1,0 +1,56 @@
+"""Registry of the paper's four evaluation networks, scaled for CPU.
+
+Paper (Table I)        ->  here
+  MobileNetV2 3.47M    ->  mobilenet_v2_s
+  NASNet      5.3M     ->  nasnet_s
+  InceptionV3 23.83M   ->  inception_v3_s
+  SqueezeNet  1.25M    ->  squeezenet_s
+
+`build_model(name)` returns a BuiltModel whose flat parameter-list order
+is the AOT interchange contract with the Rust runtime (manifest.json).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    name: str
+    net: "Net"  # noqa: F821 — blocks.Net; kept loose to avoid import cycle
+    apply: Callable[[List[jnp.ndarray], jnp.ndarray], jnp.ndarray]
+    input_hw: int
+    num_classes: int
+
+
+# Paper-name aliases accepted by the CLI / config layer.
+ALIASES = {
+    "mobilenetv2": "mobilenet_v2_s",
+    "mobilenet_v2": "mobilenet_v2_s",
+    "nasnet": "nasnet_s",
+    "inceptionv3": "inception_v3_s",
+    "inception_v3": "inception_v3_s",
+    "squeezenet": "squeezenet_s",
+}
+
+
+def build_model(name: str, **kw) -> BuiltModel:
+    from . import inception_v3_s, mobilenet_v2_s, nasnet_s, squeezenet_s
+
+    registry = {
+        "mobilenet_v2_s": mobilenet_v2_s.build,
+        "nasnet_s": nasnet_s.build,
+        "inception_v3_s": inception_v3_s.build,
+        "squeezenet_s": squeezenet_s.build,
+    }
+    key = ALIASES.get(name, name)
+    if key not in registry:
+        raise KeyError(f"unknown model {name!r}; have {sorted(registry)}")
+    return registry[key](**kw)
+
+
+MODEL_NAMES = ["mobilenet_v2_s", "nasnet_s", "inception_v3_s", "squeezenet_s"]

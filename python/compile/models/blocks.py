@@ -1,0 +1,188 @@
+"""Shared building blocks for the scaled-down paper networks.
+
+A tiny functional "net builder": layers register parameter specs on a
+`Net` while closing over their parameter indices, so `apply` consumes a
+flat parameter *list* in exactly the declaration order. That order is
+the AOT contract — `aot.py` writes it into `artifacts/manifest.json` and
+the Rust runtime feeds PJRT arguments in the same order.
+
+All dense compute routes through the L1 Pallas kernels (matmul /
+dwconv3x3 / bias_{add,relu6}); only shape plumbing (pad/reshape/pool)
+uses raw jnp. FLOP/MAC counters are accumulated at build time from the
+static shapes, giving the analytic per-image costs Table I reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .. import kernels
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "he" | "zero" | "fc"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+class Net:
+    """Accumulates parameter specs + per-image FLOP/MAC counts."""
+
+    def __init__(self) -> None:
+        self.specs: List[ParamSpec] = []
+        self.flops: int = 0  # multiply-adds counted as 2 flops
+        self.macs: int = 0
+
+    def param(self, name: str, shape: Sequence[int], init: str = "he") -> int:
+        for s in self.specs:
+            if s.name == name:
+                raise ValueError(f"duplicate param name {name!r}")
+        self.specs.append(ParamSpec(name, tuple(int(d) for d in shape), init))
+        return len(self.specs) - 1
+
+    def add_mac(self, macs: int) -> None:
+        self.macs += int(macs)
+        self.flops += 2 * int(macs)
+
+    @property
+    def param_count(self) -> int:
+        return sum(s.size for s in self.specs)
+
+
+# A layer forward: (params_list, activations) -> activations
+Fwd = Callable[[List[jnp.ndarray], jnp.ndarray], jnp.ndarray]
+
+
+def out_hw(h: int, stride: int) -> int:
+    """Spatial size after a 3x3/pad-1 conv with `stride` (see dwconv)."""
+    return (h - 1) // stride + 1
+
+
+def pointwise(net: Net, name: str, hw: int, cin: int, cout: int, act: bool = True) -> Fwd:
+    """1x1 conv + bias (+ ReLU6) via the Pallas matmul kernel."""
+    wi = net.param(f"{name}.w", (cin, cout))
+    bi = net.param(f"{name}.b", (cout,), init="zero")
+    net.add_mac(hw * hw * cin * cout)
+
+    def fwd(p, x):
+        y = kernels.pointwise_conv(x, p[wi])
+        return kernels.bias_relu6(y, p[bi]) if act else kernels.bias_add(y, p[bi])
+
+    return fwd
+
+
+def dwconv(net: Net, name: str, hw: int, c: int, stride: int = 1, act: bool = True) -> Fwd:
+    """Depthwise 3x3 + bias (+ ReLU6) via the Pallas stencil kernel."""
+    wi = net.param(f"{name}.w", (3, 3, c))
+    bi = net.param(f"{name}.b", (c,), init="zero")
+    net.add_mac(out_hw(hw, stride) ** 2 * 9 * c)
+
+    def fwd(p, x):
+        y = kernels.dwconv3x3(x, p[wi], stride=stride)
+        return kernels.bias_relu6(y, p[bi]) if act else kernels.bias_add(y, p[bi])
+
+    return fwd
+
+
+def conv3x3(net: Net, name: str, hw: int, cin: int, cout: int, stride: int = 1, act: bool = True) -> Fwd:
+    """Dense 3x3 conv as nine shifted pointwise matmuls (all Pallas).
+
+    conv3x3(x, W)[n, i, j, :] = sum_{dh,dw} x_pad[n, i*s+dh, j*s+dw, :] @ W[dh, dw]
+    which we evaluate as nine (n*h*w, cin) @ (cin, cout) matmuls over the
+    shifted (stride-subsampled) input — dense conv on the MXU without an
+    im2col buffer 9x the activation size.
+    """
+    wis = [net.param(f"{name}.w{dh}{dw}", (cin, cout)) for dh in range(3) for dw in range(3)]
+    bi = net.param(f"{name}.b", (cout,), init="zero")
+    ho = out_hw(hw, stride)
+    net.add_mac(ho * ho * 9 * cin * cout)
+
+    def fwd(p, x):
+        n, h, w, _ = x.shape
+        hp = out_hw(h, stride)
+        wp = out_hw(w, stride)
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        acc = None
+        for dh in range(3):
+            for dw in range(3):
+                shift = xp[:, dh : dh + h : stride, dw : dw + w : stride, :]
+                term = kernels.pointwise_conv(shift, p[wis[dh * 3 + dw]])
+                acc = term if acc is None else acc + term
+        assert acc.shape[1:3] == (hp, wp), (acc.shape, hp, wp)
+        return kernels.bias_relu6(acc, p[bi]) if act else kernels.bias_add(acc, p[bi])
+
+    return fwd
+
+
+def separable(net: Net, name: str, hw: int, cin: int, cout: int, stride: int = 1) -> Fwd:
+    """Depthwise-separable conv: dw3x3 (+relu6) then pw projection (+relu6)."""
+    dw = dwconv(net, f"{name}.dw", hw, cin, stride=stride)
+    pw = pointwise(net, f"{name}.pw", out_hw(hw, stride), cin, cout)
+
+    def fwd(p, x):
+        return pw(p, dw(p, x))
+
+    return fwd
+
+
+def inverted_residual(net: Net, name: str, hw: int, cin: int, cout: int, stride: int, expand: int) -> Fwd:
+    """MobileNetV2 inverted residual: pw-expand, dw3x3, linear pw-project."""
+    mid = cin * expand
+    ex = pointwise(net, f"{name}.expand", hw, cin, mid) if expand != 1 else None
+    dw = dwconv(net, f"{name}.dw", hw, mid, stride=stride)
+    pj = pointwise(net, f"{name}.project", out_hw(hw, stride), mid, cout, act=False)
+    has_res = stride == 1 and cin == cout
+
+    def fwd(p, x):
+        y = ex(p, x) if ex is not None else x
+        y = pj(p, dw(p, y))
+        return x + y if has_res else y
+
+    return fwd
+
+
+def fc(net: Net, name: str, cin: int, cout: int) -> Fwd:
+    """Final classifier: (n, cin) @ (cin, cout) + bias."""
+    wi = net.param(f"{name}.w", (cin, cout), init="fc")
+    bi = net.param(f"{name}.b", (cout,), init="zero")
+    net.add_mac(cin * cout)
+
+    def fwd(p, x):
+        return kernels.bias_add(kernels.matmul(x, p[wi]), p[bi])
+
+    return fwd
+
+
+def gap(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pool (n, h, w, c) -> (n, c)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max pool, stride 2 (pads odd spatial dims)."""
+    n, h, w, c = x.shape
+    if h % 2 or w % 2:
+        x = jnp.pad(
+            x,
+            ((0, 0), (0, h % 2), (0, w % 2), (0, 0)),
+            constant_values=-jnp.inf,
+        )
+        h, w = x.shape[1], x.shape[2]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def avgpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 average pool, stride 2 (h, w assumed even)."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.mean(axis=(2, 4))

@@ -1,0 +1,63 @@
+"""Scaled-down InceptionV3 (Table I row 3).
+
+Multi-branch inception blocks (1x1 / 1x1->3x3 / dw-pool->1x1) with
+channel concat — the paper's *largest* network (23.8M params), which
+Fig. 7 shows scaling worst because parameter-sync time dominates.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import BuiltModel
+from .blocks import Net, conv3x3, dwconv, fc, gap, maxpool2, out_hw, pointwise
+
+
+def _inception(net: Net, name: str, hw: int, cin: int, b1: int, b3: int, bp: int):
+    """Branches: pw(b1) | pw(b3/2)->3x3(b3) | dw3x3->pw(bp); concat."""
+    br1 = pointwise(net, f"{name}.b1", hw, cin, b1)
+    br3a = pointwise(net, f"{name}.b3a", hw, cin, max(8, b3 // 2))
+    br3b = conv3x3(net, f"{name}.b3b", hw, max(8, b3 // 2), b3)
+    brpa = dwconv(net, f"{name}.bpa", hw, cin)
+    brpb = pointwise(net, f"{name}.bpb", hw, cin, bp)
+
+    def fwd(p, x):
+        return jnp.concatenate(
+            [br1(p, x), br3b(p, br3a(p, x)), brpb(p, brpa(p, x))], axis=-1
+        )
+
+    return fwd, b1 + b3 + bp
+
+
+def build(num_classes: int = 64, hw: int = 32, width: float = 1.0) -> BuiltModel:
+    net = Net()
+
+    def ch(c: float) -> int:
+        return max(8, int(c * width + 0.5) // 8 * 8)
+
+    h = hw
+    stem = conv3x3(net, "stem", h, 3, ch(24), stride=2)
+    h = out_hw(h, 2)
+
+    inc1, c1 = _inception(net, "inc1", h, ch(24), ch(16), ch(16), ch(16))
+    inc2, c2 = _inception(net, "inc2", h, c1, ch(24), ch(24), ch(16))
+    red = conv3x3(net, "reduce", h, c2, ch(64), stride=2)
+    h2 = out_hw(h, 2)
+    inc3, c3 = _inception(net, "inc3", h2, ch(64), ch(32), ch(32), ch(24))
+    inc4, c4 = _inception(net, "inc4", h2, c3, ch(48), ch(48), ch(32))
+    classifier = fc(net, "fc", c4, num_classes)
+
+    def apply(p, x):
+        x = stem(p, x)
+        x = inc2(p, inc1(p, x))
+        x = red(p, x)
+        x = inc4(p, inc3(p, x))
+        return classifier(p, gap(x))
+
+    return BuiltModel(
+        name="inception_v3_s",
+        net=net,
+        apply=apply,
+        input_hw=hw,
+        num_classes=num_classes,
+    )

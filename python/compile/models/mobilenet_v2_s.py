@@ -1,0 +1,54 @@
+"""Scaled-down MobileNetV2 — the paper's primary network (Table I row 1).
+
+Same topology family as the paper's 3.47M-param/56M-MAC MobileNetV2
+(inverted residual bottlenecks, ReLU6, linear projections, final 1x1
+head + GAP + FC) at a width/depth that trains at CPU-interpret speed.
+"""
+
+from __future__ import annotations
+
+from . import BuiltModel
+from .blocks import Net, conv3x3, fc, gap, inverted_residual, out_hw, pointwise
+
+
+def build(num_classes: int = 64, hw: int = 32, width: float = 1.0) -> BuiltModel:
+    net = Net()
+
+    def ch(c: float) -> int:
+        return max(8, int(c * width + 0.5) // 8 * 8)
+
+    layers = []
+    h = hw
+    stem = conv3x3(net, "stem", h, 3, ch(16), stride=2)
+    h = out_hw(h, 2)
+    layers.append(stem)
+
+    # (cin, cout, stride, expand) — a compressed MobileNetV2 schedule.
+    cfg = [
+        (ch(16), ch(16), 1, 1),
+        (ch(16), ch(24), 2, 4),
+        (ch(24), ch(24), 1, 4),
+        (ch(24), ch(32), 2, 4),
+        (ch(32), ch(32), 1, 4),
+        (ch(32), ch(32), 1, 4),
+    ]
+    for i, (cin, cout, s, e) in enumerate(cfg):
+        layers.append(inverted_residual(net, f"ir{i}", h, cin, cout, s, e))
+        h = out_hw(h, s)
+
+    head_c = ch(128)
+    layers.append(pointwise(net, "head", h, cfg[-1][1], head_c))
+    classifier = fc(net, "fc", head_c, num_classes)
+
+    def apply(p, x):
+        for layer in layers:
+            x = layer(p, x)
+        return classifier(p, gap(x))
+
+    return BuiltModel(
+        name="mobilenet_v2_s",
+        net=net,
+        apply=apply,
+        input_hw=hw,
+        num_classes=num_classes,
+    )

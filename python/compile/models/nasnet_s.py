@@ -1,0 +1,74 @@
+"""Scaled-down NASNet-Mobile (Table I row 2).
+
+Normal/reduction cells built from separable-conv pairs with additive
+combinations and a cell-wide concat, mirroring NASNet's searched cell
+structure — the paper's mid-size network (5.3M params, 564M MACs) with
+a high MAC/param ratio, penalized by compute rather than sync.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import BuiltModel
+from .blocks import Net, conv3x3, fc, gap, maxpool2, out_hw, pointwise, separable
+
+
+def _normal_cell(net: Net, name: str, hw: int, c: int):
+    """Two combine units: (sep+sep) and (sep+id); concat then pw re-mix."""
+    s1a = separable(net, f"{name}.s1a", hw, c, c)
+    s1b = separable(net, f"{name}.s1b", hw, c, c)
+    s2 = separable(net, f"{name}.s2", hw, c, c)
+    mix = pointwise(net, f"{name}.mix", hw, 2 * c, c)
+
+    def fwd(p, x):
+        u1 = s1a(p, x) + s1b(p, x)
+        u2 = s2(p, x) + x
+        return mix(p, jnp.concatenate([u1, u2], axis=-1))
+
+    return fwd
+
+
+def _reduction_cell(net: Net, name: str, hw: int, cin: int, cout: int):
+    """(sep stride2) + (maxpool -> pw); halves spatial, retargets channels."""
+    s = separable(net, f"{name}.s", hw, cin, cout, stride=2)
+    pw = pointwise(net, f"{name}.pool_pw", out_hw(hw, 2), cin, cout)
+
+    def fwd(p, x):
+        return s(p, x) + pw(p, maxpool2(x))
+
+    return fwd
+
+
+def build(num_classes: int = 64, hw: int = 32, width: float = 1.0) -> BuiltModel:
+    net = Net()
+
+    def ch(c: float) -> int:
+        return max(8, int(c * width + 0.5) // 8 * 8)
+
+    h = hw
+    stem = conv3x3(net, "stem", h, 3, ch(24), stride=2)
+    h = out_hw(h, 2)
+
+    n1 = _normal_cell(net, "n1", h, ch(24))
+    n2 = _normal_cell(net, "n2", h, ch(24))
+    r1 = _reduction_cell(net, "r1", h, ch(24), ch(48))
+    h2 = out_hw(h, 2)
+    n3 = _normal_cell(net, "n3", h2, ch(48))
+    n4 = _normal_cell(net, "n4", h2, ch(48))
+    classifier = fc(net, "fc", ch(48), num_classes)
+
+    def apply(p, x):
+        x = stem(p, x)
+        x = n2(p, n1(p, x))
+        x = r1(p, x)
+        x = n4(p, n3(p, x))
+        return classifier(p, gap(x))
+
+    return BuiltModel(
+        name="nasnet_s",
+        net=net,
+        apply=apply,
+        input_hw=hw,
+        num_classes=num_classes,
+    )

@@ -1,0 +1,60 @@
+"""Scaled-down SqueezeNet (Table I row 4).
+
+Fire modules (pointwise squeeze -> parallel 1x1/3x3 expand, concat),
+ending in a 1x1 class conv + GAP as in the original — the paper's
+smallest-parameter / highest-MAC-density network, which Fig. 7 shows
+scaling *worse* than MobileNetV2 despite fewer parameters.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import BuiltModel
+from .blocks import Net, conv3x3, maxpool2, out_hw, pointwise
+
+
+def _fire(net: Net, name: str, hw: int, cin: int, squeeze: int, expand: int):
+    sq = pointwise(net, f"{name}.squeeze", hw, cin, squeeze)
+    e1 = pointwise(net, f"{name}.e1", hw, squeeze, expand)
+    e3 = conv3x3(net, f"{name}.e3", hw, squeeze, expand)
+
+    def fwd(p, x):
+        s = sq(p, x)
+        return jnp.concatenate([e1(p, s), e3(p, s)], axis=-1)
+
+    return fwd, 2 * expand
+
+
+def build(num_classes: int = 64, hw: int = 32, width: float = 1.0) -> BuiltModel:
+    net = Net()
+
+    def ch(c: float) -> int:
+        return max(8, int(c * width + 0.5) // 8 * 8)
+
+    h = hw
+    stem = conv3x3(net, "stem", h, 3, ch(32), stride=2)
+    h = out_hw(h, 2)
+
+    fire1, c1 = _fire(net, "fire1", h // 2, ch(32), ch(8), ch(32))
+    fire2, c2 = _fire(net, "fire2", h // 2, c1, ch(8), ch(32))
+    fire3, c3 = _fire(net, "fire3", h // 4, c2, ch(16), ch(48))
+    fire4, c4 = _fire(net, "fire4", h // 4, c3, ch(16), ch(48))
+    class_conv = pointwise(net, "class_conv", h // 4, c4, num_classes, act=False)
+
+    def apply(p, x):
+        x = stem(p, x)
+        x = maxpool2(x)
+        x = fire2(p, fire1(p, x))
+        x = maxpool2(x)
+        x = fire4(p, fire3(p, x))
+        x = class_conv(p, x)
+        return jnp.mean(x, axis=(1, 2))  # GAP straight to logits
+
+    return BuiltModel(
+        name="squeezenet_s",
+        net=net,
+        apply=apply,
+        input_hw=hw,
+        num_classes=num_classes,
+    )

@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes (including tile-misaligned and singleton dims)
+and dtypes; assert_allclose with dtype-scaled tolerances. This is the
+CORE correctness signal for the AOT artifacts: the same kernel code is
+lowered into every train_step HLO the Rust runtime executes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bias_add,
+    bias_relu6,
+    dwconv3x3,
+    matmul,
+    pointwise_conv,
+)
+from compile.kernels import ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+DTYPES = [np.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+@st.composite
+def matmul_shapes(draw):
+    m = draw(st.integers(1, 200))
+    k = draw(st.integers(1, 200))
+    n = draw(st.integers(1, 200))
+    return m, k, n
+
+
+class TestMatmul:
+    @given(shape=matmul_shapes(), dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, dtype, seed):
+        m, k, n = shape
+        rng = np.random.default_rng(seed)
+        x, y = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+        got = np.asarray(matmul(x, y), dtype=np.float32)
+        want = np.asarray(ref.matmul(x, y), dtype=np.float32)
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    @pytest.mark.parametrize("m,k,n", [(128, 256, 128), (129, 257, 127), (1, 1, 1), (8, 8, 8)])
+    def test_tile_boundaries(self, m, k, n):
+        rng = np.random.default_rng(m * 10007 + k * 101 + n)
+        x, y = _rand(rng, (m, k), np.float32), _rand(rng, (k, n), np.float32)
+        np.testing.assert_allclose(matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (32, 16, 64), (128, 256, 128)])
+    def test_tile_size_invariance(self, bm, bk, bn):
+        """Result must not depend on the chosen block decomposition."""
+        rng = np.random.default_rng(42)
+        x, y = _rand(rng, (100, 70), np.float32), _rand(rng, (70, 50), np.float32)
+        np.testing.assert_allclose(
+            matmul(x, y, bm=bm, bk=bk, bn=bn), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((16, 16), jnp.float32)
+        assert float(jnp.abs(matmul(x, x)).max()) == 0.0
+
+    def test_rank_check(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 2, 2)), jnp.zeros((2, 2)))
+
+    def test_contraction_check(self):
+        with pytest.raises(ValueError):
+            matmul(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+
+@st.composite
+def conv_shapes(draw):
+    n = draw(st.integers(1, 3))
+    h = draw(st.integers(2, 20))
+    w = draw(st.integers(2, 20))
+    c = draw(st.integers(1, 40))
+    return n, h, w, c
+
+
+class TestDwConv:
+    @given(
+        shape=conv_shapes(),
+        stride=st.sampled_from([1, 2]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, shape, stride, dtype, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, shape, dtype)
+        w = _rand(rng, (3, 3, shape[3]), dtype)
+        got = np.asarray(dwconv3x3(x, w, stride=stride), dtype=np.float32)
+        want = np.asarray(ref.dwconv3x3(x, w, stride=stride), dtype=np.float32)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    def test_identity_kernel(self):
+        """A center-one stencil must reproduce the input exactly."""
+        rng = np.random.default_rng(7)
+        x = _rand(rng, (1, 8, 8, 5), np.float32)
+        w = np.zeros((3, 3, 5), np.float32)
+        w[1, 1, :] = 1.0
+        np.testing.assert_allclose(dwconv3x3(x, jnp.asarray(w)), x, rtol=1e-6)
+
+    def test_channel_tile_invariance(self):
+        rng = np.random.default_rng(3)
+        x = _rand(rng, (2, 6, 6, 50), np.float32)
+        w = _rand(rng, (3, 3, 50), np.float32)
+        a = dwconv3x3(x, w, bc=8)
+        b = dwconv3x3(x, w, bc=128)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_stride_identity(self):
+        """stride-2 == stride-1 then [::2, ::2] (the kernel's contract)."""
+        rng = np.random.default_rng(9)
+        x = _rand(rng, (1, 9, 9, 4), np.float32)
+        w = _rand(rng, (3, 3, 4), np.float32)
+        s1 = dwconv3x3(x, w, stride=1)
+        s2 = dwconv3x3(x, w, stride=2)
+        np.testing.assert_allclose(s2, s1[:, ::2, ::2, :], rtol=1e-6)
+
+    def test_bad_stride(self):
+        with pytest.raises(ValueError):
+            dwconv3x3(jnp.zeros((1, 4, 4, 2)), jnp.zeros((3, 3, 2)), stride=3)
+
+    def test_bad_weight_shape(self):
+        with pytest.raises(ValueError):
+            dwconv3x3(jnp.zeros((1, 4, 4, 2)), jnp.zeros((3, 3, 3)))
+
+
+class TestElementwise:
+    @given(shape=conv_shapes(), dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2**31 - 1))
+    def test_bias_relu6(self, shape, dtype, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, shape, dtype)
+        b = _rand(rng, (shape[3],), dtype)
+        got = np.asarray(bias_relu6(x, b), dtype=np.float32)
+        want = np.asarray(ref.bias_relu6(x, b), dtype=np.float32)
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    @given(rows=st.integers(1, 500), c=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+    def test_bias_add_2d(self, rows, c, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (rows, c), np.float32)
+        b = _rand(rng, (c,), np.float32)
+        np.testing.assert_allclose(bias_add(x, b), ref.bias_add(x, b), rtol=1e-6)
+
+    def test_relu6_clamps(self):
+        x = jnp.asarray([[-10.0, 0.0, 3.0, 10.0]], jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(bias_relu6(x, b))[0], [0.0, 0.0, 3.0, 6.0], rtol=1e-6
+        )
+
+    def test_bias_shape_check(self):
+        with pytest.raises(ValueError):
+            bias_add(jnp.zeros((4, 3)), jnp.zeros((4,)))
+
+
+class TestPointwiseConv:
+    @given(
+        shape=conv_shapes(),
+        cout=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, shape, cout, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, shape, np.float32)
+        w = _rand(rng, (shape[3], cout), np.float32)
+        np.testing.assert_allclose(
+            pointwise_conv(x, w), ref.pointwise_conv(x, w), rtol=1e-4, atol=1e-4
+        )

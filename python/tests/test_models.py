@@ -1,0 +1,122 @@
+"""L2 tests: the four scaled networks + training-step semantics.
+
+Checks the AOT contract (spec order/shapes/param counts), numerical
+health (finite grads, descending loss) and the init/eval entry points
+for every network that gets lowered to artifacts.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    build_model,
+    cross_entropy,
+    init_params,
+    make_eval_step,
+    make_init_fn,
+    make_train_step,
+    spec_dicts,
+)
+from compile.models import ALIASES, MODEL_NAMES
+
+
+@pytest.fixture(scope="module", params=MODEL_NAMES)
+def model(request):
+    return build_model(request.param)
+
+
+def batch(model, bs=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(bs, model.input_hw, model.input_hw, 3)).astype("float32"))
+    y = jnp.asarray(rng.integers(0, model.num_classes, size=(bs,)).astype("int32"))
+    return x, y
+
+
+class TestStructure:
+    def test_param_specs_consistent(self, model):
+        specs = spec_dicts(model)
+        assert len(specs) == len(model.net.specs)
+        total = sum(int(np.prod(s["shape"])) for s in specs)
+        assert total == model.net.param_count
+        names = [s["name"] for s in specs]
+        assert len(names) == len(set(names)), "param names must be unique"
+
+    def test_costs_positive(self, model):
+        assert model.net.macs > 0
+        assert model.net.flops == 2 * model.net.macs
+
+    def test_forward_shape(self, model):
+        params = init_params(model, 0)
+        x, _ = batch(model)
+        logits = model.apply(params, x)
+        assert logits.shape == (4, model.num_classes)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_init_deterministic(self, model):
+        a = init_params(model, 5)
+        b = init_params(model, 5)
+        c = init_params(model, 6)
+        for ta, tb in zip(a, b):
+            np.testing.assert_array_equal(ta, tb)
+        assert any(
+            not np.array_equal(np.asarray(ta), np.asarray(tc)) for ta, tc in zip(a, c)
+        )
+
+
+class TestTraining:
+    def test_grads_finite_and_nontrivial(self, model):
+        params = init_params(model, 1)
+        ts = jax.jit(make_train_step(model))
+        x, y = batch(model)
+        out = ts(params, x, y)
+        loss, grads = out[0], out[1:]
+        assert np.isfinite(float(loss))
+        assert len(grads) == len(params)
+        assert all(np.isfinite(np.asarray(g)).all() for g in grads)
+        assert any(float(jnp.abs(g).max()) > 1e-8 for g in grads)
+
+    def test_sgd_memorizes_batch(self, model):
+        params = init_params(model, 2)
+        ts = jax.jit(make_train_step(model))
+        x, y = batch(model, bs=8, seed=3)
+        first = float(ts(params, x, y)[0])
+        for _ in range(25):
+            out = ts(params, x, y)
+            params = [p - 0.02 * g for p, g in zip(params, out[1:])]
+        last = float(ts(params, x, y)[0])
+        assert last < 0.7 * first, f"{first} -> {last}"
+
+
+class TestEvalAndInit:
+    def test_eval_counts(self, model):
+        params = init_params(model, 0)
+        ev = jax.jit(make_eval_step(model))
+        x, y = batch(model, bs=16, seed=9)
+        loss, correct = ev(params, x, y)
+        assert np.isfinite(float(loss))
+        assert 0 <= int(correct) <= 16
+
+    def test_init_fn_jits(self, model):
+        init = jax.jit(make_init_fn(model))
+        out = init(jnp.int32(0))
+        assert len(out) == len(model.net.specs)
+        for t, s in zip(out, model.net.specs):
+            assert t.shape == s.shape
+
+
+def test_aliases_resolve():
+    for alias in ALIASES:
+        assert build_model(alias).name in MODEL_NAMES
+    with pytest.raises(KeyError):
+        build_model("resnet9000")
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 0.0, 0.0]])
+    labels = jnp.asarray([0, 2], dtype=jnp.int32)
+    got = float(cross_entropy(logits, labels))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    want = float(np.mean([-np.log(p0), -np.log(1 / 3)]))
+    assert abs(got - want) < 1e-5

@@ -1,0 +1,85 @@
+//! Bench: the CSD substrate itself — the ISP-path vs host-path data
+//! movement asymmetry (the paper's §III hardware claim) plus FTL/GC
+//! throughput under sustained load.
+//!
+//! Run: `cargo bench --bench csd_substrate`
+
+use stannis::csd::{CsdConfig, NewportCsd};
+use stannis::metrics::{bench, f, print_table};
+use stannis::sim::SimTime;
+
+fn fresh_csd(seed: u64) -> NewportCsd {
+    let mut csd = NewportCsd::new(0, CsdConfig::default(), seed);
+    for lpn in 0..4096u32 {
+        csd.write_page(lpn, lpn as u64, SimTime::ZERO).unwrap();
+    }
+    csd
+}
+
+fn main() {
+    // --- The paper's data-path asymmetry ---------------------------------
+    // Reads start after the preload programs drain (t0); the "contended"
+    // column adds a concurrent allreduce burst on the PCIe link — the
+    // regime a training epoch actually runs in, where the ISP path's
+    // bypass of the NVMe link pays off.
+    let t0 = SimTime::secs(10);
+    let mut rows = Vec::new();
+    for batch_pages in [16usize, 64, 256, 1024] {
+        let lpns: Vec<u32> = (0..batch_pages as u32).collect();
+        let mut a = fresh_csd(1);
+        let host = a.read_for_host(&lpns, t0).unwrap() - t0;
+        let mut b = fresh_csd(1);
+        let isp = b.read_for_isp(&lpns, t0).unwrap() - t0;
+        // Contended: 14 MB of gradient sync in flight on the same link.
+        let mut c = fresh_csd(1);
+        c.tunnel_transfer(13_880_000, t0);
+        let host_cont = c.read_for_host(&lpns, t0).unwrap() - t0;
+        let mut d = fresh_csd(1);
+        d.tunnel_transfer(13_880_000, t0);
+        let isp_cont = d.read_for_isp(&lpns, t0).unwrap() - t0;
+        rows.push(vec![
+            batch_pages.to_string(),
+            format!("{host}"),
+            format!("{isp}"),
+            format!("{}x", f(host.as_ns() as f64 / isp.as_ns() as f64, 2)),
+            format!("{host_cont}"),
+            format!("{isp_cont}"),
+            format!("{}x", f(host_cont.as_ns() as f64 / isp_cont.as_ns() as f64, 2)),
+        ]);
+    }
+    print_table(
+        "ISP path vs host path — staging latency (idle link | link carrying gradient sync)",
+        &["pages", "host path", "ISP path", "adv", "host+sync", "ISP+sync", "adv"],
+        &rows,
+    );
+
+    // --- Simulator throughput (how fast the DES itself runs) -------------
+    let r = bench("ftl_write_4k_pages", 1, 10, || {
+        let mut csd = NewportCsd::new(0, CsdConfig::default(), 7);
+        for lpn in 0..4096u32 {
+            csd.write_page(lpn, 0, SimTime::ZERO).unwrap();
+        }
+        std::hint::black_box(&csd);
+    });
+    println!("\n{}", r.summary());
+    println!("    {:.1}M simulated page-writes/sec", 4096.0 / r.mean_secs() / 1e6);
+
+    let r = bench("ftl_sustained_overwrite_with_gc", 1, 5, || {
+        let mut csd = NewportCsd::new(0, CsdConfig::default(), 9);
+        let logical = 4096u32;
+        for round in 0..4u64 {
+            for lpn in 0..logical {
+                csd.write_page(lpn, round, SimTime::ZERO).unwrap();
+            }
+        }
+        std::hint::black_box(csd.ftl_ref().stats().waf());
+    });
+    println!("{}", r.summary());
+
+    let r = bench("isp_batch_staging_64_pages", 2, 20, || {
+        let mut csd = fresh_csd(3);
+        let lpns: Vec<u32> = (0..64).collect();
+        std::hint::black_box(csd.read_for_isp(&lpns, SimTime::ZERO).unwrap());
+    });
+    println!("{}", r.summary());
+}

@@ -1,0 +1,82 @@
+//! Bench: regenerate paper Fig. 6 — aggregate and per-node throughput
+//! vs number of CSDs, for all four networks, Stannis vs the naive
+//! uniform-batch Horovod baseline the paper's §IV motivates against.
+//!
+//! Run: `cargo bench --bench fig6`
+
+use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
+use stannis::metrics::{bench, f, print_table};
+use stannis::perfmodel::PerfModel;
+
+const COUNTS: [usize; 10] = [0, 1, 2, 4, 6, 8, 12, 16, 20, 24];
+const NETS: [&str; 4] = ["mobilenet_v2", "nasnet", "inception_v3", "squeezenet"];
+
+fn main() {
+    let cfg = TuneConfig::default();
+
+    // --- Aggregate throughput (the Fig. 6 series) -------------------------
+    let mut rows = Vec::new();
+    for net in NETS {
+        let mut m = PerfModel::default();
+        let t = tune(&mut m, net, &cfg).unwrap();
+        let mut cells = vec![net.to_string()];
+        for &n in &COUNTS {
+            let r = modeled_throughput(net, n, true, t.newport_bs, t.host_bs, 3).unwrap();
+            cells.push(f(r.images_per_sec, 1));
+        }
+        rows.push(cells);
+    }
+    let labels: Vec<String> = COUNTS.iter().map(|n| n.to_string()).collect();
+    let mut headers = vec!["img/s @ #CSDs"];
+    headers.extend(labels.iter().map(String::as_str));
+    print_table("Fig. 6 — aggregate throughput (Stannis, tuned batches)", &headers, &rows);
+
+    // --- Per-node throughput: the §V-A slowdown-and-convergence ----------
+    let mut rows = Vec::new();
+    for net in NETS {
+        let mut m = PerfModel::default();
+        let t = tune(&mut m, net, &cfg).unwrap();
+        let mut cells = vec![net.to_string()];
+        for &n in &COUNTS[1..] {
+            let r = modeled_throughput(net, n, true, t.newport_bs, t.host_bs, 3).unwrap();
+            // per-CSD images/sec (first worker is the host)
+            cells.push(f(r.per_worker_ips[1], 2));
+        }
+        rows.push(cells);
+    }
+    let labels2: Vec<String> = COUNTS[1..].iter().map(|n| n.to_string()).collect();
+    let mut headers = vec!["per-CSD img/s @ #CSDs"];
+    headers.extend(labels2.iter().map(String::as_str));
+    print_table("Fig. 6 inset — per-node slowdown converges beyond ~6 devices", &headers, &rows);
+
+    // --- Baseline: naive Horovod (uniform batch = the slow device's) ------
+    // Heterogeneous Horovod without Stannis pins every worker to the
+    // same batch size, so the host runs tiny batches at terrible
+    // efficiency — the gap below is the paper's motivation.
+    let mut rows = Vec::new();
+    for net in NETS {
+        let mut m = PerfModel::default();
+        let t = tune(&mut m, net, &cfg).unwrap();
+        let mut cells = vec![net.to_string()];
+        for &n in &COUNTS {
+            let stannis =
+                modeled_throughput(net, n, true, t.newport_bs, t.host_bs, 3).unwrap().images_per_sec;
+            // Uniform batching only binds once a slow device is present.
+            let naive_hbs = if n == 0 { t.host_bs } else { t.newport_bs };
+            let naive = modeled_throughput(net, n, true, t.newport_bs, naive_hbs, 3)
+                .unwrap()
+                .images_per_sec;
+            cells.push(format!("{}x", f(stannis / naive, 2)));
+        }
+        rows.push(cells);
+    }
+    let mut headers = vec!["Stannis / naive-Horovod"];
+    headers.extend(labels.iter().map(String::as_str));
+    print_table("Baseline gap — Stannis vs uniform-batch Horovod", &headers, &rows);
+
+    // --- Simulation cost ---------------------------------------------------
+    let r = bench("modeled_epoch(mobilenet_v2, 24 CSDs, 3 steps)", 2, 30, || {
+        std::hint::black_box(modeled_throughput("mobilenet_v2", 24, true, 25, 315, 3).unwrap());
+    });
+    println!("\n{}", r.summary());
+}

@@ -1,0 +1,72 @@
+//! Bench: regenerate paper Fig. 7 — relative speedup vs host-alone for
+//! each network as CSDs are added, with the paper's qualitative claims
+//! checked: smaller networks speed up more; parameter count drives the
+//! sync penalty (InceptionV3 worst); MobileNetV2 peaks near 2.7x.
+//!
+//! Run: `cargo bench --bench fig7`
+
+use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
+use stannis::metrics::{f, print_table};
+use stannis::perfmodel::{calib_for, PerfModel};
+
+const COUNTS: [usize; 10] = [0, 1, 2, 4, 6, 8, 12, 16, 20, 24];
+const NETS: [&str; 4] = ["mobilenet_v2", "nasnet", "inception_v3", "squeezenet"];
+
+fn main() {
+    let cfg = TuneConfig::default();
+    let mut speedup_at_24 = Vec::new();
+
+    let mut rows = Vec::new();
+    for net in NETS {
+        let mut m = PerfModel::default();
+        let t = tune(&mut m, net, &cfg).unwrap();
+        let base = modeled_throughput(net, 0, true, t.newport_bs, t.host_bs, 3)
+            .unwrap()
+            .images_per_sec;
+        let mut cells = vec![net.to_string()];
+        for &n in &COUNTS {
+            let r = modeled_throughput(net, n, true, t.newport_bs, t.host_bs, 3).unwrap();
+            let s = r.images_per_sec / base;
+            if n == 24 {
+                speedup_at_24.push((net, s, r.sync_fraction));
+            }
+            cells.push(format!("{}x", f(s, 2)));
+        }
+        rows.push(cells);
+    }
+    let labels: Vec<String> = COUNTS.iter().map(|n| n.to_string()).collect();
+    let mut headers = vec!["speedup @ #CSDs"];
+    headers.extend(labels.iter().map(String::as_str));
+    print_table("Fig. 7 — speedup vs host-alone", &headers, &rows);
+
+    // --- The paper's explanatory row: params vs sync share ---------------
+    let mut rows = Vec::new();
+    for (net, s, sync) in &speedup_at_24 {
+        let c = calib_for(net).unwrap();
+        rows.push(vec![
+            net.to_string(),
+            format!("{:.2}M", c.params as f64 / 1e6),
+            format!("{:.0}M", c.macs_per_image as f64 / 1e6),
+            format!("{}x", f(*s, 2)),
+            format!("{}%", f(sync * 100.0, 1)),
+        ]);
+    }
+    print_table(
+        "Speedup @24 CSDs vs model size (paper: more params => more sync => less speedup)",
+        &["network", "params", "MACs/img", "speedup", "sync share"],
+        &rows,
+    );
+
+    // --- Shape assertions (fail loudly if the reproduction drifts) -------
+    let get = |name: &str| speedup_at_24.iter().find(|(n, _, _)| *n == name).unwrap().1;
+    let (mv, nn, inc, sq) = (
+        get("mobilenet_v2"),
+        get("nasnet"),
+        get("inception_v3"),
+        get("squeezenet"),
+    );
+    assert!((mv - 2.7).abs() < 0.25, "paper headline: ~2.7x for MobileNetV2, got {mv:.2}");
+    assert!(inc < nn && nn < mv, "ordering must hold: inception < nasnet < mobilenet");
+    assert!(sq < mv, "squeezenet must trail mobilenet (paper §V-A)");
+    println!("\nshape checks passed: mobilenet {mv:.2}x, squeezenet {sq:.2}x, nasnet {nn:.2}x, inception {inc:.2}x");
+}

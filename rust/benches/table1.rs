@@ -1,0 +1,69 @@
+//! Bench: regenerate paper Table I (parameter tuning from Algorithm 1)
+//! plus the batch-size → throughput sweep the §V text describes.
+//!
+//! Run: `cargo bench --bench table1`
+
+use stannis::coordinator::{tune, TuneConfig};
+use stannis::metrics::{bench, f, print_table};
+use stannis::perfmodel::{Device, PerfModel};
+
+const NETS: [(&str, &str, &str, usize, usize, f64, f64); 4] = [
+    // (name, paper params, paper MACs, paper bs host, bs newport, speed host, speed newport)
+    ("mobilenet_v2", "3.47M", "56M", 315, 25, 31.05, 3.08),
+    ("nasnet", "5.3M", "564M", 325, 15, 47.31, 2.80),
+    ("inception_v3", "23.83M", "5.72G", 370, 16, 30.80, 1.85),
+    ("squeezenet", "1.25M", "861M", 850, 50, 219.0, 16.3),
+];
+
+fn main() {
+    let mut model = PerfModel::default();
+    let cfg = TuneConfig::default();
+
+    // --- Table I ---------------------------------------------------------
+    let mut rows = Vec::new();
+    for (net, params, macs, p_hbs, p_nbs, p_hips, p_nips) in NETS {
+        let r = tune(&mut model, net, &cfg).unwrap();
+        rows.push(vec![
+            net.to_string(),
+            params.to_string(),
+            macs.to_string(),
+            format!("{} / {}", r.host_bs, r.newport_bs),
+            format!("{p_hbs} / {p_nbs}"),
+            format!("{} / {}", f(r.host_ips, 2), f(r.newport_ips, 2)),
+            format!("{p_hips} / {p_nips}"),
+        ]);
+    }
+    print_table(
+        "Table I — Algorithm 1 parameter tuning",
+        &[
+            "network",
+            "params",
+            "MACs",
+            "batch h/n (ours)",
+            "batch h/n (paper)",
+            "img/s h/n (ours)",
+            "img/s h/n (paper)",
+        ],
+        &rows,
+    );
+
+    // --- §V batch sweep: throughput saturation on Newport ----------------
+    let mut rows = Vec::new();
+    for bs in [1usize, 2, 4, 8, 16, 25, 32, 64, 128] {
+        let ips = model.ips(Device::NewportIsp, "mobilenet_v2", bs).unwrap();
+        let hips = model.ips(Device::HostXeon, "mobilenet_v2", bs).unwrap();
+        rows.push(vec![bs.to_string(), f(ips, 3), f(hips, 2)]);
+    }
+    print_table(
+        "MobileNetV2 throughput vs batch size (saturation, §V)",
+        &["batch", "newport img/s", "host img/s"],
+        &rows,
+    );
+
+    // --- Tuner cost ------------------------------------------------------
+    let r = bench("algorithm1_tune(mobilenet_v2)", 3, 50, || {
+        let mut m = PerfModel::default();
+        std::hint::black_box(tune(&mut m, "mobilenet_v2", &cfg).unwrap());
+    });
+    println!("\n{}", r.summary());
+}

@@ -1,0 +1,103 @@
+//! Bench: regenerate paper Table II — energy per image, energy saving
+//! and FLOPS/W as Newport CSDs replace idle conventional SSDs, using
+//! the component power model + the modeled cluster (with flash/NVMe
+//! I/O staged through the CSD substrate so link/flash energy is real).
+//!
+//! Run: `cargo bench --bench table2`
+
+use stannis::coordinator::{tune, ScheduleConfig, Scheduler, TuneConfig};
+use stannis::csd::CsdConfig;
+use stannis::metrics::{f, print_table};
+use stannis::perfmodel::PerfModel;
+use stannis::power::{account_interval, EnergyMeter, PowerConfig};
+use stannis::tunnel::TunnelConfig;
+
+const PAPER: [(usize, f64, f64, &str); 5] = [
+    (0, 13.10, 0.0, "5.87M"),
+    (4, 8.30, 37.0, "7.05M"),
+    (8, 6.84, 48.0, "8.18M"),
+    (16, 5.05, 62.0, "10.37M"),
+    (24, 4.02, 69.0, "12.26M"),
+];
+
+fn run_point(n: usize, nbs: usize, hbs: usize) -> (f64, f64) {
+    let mut sched = Scheduler::new(
+        PerfModel::default(),
+        n,
+        TunnelConfig::default(),
+        CsdConfig::default(),
+    );
+    sched.preload_data(64).unwrap();
+    let r = sched
+        .run(&ScheduleConfig {
+            network: "mobilenet_v2".into(),
+            num_csds: n,
+            include_host: true,
+            bs_csd: nbs,
+            bs_host: hbs,
+            steps: 3,
+            image_bytes: 12 * 1024,
+            stage_io: true,
+        })
+        .unwrap();
+
+    let power = PowerConfig::default();
+    let mut meter = EnergyMeter::new();
+    account_interval(
+        &mut meter,
+        &power,
+        r.elapsed,
+        n,
+        24,
+        true,
+        r.link_bytes,
+        r.flash_reads,
+        0,
+    );
+    let images = (r.images_per_sec * r.elapsed.as_secs_f64()).round();
+    (meter.total_joules() / images, r.images_per_sec)
+}
+
+fn main() {
+    let mut m = PerfModel::default();
+    let t = tune(&mut m, "mobilenet_v2", &TuneConfig::default()).unwrap();
+
+    let (base_j, _) = run_point(0, t.newport_bs, t.host_bs);
+    let mut rows = Vec::new();
+    for (n, paper_j, paper_saving, paper_fw) in PAPER {
+        let (j_img, ips) = run_point(n, t.newport_bs, t.host_bs);
+        let saving = 100.0 * (1.0 - j_img / base_j);
+        let power = PowerConfig::default().system_power_w(n, 24, true);
+        // FLOPS/W with the paper's own per-image FLOP count (7.16M * 2).
+        let flops_w = ips * 7.16e6 * 2.0 / power;
+        rows.push(vec![
+            n.to_string(),
+            f(j_img, 2),
+            f(paper_j, 2),
+            format!("{}%", f(saving, 0)),
+            format!("{}%", f(paper_saving, 0)),
+            format!("{:.2}M", flops_w / 1e6),
+            paper_fw.to_string(),
+        ]);
+    }
+    print_table(
+        "Table II — energy per image, MobileNetV2 (ours vs paper)",
+        &["CSDs", "J/img", "paper", "saving", "paper", "FLOPS/W", "paper"],
+        &rows,
+    );
+    println!(
+        "\nnote: the paper's FLOPS/W row is inconsistent with its own J/img row \
+         (see EXPERIMENTS.md); we report the model's value."
+    );
+
+    // Shape assertions.
+    let (j0, _) = run_point(0, t.newport_bs, t.host_bs);
+    let (j24, _) = run_point(24, t.newport_bs, t.host_bs);
+    let saving24 = 100.0 * (1.0 - j24 / j0);
+    assert!((j0 - 13.10).abs() < 1.0, "0-CSD endpoint: {j0:.2} vs paper 13.10");
+    assert!(
+        (saving24 - 69.0).abs() < 8.0,
+        "24-CSD saving: {saving24:.0}% vs paper 69%"
+    );
+    println!("shape checks passed: {j0:.2} J/img @0, {j24:.2} J/img @24 ({saving24:.0}% saving)");
+}

@@ -1,0 +1,327 @@
+//! Ring allreduce — Stannis's gradient synchronization (paper §II.B).
+//!
+//! Two faces of the same algorithm:
+//!
+//! * [`ring_allreduce_mean`] — the *numerics*: a faithful
+//!   reduce-scatter + allgather over per-rank buffers, chunk by chunk,
+//!   exactly as Horovod/NCCL execute it. Used on the real-execution
+//!   path where each simulated worker holds a live gradient set.
+//! * [`ring_time`] — the *timing*: the same 2(N-1) rounds of
+//!   neighbor-to-neighbor messages booked on the TCP/IP-over-PCIe
+//!   [`Tunnel`], which is where the paper's sync slowdown (Fig. 6/7)
+//!   comes from.
+//!
+//! A parameter-server baseline ([`param_server_time`]) reproduces the
+//! TensorFlow-classic comparison the paper describes in §II.B.
+
+use anyhow::{ensure, Result};
+
+use crate::sim::SimTime;
+use crate::tunnel::{NodeId, Tunnel};
+
+/// In-place ring allreduce (mean) across `replicas`.
+///
+/// Every replica must have identical length; afterwards every replica
+/// holds the elementwise mean. The chunk schedule is the textbook ring:
+/// N ranks, N chunks; N-1 reduce-scatter rounds then N-1 allgather
+/// rounds, rank r sending chunk (r - step) mod N rightward each round.
+pub fn ring_allreduce_mean(replicas: &mut [Vec<f32>]) -> Result<()> {
+    let n = replicas.len();
+    ensure!(n > 0, "no replicas");
+    if n == 1 {
+        return Ok(());
+    }
+    let len = replicas[0].len();
+    for (i, r) in replicas.iter().enumerate() {
+        ensure!(r.len() == len, "replica {i} length {} != {len}", r.len());
+    }
+
+    // Chunk boundaries (last chunk absorbs the remainder).
+    let bounds = |c: usize| -> (usize, usize) {
+        let base = len / n;
+        let start = c * base;
+        let end = if c == n - 1 { len } else { start + base };
+        (start, end)
+    };
+
+    // Split-borrow two distinct replicas (src read-only, dst mutable).
+    // Safe: the ring guarantees src != dst for n >= 2.
+    fn two<'a>(reps: &'a mut [Vec<f32>], src: usize, dst: usize) -> (&'a [f32], &'a mut [f32]) {
+        debug_assert_ne!(src, dst);
+        if src < dst {
+            let (a, b) = reps.split_at_mut(dst);
+            (&a[src], &mut b[0])
+        } else {
+            let (a, b) = reps.split_at_mut(src);
+            (&b[0], &mut a[dst])
+        }
+    }
+
+    // Reduce-scatter: after step s, rank (r+1) holds the running sum of
+    // chunk (r - s .. r) from the senders upstream. In-round in-place
+    // application is exact: within a round, chunk c is read by exactly
+    // one src and written at exactly one dst, and dst's own outgoing
+    // chunk is a different chunk id — no read-after-write hazard.
+    for step in 0..n - 1 {
+        for r in 0..n {
+            let c = (r + n - step) % n;
+            let (s, e) = bounds(c);
+            let dst = (r + 1) % n;
+            let (src_rep, dst_rep) = two(&mut replicas[..], r, dst);
+            // Slice windows let LLVM autovectorize the accumulate.
+            let (src_w, dst_w) = (&src_rep[s..e], &mut dst_rep[s..e]);
+            for i in 0..src_w.len() {
+                dst_w[i] += src_w[i];
+            }
+        }
+    }
+
+    // Each rank now owns the fully-reduced chunk (r + 1) mod n; scale
+    // to the mean before circulating.
+    let inv = 1.0 / n as f32;
+    for r in 0..n {
+        let c = (r + 1) % n;
+        let (s, e) = bounds(c);
+        for x in &mut replicas[r][s..e] {
+            *x *= inv;
+        }
+    }
+
+    // Allgather: circulate the owned chunks around the ring (pure
+    // copies; same no-hazard argument as the reduce-scatter).
+    for step in 0..n - 1 {
+        for r in 0..n {
+            let c = (r + 1 + n - step) % n;
+            let (s, e) = bounds(c);
+            let dst = (r + 1) % n;
+            let (src_rep, dst_rep) = two(&mut replicas[..], r, dst);
+            dst_rep[s..e].copy_from_slice(&src_rep[s..e]);
+        }
+    }
+    Ok(())
+}
+
+/// Time the ring's 2(N-1)-step pipelined schedule over the tunnel.
+///
+/// Uses the standard α-β (latency-bandwidth) *fluid* model over the
+/// tunnel's calibrated parameters rather than booking every chunk hop
+/// on the FIFO timelines: NCCL/Horovod interleave chunk segments at
+/// packet granularity, which fluid sharing captures and atomic
+/// whole-chunk FIFO bookings mis-model as convoys (observed 20x
+/// inflation). The message-level DES (`Tunnel::send`) remains in use
+/// for control traffic (DLM, staging) where convoys are real.
+///
+/// Resource accounting per step (n ranks, chunk = bytes/n):
+///   * each CSD packetizes 1 send + 1 receive           → 2·chunk
+///   * the host crosses every csd↔csd relay twice, plus its own
+///     send/receive                                      → ~(2n-2)·chunk
+///   * each CSD's PCIe wire carries ≤ 2·chunk
+/// Total = max resource busy time + per-step latency chain. The
+/// PCIe-star topology makes the *host* the asymptotic bottleneck — a
+/// physical fact of tunneling all CSD↔CSD traffic through the root
+/// (see EXPERIMENTS.md notes).
+pub fn ring_time(
+    tunnel: &mut Tunnel,
+    ranks: &[NodeId],
+    bytes: usize,
+    start: SimTime,
+) -> SimTime {
+    let n = ranks.len();
+    if n <= 1 {
+        return start;
+    }
+    let cfg = tunnel.config().clone();
+    let chunk = (bytes.div_ceil(n)) as f64;
+    let steps = 2 * (n - 1);
+    let has_host = ranks.contains(&NodeId::Host);
+
+    let pkts_per_chunk = (chunk / cfg.mtu as f64).ceil();
+    let pkt = cfg.per_packet.as_secs_f64();
+
+    // Per-step busy time on each resource class (fluid sharing).
+    let t_csd_step = 2.0 * (chunk / cfg.sw_bw_csd + pkts_per_chunk * pkt);
+    let host_crossings = if has_host { 2 * n - 2 } else { 2 * n } as f64;
+    let t_host_step = host_crossings * (chunk / cfg.sw_bw_host + pkts_per_chunk * pkt);
+    let t_wire_step = 2.0 * chunk / cfg.pcie_bw;
+    // Pipeline startup: one chunk's first hop must traverse the ring
+    // serially before steady state (α term).
+    let hop_lat = 2.0 * cfg.hop_latency.as_secs_f64();
+
+    let per_step = t_csd_step.max(t_host_step).max(t_wire_step) + hop_lat;
+    let total = per_step * steps as f64;
+
+    tunnel.note_aggregate((steps * n) as u64, (steps * n) as u64 * chunk as u64);
+    start + SimTime::from_secs_f64(total)
+}
+
+/// Parameter-server baseline (paper §II.B, TensorFlow-classic): all
+/// workers push `bytes` to the server, it averages, then broadcasts.
+/// Same fluid model as [`ring_time`] for a fair comparison.
+pub fn param_server_time(
+    tunnel: &mut Tunnel,
+    workers: &[NodeId],
+    server: NodeId,
+    bytes: usize,
+    start: SimTime,
+) -> SimTime {
+    let cfg = tunnel.config().clone();
+    let n_clients = workers.iter().filter(|&&w| w != server).count();
+    if n_clients == 0 {
+        return start;
+    }
+    let pkts = (bytes as f64 / cfg.mtu as f64).ceil();
+    let pkt = cfg.per_packet.as_secs_f64();
+    let (server_bw, client_bw) = if server == NodeId::Host {
+        (cfg.sw_bw_host, cfg.sw_bw_csd)
+    } else {
+        (cfg.sw_bw_csd, cfg.sw_bw_csd)
+    };
+    // Gather: server ingests n·bytes serially; clients push in parallel.
+    let t_client = bytes as f64 / client_bw + pkts * pkt;
+    let t_server = n_clients as f64 * (bytes as f64 / server_bw + pkts * pkt);
+    let one_way = t_client.max(t_server) + 2.0 * cfg.hop_latency.as_secs_f64();
+    tunnel.note_aggregate(2 * n_clients as u64, 2 * (n_clients * bytes) as u64);
+    start + SimTime::from_secs_f64(2.0 * one_way)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunnel::TunnelConfig;
+    use crate::util::prop;
+
+    fn mean_of(replicas: &[Vec<f32>]) -> Vec<f32> {
+        let n = replicas.len() as f32;
+        let len = replicas[0].len();
+        (0..len)
+            .map(|i| replicas.iter().map(|r| r[i]).sum::<f32>() / n)
+            .collect()
+    }
+
+    #[test]
+    fn two_ranks_mean() {
+        let mut reps = vec![vec![1.0, 2.0, 3.0, 4.0], vec![3.0, 2.0, 1.0, 0.0]];
+        ring_allreduce_mean(&mut reps).unwrap();
+        assert_eq!(reps[0], vec![2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(reps[1], reps[0]);
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let mut reps = vec![vec![5.0, 6.0]];
+        ring_allreduce_mean(&mut reps).unwrap();
+        assert_eq!(reps[0], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn length_mismatch_errors() {
+        let mut reps = vec![vec![1.0], vec![1.0, 2.0]];
+        assert!(ring_allreduce_mean(&mut reps).is_err());
+    }
+
+    #[test]
+    fn property_equals_mean_any_n() {
+        prop::check("ring allreduce == elementwise mean", |rng| {
+            let n = 2 + rng.usize_below(9); // 2..10 ranks
+            let len = 1 + rng.usize_below(200); // any length incl. < n
+            let replicas: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| (rng.f32() - 0.5) * 10.0).collect())
+                .collect();
+            let want = mean_of(&replicas);
+            let mut got = replicas.clone();
+            ring_allreduce_mean(&mut got).unwrap();
+            for r in 0..n {
+                for i in 0..len {
+                    assert!(
+                        (got[r][i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                        "rank {r} elem {i}: {} vs {}",
+                        got[r][i],
+                        want[i]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn all_replicas_identical_after_reduce() {
+        prop::check("replicas converge identically", |rng| {
+            let n = 2 + rng.usize_below(6);
+            let len = n + rng.usize_below(64);
+            let mut reps: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.f32()).collect())
+                .collect();
+            ring_allreduce_mean(&mut reps).unwrap();
+            for r in 1..n {
+                assert_eq!(reps[r], reps[0], "rank {r} diverged");
+            }
+        });
+    }
+
+    #[test]
+    fn ring_time_grows_sublinearly_with_ranks() {
+        // Ring is bandwidth-optimal: per-worker bytes ≈ 2 * bytes * (N-1)/N,
+        // so doubling N must not double the sync time.
+        let bytes = 4 << 20;
+        let mut t4 = Tunnel::new(4, TunnelConfig::default());
+        let ranks4: Vec<NodeId> = std::iter::once(NodeId::Host)
+            .chain((0..3).map(NodeId::Csd))
+            .collect();
+        let d4 = ring_time(&mut t4, &ranks4, bytes, SimTime::ZERO);
+
+        let mut t8 = Tunnel::new(8, TunnelConfig::default());
+        let ranks8: Vec<NodeId> = std::iter::once(NodeId::Host)
+            .chain((0..7).map(NodeId::Csd))
+            .collect();
+        let d8 = ring_time(&mut t8, &ranks8, bytes, SimTime::ZERO);
+        assert!(
+            d8.as_secs_f64() < 2.0 * d4.as_secs_f64(),
+            "ring not bandwidth-optimal: {d4} -> {d8}"
+        );
+    }
+
+    #[test]
+    fn param_server_competitive_in_star_topology() {
+        // Negative finding worth pinning (see EXPERIMENTS.md §Ablations):
+        // the ring's bandwidth-optimality argument assumes a switched
+        // mesh. Over the PCIe *star*, every csd↔csd hop relays through
+        // the root, so the ring moves ~2x the volume a parameter server
+        // does and loses. Stannis still implements the ring because the
+        // paper (via Horovod/NCCL) does; this test documents the fabric
+        // reality our DES exposes.
+        let bytes = 4 << 20;
+        let n = 12;
+        let ranks: Vec<NodeId> = std::iter::once(NodeId::Host)
+            .chain((0..n - 1).map(NodeId::Csd))
+            .collect();
+        let mut t1 = Tunnel::new(n - 1, TunnelConfig::default());
+        let ring = ring_time(&mut t1, &ranks, bytes, SimTime::ZERO);
+        let mut t2 = Tunnel::new(n - 1, TunnelConfig::default());
+        let ps = param_server_time(&mut t2, &ranks, NodeId::Host, bytes, SimTime::ZERO);
+        assert!(ps < ring, "PS {ps} should beat ring {ring} on a star fabric");
+        assert!(
+            ring.as_secs_f64() < 3.0 * ps.as_secs_f64(),
+            "but not by an implausible factor: ring {ring} vs ps {ps}"
+        );
+    }
+
+    #[test]
+    fn ring_sync_cost_converges_with_ranks() {
+        // The steady-state ring cost must approach an asymptote (the
+        // per-endpoint 4·bytes·(N-1)/N law), not keep growing linearly —
+        // this is what lets Fig. 6's per-node slowdown flatten.
+        let bytes = 13_880_000;
+        let t_at = |n: usize| {
+            let ranks: Vec<NodeId> = std::iter::once(NodeId::Host)
+                .chain((0..n).map(NodeId::Csd))
+                .collect();
+            let mut t = Tunnel::new(n, TunnelConfig::default());
+            ring_time(&mut t, &ranks, bytes, SimTime::ZERO).as_secs_f64()
+        };
+        let (t6, t12, t24) = (t_at(6), t_at(12), t_at(24));
+        let grow_early = t12 / t6;
+        let grow_late = t24 / t12;
+        assert!(grow_late < grow_early, "{t6} {t12} {t24}");
+        assert!(t24 < 1.5 * t12, "sync must flatten: {t12} -> {t24}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Cluster assembly: turn an [`ExperimentConfig`] into the live pieces
+//! a run needs (engine, dataset, placement, trainer) — the glue between
+//! the config system and the coordinator.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{balance, Placement, StannisTrainer, TrainConfig};
+use crate::data::Dataset;
+use crate::runtime::{default_artifacts_dir, Engine};
+
+/// A fully wired real-execution cluster.
+pub struct Cluster {
+    pub engine: Arc<Engine>,
+    pub dataset: Dataset,
+    pub placement: Placement,
+    pub cfg: ExperimentConfig,
+}
+
+impl Cluster {
+    /// Build from config: load artifacts, generate the dataset,
+    /// balance the shards (Eq. 1).
+    pub fn bring_up(cfg: ExperimentConfig) -> Result<Self> {
+        let engine = Arc::new(Engine::new(default_artifacts_dir())?);
+        Self::bring_up_with_engine(cfg, engine)
+    }
+
+    /// Same, reusing an existing engine (tests share one to avoid
+    /// recompiling artifacts).
+    pub fn bring_up_with_engine(cfg: ExperimentConfig, engine: Arc<Engine>) -> Result<Self> {
+        // Validate the network + batch artifacts up front.
+        let net = engine.network(&cfg.network)?;
+        anyhow::ensure!(
+            net.train_artifact(cfg.bs_csd).is_some(),
+            "network {} has no train artifact for bs_csd={} (have {:?})",
+            cfg.network,
+            cfg.bs_csd,
+            net.train_batch_sizes
+        );
+        let dataset = Dataset::new(cfg.dataset())?;
+        let placement = balance(
+            &dataset,
+            cfg.num_csds,
+            cfg.bs_csd,
+            cfg.bs_host,
+            cfg.include_host,
+        )?;
+        Ok(Self { engine, dataset, placement, cfg })
+    }
+
+    /// Construct the trainer for this cluster.
+    pub fn trainer(&self) -> Result<StannisTrainer> {
+        StannisTrainer::new(
+            self.engine.clone(),
+            self.dataset.clone(),
+            &self.placement,
+            TrainConfig {
+                network: self.cfg.network.clone(),
+                num_csds: self.cfg.num_csds,
+                include_host: self.cfg.include_host,
+                bs_csd: self.cfg.bs_csd,
+                bs_host: self.cfg.bs_host,
+                steps: self.cfg.steps,
+                sgd: self.cfg.sgd(),
+                seed: self.cfg.seed as i32,
+                consistency_every: 10,
+                weighted_grads: true,
+            },
+        )
+    }
+}

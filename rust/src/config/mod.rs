@@ -1,0 +1,180 @@
+//! Experiment configuration: JSON files + CLI overrides.
+//!
+//! One [`ExperimentConfig`] fully determines a run (cluster shape,
+//! network, tuning knobs, dataset, optimizer), making every number in
+//! EXPERIMENTS.md reproducible from a checked-in config + seed.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::SgdConfig;
+use crate::util::{cli::Args, Json};
+
+/// Cluster + run shape.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub network: String,
+    pub num_csds: usize,
+    pub include_host: bool,
+    pub bs_csd: usize,
+    pub bs_host: usize,
+    pub steps: usize,
+    pub seed: i64,
+    pub base_lr: f64,
+    pub momentum: f64,
+    pub warmup_steps: u64,
+    pub public_images: usize,
+    pub private_per_csd: usize,
+    /// Reference total batch the base_lr was tuned for (Goyal linear
+    /// scaling uses total_batch / reference_batch).
+    pub reference_batch: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            network: "mobilenet_v2_s".into(),
+            num_csds: 3,
+            include_host: true,
+            bs_csd: 4,
+            bs_host: 16,
+            steps: 50,
+            seed: 0,
+            base_lr: 0.005,
+            momentum: 0.9,
+            warmup_steps: 10,
+            public_images: 1536,
+            private_per_csd: 256,
+            reference_batch: 32,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let j = Json::parse(&text)?;
+        Self::default().merged_with(&j)
+    }
+
+    fn merged_with(mut self, j: &Json) -> Result<Self> {
+        if let Some(v) = j.get("network") {
+            self.network = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("num_csds") {
+            self.num_csds = v.as_usize()?;
+        }
+        if let Some(v) = j.get("include_host") {
+            self.include_host = v.as_bool()?;
+        }
+        if let Some(v) = j.get("bs_csd") {
+            self.bs_csd = v.as_usize()?;
+        }
+        if let Some(v) = j.get("bs_host") {
+            self.bs_host = v.as_usize()?;
+        }
+        if let Some(v) = j.get("steps") {
+            self.steps = v.as_usize()?;
+        }
+        if let Some(v) = j.get("seed") {
+            self.seed = v.as_i64()?;
+        }
+        if let Some(v) = j.get("base_lr") {
+            self.base_lr = v.as_f64()?;
+        }
+        if let Some(v) = j.get("momentum") {
+            self.momentum = v.as_f64()?;
+        }
+        if let Some(v) = j.get("warmup_steps") {
+            self.warmup_steps = v.as_u64()?;
+        }
+        if let Some(v) = j.get("public_images") {
+            self.public_images = v.as_usize()?;
+        }
+        if let Some(v) = j.get("private_per_csd") {
+            self.private_per_csd = v.as_usize()?;
+        }
+        Ok(self)
+    }
+
+    /// Apply CLI overrides (flags named like the JSON keys).
+    pub fn apply_args(mut self, args: &Args) -> Result<Self> {
+        if let Some(v) = args.get("network") {
+            self.network = v.to_string();
+        }
+        self.num_csds = args.parse_or("num-csds", self.num_csds)?;
+        if args.flag("no-host") {
+            self.include_host = false;
+        }
+        self.bs_csd = args.parse_or("bs-csd", self.bs_csd)?;
+        self.bs_host = args.parse_or("bs-host", self.bs_host)?;
+        self.steps = args.parse_or("steps", self.steps)?;
+        self.seed = args.parse_or("seed", self.seed)?;
+        self.base_lr = args.parse_or("lr", self.base_lr)?;
+        self.public_images = args.parse_or("public-images", self.public_images)?;
+        self.private_per_csd = args.parse_or("private-per-csd", self.private_per_csd)?;
+        Ok(self)
+    }
+
+    pub fn sgd(&self) -> SgdConfig {
+        let total_batch = self.num_csds * self.bs_csd
+            + if self.include_host { self.bs_host } else { 0 };
+        SgdConfig {
+            base_lr: self.base_lr as f32,
+            momentum: self.momentum as f32,
+            lr_scale: total_batch as f32 / self.reference_batch.max(1) as f32,
+            warmup_steps: self.warmup_steps,
+        }
+    }
+
+    pub fn dataset(&self) -> crate::data::DatasetConfig {
+        crate::data::DatasetConfig {
+            public_images: self.public_images,
+            private_per_csd: vec![self.private_per_csd; self.num_csds],
+            seed: self.seed as u64 ^ 0xDA7A,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_overrides_defaults() {
+        let dir = std::env::temp_dir().join(format!("stannis_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.json");
+        std::fs::write(&p, r#"{"network": "squeezenet_s", "num_csds": 7, "base_lr": 0.1}"#)
+            .unwrap();
+        let c = ExperimentConfig::from_file(&p).unwrap();
+        assert_eq!(c.network, "squeezenet_s");
+        assert_eq!(c.num_csds, 7);
+        assert!((c.base_lr - 0.1).abs() < 1e-12);
+        assert_eq!(c.steps, ExperimentConfig::default().steps);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let args = crate::util::cli::Args::parse(
+            ["--num-csds", "9", "--no-host", "--lr", "0.2"].map(String::from),
+        )
+        .unwrap();
+        let c = ExperimentConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.num_csds, 9);
+        assert!(!c.include_host);
+        // 9 CSD-only workers at bs 4 = total 36 vs reference 32
+        assert!((c.sgd().lr_scale - 36.0 / 32.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bad_type_errors() {
+        let args = crate::util::cli::Args::parse(["--steps", "many"].map(String::from)).unwrap();
+        assert!(ExperimentConfig::default().apply_args(&args).is_err());
+    }
+}

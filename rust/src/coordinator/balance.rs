@@ -1,0 +1,243 @@
+//! Eq. 1 load balancing + privacy-aware data placement (paper §IV).
+//!
+//! After tuning fixes per-device batch sizes, an *epoch* must take the
+//! same number of steps on every worker or the fast ones stall at the
+//! epoch boundary. Eq. 1:
+//!
+//!   steps = dataset_card / batchsize_card
+//!   dataset_host = steps · batchsize_host
+//!
+//! plus the paper's §IV provisions for unequal private shards: a CSD
+//! short on private data is topped up from the public pool, or
+//! duplicates its private data when the pool runs dry. Private data
+//! never moves — the placement only ever assigns a CSD's own private
+//! ids to that CSD (enforced again downstream by `data::Shard`).
+
+use anyhow::{ensure, Result};
+
+use crate::data::{Dataset, ImageId};
+
+/// Per-worker dataset assignment for one epoch schedule.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub steps_per_epoch: usize,
+    /// Public ids assigned to the host.
+    pub host_ids: Vec<ImageId>,
+    /// Per CSD: its full id list (private + any public top-up,
+    /// duplicates appended when the pool was exhausted).
+    pub csd_ids: Vec<Vec<ImageId>>,
+    /// Accounting.
+    pub public_used: usize,
+    pub duplicated: Vec<usize>,
+}
+
+impl Placement {
+    /// Images per epoch across all workers (duplicates count).
+    pub fn images_per_epoch(&self) -> usize {
+        self.host_ids.len() + self.csd_ids.iter().map(Vec::len).sum::<usize>()
+    }
+}
+
+/// Compute the placement. `bs_csd`/`bs_host` come from Algorithm 1.
+pub fn balance(
+    dataset: &Dataset,
+    num_csds: usize,
+    bs_csd: usize,
+    bs_host: usize,
+    include_host: bool,
+) -> Result<Placement> {
+    ensure!(bs_csd > 0 && bs_host > 0, "zero batch size");
+    ensure!(
+        num_csds > 0 || include_host,
+        "cluster needs at least one worker"
+    );
+    ensure!(
+        dataset.config().private_per_csd.len() >= num_csds,
+        "dataset has private shards for {} CSDs, need {num_csds}",
+        dataset.config().private_per_csd.len()
+    );
+
+    // Host-only degenerate case (the paper's 0-CSD baseline): one epoch
+    // = one pass over the public pool.
+    if num_csds == 0 {
+        let steps = (dataset.num_public() / bs_host).max(1);
+        let host_ids: Vec<ImageId> =
+            (0..steps * bs_host).map(|i| i % dataset.num_public()).collect();
+        return Ok(Placement {
+            steps_per_epoch: steps,
+            host_ids,
+            csd_ids: Vec::new(),
+            public_used: 0,
+            duplicated: Vec::new(),
+        });
+    }
+
+    // Eq. 1 anchor: the largest private shard sets steps_per_epoch so
+    // no private image is dropped.
+    let steps = (0..num_csds)
+        .map(|c| dataset.config().private_per_csd[c].div_ceil(bs_csd))
+        .max()
+        .unwrap()
+        .max(1);
+    let per_csd = steps * bs_csd;
+
+    // Public pool, dealt round-robin. The host draws after CSD top-ups:
+    // the paper sizes the host's share from what remains ("the host has
+    // access to more data than each individual CSD").
+    let mut next_public: ImageId = 0;
+    let total_public = dataset.num_public();
+    let mut public_used = 0usize;
+
+    let mut csd_ids = Vec::with_capacity(num_csds);
+    let mut duplicated = vec![0usize; num_csds];
+    for c in 0..num_csds {
+        let mut ids: Vec<ImageId> = dataset.private_ids(c)?.collect();
+        // Top up from the public pool.
+        while ids.len() < per_csd && next_public < total_public {
+            ids.push(next_public);
+            next_public += 1;
+            public_used += 1;
+        }
+        // Pool dry: duplicate private data (paper §IV) to keep the
+        // image rate up.
+        let private_len = dataset.config().private_per_csd[c];
+        ensure!(
+            private_len > 0 || ids.len() >= per_csd,
+            "csd{c} has no private data and the public pool is dry"
+        );
+        let mut dup_cursor = 0usize;
+        while ids.len() < per_csd {
+            ids.push(dataset.private_ids(c)?.start + (dup_cursor % private_len));
+            dup_cursor += 1;
+            duplicated[c] += 1;
+        }
+        csd_ids.push(ids);
+    }
+
+    // Host: Eq. 1 — steps * bs_host public images (wrapping the pool if
+    // it is smaller; the host re-reads public data freely).
+    let host_ids: Vec<ImageId> = if include_host {
+        let need = steps * bs_host;
+        (0..need).map(|i| (next_public + i) % total_public).collect()
+    } else {
+        Vec::new()
+    };
+
+    Ok(Placement { steps_per_epoch: steps, host_ids, csd_ids, public_used, duplicated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetConfig, Shard, Visibility};
+
+    fn dataset(public: usize, private: Vec<usize>) -> Dataset {
+        Dataset::new(DatasetConfig {
+            public_images: public,
+            private_per_csd: private,
+            hw: 8,
+            classes: 4,
+            seed: 2,
+            noise: 0.5,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn eq1_host_sizing() {
+        // dataset_card = 500, bs_card = 25 -> 20 steps; bs_host = 315
+        // -> host gets 6300 images (Eq. 1).
+        let d = dataset(10_000, vec![500, 500]);
+        let p = balance(&d, 2, 25, 315, true).unwrap();
+        assert_eq!(p.steps_per_epoch, 20);
+        assert_eq!(p.host_ids.len(), 20 * 315);
+        for ids in &p.csd_ids {
+            assert_eq!(ids.len(), 20 * 25);
+        }
+    }
+
+    #[test]
+    fn equal_steps_for_all_nodes() {
+        let d = dataset(5000, vec![300, 200, 100]);
+        let p = balance(&d, 3, 16, 100, true).unwrap();
+        for ids in &p.csd_ids {
+            assert_eq!(ids.len() % 16, 0);
+            assert_eq!(ids.len() / 16, p.steps_per_epoch);
+        }
+        assert_eq!(p.host_ids.len() / 100, p.steps_per_epoch);
+    }
+
+    #[test]
+    fn unequal_private_topped_up_from_public() {
+        let d = dataset(5000, vec![400, 100]);
+        let p = balance(&d, 2, 20, 50, true).unwrap();
+        // csd0 sets the pace: 400/20 = 20 steps; csd1 needs 400 images
+        // but has 100 private -> 300 public top-up.
+        assert_eq!(p.steps_per_epoch, 20);
+        assert_eq!(p.csd_ids[1].len(), 400);
+        let public_in_csd1 = p.csd_ids[1]
+            .iter()
+            .filter(|&&id| matches!(d.visibility(id).unwrap(), Visibility::Public))
+            .count();
+        assert_eq!(public_in_csd1, 300);
+        assert_eq!(p.duplicated, vec![0, 0]);
+    }
+
+    #[test]
+    fn dry_pool_duplicates_private() {
+        // Public pool far too small to top up csd1.
+        let d = dataset(10, vec![400, 100]);
+        let p = balance(&d, 2, 20, 50, true).unwrap();
+        assert_eq!(p.csd_ids[1].len(), 400);
+        assert!(p.duplicated[1] > 0, "must duplicate when pool is dry");
+        // All ids in csd1 are its own private ones or public — never
+        // csd0's private range.
+        for &id in &p.csd_ids[1] {
+            match d.visibility(id).unwrap() {
+                Visibility::Private { csd } => assert_eq!(csd, 1),
+                Visibility::Public => {}
+            }
+        }
+    }
+
+    #[test]
+    fn placement_feeds_shards_without_privacy_violation() {
+        let d = dataset(1000, vec![64, 32]);
+        let p = balance(&d, 2, 8, 32, true).unwrap();
+        // Constructing shards re-checks privacy; must not error.
+        Shard::new(&d, None, p.host_ids.clone(), 1).unwrap();
+        for (c, ids) in p.csd_ids.iter().enumerate() {
+            Shard::new(&d, Some(c), ids.clone(), 2 + c as u64).unwrap();
+        }
+        // Host ids are all public.
+        for &id in &p.host_ids {
+            assert!(matches!(d.visibility(id).unwrap(), Visibility::Public));
+        }
+    }
+
+    #[test]
+    fn no_host_mode() {
+        let d = dataset(100, vec![40]);
+        let p = balance(&d, 1, 8, 32, false).unwrap();
+        assert!(p.host_ids.is_empty());
+        assert_eq!(p.steps_per_epoch, 5);
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        let d = dataset(100, vec![40]);
+        assert!(balance(&d, 0, 8, 8, false).is_err(), "no workers at all");
+        assert!(balance(&d, 1, 0, 8, true).is_err());
+        assert!(balance(&d, 2, 8, 8, true).is_err(), "more CSDs than shards");
+    }
+
+    #[test]
+    fn host_only_baseline_placement() {
+        // The paper's 0-CSD baseline: one epoch = one public pass.
+        let d = dataset(100, vec![40]);
+        let p = balance(&d, 0, 8, 25, true).unwrap();
+        assert_eq!(p.steps_per_epoch, 4);
+        assert_eq!(p.host_ids.len(), 100);
+        assert!(p.csd_ids.is_empty());
+    }
+}

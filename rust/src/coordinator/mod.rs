@@ -1,0 +1,16 @@
+//! The Stannis coordinator — the paper's software contribution.
+//!
+//! * [`tuning`] — Algorithm 1: heterogeneous batch-size equalization
+//! * [`balance`] — Eq. 1 dataset sizing + privacy-aware placement
+//! * [`scheduler`] — modeled synchronous-step timeline (Fig. 6/7)
+//! * [`stannis`] — the real-execution trainer (PJRT + ring allreduce)
+
+pub mod balance;
+pub mod scheduler;
+pub mod stannis;
+pub mod tuning;
+
+pub use balance::{balance, Placement};
+pub use scheduler::{modeled_throughput, EpochReport, ScheduleConfig, Scheduler};
+pub use stannis::{StannisTrainer, TrainConfig, TrainReport};
+pub use tuning::{tune, StepBench, TuneConfig, TuneResult};

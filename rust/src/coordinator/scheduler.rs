@@ -1,0 +1,287 @@
+//! Modeled epoch scheduler: composes the calibrated device model, the
+//! CSD flash staging path and the tunnel-borne ring allreduce into the
+//! per-step timeline behind Fig. 6/7 and Table II.
+//!
+//! One synchronous data-parallel step is:
+//!   1. every worker stages its batch (CSD: flash → ISP DRAM over the
+//!      internal bus; host: flash → NVMe → host DRAM from its CSDs),
+//!   2. every worker computes fwd/bwd (calibrated step time),
+//!   3. the ring allreduce of paper-scale gradient bytes runs over the
+//!      TCP/IP tunnel (barrier),
+//!   4. SGD applies locally (absorbed into compute).
+
+use anyhow::Result;
+
+use crate::allreduce::ring_time;
+use crate::csd::{CsdConfig, NewportCsd};
+use crate::perfmodel::{Device, PerfModel};
+use crate::sim::SimTime;
+use crate::tunnel::{NodeId, Tunnel, TunnelConfig};
+
+/// Modeled-cluster schedule parameters.
+#[derive(Debug, Clone)]
+pub struct ScheduleConfig {
+    pub network: String,
+    pub num_csds: usize,
+    pub include_host: bool,
+    pub bs_csd: usize,
+    pub bs_host: usize,
+    pub steps: usize,
+    /// Bytes of one staged image on flash (dataset-dependent).
+    pub image_bytes: usize,
+    /// Model I/O staging through the CSD flash substrate (off for pure
+    /// compute/sync studies, on for Table II energy accounting).
+    pub stage_io: bool,
+}
+
+/// Per-run report.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub steps: usize,
+    /// Total modeled wall time.
+    pub elapsed: SimTime,
+    /// Aggregate throughput, img/s.
+    pub images_per_sec: f64,
+    /// Per-worker throughput (host first if present), img/s.
+    pub per_worker_ips: Vec<f64>,
+    /// Mean share of a step spent synchronizing.
+    pub sync_fraction: f64,
+    /// Flash + link traffic for the energy model.
+    pub flash_reads: u64,
+    pub link_bytes: u64,
+}
+
+/// The modeled cluster (host + N CSDs + tunnel).
+pub struct Scheduler {
+    model: PerfModel,
+    tunnel: Tunnel,
+    csds: Vec<NewportCsd>,
+}
+
+impl Scheduler {
+    pub fn new(model: PerfModel, num_csds: usize, tunnel_cfg: TunnelConfig, csd_cfg: CsdConfig) -> Self {
+        let csds = (0..num_csds)
+            .map(|i| NewportCsd::new(i, csd_cfg.clone(), 0xC5D0 + i as u64))
+            .collect();
+        Self { model, tunnel: Tunnel::new(num_csds, tunnel_cfg), csds }
+    }
+
+    /// Pre-stage `images` logical pages of dataset on every CSD so
+    /// training reads hit mapped flash.
+    pub fn preload_data(&mut self, pages_per_csd: u32) -> Result<()> {
+        for csd in &mut self.csds {
+            for lpn in 0..pages_per_csd {
+                csd.write_page(lpn, lpn as u64, SimTime::ZERO)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Simulate `cfg.steps` synchronous steps; returns the timeline.
+    pub fn run(&mut self, cfg: &ScheduleConfig) -> Result<EpochReport> {
+        let n_workers = cfg.num_csds + usize::from(cfg.include_host);
+        anyhow::ensure!(n_workers > 0, "no workers");
+        let sync_bytes = self.model.sync_bytes(&cfg.network)?;
+        let pages_per_image = cfg.image_bytes.div_ceil(
+            self.csds.first().map_or(16 * 1024, |c| c.page_bytes()),
+        );
+
+        let ranks: Vec<NodeId> = (if cfg.include_host {
+            vec![NodeId::Host]
+        } else {
+            vec![]
+        })
+        .into_iter()
+        .chain((0..cfg.num_csds).map(NodeId::Csd))
+        .collect();
+
+        let host_compute = if cfg.include_host {
+            Some(self.model.step_time(Device::HostXeon, &cfg.network, cfg.bs_host)?)
+        } else {
+            None
+        };
+        let csd_compute = self.model.step_time(Device::NewportIsp, &cfg.network, cfg.bs_csd)?;
+
+        let mut now = SimTime::ZERO;
+        let mut sync_total = SimTime::ZERO;
+        let mut flash_reads = 0u64;
+        let mut data_cursor = 0u32;
+
+        for _step in 0..cfg.steps {
+            let mut compute_done = now;
+            // Host batch staging: public data streamed from the CSDs
+            // over NVMe (round-robin source).
+            if let Some(hc) = host_compute {
+                let ready = if cfg.stage_io && !self.csds.is_empty() {
+                    let mut ready = now;
+                    let per_csd = (cfg.bs_host * pages_per_image).div_ceil(self.csds.len().max(1));
+                    for csd in &mut self.csds {
+                        let lpns: Vec<u32> = (0..per_csd as u32)
+                            .map(|i| (data_cursor + i) % 64)
+                            .collect();
+                        ready = ready.max(csd.read_for_host(&lpns, now)?);
+                        flash_reads += per_csd as u64;
+                    }
+                    ready
+                } else {
+                    now
+                };
+                compute_done = compute_done.max(ready + hc);
+            }
+            // CSD steps: stage locally (ISP path), then compute.
+            for csd in &mut self.csds {
+                let done = if cfg.stage_io {
+                    let lpns: Vec<u32> = (0..(cfg.bs_csd * pages_per_image) as u32)
+                        .map(|i| (data_cursor + i) % 64)
+                        .collect();
+                    flash_reads += lpns.len() as u64;
+                    csd.isp_train_step(
+                        &lpns,
+                        csd_compute,
+                        sync_bytes as u64,
+                        cfg.image_bytes as u64 * 4, // activations ≈ 4x input
+                        cfg.bs_csd,
+                        now,
+                    )?
+                } else {
+                    now + csd_compute
+                };
+                compute_done = compute_done.max(done);
+            }
+            data_cursor = data_cursor.wrapping_add(37);
+
+            // Ring allreduce barrier.
+            let sync_done = if ranks.len() > 1 {
+                ring_time(&mut self.tunnel, &ranks, sync_bytes, compute_done)
+            } else {
+                compute_done
+            };
+            sync_total += sync_done - compute_done;
+            now = sync_done;
+        }
+
+        let elapsed = now;
+        let images_per_step = cfg.num_csds * cfg.bs_csd
+            + if cfg.include_host { cfg.bs_host } else { 0 };
+        let images_per_sec =
+            (images_per_step * cfg.steps) as f64 / elapsed.as_secs_f64().max(1e-12);
+        let step_time = elapsed.as_secs_f64() / cfg.steps as f64;
+        let mut per_worker_ips = Vec::new();
+        if cfg.include_host {
+            per_worker_ips.push(cfg.bs_host as f64 / step_time);
+        }
+        per_worker_ips.extend((0..cfg.num_csds).map(|_| cfg.bs_csd as f64 / step_time));
+
+        Ok(EpochReport {
+            steps: cfg.steps,
+            elapsed,
+            images_per_sec,
+            per_worker_ips,
+            sync_fraction: sync_total.as_secs_f64() / elapsed.as_secs_f64().max(1e-12),
+            flash_reads,
+            link_bytes: self.tunnel.stats().bytes,
+        })
+    }
+}
+
+/// Convenience: modeled throughput for (network, #CSDs) with tuned
+/// batches — the Fig. 6 datapoint generator.
+pub fn modeled_throughput(
+    network: &str,
+    num_csds: usize,
+    include_host: bool,
+    bs_csd: usize,
+    bs_host: usize,
+    steps: usize,
+) -> Result<EpochReport> {
+    let mut sched = Scheduler::new(
+        PerfModel::default(),
+        num_csds,
+        TunnelConfig::default(),
+        CsdConfig::default(),
+    );
+    sched.run(&ScheduleConfig {
+        network: network.to_string(),
+        num_csds,
+        include_host,
+        bs_csd,
+        bs_host,
+        steps,
+        image_bytes: 12 * 1024,
+        stage_io: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_alone_matches_calibration() {
+        let r = modeled_throughput("mobilenet_v2", 0, true, 25, 315, 5).unwrap();
+        assert!((r.images_per_sec - 31.05).abs() < 1.0, "{}", r.images_per_sec);
+        assert_eq!(r.sync_fraction, 0.0);
+    }
+
+    #[test]
+    fn adding_csds_increases_aggregate_throughput() {
+        let r0 = modeled_throughput("mobilenet_v2", 0, true, 25, 315, 4).unwrap();
+        let r8 = modeled_throughput("mobilenet_v2", 8, true, 25, 315, 4).unwrap();
+        let r24 = modeled_throughput("mobilenet_v2", 24, true, 25, 315, 4).unwrap();
+        assert!(r8.images_per_sec > r0.images_per_sec);
+        assert!(r24.images_per_sec > r8.images_per_sec);
+    }
+
+    #[test]
+    fn per_node_throughput_declines_then_converges() {
+        // Fig. 6's shape: individual node speed drops as nodes join,
+        // then flattens beyond ~5-6 devices.
+        let ips = |n| {
+            modeled_throughput("mobilenet_v2", n, true, 25, 315, 4)
+                .unwrap()
+                .per_worker_ips[0]
+        };
+        let (a, b, c, d) = (ips(1), ips(4), ips(12), ips(24));
+        assert!(b < a, "slowdown must appear: {a} -> {b}");
+        let early_drop = (a - b) / a;
+        let late_drop = (c - d) / c;
+        assert!(late_drop < early_drop, "slowdown must fade: {early_drop} vs {late_drop}");
+    }
+
+    #[test]
+    fn bigger_models_pay_more_sync() {
+        let mv = modeled_throughput("mobilenet_v2", 16, true, 25, 315, 4).unwrap();
+        let inc = modeled_throughput("inception_v3", 16, true, 16, 370, 4).unwrap();
+        assert!(
+            inc.sync_fraction > mv.sync_fraction,
+            "inception (23.8M params) must sync longer than mobilenet: {} vs {}",
+            inc.sync_fraction,
+            mv.sync_fraction
+        );
+    }
+
+    #[test]
+    fn staged_io_accounts_flash_traffic() {
+        let mut sched = Scheduler::new(
+            PerfModel::default(),
+            2,
+            TunnelConfig::default(),
+            CsdConfig::default(),
+        );
+        sched.preload_data(64).unwrap();
+        let r = sched
+            .run(&ScheduleConfig {
+                network: "mobilenet_v2".into(),
+                num_csds: 2,
+                include_host: true,
+                bs_csd: 4,
+                bs_host: 16,
+                steps: 2,
+                image_bytes: 12 * 1024,
+                stage_io: true,
+            })
+            .unwrap();
+        assert!(r.flash_reads > 0);
+        assert!(r.link_bytes > 0);
+    }
+}

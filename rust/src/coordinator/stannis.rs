@@ -1,0 +1,232 @@
+//! The Stannis façade: tune → balance → train, with *real* numerics.
+//!
+//! This is the paper's end-to-end flow on the real-execution path: the
+//! PJRT engine runs every worker's AOT-compiled train step, gradients
+//! cross a faithful ring allreduce, and each worker applies SGD to its
+//! own replica. Replicas provably stay in lockstep (asserted), which is
+//! the §V.C accuracy-parity claim in its strongest form.
+//!
+//! Modeled time is accounted in parallel via the scheduler components,
+//! so a real run also yields the paper-scale timeline it *would* have
+//! had on the Xeon + 24-Newport testbed.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::allreduce::ring_allreduce_mean;
+use crate::data::{Dataset, Shard};
+use crate::model::{ParamStore, Sgd, SgdConfig};
+use crate::runtime::Engine;
+use crate::tunnel::NodeId;
+
+/// Configuration for a real-execution training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub network: String,
+    pub num_csds: usize,
+    pub include_host: bool,
+    /// Batch sizes (must have matching AOT artifacts).
+    pub bs_csd: usize,
+    pub bs_host: usize,
+    pub steps: usize,
+    pub sgd: SgdConfig,
+    pub seed: i32,
+    /// Check replica consistency every k steps (0 = never).
+    pub consistency_every: usize,
+    /// Weight gradients by batch size before averaging (the unbiased
+    /// estimator for heterogeneous batches; plain Horovod averages
+    /// unweighted, which over-weights small noisy CSD batches — set
+    /// false to reproduce that behaviour as an ablation).
+    pub weighted_grads: bool,
+}
+
+/// One worker's live state.
+struct WorkerState {
+    node: NodeId,
+    batch_size: usize,
+    params: ParamStore,
+    opt: Sgd,
+    shard: Shard,
+}
+
+/// Step-by-step training record.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// Mean worker loss per step.
+    pub losses: Vec<f32>,
+    /// Max divergence observed between replicas at the checks.
+    pub max_replica_divergence: f32,
+    pub images_processed: usize,
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f32 {
+        self.losses.first().copied().unwrap_or(f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+}
+
+/// The real-execution trainer.
+pub struct StannisTrainer {
+    engine: Arc<Engine>,
+    dataset: Dataset,
+    workers: Vec<WorkerState>,
+    cfg: TrainConfig,
+}
+
+impl StannisTrainer {
+    /// Build workers from a placement (see [`super::balance`]).
+    pub fn new(
+        engine: Arc<Engine>,
+        dataset: Dataset,
+        placement: &super::Placement,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        ensure!(
+            placement.csd_ids.len() >= cfg.num_csds,
+            "placement covers {} CSDs, need {}",
+            placement.csd_ids.len(),
+            cfg.num_csds
+        );
+        let net = engine.network(&cfg.network)?;
+        ensure!(
+            net.train_artifact(cfg.bs_csd).is_some(),
+            "no train artifact for CSD batch {}",
+            cfg.bs_csd
+        );
+        if cfg.include_host {
+            ensure!(
+                net.train_artifact(cfg.bs_host).is_some(),
+                "no train artifact for host batch {}",
+                cfg.bs_host
+            );
+        }
+
+        // All replicas start identical: one init, cloned. The SGD config
+        // (incl. the total-batch lr scaling) comes from the caller.
+        let init = engine.init_params(&cfg.network, cfg.seed)?;
+        let num_workers = cfg.num_csds + usize::from(cfg.include_host);
+        let sgd = cfg.sgd;
+
+        let mut workers = Vec::with_capacity(num_workers);
+        if cfg.include_host {
+            workers.push(WorkerState {
+                node: NodeId::Host,
+                batch_size: cfg.bs_host,
+                params: init.clone(),
+                opt: Sgd::new(sgd),
+                shard: Shard::new(&dataset, None, placement.host_ids.clone(), 91)?,
+            });
+        }
+        for c in 0..cfg.num_csds {
+            workers.push(WorkerState {
+                node: NodeId::Csd(c),
+                batch_size: cfg.bs_csd,
+                params: init.clone(),
+                opt: Sgd::new(sgd),
+                shard: Shard::new(&dataset, Some(c), placement.csd_ids[c].clone(), 101 + c as u64)?,
+            });
+        }
+        Ok(Self { engine, dataset, workers, cfg })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `steps` synchronous steps of real training.
+    pub fn train(&mut self, steps: usize) -> Result<TrainReport> {
+        let num_workers = self.workers.len();
+        let mut report = TrainReport::default();
+        for step in 0..steps {
+            
+            // 1. Every worker computes loss + grads on its own shard.
+            let mut flats: Vec<Vec<f32>> = Vec::with_capacity(self.workers.len());
+            let mut loss_sum = 0.0f32;
+            let total_batch: usize = self.workers.iter().map(|w| w.batch_size).sum();
+            for w in &mut self.workers {
+                let (x, y) = w.shard.batch(&self.dataset, w.batch_size)?;
+                let out = self
+                    .engine
+                    .train_step(&self.cfg.network, w.batch_size, &w.params, &x, &y)?;
+                loss_sum += out.loss;
+                report.images_processed += w.batch_size;
+                let mut flat = out.grads.to_flat();
+                if self.cfg.weighted_grads {
+                    // Pre-scale so the ring's plain mean yields the
+                    // batch-weighted mean: Σ bs_i·g_i / Σ bs_i.
+                    let k = w.batch_size as f32 * num_workers as f32
+                        / total_batch as f32;
+                    for g in &mut flat {
+                        *g *= k;
+                    }
+                }
+                flats.push(flat);
+            }
+            report.losses.push(loss_sum / self.workers.len() as f32);
+
+            // 2. Ring allreduce (mean) across the replicas.
+            ring_allreduce_mean(&mut flats)?;
+
+            // 3. Local SGD with the shared averaged gradient.
+            for (w, flat) in self.workers.iter_mut().zip(&flats) {
+                let mut grads = ParamStore::zeros_like_specs(
+                    &self.engine.network(&self.cfg.network)?.params,
+                );
+                grads.load_flat(flat)?;
+                w.opt.apply(&mut w.params, &grads)?;
+            }
+
+            // 4. Lockstep check.
+            if self.cfg.consistency_every > 0 && (step + 1) % self.cfg.consistency_every == 0 {
+                let d = self.replica_divergence();
+                report.max_replica_divergence = report.max_replica_divergence.max(d);
+                ensure!(
+                    d < 1e-4,
+                    "replicas diverged at step {step}: max |Δ| = {d}"
+                );
+            }
+        }
+        Ok(report)
+    }
+
+    /// Max parameter divergence across replicas (0 in exact lockstep).
+    pub fn replica_divergence(&self) -> f32 {
+        let first = &self.workers[0].params;
+        self.workers[1..]
+            .iter()
+            .map(|w| w.params.max_abs_diff(first))
+            .fold(0.0, f32::max)
+    }
+
+    /// Evaluate the (shared) model on freshly drawn public data.
+    pub fn evaluate(&mut self, batches: usize) -> Result<(f32, f32)> {
+        let net = self.engine.network(&self.cfg.network)?.clone();
+        let bs = net.eval_batch_size;
+        let params = self.workers[0].params.clone();
+        let mut shard = Shard::new(
+            &self.dataset,
+            None,
+            (0..self.dataset.num_public()).collect(),
+            777,
+        )?;
+        let mut loss = 0.0f32;
+        let mut correct = 0i32;
+        for _ in 0..batches {
+            let (x, y) = shard.batch(&self.dataset, bs)?;
+            let out = self.engine.eval_step(&self.cfg.network, &params, &x, &y)?;
+            loss += out.loss;
+            correct += out.correct;
+        }
+        Ok((loss / batches as f32, correct as f32 / (batches * bs) as f32))
+    }
+
+    /// Which node holds each worker (placement introspection).
+    pub fn topology(&self) -> Vec<NodeId> {
+        self.workers.iter().map(|w| w.node).collect()
+    }
+}

@@ -1,0 +1,221 @@
+//! Algorithm 1 — Stannis's batch-size tuning for heterogeneous workers.
+//!
+//! Paper §IV: benchmark the slow engine (Newport) across a batch-size
+//! ladder and pick its best batch; then grow the host's batch by
+//! `Δt/C`-scaled increments until the host's time-per-batch reaches the
+//! Newport time *plus* a synchronization margin (`E` tuned so the
+//! margin is a fixed 20%). The numbers in Table I pin the semantics:
+//! 25/3.08 img/s on Newport (8.12 s/batch) against 315/31.05 on the
+//! host (10.15 s/batch) — i.e. host time ≈ newport_time / (1 - 0.2).
+
+use anyhow::{ensure, Result};
+
+use crate::perfmodel::Device;
+
+/// Anything that can time one training batch on a device — the
+/// modeled perf model in the paper-scale experiments, the real PJRT
+/// engine (wallclock) in the integration tests.
+pub trait StepBench {
+    /// Seconds to complete one batch of `bs` on `device`.
+    fn time_per_batch(&mut self, device: Device, network: &str, bs: usize) -> Result<f64>;
+}
+
+impl StepBench for crate::perfmodel::PerfModel {
+    fn time_per_batch(&mut self, device: Device, network: &str, bs: usize) -> Result<f64> {
+        Ok(self.step_time(device, network, bs)?.as_secs_f64())
+    }
+}
+
+/// Tuner knobs (paper: `C` step scale, `E`-derived margin).
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// Batch candidates probed on the slow engine.
+    pub newport_candidates: Vec<usize>,
+    /// Stop growing the Newport batch when the next candidate improves
+    /// throughput by less than this fraction (§V: speed converges; a
+    /// bigger batch only costs DRAM).
+    pub saturation_eps: f64,
+    /// The paper's C: larger C = finer host batch updates.
+    pub c: f64,
+    /// Synchronization margin (paper's E gives 0.20).
+    pub margin: f64,
+    /// Convergence tolerance on the host-time target.
+    pub tol: f64,
+    /// Safety cap on host batch growth.
+    pub max_host_bs: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        Self {
+            newport_candidates: vec![5, 10, 15, 20, 25, 30, 40, 50],
+            saturation_eps: 0.009,
+            c: 2.0,
+            margin: 0.20,
+            tol: 0.005,
+            max_host_bs: 4096,
+        }
+    }
+}
+
+/// Tuning outcome for one network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TuneResult {
+    pub newport_bs: usize,
+    pub host_bs: usize,
+    /// img/s at the tuned batch sizes
+    pub newport_ips: f64,
+    pub host_ips: f64,
+    /// s per batch at the tuned batch sizes
+    pub newport_time: f64,
+    pub host_time: f64,
+    pub host_iters: usize,
+}
+
+/// Run Algorithm 1.
+pub fn tune(bench: &mut dyn StepBench, network: &str, cfg: &TuneConfig) -> Result<TuneResult> {
+    ensure!(!cfg.newport_candidates.is_empty(), "empty candidate ladder");
+    ensure!(cfg.margin < 1.0, "margin must be < 1");
+
+    // --- Newport: walk the ladder until throughput saturates. --------
+    let mut newport_bs = cfg.newport_candidates[0];
+    let mut newport_time = bench.time_per_batch(Device::NewportIsp, network, newport_bs)?;
+    let mut newport_ips = newport_bs as f64 / newport_time;
+    for &bs in &cfg.newport_candidates[1..] {
+        let t = bench.time_per_batch(Device::NewportIsp, network, bs)?;
+        let ips = bs as f64 / t;
+        if ips <= newport_ips * (1.0 + cfg.saturation_eps) {
+            break; // diminishing returns: keep the smaller batch
+        }
+        newport_bs = bs;
+        newport_time = t;
+        newport_ips = ips;
+    }
+
+    // --- Host: grow the batch toward the margin-adjusted target. -----
+    // Target: host time-per-batch = newport_time / (1 - margin), the
+    // slack that absorbs ring-sync stalls (see module docs).
+    let target = newport_time / (1.0 - cfg.margin);
+    let mut host_bs = newport_bs.max(1);
+    let mut host_time = bench.time_per_batch(Device::HostXeon, network, host_bs)?;
+    let mut iters = 0;
+    while (host_time - target).abs() > cfg.tol * target && iters < 64 {
+        // Paper's update: BS += BS * Δt / C (Δt normalized by target).
+        let delta = (target - host_time) / target;
+        let step = (host_bs as f64 * delta / cfg.c).round() as i64;
+        let step = if step == 0 { delta.signum() as i64 } else { step };
+        let next = (host_bs as i64 + step).clamp(1, cfg.max_host_bs as i64) as usize;
+        if next == host_bs {
+            break;
+        }
+        host_bs = next;
+        host_time = bench.time_per_batch(Device::HostXeon, network, host_bs)?;
+        iters += 1;
+    }
+    let host_ips = host_bs as f64 / host_time;
+
+    Ok(TuneResult {
+        newport_bs,
+        host_bs,
+        newport_ips,
+        host_ips,
+        newport_time,
+        host_time,
+        host_iters: iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::PerfModel;
+
+    #[test]
+    fn mobilenet_matches_table1() {
+        let mut m = PerfModel::default();
+        let r = tune(&mut m, "mobilenet_v2", &TuneConfig::default()).unwrap();
+        assert_eq!(r.newport_bs, 25, "paper Table I: Newport bs 25");
+        assert!(
+            (r.host_bs as i64 - 315).unsigned_abs() <= 16,
+            "paper Table I: host bs 315, got {}",
+            r.host_bs
+        );
+        assert!((r.newport_ips - 3.08).abs() < 0.1, "{}", r.newport_ips);
+        assert!((r.host_ips - 31.05).abs() < 1.5, "{}", r.host_ips);
+    }
+
+    #[test]
+    fn equalization_holds_margin() {
+        let mut m = PerfModel::default();
+        let cfg = TuneConfig::default();
+        for net in ["mobilenet_v2", "nasnet", "inception_v3", "squeezenet"] {
+            let r = tune(&mut m, net, &cfg).unwrap();
+            let ratio = r.host_time / r.newport_time;
+            assert!(
+                (ratio - 1.25).abs() < 0.05,
+                "{net}: host/newport time ratio {ratio:.3} != 1/(1-0.2)"
+            );
+        }
+    }
+
+    #[test]
+    fn all_nets_saturate_newport_in_paper_range() {
+        let mut m = PerfModel::default();
+        for (net, paper_bs) in
+            [("mobilenet_v2", 25), ("nasnet", 15), ("inception_v3", 16), ("squeezenet", 50)]
+        {
+            let r = tune(&mut m, net, &TuneConfig::default()).unwrap();
+            assert!(
+                (r.newport_bs as i64 - paper_bs).abs() <= 10,
+                "{net}: newport bs {} vs paper {paper_bs}",
+                r.newport_bs
+            );
+        }
+    }
+
+    #[test]
+    fn finer_c_converges_tighter() {
+        let mut m = PerfModel::default();
+        let coarse = tune(
+            &mut m,
+            "mobilenet_v2",
+            &TuneConfig { c: 1.0, tol: 0.05, ..Default::default() },
+        )
+        .unwrap();
+        let fine = tune(
+            &mut m,
+            "mobilenet_v2",
+            &TuneConfig { c: 4.0, tol: 0.001, ..Default::default() },
+        )
+        .unwrap();
+        let target = fine.newport_time / 0.8;
+        assert!((fine.host_time - target).abs() <= (coarse.host_time - target).abs() + 1e-9);
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        let mut m = PerfModel::default();
+        assert!(tune(
+            &mut m,
+            "mobilenet_v2",
+            &TuneConfig { newport_candidates: vec![], ..Default::default() }
+        )
+        .is_err());
+        assert!(tune(
+            &mut m,
+            "mobilenet_v2",
+            &TuneConfig { margin: 1.5, ..Default::default() }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn slower_host_gets_smaller_batch() {
+        let mut slow = PerfModel { host_scale: 0.5, ..Default::default() };
+        let mut fast = PerfModel::default();
+        let cfg = TuneConfig::default();
+        let rs = tune(&mut slow, "mobilenet_v2", &cfg).unwrap();
+        let rf = tune(&mut fast, "mobilenet_v2", &cfg).unwrap();
+        assert!(rs.host_bs < rf.host_bs);
+    }
+}

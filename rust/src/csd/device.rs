@@ -1,0 +1,227 @@
+//! The Newport CSD: FE (NVMe) + BE (FTL/flash/ECC) + ISP engine.
+//!
+//! Exposes the two data paths the paper contrasts:
+//!   * **host path** — flash → BE → FE → NVMe-over-PCIe → host DRAM
+//!   * **ISP path**  — flash → BE → internal bus → ISP DRAM
+//! The ISP path skips the FE and the PCIe serialization entirely; the
+//! asymmetry in both latency and energy between these two calls is the
+//! paper's core hardware claim.
+
+use anyhow::Result;
+
+use crate::sim::SimTime;
+
+use super::ftl::{Ftl, FtlConfig};
+use super::isp::{IspConfig, IspEngine, IspStats};
+use super::nvme::{NvmeConfig, NvmeLink, NvmeStats};
+
+#[derive(Debug, Clone, Default)]
+pub struct CsdConfig {
+    pub ftl: FtlConfig,
+    pub nvme: NvmeConfig,
+    pub isp: IspConfig,
+    /// Internal bus bandwidth for the ISP path (bytes/s); the shared
+    /// data bus of Fig. 1 is much faster than the external PCIe hop.
+    pub internal_bus_bw: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CsdIoStats {
+    pub host_path_reads: u64,
+    pub host_path_bytes: u64,
+    pub isp_path_reads: u64,
+    pub isp_path_bytes: u64,
+}
+
+/// One Newport device.
+pub struct NewportCsd {
+    pub id: usize,
+    ftl: Ftl,
+    nvme: NvmeLink,
+    isp: IspEngine,
+    internal_bus_bw: f64,
+    io: CsdIoStats,
+}
+
+impl NewportCsd {
+    pub fn new(id: usize, cfg: CsdConfig, seed: u64) -> Self {
+        Self {
+            id,
+            ftl: Ftl::new(cfg.ftl, seed ^ (id as u64).wrapping_mul(0x9E37)),
+            nvme: NvmeLink::new(cfg.nvme),
+            isp: IspEngine::new(cfg.isp),
+            internal_bus_bw: cfg.internal_bus_bw.unwrap_or(6.4e9),
+            io: CsdIoStats::default(),
+        }
+    }
+
+    pub fn ftl(&mut self) -> &mut Ftl {
+        &mut self.ftl
+    }
+
+    pub fn ftl_ref(&self) -> &Ftl {
+        &self.ftl
+    }
+
+    pub fn isp(&self) -> &IspEngine {
+        &self.isp
+    }
+
+    pub fn io_stats(&self) -> CsdIoStats {
+        self.io
+    }
+
+    pub fn nvme_stats(&self) -> NvmeStats {
+        self.nvme.stats()
+    }
+
+    pub fn isp_stats(&self) -> IspStats {
+        self.isp.stats()
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.ftl.page_bytes()
+    }
+
+    /// Write a logical page (either path lands in the same FTL).
+    pub fn write_page(&mut self, lpn: u32, tag: u64, now: SimTime) -> Result<SimTime> {
+        self.ftl.write(lpn, tag, now)
+    }
+
+    /// Host path: read `lpns` and ship them over NVMe. Returns arrival
+    /// time of the last byte at the host.
+    pub fn read_for_host(&mut self, lpns: &[u32], now: SimTime) -> Result<SimTime> {
+        let page = self.ftl.page_bytes();
+        let mut done = now;
+        for &lpn in lpns {
+            let r = self.ftl.read(lpn, now)?;
+            let host_done = self.nvme.transfer(page, now, r.done);
+            done = done.max(host_done);
+        }
+        self.io.host_path_reads += lpns.len() as u64;
+        self.io.host_path_bytes += (lpns.len() * page) as u64;
+        Ok(done)
+    }
+
+    /// ISP path: read `lpns` into ISP DRAM over the internal bus — no
+    /// FE, no PCIe. Returns availability time in ISP DRAM.
+    pub fn read_for_isp(&mut self, lpns: &[u32], now: SimTime) -> Result<SimTime> {
+        let page = self.ftl.page_bytes();
+        let bus_time = SimTime::from_secs_f64(page as f64 / self.internal_bus_bw);
+        let mut done = now;
+        for &lpn in lpns {
+            let r = self.ftl.read(lpn, now)?;
+            done = done.max(r.done + bus_time);
+        }
+        self.io.isp_path_reads += lpns.len() as u64;
+        self.io.isp_path_bytes += (lpns.len() * page) as u64;
+        Ok(done)
+    }
+
+    /// Run one in-storage training step: stage `data_lpns` via the ISP
+    /// path, then occupy the ISP cluster for `compute`. DRAM admission
+    /// is checked against the batch footprint.
+    pub fn isp_train_step(
+        &mut self,
+        data_lpns: &[u32],
+        compute: SimTime,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        batch: usize,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        self.isp.admit(param_bytes, activation_bytes_per_image, batch)?;
+        let inputs_ready = self.read_for_isp(data_lpns, now)?;
+        Ok(self.isp.run_step(compute, inputs_ready, batch))
+    }
+
+    /// Book tunnel traffic on the shared PCIe link (allreduce bytes).
+    pub fn tunnel_transfer(&mut self, bytes: usize, now: SimTime) -> SimTime {
+        self.nvme.occupy_link(bytes, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csd::flash::FlashConfig;
+
+    fn small_csd() -> NewportCsd {
+        let cfg = CsdConfig {
+            ftl: FtlConfig {
+                flash: FlashConfig {
+                    channels: 4,
+                    dies_per_channel: 2,
+                    blocks_per_die: 16,
+                    pages_per_block: 16,
+                    page_bytes: 4096,
+                    ..Default::default()
+                },
+                overprovision: 0.2,
+                gc_low_water: 3,
+                gc_high_water: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        NewportCsd::new(0, cfg, 7)
+    }
+
+    fn write_pages(csd: &mut NewportCsd, n: u32) {
+        for lpn in 0..n {
+            csd.write_page(lpn, lpn as u64, SimTime::ZERO).unwrap();
+        }
+    }
+
+    #[test]
+    fn isp_path_faster_than_host_path() {
+        let mut a = small_csd();
+        write_pages(&mut a, 64);
+        let lpns: Vec<u32> = (0..64).collect();
+        let host = a.read_for_host(&lpns, SimTime::ms(10)).unwrap();
+
+        let mut b = small_csd();
+        write_pages(&mut b, 64);
+        let isp = b.read_for_isp(&lpns, SimTime::ms(10)).unwrap();
+        assert!(
+            isp < host,
+            "ISP path must beat flash->NVMe->host: isp={isp}, host={host}"
+        );
+    }
+
+    #[test]
+    fn train_step_stages_then_computes() {
+        let mut csd = small_csd();
+        write_pages(&mut csd, 8);
+        let done = csd
+            .isp_train_step(&[0, 1, 2, 3], SimTime::secs(8), 14_000_000, 1_000_000, 4, SimTime::ZERO)
+            .unwrap();
+        assert!(done >= SimTime::secs(8));
+        assert_eq!(csd.isp_stats().steps, 1);
+        assert_eq!(csd.io_stats().isp_path_reads, 4);
+    }
+
+    #[test]
+    fn dram_saturation_rejected() {
+        let mut csd = small_csd();
+        write_pages(&mut csd, 4);
+        let r = csd.isp_train_step(
+            &[0],
+            SimTime::secs(1),
+            14_000_000,
+            50_000_000, // 50 MB activations per image
+            1000,       // * 1000 images >> 6 GB
+            SimTime::ZERO,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tunnel_traffic_contends_with_host_reads() {
+        let mut csd = small_csd();
+        write_pages(&mut csd, 4);
+        csd.tunnel_transfer(32_000_000, SimTime::ZERO); // ~10ms link burst
+        let done = csd.read_for_host(&[0], SimTime::ZERO).unwrap();
+        assert!(done > SimTime::ms(9), "host read must queue behind tunnel burst");
+    }
+}

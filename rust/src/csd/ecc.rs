@@ -1,0 +1,189 @@
+//! ECC model: BCH-style correction with wear-dependent raw bit errors.
+//!
+//! Newport's BE carries an ECC unit that restores data on flash bit
+//! errors (paper §III). We model a BCH code correcting up to `t` bits
+//! per 1 KiB codeword; the raw bit error rate (RBER) grows with a
+//! block's program/erase count. Outcomes per page read:
+//!   * clean          — no errors
+//!   * corrected      — ≤ t errors in every codeword (decode latency)
+//!   * uncorrectable  — some codeword exceeded t (fault-injection path)
+
+use crate::sim::SimTime;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EccConfig {
+    /// Correctable bits per codeword.
+    pub t: u32,
+    /// Codeword payload size in bytes.
+    pub codeword_bytes: usize,
+    /// RBER when a block is fresh.
+    pub rber_fresh: f64,
+    /// RBER added per P/E cycle (linear wear model).
+    pub rber_per_pe: f64,
+    /// Extra decode latency when correction kicks in.
+    pub correction_latency: SimTime,
+}
+
+impl Default for EccConfig {
+    fn default() -> Self {
+        Self {
+            t: 72,
+            codeword_bytes: 1024,
+            rber_fresh: 1e-6,
+            // RBER climbs ~linearly with wear; at ~3k P/E this reaches
+            // the 1e-3 regime where 72-bit BCH starts to sweat.
+            rber_per_pe: 3.3e-7,
+            correction_latency: SimTime::us(8),
+        }
+    }
+}
+
+/// Result of decoding one page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EccOutcome {
+    Clean,
+    Corrected { bits: u32 },
+    Uncorrectable,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EccStats {
+    pub pages: u64,
+    pub corrected_pages: u64,
+    pub corrected_bits: u64,
+    pub uncorrectable: u64,
+}
+
+/// The decoder. Deterministic given its RNG seed.
+#[derive(Debug)]
+pub struct Ecc {
+    cfg: EccConfig,
+    rng: Rng,
+    stats: EccStats,
+}
+
+impl Ecc {
+    pub fn new(cfg: EccConfig, seed: u64) -> Self {
+        Self { cfg, rng: Rng::new(seed), stats: EccStats::default() }
+    }
+
+    pub fn stats(&self) -> EccStats {
+        self.stats
+    }
+
+    pub fn rber(&self, pe_cycles: u32) -> f64 {
+        self.cfg.rber_fresh + self.cfg.rber_per_pe * pe_cycles as f64
+    }
+
+    /// Sample the number of bit errors in one codeword: Poisson with
+    /// mean RBER * bits (inversion sampling; mean is tiny).
+    fn sample_errors(&mut self, rber: f64) -> u32 {
+        let mean = rber * (self.cfg.codeword_bytes * 8) as f64;
+        // Knuth's algorithm is fine for mean << 100.
+        let l = (-mean).exp();
+        let mut k = 0u32;
+        let mut p = 1.0;
+        loop {
+            p *= self.rng.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+            if k > 10_000 {
+                return k; // pathological RBER, treat as destroyed
+            }
+        }
+    }
+
+    /// Decode a page read from a block with `pe_cycles` wear.
+    /// Returns the outcome and the added decode latency.
+    pub fn decode_page(&mut self, page_bytes: usize, pe_cycles: u32) -> (EccOutcome, SimTime) {
+        let rber = self.rber(pe_cycles);
+        let codewords = page_bytes.div_ceil(self.cfg.codeword_bytes);
+        let mut total_bits = 0u32;
+        let mut worst = 0u32;
+        for _ in 0..codewords {
+            let e = self.sample_errors(rber);
+            total_bits += e;
+            worst = worst.max(e);
+        }
+        self.stats.pages += 1;
+        if worst > self.cfg.t {
+            self.stats.uncorrectable += 1;
+            (EccOutcome::Uncorrectable, self.cfg.correction_latency)
+        } else if total_bits > 0 {
+            self.stats.corrected_pages += 1;
+            self.stats.corrected_bits += total_bits as u64;
+            (EccOutcome::Corrected { bits: total_bits }, self.cfg.correction_latency)
+        } else {
+            (EccOutcome::Clean, SimTime::ZERO)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_blocks_mostly_clean() {
+        let mut ecc = Ecc::new(EccConfig::default(), 1);
+        let mut clean = 0;
+        for _ in 0..1000 {
+            if matches!(ecc.decode_page(16384, 0).0, EccOutcome::Clean) {
+                clean += 1;
+            }
+        }
+        // RBER 1e-6 * 131072 bits ≈ 0.13 errors/page -> ~88% clean
+        assert!(clean > 800, "clean={clean}");
+        assert_eq!(ecc.stats().uncorrectable, 0);
+    }
+
+    #[test]
+    fn wear_increases_corrections() {
+        let mut fresh = Ecc::new(EccConfig::default(), 2);
+        let mut worn = Ecc::new(EccConfig::default(), 2);
+        let (mut cf, mut cw) = (0u64, 0u64);
+        for _ in 0..500 {
+            if !matches!(fresh.decode_page(16384, 0).0, EccOutcome::Clean) {
+                cf += 1;
+            }
+            if !matches!(worn.decode_page(16384, 3000).0, EccOutcome::Clean) {
+                cw += 1;
+            }
+        }
+        assert!(cw > cf * 2, "worn={cw} fresh={cf}");
+    }
+
+    #[test]
+    fn extreme_wear_goes_uncorrectable() {
+        let cfg = EccConfig { rber_per_pe: 1e-4, ..Default::default() };
+        let mut ecc = Ecc::new(cfg, 3);
+        let mut bad = 0;
+        for _ in 0..50 {
+            if matches!(ecc.decode_page(16384, 50_000).0, EccOutcome::Uncorrectable) {
+                bad += 1;
+            }
+        }
+        assert!(bad > 0, "expected uncorrectable pages at absurd wear");
+    }
+
+    #[test]
+    fn corrected_reads_pay_latency() {
+        let cfg = EccConfig { rber_fresh: 1e-3, ..Default::default() };
+        let mut ecc = Ecc::new(cfg, 4);
+        let (outcome, lat) = ecc.decode_page(16384, 0);
+        assert!(!matches!(outcome, EccOutcome::Clean));
+        assert!(lat > SimTime::ZERO);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Ecc::new(EccConfig::default(), 9);
+        let mut b = Ecc::new(EccConfig::default(), 9);
+        for _ in 0..100 {
+            assert_eq!(a.decode_page(16384, 100).0, b.decode_page(16384, 100).0);
+        }
+    }
+}

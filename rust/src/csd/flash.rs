@@ -1,0 +1,248 @@
+//! NAND flash array timing model.
+//!
+//! Newport's back end (paper §III): 16 flash channels operated in
+//! parallel, each with multiple dies; page reads/programs occupy the
+//! die, then the channel bus for the data transfer. Geometry and
+//! timings default to a 3D-TLC part consistent with the paper's 32 TB
+//! per-device capacity.
+
+use crate::sim::{MultiTimeline, SimTime};
+
+/// Physical page address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysAddr {
+    pub channel: u16,
+    pub die: u16,
+    pub block: u32,
+    pub page: u32,
+}
+
+/// Array geometry + timing parameters.
+#[derive(Debug, Clone)]
+pub struct FlashConfig {
+    pub channels: usize,
+    pub dies_per_channel: usize,
+    pub blocks_per_die: usize,
+    pub pages_per_block: usize,
+    pub page_bytes: usize,
+    /// tR: page read (cell array -> page register)
+    pub t_read: SimTime,
+    /// tPROG: page program
+    pub t_prog: SimTime,
+    /// tBERS: block erase
+    pub t_erase: SimTime,
+    /// Channel bus bandwidth (bytes/sec) for register <-> controller.
+    pub channel_bw: f64,
+}
+
+impl Default for FlashConfig {
+    fn default() -> Self {
+        Self {
+            channels: 16,
+            dies_per_channel: 4,
+            // Scaled-down block count keeps FTL tables small in tests;
+            // capacity-sensitive experiments override this.
+            blocks_per_die: 256,
+            pages_per_block: 64,
+            page_bytes: 16 * 1024,
+            t_read: SimTime::us(60),
+            t_prog: SimTime::us(660),
+            t_erase: SimTime::ms(3),
+            channel_bw: 400.0e6,
+        }
+    }
+}
+
+impl FlashConfig {
+    pub fn total_pages(&self) -> usize {
+        self.channels * self.dies_per_channel * self.blocks_per_die * self.pages_per_block
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.channels * self.dies_per_channel * self.blocks_per_die
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.total_pages() * self.page_bytes
+    }
+
+    fn xfer_time(&self, bytes: usize) -> SimTime {
+        SimTime::from_secs_f64(bytes as f64 / self.channel_bw)
+    }
+}
+
+/// Cumulative operation counters (drives the power model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlashStats {
+    pub reads: u64,
+    pub programs: u64,
+    pub erases: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+/// The array: per-die service timelines + per-channel bus timelines.
+#[derive(Debug)]
+pub struct FlashArray {
+    cfg: FlashConfig,
+    /// dies indexed channel-major: channel * dies_per_channel + die
+    dies: MultiTimeline,
+    /// channel buses
+    buses: MultiTimeline,
+    stats: FlashStats,
+}
+
+impl FlashArray {
+    pub fn new(cfg: FlashConfig) -> Self {
+        let dies = MultiTimeline::new(cfg.channels * cfg.dies_per_channel);
+        let buses = MultiTimeline::new(cfg.channels);
+        Self { cfg, dies, buses, stats: FlashStats::default() }
+    }
+
+    pub fn config(&self) -> &FlashConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> FlashStats {
+        self.stats
+    }
+
+    fn die_index(&self, addr: PhysAddr) -> usize {
+        addr.channel as usize * self.cfg.dies_per_channel + addr.die as usize
+    }
+
+    pub fn check_addr(&self, addr: PhysAddr) -> bool {
+        (addr.channel as usize) < self.cfg.channels
+            && (addr.die as usize) < self.cfg.dies_per_channel
+            && (addr.block as usize) < self.cfg.blocks_per_die
+            && (addr.page as usize) < self.cfg.pages_per_block
+    }
+
+    /// Read one page: die busy for tR, then channel bus for the
+    /// transfer. Returns completion time.
+    pub fn read_page(&mut self, addr: PhysAddr, now: SimTime) -> SimTime {
+        assert!(self.check_addr(addr), "bad address {addr:?}");
+        let die = self.die_index(addr);
+        let (_, cell_done) = self.dies.schedule_on(die, now, self.cfg.t_read);
+        let xfer = self.cfg.xfer_time(self.cfg.page_bytes);
+        let (_, done) = self.buses.schedule_on(addr.channel as usize, cell_done, xfer);
+        self.stats.reads += 1;
+        self.stats.bytes_read += self.cfg.page_bytes as u64;
+        done
+    }
+
+    /// Program one page: channel bus transfer in, then die busy for tPROG.
+    pub fn program_page(&mut self, addr: PhysAddr, now: SimTime) -> SimTime {
+        assert!(self.check_addr(addr), "bad address {addr:?}");
+        let xfer = self.cfg.xfer_time(self.cfg.page_bytes);
+        let (_, in_done) = self.buses.schedule_on(addr.channel as usize, now, xfer);
+        let die = self.die_index(addr);
+        let (_, done) = self.dies.schedule_on(die, in_done, self.cfg.t_prog);
+        self.stats.programs += 1;
+        self.stats.bytes_written += self.cfg.page_bytes as u64;
+        done
+    }
+
+    /// Erase a whole block (die busy for tBERS).
+    pub fn erase_block(&mut self, addr: PhysAddr, now: SimTime) -> SimTime {
+        assert!(self.check_addr(addr), "bad address {addr:?}");
+        let die = self.die_index(addr);
+        let (_, done) = self.dies.schedule_on(die, now, self.cfg.t_erase);
+        self.stats.erases += 1;
+        done
+    }
+
+    /// Mean die utilization over [0, horizon].
+    pub fn die_utilization(&self, horizon: SimTime) -> f64 {
+        self.dies.utilization(horizon)
+    }
+
+    /// Aggregate sequential-read bandwidth estimate: time to stream
+    /// `bytes` across all channels from `now`, returned as completion.
+    pub fn stream_read(&mut self, bytes: usize, now: SimTime) -> SimTime {
+        let pages = bytes.div_ceil(self.cfg.page_bytes);
+        let mut done = now;
+        for p in 0..pages {
+            // stripe pages round-robin across channels and dies
+            let addr = PhysAddr {
+                channel: (p % self.cfg.channels) as u16,
+                die: ((p / self.cfg.channels) % self.cfg.dies_per_channel) as u16,
+                block: 0,
+                page: (p % self.cfg.pages_per_block) as u32,
+            };
+            done = done.max(self.read_page(addr, now));
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(c: u16, d: u16, b: u32, p: u32) -> PhysAddr {
+        PhysAddr { channel: c, die: d, block: b, page: p }
+    }
+
+    #[test]
+    fn read_latency_is_tr_plus_transfer() {
+        let cfg = FlashConfig::default();
+        let xfer = SimTime::from_secs_f64(cfg.page_bytes as f64 / cfg.channel_bw);
+        let mut arr = FlashArray::new(cfg);
+        let done = arr.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        assert_eq!(done, SimTime::us(60) + xfer);
+    }
+
+    #[test]
+    fn same_die_serializes_different_dies_overlap() {
+        let mut arr = FlashArray::new(FlashConfig::default());
+        let d1 = arr.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        let d2 = arr.read_page(addr(0, 0, 0, 1), SimTime::ZERO); // same die
+        assert!(d2 > d1, "same-die reads must serialize");
+        let mut arr2 = FlashArray::new(FlashConfig::default());
+        let e1 = arr2.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        let e2 = arr2.read_page(addr(1, 0, 0, 0), SimTime::ZERO); // other channel
+        assert_eq!(e1, e2, "independent channels overlap fully");
+    }
+
+    #[test]
+    fn program_slower_than_read() {
+        let mut arr = FlashArray::new(FlashConfig::default());
+        let r = arr.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        let mut arr2 = FlashArray::new(FlashConfig::default());
+        let w = arr2.program_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        assert!(w > r);
+    }
+
+    #[test]
+    fn stream_read_uses_all_channels() {
+        let cfg = FlashConfig::default();
+        let channels = cfg.channels;
+        let page = cfg.page_bytes;
+        let mut arr = FlashArray::new(cfg);
+        // One page per channel: all complete in ~one page read time.
+        let t_parallel = arr.stream_read(page * channels, SimTime::ZERO);
+        let mut arr2 = FlashArray::new(FlashConfig::default());
+        let t_single = arr2.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        assert_eq!(t_parallel, t_single);
+        assert_eq!(arr.stats().reads, channels as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad address")]
+    fn bad_address_panics() {
+        let mut arr = FlashArray::new(FlashConfig::default());
+        arr.read_page(addr(99, 0, 0, 0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut arr = FlashArray::new(FlashConfig::default());
+        arr.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        arr.program_page(addr(0, 0, 0, 1), SimTime::ZERO);
+        arr.erase_block(addr(0, 0, 0, 0), SimTime::ZERO);
+        let s = arr.stats();
+        assert_eq!((s.reads, s.programs, s.erases), (1, 1, 1));
+        assert_eq!(s.bytes_read as usize, arr.config().page_bytes);
+    }
+}

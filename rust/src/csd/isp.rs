@@ -1,0 +1,139 @@
+//! ISP engine model: the quad-core ARM Cortex-A53 + shared DRAM that
+//! runs training *inside* the Newport CSD (paper §III).
+//!
+//! Compute throughput (images/sec per network/batch) comes from the
+//! calibrated [`perfmodel`](crate::perfmodel); this module adds the
+//! engine's *constraints*: DRAM capacity (the paper's §V concern —
+//! "large batch size on big networks can saturate the DRAM and stall
+//! training") and core occupancy.
+
+use anyhow::{bail, Result};
+
+use crate::sim::{SimTime, Timeline};
+
+#[derive(Debug, Clone)]
+pub struct IspConfig {
+    /// DRAM available to the ISP engine. The paper quotes 8 GB shared,
+    /// ~6 GB usable for the training workload.
+    pub dram_bytes: u64,
+    /// Cores in the ISP cluster (quad A53). Training occupies all of
+    /// them; the core timeline serializes co-resident jobs.
+    pub cores: usize,
+    /// Resident model/framework footprint independent of batch.
+    pub framework_bytes: u64,
+}
+
+impl Default for IspConfig {
+    fn default() -> Self {
+        Self {
+            dram_bytes: 6 * 1024 * 1024 * 1024,
+            cores: 4,
+            framework_bytes: 512 * 1024 * 1024,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IspStats {
+    pub steps: u64,
+    pub images: u64,
+}
+
+/// One CSD's in-storage compute engine.
+#[derive(Debug)]
+pub struct IspEngine {
+    cfg: IspConfig,
+    /// The whole quad-core cluster as one service timeline (training
+    /// steps are data-parallel across cores internally).
+    cluster: Timeline,
+    stats: IspStats,
+}
+
+impl IspEngine {
+    pub fn new(cfg: IspConfig) -> Self {
+        Self { cfg, cluster: Timeline::new(), stats: IspStats::default() }
+    }
+
+    pub fn stats(&self) -> IspStats {
+        self.stats
+    }
+
+    pub fn busy_time(&self) -> SimTime {
+        self.cluster.busy_time()
+    }
+
+    /// DRAM footprint of a training step: activations scale with batch.
+    pub fn step_dram_bytes(
+        &self,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        batch: usize,
+    ) -> u64 {
+        // params + gradients + momentum + per-image activations
+        self.cfg.framework_bytes
+            + 3 * param_bytes
+            + activation_bytes_per_image * batch as u64
+    }
+
+    /// Check a batch fits in DRAM (the paper's stall condition).
+    pub fn admit(
+        &self,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        batch: usize,
+    ) -> Result<()> {
+        let need = self.step_dram_bytes(param_bytes, activation_bytes_per_image, batch);
+        if need > self.cfg.dram_bytes {
+            bail!(
+                "DRAM saturated: step needs {:.2} GiB of {:.2} GiB (batch {batch})",
+                need as f64 / (1u64 << 30) as f64,
+                self.cfg.dram_bytes as f64 / (1u64 << 30) as f64,
+            );
+        }
+        Ok(())
+    }
+
+    /// Book one training step of `compute` duration on the cluster,
+    /// beginning once `inputs_ready`. Returns completion time.
+    pub fn run_step(
+        &mut self,
+        compute: SimTime,
+        inputs_ready: SimTime,
+        batch: usize,
+    ) -> SimTime {
+        let (_, done) = self.cluster.schedule(inputs_ready, compute);
+        self.stats.steps += 1;
+        self.stats.images += batch as u64;
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_small_batches_reject_huge() {
+        let isp = IspEngine::new(IspConfig::default());
+        // MobileNetV2-class: 14 MB params, ~40 MB activations per image
+        assert!(isp.admit(14_000_000, 40_000_000, 16).is_ok());
+        assert!(isp.admit(14_000_000, 40_000_000, 10_000).is_err());
+    }
+
+    #[test]
+    fn steps_serialize_on_the_cluster() {
+        let mut isp = IspEngine::new(IspConfig::default());
+        let d1 = isp.run_step(SimTime::secs(8), SimTime::ZERO, 25);
+        let d2 = isp.run_step(SimTime::secs(8), SimTime::ZERO, 25);
+        assert_eq!(d1, SimTime::secs(8));
+        assert_eq!(d2, SimTime::secs(16));
+        assert_eq!(isp.stats().images, 50);
+    }
+
+    #[test]
+    fn waits_for_inputs() {
+        let mut isp = IspEngine::new(IspConfig::default());
+        let done = isp.run_step(SimTime::secs(1), SimTime::secs(5), 8);
+        assert_eq!(done, SimTime::secs(6));
+    }
+}

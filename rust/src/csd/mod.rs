@@ -1,0 +1,23 @@
+//! Newport CSD substrate: every hardware block of paper Fig. 1 as a
+//! deterministic discrete-event model.
+//!
+//! * [`flash`] — NAND array geometry + page/block timing
+//! * [`ecc`] — BCH-style correction with wear-dependent RBER
+//! * [`ftl`] — page-mapped L2P, garbage collection, wear leveling
+//! * [`nvme`] — FE + NVMe-over-PCIe host path (shared PCIe timeline)
+//! * [`isp`] — quad-A53 in-storage compute engine + DRAM admission
+//! * [`device`] — the composed Newport device and its two data paths
+
+pub mod device;
+pub mod ecc;
+pub mod flash;
+pub mod ftl;
+pub mod isp;
+pub mod nvme;
+
+pub use device::{CsdConfig, CsdIoStats, NewportCsd};
+pub use ecc::{Ecc, EccConfig, EccOutcome};
+pub use flash::{FlashArray, FlashConfig, FlashStats, PhysAddr};
+pub use ftl::{Ftl, FtlConfig, FtlStats};
+pub use isp::{IspConfig, IspEngine};
+pub use nvme::{NvmeConfig, NvmeLink};

@@ -1,0 +1,312 @@
+//! OCFS2-style distributed lock manager + metadata journal.
+//!
+//! Paper §III: host and ISP engines mount the same flash filesystem
+//! concurrently; two OCFS2 agents synchronize metadata over the TCP/IP
+//! tunnel. We model the DLM the way OCFS2 uses it for the Stannis
+//! workload: per-resource locks in PR (protected read, shared) or EX
+//! (exclusive) mode, a FIFO grant queue (no starvation), and a
+//! monotone metadata version bumped on every EX release (the journal
+//! replay the readers pick up).
+//!
+//! The lock master lives on the host (OCFS2's designated node); every
+//! request/grant crosses the tunnel, so lock traffic has a real cost
+//! that shows up in epoch timings when public-data shards are
+//! rebalanced mid-run.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::sim::SimTime;
+use crate::tunnel::{NodeId, Tunnel};
+
+/// OCFS2 lock modes used by the Stannis data plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockMode {
+    /// Protected read: any number of concurrent holders.
+    Pr,
+    /// Exclusive: sole holder.
+    Ex,
+}
+
+impl LockMode {
+    fn compatible(self, other: LockMode) -> bool {
+        matches!((self, other), (LockMode::Pr, LockMode::Pr))
+    }
+}
+
+#[derive(Debug)]
+struct LockState {
+    holders: Vec<(NodeId, LockMode)>,
+    queue: VecDeque<(NodeId, LockMode)>,
+    version: u64,
+}
+
+impl LockState {
+    fn new() -> Self {
+        Self { holders: Vec::new(), queue: VecDeque::new(), version: 0 }
+    }
+
+    fn can_grant(&self, mode: LockMode) -> bool {
+        // FIFO fairness: nothing may overtake a queued request.
+        self.queue.is_empty() && self.holders.iter().all(|(_, m)| m.compatible(mode))
+    }
+}
+
+/// Result of a lock request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LockReply {
+    /// Granted; holding may begin at the given time.
+    Granted { at: SimTime, version: u64 },
+    /// Queued behind incompatible holders/requests.
+    Queued,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DlmStats {
+    pub requests: u64,
+    pub grants: u64,
+    pub queued: u64,
+    pub releases: u64,
+}
+
+/// The lock master (host-resident).
+pub struct Dlm {
+    resources: BTreeMap<String, LockState>,
+    stats: DlmStats,
+    /// Message size of one DLM request/grant on the tunnel.
+    msg_bytes: usize,
+}
+
+impl Default for Dlm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dlm {
+    pub fn new() -> Self {
+        Self { resources: BTreeMap::new(), stats: DlmStats::default(), msg_bytes: 256 }
+    }
+
+    pub fn stats(&self) -> DlmStats {
+        self.stats
+    }
+
+    /// Current metadata version of a resource (journal sequence).
+    pub fn version(&self, resource: &str) -> u64 {
+        self.resources.get(resource).map_or(0, |s| s.version)
+    }
+
+    pub fn holders(&self, resource: &str) -> Vec<(NodeId, LockMode)> {
+        self.resources.get(resource).map_or_else(Vec::new, |s| s.holders.clone())
+    }
+
+    /// Request `mode` on `resource` from `node` at `now`, paying the
+    /// tunnel round-trip when the requester is not the master (host).
+    pub fn request(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        resource: &str,
+        mode: LockMode,
+        now: SimTime,
+    ) -> LockReply {
+        self.stats.requests += 1;
+        let req_arrive = match node {
+            NodeId::Host => now,
+            csd => tunnel.send(csd, NodeId::Host, self.msg_bytes, now),
+        };
+        let state = self.resources.entry(resource.to_string()).or_insert_with(LockState::new);
+        if state.can_grant(mode) {
+            state.holders.push((node, mode));
+            self.stats.grants += 1;
+            let granted_at = match node {
+                NodeId::Host => req_arrive,
+                csd => tunnel.send(NodeId::Host, csd, self.msg_bytes, req_arrive),
+            };
+            LockReply::Granted { at: granted_at, version: state.version }
+        } else {
+            state.queue.push_back((node, mode));
+            self.stats.queued += 1;
+            LockReply::Queued
+        }
+    }
+
+    /// Release a held lock; EX release bumps the metadata version
+    /// (journal commit). Returns newly granted (node, time, version)
+    /// tuples from the FIFO queue.
+    pub fn release(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        resource: &str,
+        now: SimTime,
+    ) -> Result<Vec<(NodeId, SimTime, u64)>> {
+        let state = match self.resources.get_mut(resource) {
+            Some(s) => s,
+            None => bail!("release of unknown resource {resource:?}"),
+        };
+        let idx = state
+            .holders
+            .iter()
+            .position(|(n, _)| *n == node)
+            .ok_or_else(|| anyhow::anyhow!("{node} does not hold {resource:?}"))?;
+        let (_, mode) = state.holders.remove(idx);
+        if mode == LockMode::Ex {
+            state.version += 1; // journal commit visible to next holders
+        }
+        self.stats.releases += 1;
+
+        // Notify master (if remote releaser), then grant FIFO-compatible waiters.
+        let release_arrive = match node {
+            NodeId::Host => now,
+            csd => tunnel.send(csd, NodeId::Host, self.msg_bytes, now),
+        };
+        let mut granted = Vec::new();
+        while let Some(&(waiter, wmode)) = state.queue.front() {
+            let compat = state.holders.iter().all(|(_, m)| m.compatible(wmode));
+            if !compat {
+                break;
+            }
+            state.queue.pop_front();
+            state.holders.push((waiter, wmode));
+            self.stats.grants += 1;
+            let at = match waiter {
+                NodeId::Host => release_arrive,
+                csd => tunnel.send(NodeId::Host, csd, self.msg_bytes, release_arrive),
+            };
+            granted.push((waiter, at, state.version));
+            if wmode == LockMode::Ex {
+                break; // EX admits exactly one
+            }
+        }
+        Ok(granted)
+    }
+
+    /// Invariant: at most one EX holder, and EX never coexists with PR.
+    pub fn check_invariants(&self) -> Result<()> {
+        for (res, state) in &self.resources {
+            let ex = state.holders.iter().filter(|(_, m)| *m == LockMode::Ex).count();
+            anyhow::ensure!(ex <= 1, "{res}: {ex} EX holders");
+            if ex == 1 {
+                anyhow::ensure!(
+                    state.holders.len() == 1,
+                    "{res}: EX coexists with other holders: {:?}",
+                    state.holders
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunnel::TunnelConfig;
+    use crate::util::prop;
+
+    fn setup() -> (Dlm, Tunnel) {
+        (Dlm::new(), Tunnel::new(4, TunnelConfig::default()))
+    }
+
+    #[test]
+    fn pr_locks_share() {
+        let (mut dlm, mut tun) = setup();
+        let a = dlm.request(&mut tun, NodeId::Csd(0), "meta:/public", LockMode::Pr, SimTime::ZERO);
+        let b = dlm.request(&mut tun, NodeId::Host, "meta:/public", LockMode::Pr, SimTime::ZERO);
+        assert!(matches!(a, LockReply::Granted { .. }));
+        assert!(matches!(b, LockReply::Granted { .. }));
+        dlm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ex_excludes_and_queues() {
+        let (mut dlm, mut tun) = setup();
+        let a = dlm.request(&mut tun, NodeId::Host, "meta:/f", LockMode::Ex, SimTime::ZERO);
+        assert!(matches!(a, LockReply::Granted { .. }));
+        let b = dlm.request(&mut tun, NodeId::Csd(1), "meta:/f", LockMode::Pr, SimTime::ZERO);
+        assert_eq!(b, LockReply::Queued);
+        let granted = dlm.release(&mut tun, NodeId::Host, "meta:/f", SimTime::ms(1)).unwrap();
+        assert_eq!(granted.len(), 1);
+        assert_eq!(granted[0].0, NodeId::Csd(1));
+        // EX release bumped the journal version the waiter observes.
+        assert_eq!(granted[0].2, 1);
+        dlm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fifo_no_overtaking() {
+        let (mut dlm, mut tun) = setup();
+        dlm.request(&mut tun, NodeId::Host, "r", LockMode::Ex, SimTime::ZERO);
+        // EX waiter queues first, then a PR request arrives.
+        dlm.request(&mut tun, NodeId::Csd(0), "r", LockMode::Ex, SimTime::ZERO);
+        let pr = dlm.request(&mut tun, NodeId::Csd(1), "r", LockMode::Pr, SimTime::ZERO);
+        assert_eq!(pr, LockReply::Queued, "PR must not overtake queued EX");
+        let g1 = dlm.release(&mut tun, NodeId::Host, "r", SimTime::ms(1)).unwrap();
+        assert_eq!(g1[0].0, NodeId::Csd(0), "FIFO: EX waiter first");
+        assert_eq!(g1.len(), 1);
+        let g2 = dlm.release(&mut tun, NodeId::Csd(0), "r", SimTime::ms(2)).unwrap();
+        assert_eq!(g2[0].0, NodeId::Csd(1));
+    }
+
+    #[test]
+    fn remote_requests_pay_tunnel_latency() {
+        let (mut dlm, mut tun) = setup();
+        match dlm.request(&mut tun, NodeId::Csd(2), "r", LockMode::Pr, SimTime::ZERO) {
+            LockReply::Granted { at, .. } => assert!(at > SimTime::ZERO),
+            other => panic!("{other:?}"),
+        }
+        match dlm.request(&mut tun, NodeId::Host, "r2", LockMode::Pr, SimTime::ZERO) {
+            LockReply::Granted { at, .. } => assert_eq!(at, SimTime::ZERO),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn release_errors() {
+        let (mut dlm, mut tun) = setup();
+        assert!(dlm.release(&mut tun, NodeId::Host, "never", SimTime::ZERO).is_err());
+        dlm.request(&mut tun, NodeId::Host, "r", LockMode::Pr, SimTime::ZERO);
+        assert!(dlm.release(&mut tun, NodeId::Csd(0), "r", SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn property_never_conflicting_grants() {
+        prop::check("DLM never grants conflicting locks", |rng| {
+            let (mut dlm, mut tun) = setup();
+            let nodes = [NodeId::Host, NodeId::Csd(0), NodeId::Csd(1), NodeId::Csd(2)];
+            let mut held: Vec<(NodeId, LockMode)> = Vec::new();
+            for step in 0..200u64 {
+                let now = SimTime::us(step * 50);
+                if !held.is_empty() && rng.bool(0.4) {
+                    let idx = rng.usize_below(held.len());
+                    let (node, _) = held.remove(idx);
+                    let granted = dlm.release(&mut tun, node, "res", now).unwrap();
+                    for (n, _, _) in granted {
+                        let m = dlm
+                            .holders("res")
+                            .iter()
+                            .find(|(h, _)| *h == n)
+                            .map(|(_, m)| *m)
+                            .unwrap();
+                        held.push((n, m));
+                    }
+                } else {
+                    let node = nodes[rng.usize_below(nodes.len())];
+                    if held.iter().any(|(n, _)| *n == node) {
+                        continue; // one lock per node in this property
+                    }
+                    let mode = if rng.bool(0.3) { LockMode::Ex } else { LockMode::Pr };
+                    if let LockReply::Granted { .. } =
+                        dlm.request(&mut tun, node, "res", mode, now)
+                    {
+                        held.push((node, mode));
+                    }
+                }
+                dlm.check_invariants().unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,37 @@
+//! # stannis — STANNIS (DAC'20) reproduction
+//!
+//! Distributed, in-storage training of neural networks on clusters of
+//! computational storage devices (CSDs), reproduced as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Stannis coordinator: Algorithm 1
+//!   batch-size tuning, Eq. 1 load balancing, privacy-aware data
+//!   placement, ring-allreduce gradient synchronization, and the full
+//!   Newport CSD substrate (NAND flash, FTL, ECC, NVMe, ISP engine,
+//!   TCP/IP-over-PCIe tunnel, OCFS2-style metadata sync) as a
+//!   discrete-event simulation.
+//! * **L2/L1 (build-time Python)** — JAX models + Pallas kernels,
+//!   AOT-lowered to HLO text artifacts executed here via PJRT
+//!   ([`runtime`]). Python never runs on the training path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment
+//! index mapping each paper table/figure to a module and bench.
+
+pub mod allreduce;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod csd;
+pub mod data;
+pub mod fsync;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod tunnel;
+pub mod util;
+
+/// Crate-wide result type (PJRT, I/O and logic errors all flow as anyhow).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,233 @@
+//! Stannis CLI — tune, train and regenerate the paper's tables/figures.
+//!
+//! ```text
+//! stannis tune   [--network mobilenet_v2]           Algorithm 1 (modeled)
+//! stannis train  [--steps N --num-csds K ...]       real-exec training
+//! stannis report table1|fig6|fig7|table2            paper artifacts
+//! ```
+
+use anyhow::{bail, Result};
+
+use stannis::config::ExperimentConfig;
+use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
+use stannis::metrics::{f, print_table};
+use stannis::perfmodel::PerfModel;
+use stannis::power::PowerConfig;
+use stannis::util::cli::{usage, Args, OptSpec};
+
+const NETS: [(&str, usize, usize); 4] = [
+    // (calibration name, paper newport bs, paper host bs) for reports
+    ("mobilenet_v2", 25, 315),
+    ("nasnet", 15, 325),
+    ("inception_v3", 16, 370),
+    ("squeezenet", 50, 850),
+];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "tune" => cmd_tune(&args),
+        "train" => cmd_train(&args),
+        "report" => match args.positional().get(1).map(String::as_str) {
+            Some("table1") => report_table1(),
+            Some("fig6") => report_fig6(),
+            Some("fig7") => report_fig7(),
+            Some("table2") => report_table2(),
+            Some("all") | None => {
+                report_table1()?;
+                report_fig6()?;
+                report_fig7()?;
+                report_table2()
+            }
+            Some(other) => bail!("unknown report {other:?} (table1|fig6|fig7|table2|all)"),
+        },
+        "help" | "--help" => {
+            print!(
+                "{}",
+                usage(
+                    "stannis <tune|train|report> [options]",
+                    "STANNIS reproduction: in-storage distributed DNN training",
+                    &[
+                        OptSpec { name: "network", help: "network name", default: Some("mobilenet_v2_s") },
+                        OptSpec { name: "num-csds", help: "number of CSDs", default: Some("3") },
+                        OptSpec { name: "bs-csd", help: "CSD batch size", default: Some("4") },
+                        OptSpec { name: "bs-host", help: "host batch size", default: Some("16") },
+                        OptSpec { name: "steps", help: "training steps", default: Some("50") },
+                        OptSpec { name: "config", help: "JSON experiment config", default: None },
+                        OptSpec { name: "no-host", help: "CSD-only cluster", default: None },
+                    ],
+                )
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `stannis help`"),
+    }
+}
+
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let base = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    base.apply_args(args)
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let net = args.get_or("network", "mobilenet_v2");
+    let mut model = PerfModel::default();
+    let r = tune(&mut model, net, &TuneConfig::default())?;
+    print_table(
+        &format!("Algorithm 1 tuning — {net}"),
+        &["device", "batch", "img/s", "s/batch"],
+        &[
+            vec!["newport".into(), r.newport_bs.to_string(), f(r.newport_ips, 2), f(r.newport_time, 2)],
+            vec!["host".into(), r.host_bs.to_string(), f(r.host_ips, 2), f(r.host_time, 2)],
+        ],
+    );
+    println!(
+        "host/newport time ratio {:.3} (target 1/(1-margin) = 1.25)",
+        r.host_time / r.newport_time
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    println!(
+        "bringing up cluster: {} host + {} CSDs, net {}, bs {}/{}",
+        if cfg.include_host { "1" } else { "0" },
+        cfg.num_csds,
+        cfg.network,
+        cfg.bs_host,
+        cfg.bs_csd
+    );
+    let cluster = stannis::cluster::Cluster::bring_up(cfg.clone())?;
+    println!(
+        "placement: {} steps/epoch, host {} imgs, {} imgs/CSD",
+        cluster.placement.steps_per_epoch,
+        cluster.placement.host_ids.len(),
+        cluster.placement.csd_ids.first().map_or(0, Vec::len),
+    );
+    let mut trainer = cluster.trainer()?;
+    let t0 = std::time::Instant::now();
+    let report = trainer.train(cfg.steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "trained {} steps ({} images) in {:.1}s wall: loss {:.4} -> {:.4}, replica divergence {:.2e}",
+        cfg.steps,
+        report.images_processed,
+        wall,
+        report.first_loss(),
+        report.last_loss(),
+        report.max_replica_divergence,
+    );
+    let (eval_loss, acc) = trainer.evaluate(4)?;
+    println!("eval: loss {eval_loss:.4}, accuracy {acc:.3}");
+    Ok(())
+}
+
+fn report_table1() -> Result<()> {
+    let mut model = PerfModel::default();
+    let mut rows = Vec::new();
+    for (net, paper_nbs, paper_hbs) in NETS {
+        let r = tune(&mut model, net, &TuneConfig::default())?;
+        rows.push(vec![
+            net.to_string(),
+            format!("{} / {}", r.host_bs, r.newport_bs),
+            format!("{paper_hbs} / {paper_nbs}"),
+            format!("{} / {}", f(r.host_ips, 2), f(r.newport_ips, 2)),
+        ]);
+    }
+    print_table(
+        "Table I — parameter tuning (ours vs paper)",
+        &["network", "batch host/newport", "paper batch", "speed host/newport (img/s)"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn tuned(net: &str) -> Result<(usize, usize)> {
+    let mut model = PerfModel::default();
+    let r = tune(&mut model, net, &TuneConfig::default())?;
+    Ok((r.newport_bs, r.host_bs))
+}
+
+fn report_fig6() -> Result<()> {
+    let counts = [0usize, 1, 2, 4, 6, 8, 12, 16, 20, 24];
+    let mut rows = Vec::new();
+    for (net, _, _) in NETS {
+        let (nbs, hbs) = tuned(net)?;
+        let mut cells = vec![net.to_string()];
+        for &n in &counts {
+            let r = modeled_throughput(net, n, true, nbs, hbs, 3)?;
+            cells.push(f(r.images_per_sec, 1));
+        }
+        rows.push(cells);
+    }
+    let labels: Vec<String> = counts.iter().map(|n| format!("{n} CSDs")).collect();
+    let mut headers = vec!["network"];
+    headers.extend(labels.iter().map(String::as_str));
+    print_table("Fig. 6 — aggregate img/s vs #CSDs (host included)", &headers, &rows);
+    Ok(())
+}
+
+fn report_fig7() -> Result<()> {
+    let counts = [0usize, 1, 2, 4, 6, 8, 12, 16, 20, 24];
+    let mut rows = Vec::new();
+    for (net, _, _) in NETS {
+        let (nbs, hbs) = tuned(net)?;
+        let base = modeled_throughput(net, 0, true, nbs, hbs, 3)?.images_per_sec;
+        let mut cells = vec![net.to_string()];
+        for &n in &counts {
+            let r = modeled_throughput(net, n, true, nbs, hbs, 3)?;
+            cells.push(f(r.images_per_sec / base, 2));
+        }
+        rows.push(cells);
+    }
+    let labels: Vec<String> = counts.iter().map(|n| n.to_string()).collect();
+    let mut headers = vec!["network"];
+    headers.extend(labels.iter().map(String::as_str));
+    print_table("Fig. 7 — speedup vs host-alone (columns = #CSDs)", &headers, &rows);
+    Ok(())
+}
+
+fn report_table2() -> Result<()> {
+    let power = PowerConfig::default();
+    let (nbs, hbs) = tuned("mobilenet_v2")?;
+    let paper =
+        [(0usize, 13.10, 0.0), (4, 8.30, 37.0), (8, 6.84, 48.0), (16, 5.05, 62.0), (24, 4.02, 69.0)];
+    let base_j_img = {
+        let r = modeled_throughput("mobilenet_v2", 0, true, nbs, hbs, 3)?;
+        power.system_power_w(0, 24, true) / r.images_per_sec
+    };
+    let mut rows = Vec::new();
+    for (n, paper_j, paper_saving) in paper {
+        let r = modeled_throughput("mobilenet_v2", n, true, nbs, hbs, 3)?;
+        let p = power.system_power_w(n, 24, true);
+        let j_img = p / r.images_per_sec;
+        let saving = 100.0 * (1.0 - j_img / base_j_img);
+        let flops_w = r.images_per_sec * 7.16e6 * 2.0 / p; // paper-scale FLOPs
+        rows.push(vec![
+            n.to_string(),
+            f(j_img, 2),
+            f(paper_j, 2),
+            format!("{}%", f(saving, 0)),
+            format!("{}%", f(paper_saving, 0)),
+            format!("{:.1}M", flops_w / 1e6),
+        ]);
+    }
+    print_table(
+        "Table II — energy (MobileNetV2)",
+        &["CSDs", "J/img", "paper J/img", "saving", "paper saving", "FLOP/W (model)"],
+        &rows,
+    );
+    Ok(())
+}

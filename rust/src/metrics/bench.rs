@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (criterion-lite): warmup, timed iterations,
+//! robust summary statistics. Used by every target in rust/benches/.
+
+use std::time::Instant;
+
+/// Summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Pretty one-liner, auto-scaled units.
+    pub fn summary(&self) -> String {
+        fn scale(ns: f64) -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} us", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        }
+        format!(
+            "{:<40} mean {:>12}  p50 {:>12}  p95 {:>12}  (n={})",
+            self.name,
+            scale(self.mean_ns),
+            scale(self.p50_ns),
+            scale(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` + `iters` timed iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / iters as f64;
+    let pct = |p: f64| samples[((p * (iters - 1) as f64).round() as usize).min(iters - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pct(0.50),
+        p95_ns: pct(0.95),
+        min_ns: samples[0],
+        max_ns: samples[iters - 1],
+        std_ns: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let r = bench("spin", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.min_ns <= r.p50_ns);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.p95_ns <= r.max_ns);
+        assert!(r.mean_ns > 0.0);
+        assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_iters_rejected() {
+        bench("bad", 0, 0, || {});
+    }
+}

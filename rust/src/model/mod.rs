@@ -1,0 +1,13 @@
+//! Model-side state: dense tensors, flat parameter stores and SGD.
+//!
+//! The parameter *order* is the AOT interchange contract: it mirrors
+//! `artifacts/manifest.json`, which in turn mirrors the declaration
+//! order of the JAX model builder (python/compile/models/blocks.py).
+
+mod optimizer;
+mod params;
+mod tensor;
+
+pub use optimizer::{Sgd, SgdConfig};
+pub use params::ParamStore;
+pub use tensor::Tensor;

@@ -1,0 +1,145 @@
+//! SGD with momentum + the linear-scaling/warm-up schedule of
+//! Goyal et al. (the paper's §IV accuracy-preservation strategy).
+
+use crate::Result;
+
+use super::ParamStore;
+
+/// Optimizer hyperparameters.
+///
+/// The paper (citing Goyal et al.) prescribes (a) a learning rate
+/// scaled linearly with the number of workers and (b) a warm-up that
+/// ramps from `base_lr` to the scaled rate over `warmup_steps`.
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    pub base_lr: f32,
+    pub momentum: f32,
+    /// Linear-scaling multiplier: total cluster batch / reference
+    /// batch (Goyal et al. scale lr with the *total* batch — in
+    /// heterogeneous Stannis clusters worker counts and batch sizes
+    /// decouple, so the ratio, not the worker count, is what scales).
+    pub lr_scale: f32,
+    /// Steps over which to linearly ramp from base_lr to the scaled lr.
+    pub warmup_steps: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        Self { base_lr: 0.01, momentum: 0.9, lr_scale: 1.0, warmup_steps: 0 }
+    }
+}
+
+/// Plain SGD with momentum over a [`ParamStore`].
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    cfg: SgdConfig,
+    velocity: Option<ParamStore>,
+    step: u64,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Self {
+        Self { cfg, velocity: None, step: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Effective learning rate at the current step (warm-up + linear
+    /// scaling). After warm-up this is `base_lr * lr_scale`.
+    pub fn current_lr(&self) -> f32 {
+        let scaled = self.cfg.base_lr * self.cfg.lr_scale;
+        if self.cfg.warmup_steps == 0 || self.step >= self.cfg.warmup_steps {
+            return scaled;
+        }
+        let frac = self.step as f32 / self.cfg.warmup_steps as f32;
+        self.cfg.base_lr + (scaled - self.cfg.base_lr) * frac
+    }
+
+    /// In-place update: `v = m·v + g; p -= lr·v`.
+    pub fn apply(&mut self, params: &mut ParamStore, grads: &ParamStore) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == grads.len(),
+            "param/grad tensor count mismatch: {} vs {}",
+            params.len(),
+            grads.len()
+        );
+        let lr = self.current_lr();
+        let m = self.cfg.momentum;
+
+        if m == 0.0 {
+            for (p, g) in params.tensors_mut().iter_mut().zip(grads.tensors()) {
+                for (pv, gv) in p.data_mut().iter_mut().zip(g.data()) {
+                    *pv -= lr * gv;
+                }
+            }
+        } else {
+            let vel = self
+                .velocity
+                .get_or_insert_with(|| ParamStore::new(
+                    grads.tensors().iter().map(|t| super::Tensor::zeros(t.shape().to_vec())).collect(),
+                ));
+            for ((p, g), v) in params
+                .tensors_mut()
+                .iter_mut()
+                .zip(grads.tensors())
+                .zip(vel.tensors_mut())
+            {
+                for ((pv, gv), vv) in p.data_mut().iter_mut().zip(g.data()).zip(v.data_mut()) {
+                    *vv = m * *vv + gv;
+                    *pv -= lr * *vv;
+                }
+            }
+        }
+        self.step += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+
+    fn one(v: f32) -> ParamStore {
+        ParamStore::new(vec![Tensor::new(vec![1], vec![v]).unwrap()])
+    }
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut opt = Sgd::new(SgdConfig { base_lr: 0.1, momentum: 0.0, ..Default::default() });
+        let mut p = one(1.0);
+        opt.apply(&mut p, &one(2.0)).unwrap();
+        assert!((p.tensors()[0].data()[0] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(SgdConfig { base_lr: 0.1, momentum: 0.5, ..Default::default() });
+        let mut p = one(0.0);
+        opt.apply(&mut p, &one(1.0)).unwrap(); // v=1,   p=-0.1
+        opt.apply(&mut p, &one(1.0)).unwrap(); // v=1.5, p=-0.25
+        assert!((p.tensors()[0].data()[0] + 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warmup_ramps_to_scaled_lr() {
+        let cfg = SgdConfig { base_lr: 0.01, momentum: 0.0, lr_scale: 4.0, warmup_steps: 10 };
+        let mut opt = Sgd::new(cfg);
+        assert!((opt.current_lr() - 0.01).abs() < 1e-7);
+        let mut p = one(0.0);
+        for _ in 0..10 {
+            opt.apply(&mut p, &one(0.0)).unwrap();
+        }
+        assert!((opt.current_lr() - 0.04).abs() < 1e-7);
+    }
+
+    #[test]
+    fn mismatched_grads_error() {
+        let mut opt = Sgd::new(SgdConfig::default());
+        let mut p = one(0.0);
+        let g = ParamStore::new(vec![]);
+        assert!(opt.apply(&mut p, &g).is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Flat parameter store — one model replica as an ordered tensor list.
+
+use crate::runtime::ParamSpec;
+use crate::Result;
+
+use super::Tensor;
+
+/// An ordered set of parameter tensors for one worker's model replica.
+///
+/// Order is the manifest order (= PJRT argument order); the store never
+/// reorders. Gradients use the same layout, so `ParamStore` doubles as
+/// the gradient container flowing through ring-allreduce.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamStore {
+    tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    pub fn new(tensors: Vec<Tensor>) -> Self {
+        Self { tensors }
+    }
+
+    /// Zero-filled store matching a manifest's parameter specs.
+    pub fn zeros_like_specs(specs: &[ParamSpec]) -> Self {
+        Self {
+            tensors: specs.iter().map(|s| Tensor::zeros(s.shape.clone())).collect(),
+        }
+    }
+
+    /// Validate this store against the manifest specs (shape + count).
+    pub fn check_specs(&self, specs: &[ParamSpec]) -> Result<()> {
+        anyhow::ensure!(
+            self.tensors.len() == specs.len(),
+            "param count {} != manifest {}",
+            self.tensors.len(),
+            specs.len()
+        );
+        for (t, s) in self.tensors.iter().zip(specs) {
+            anyhow::ensure!(
+                t.shape() == s.shape.as_slice(),
+                "param {:?}: shape {:?} != manifest {:?}",
+                s.name,
+                t.shape(),
+                s.shape
+            );
+        }
+        Ok(())
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        &mut self.tensors
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total number of scalar parameters.
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(Tensor::len).sum()
+    }
+
+    /// Serialize all tensors into one contiguous f32 vector
+    /// (manifest order) — the allreduce wire format.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_scalars());
+        for t in &self.tensors {
+            out.extend_from_slice(t.data());
+        }
+        out
+    }
+
+    /// Overwrite tensor contents from a flat vector (inverse of
+    /// [`Self::to_flat`]). Length must match exactly.
+    pub fn load_flat(&mut self, flat: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            flat.len() == self.num_scalars(),
+            "flat length {} != store scalars {}",
+            flat.len(),
+            self.num_scalars()
+        );
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.len();
+            t.data_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.tensors.iter().all(Tensor::is_finite)
+    }
+
+    /// Largest elementwise divergence from another replica — the
+    /// consistency metric the accuracy experiment (§V.C) reports.
+    pub fn max_abs_diff(&self, other: &ParamStore) -> f32 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore::new(vec![
+            Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            Tensor::new(vec![3], vec![5.0, 6.0, 7.0]).unwrap(),
+        ])
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let s = store();
+        let flat = s.to_flat();
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        let mut z = ParamStore::new(vec![Tensor::zeros(vec![2, 2]), Tensor::zeros(vec![3])]);
+        z.load_flat(&flat).unwrap();
+        assert_eq!(z, s);
+    }
+
+    #[test]
+    fn load_flat_length_checked() {
+        let mut s = store();
+        assert!(s.load_flat(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn num_scalars() {
+        assert_eq!(store().num_scalars(), 7);
+    }
+}

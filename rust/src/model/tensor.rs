@@ -1,0 +1,158 @@
+//! A minimal dense f32 tensor — the host-side mirror of one PJRT buffer.
+
+use crate::Result;
+
+/// Dense row-major f32 tensor.
+///
+/// This is deliberately *not* a general ndarray: the coordinator only
+/// ever moves whole parameter/gradient tensors between PJRT literals,
+/// allreduce chunks and the optimizer, so shape + flat data suffice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(
+            n == data.len(),
+            "shape {:?} implies {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift64*), for tests and
+    /// synthetic data. Values are approximately N(0, std²) via CLT.
+    pub fn randn(shape: Vec<usize>, std: f32, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            // map to [-0.5, 0.5)
+            (s.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f32 / (1u64 << 53) as f32 - 0.5
+        };
+        let data = (0..n)
+            .map(|_| {
+                // sum of 12 uniforms on [-0.5, 0.5) has variance 1
+                let z: f32 = (0..12).map(|_| next()).sum();
+                z * std
+            })
+            .collect();
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Convert into a PJRT literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a PJRT literal back into a tensor (f32 only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Self::new(dims, data)
+    }
+
+    pub fn scale(&mut self, k: f32) {
+        for v in &mut self.data {
+            *v *= k;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        anyhow::ensure!(self.shape == other.shape, "shape mismatch in add_assign");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// max |aᵢ - bᵢ| — used by tests and the allreduce verifier.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_size() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn randn_is_deterministic_and_roughly_normal() {
+        let a = Tensor::randn(vec![1000], 1.0, 7);
+        let b = Tensor::randn(vec![1000], 1.0, 7);
+        assert_eq!(a, b);
+        let mean: f32 = a.data().iter().sum::<f32>() / 1000.0;
+        let var: f32 = a.data().iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.15, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.3, "var {var}");
+    }
+
+    #[test]
+    fn scale_and_add() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 1.0, 1.0]).unwrap();
+        a.scale(2.0);
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.data(), &[3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn add_shape_mismatch_errors() {
+        let mut a = Tensor::zeros(vec![2]);
+        let b = Tensor::zeros(vec![3]);
+        assert!(a.add_assign(&b).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Component power model + energy meter (Table II's wall-power meter).
+//!
+//! The paper measures server input power with an off-the-shelf meter
+//! while 0/4/8/16/24 Newport CSDs train MobileNetV2, against a baseline
+//! server whose 24 bays hold conventional Micron 11 TB SSDs. We rebuild
+//! that meter from components:
+//!
+//!   P_system(k) = P_base + P_host(util) + k·P_newport(training)
+//!                 + (24-k)·P_idle_storage + P_link(traffic)
+//!
+//! Component wattages are calibrated so the 0-CSD and 24-CSD endpoints
+//! land on Table II's 13.10 and ~4 J/image; the intermediate rows then
+//! *fall out* of the model rather than being copied. (Note recorded in
+//! EXPERIMENTS.md: the paper's own FLOPS/W row is not consistent with
+//! its J/image row; we report both from our model.)
+
+use crate::sim::SimTime;
+
+/// Calibrated component wattages.
+#[derive(Debug, Clone)]
+pub struct PowerConfig {
+    /// Chassis floor: fans, PSU loss, BMC, DRAM refresh.
+    pub base_w: f64,
+    /// Host package (Xeon 4108 + board) when training.
+    pub host_active_w: f64,
+    /// Host package when idle.
+    pub host_idle_w: f64,
+    /// One Micron-class SSD idling in a bay.
+    pub storage_idle_w: f64,
+    /// One Newport CSD idling (flash + controller, ISP parked).
+    pub newport_idle_w: f64,
+    /// Added power when a Newport ISP engine trains (quad A53 + DRAM).
+    pub newport_isp_active_w: f64,
+    /// NVMe/PCIe link energy per byte moved host<->device.
+    pub link_pj_per_byte: f64,
+    /// Flash array energy per page read (16 KiB).
+    pub flash_read_uj: f64,
+    pub flash_prog_uj: f64,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        Self {
+            base_w: 118.0,
+            host_active_w: 145.0,
+            host_idle_w: 45.0,
+            storage_idle_w: 6.0,
+            // Table II's 24-CSD endpoint implies ~3.1 W per training
+            // Newport (4.02 J/img at ~2.7x the host-alone throughput) —
+            // below an idle Micron, which is exactly the paper's pitch.
+            newport_idle_w: 1.2,
+            newport_isp_active_w: 1.9,
+            link_pj_per_byte: 15.0,
+            flash_read_uj: 60.0,
+            flash_prog_uj: 180.0,
+        }
+    }
+}
+
+impl PowerConfig {
+    /// Steady-state system power with `active_csds` Newports training
+    /// (the remaining `total_bays - active_csds` bays hold idle
+    /// conventional SSDs) and the host training iff `host_active`.
+    pub fn system_power_w(&self, active_csds: usize, total_bays: usize, host_active: bool) -> f64 {
+        let host = if host_active { self.host_active_w } else { self.host_idle_w };
+        let idle_bays = total_bays.saturating_sub(active_csds);
+        self.base_w
+            + host
+            + active_csds as f64 * (self.newport_idle_w + self.newport_isp_active_w)
+            + idle_bays as f64 * self.storage_idle_w
+    }
+}
+
+/// Energy ledger, integrated over simulated time.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    joules: f64,
+    by_component: std::collections::BTreeMap<&'static str, f64>,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Integrate `watts` over `dt`.
+    pub fn add_power(&mut self, component: &'static str, watts: f64, dt: SimTime) {
+        let j = watts * dt.as_secs_f64();
+        self.joules += j;
+        *self.by_component.entry(component).or_insert(0.0) += j;
+    }
+
+    /// Add a fixed energy event (page read, link transfer).
+    pub fn add_energy(&mut self, component: &'static str, joules: f64) {
+        self.joules += joules;
+        *self.by_component.entry(component).or_insert(0.0) += joules;
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.joules
+    }
+
+    pub fn component_joules(&self, component: &str) -> f64 {
+        self.by_component.get(component).copied().unwrap_or(0.0)
+    }
+
+    pub fn breakdown(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.by_component.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+/// Account one training interval: steady-state power plus I/O events.
+#[allow(clippy::too_many_arguments)]
+pub fn account_interval(
+    meter: &mut EnergyMeter,
+    cfg: &PowerConfig,
+    dt: SimTime,
+    active_csds: usize,
+    total_bays: usize,
+    host_active: bool,
+    link_bytes: u64,
+    flash_reads: u64,
+    flash_progs: u64,
+) {
+    let host = if host_active { cfg.host_active_w } else { cfg.host_idle_w };
+    meter.add_power("base", cfg.base_w, dt);
+    meter.add_power("host", host, dt);
+    meter.add_power(
+        "newport",
+        active_csds as f64 * (cfg.newport_idle_w + cfg.newport_isp_active_w),
+        dt,
+    );
+    meter.add_power(
+        "idle_storage",
+        total_bays.saturating_sub(active_csds) as f64 * cfg.storage_idle_w,
+        dt,
+    );
+    meter.add_energy("link", link_bytes as f64 * cfg.link_pj_per_byte * 1e-12);
+    meter.add_energy(
+        "flash",
+        flash_reads as f64 * cfg.flash_read_uj * 1e-6
+            + flash_progs as f64 * cfg.flash_prog_uj * 1e-6,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_endpoint_matches_table2() {
+        // 0 CSDs: host trains alone, 24 idle Micron SSDs.
+        let cfg = PowerConfig::default();
+        let p0 = cfg.system_power_w(0, 24, true);
+        // Paper: 13.10 J/img at 31.05 img/s -> 406.8 W.
+        let j_per_img = p0 / 31.05;
+        assert!(
+            (j_per_img - 13.10).abs() < 0.35,
+            "J/img at 0 CSDs = {j_per_img:.2} (P={p0:.0} W)"
+        );
+    }
+
+    #[test]
+    fn full_rack_endpoint_matches_table2() {
+        let cfg = PowerConfig::default();
+        let p24 = cfg.system_power_w(24, 24, true);
+        // Paper: 2.7x speedup -> ~83.8 img/s aggregate, 4.02 J/img.
+        let j_per_img = p24 / (31.05 * 2.7);
+        assert!(
+            (j_per_img - 4.02).abs() < 0.4,
+            "J/img at 24 CSDs = {j_per_img:.2} (P={p24:.0} W)"
+        );
+    }
+
+    #[test]
+    fn more_csds_less_power_per_bay_when_replacing_idle_ssds() {
+        let cfg = PowerConfig::default();
+        // A training Newport draws less than an idle Micron in this
+        // calibration — the paper's counterintuitive headline.
+        assert!(cfg.newport_idle_w + cfg.newport_isp_active_w < cfg.storage_idle_w);
+        assert!(cfg.system_power_w(24, 24, true) < cfg.system_power_w(0, 24, true));
+    }
+
+    #[test]
+    fn meter_integrates() {
+        let mut m = EnergyMeter::new();
+        m.add_power("host", 100.0, SimTime::secs(10));
+        m.add_energy("flash", 0.5);
+        assert!((m.total_joules() - 1000.5).abs() < 1e-9);
+        assert!((m.component_joules("host") - 1000.0).abs() < 1e-9);
+        assert_eq!(m.component_joules("nope"), 0.0);
+    }
+
+    #[test]
+    fn account_interval_sums_components() {
+        let mut m = EnergyMeter::new();
+        let cfg = PowerConfig::default();
+        account_interval(&mut m, &cfg, SimTime::secs(1), 4, 24, true, 1 << 30, 1000, 100);
+        let steady = cfg.system_power_w(4, 24, true);
+        let expect_steady = steady * 1.0;
+        let total = m.total_joules();
+        assert!(total > expect_steady, "I/O events must add energy");
+        assert!((m.component_joules("base") - cfg.base_w).abs() < 1e-9);
+    }
+}

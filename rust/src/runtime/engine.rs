@@ -1,0 +1,193 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, run many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* (never a
+//! serialized proto — xla_extension 0.5.1 rejects jax≥0.5's 64-bit ids)
+//! → `HloModuleProto::from_text_file` → `XlaComputation` → compile on a
+//! shared `PjRtClient::cpu()` → `execute` with `Literal` args.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::model::{ParamStore, Tensor};
+use crate::Result;
+
+use super::manifest::{Manifest, NetworkManifest};
+
+/// Output of one training step execution.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub grads: ParamStore,
+}
+
+/// Output of one eval step execution.
+#[derive(Debug, Clone)]
+pub struct EvalOutput {
+    pub loss: f32,
+    pub correct: i32,
+}
+
+/// A compiled artifact cache keyed by artifact-relative path.
+///
+/// One engine (and one PJRT client) is shared by every simulated worker:
+/// the paper's workers are physically distinct A53s/Xeon, but numerics
+/// are identical, so all replicas execute on one CPU client while the
+/// DES accounts each worker's *modeled* time separately.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn network(&self, name: &str) -> Result<&NetworkManifest> {
+        self.manifest.network(name)
+    }
+
+    /// Load+compile an artifact (memoized).
+    fn executable(&self, rel: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(rel) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(rel);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(rel.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact a training run will need.
+    pub fn warmup(&self, network: &str, batch_sizes: &[usize]) -> Result<()> {
+        let net = self.network(network)?;
+        self.executable(&net.init.clone())?;
+        for &bs in batch_sizes {
+            let rel = net
+                .train_artifact(bs)
+                .ok_or_else(|| anyhow::anyhow!("{network}: no train artifact for bs={bs}"))?
+                .to_string();
+            self.executable(&rel)?;
+        }
+        Ok(())
+    }
+
+    /// Run the init artifact: seed -> fresh parameter replica.
+    pub fn init_params(&self, network: &str, seed: i32) -> Result<ParamStore> {
+        let net = self.network(network)?;
+        let exe = self.executable(&net.init.clone())?;
+        let seed_lit = xla::Literal::scalar(seed);
+        let result = exe.execute::<xla::Literal>(&[seed_lit])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == net.params.len(),
+            "init returned {} tensors, manifest has {}",
+            parts.len(),
+            net.params.len()
+        );
+        let tensors = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let store = ParamStore::new(tensors);
+        store.check_specs(&net.params)?;
+        Ok(store)
+    }
+
+    /// Execute one training step: (params, batch) -> (loss, grads).
+    pub fn train_step(
+        &self,
+        network: &str,
+        batch_size: usize,
+        params: &ParamStore,
+        images: &Tensor,
+        labels: &[i32],
+    ) -> Result<StepOutput> {
+        let net = self.network(network)?;
+        let rel = net
+            .train_artifact(batch_size)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{network}: no train artifact for bs={batch_size} (have {:?})",
+                    net.train_batch_sizes
+                )
+            })?
+            .to_string();
+        let exe = self.executable(&rel)?;
+
+        let hw = net.input_hw;
+        anyhow::ensure!(
+            images.shape() == [batch_size, hw, hw, 3],
+            "image batch shape {:?} != [{batch_size}, {hw}, {hw}, 3]",
+            images.shape()
+        );
+        anyhow::ensure!(labels.len() == batch_size, "label count mismatch");
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(params.len() + 2);
+        for t in params.tensors() {
+            args.push(t.to_literal()?);
+        }
+        args.push(images.to_literal()?);
+        args.push(xla::Literal::vec1(labels));
+
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == net.params.len() + 1,
+            "train_step returned {} outputs, expected {}",
+            parts.len(),
+            net.params.len() + 1
+        );
+        let loss = parts.remove(0).to_vec::<f32>()?[0];
+        let tensors = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepOutput { loss, grads: ParamStore::new(tensors) })
+    }
+
+    /// Execute one eval step: (params, batch) -> (loss, #correct).
+    pub fn eval_step(
+        &self,
+        network: &str,
+        params: &ParamStore,
+        images: &Tensor,
+        labels: &[i32],
+    ) -> Result<EvalOutput> {
+        let net = self.network(network)?;
+        let bs = net.eval_batch_size;
+        let rel = net
+            .eval_artifact(bs)
+            .ok_or_else(|| anyhow::anyhow!("{network}: no eval artifact"))?
+            .to_string();
+        let exe = self.executable(&rel)?;
+        anyhow::ensure!(labels.len() == bs, "eval expects batch of {bs}");
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(params.len() + 2);
+        for t in params.tensors() {
+            args.push(t.to_literal()?);
+        }
+        args.push(images.to_literal()?);
+        args.push(xla::Literal::vec1(labels));
+
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "eval_step returned {} outputs", parts.len());
+        let loss = parts[0].to_vec::<f32>()?[0];
+        let correct = parts[1].to_vec::<i32>()?[0];
+        Ok(EvalOutput { loss, correct })
+    }
+}

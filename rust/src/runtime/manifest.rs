@@ -1,0 +1,256 @@
+//! `artifacts/manifest.json` — the AOT interchange contract with L2.
+//!
+//! Parsed with the in-tree JSON substrate (`util::json`); field layout
+//! mirrors what `python/compile/aot.py` emits.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::Json;
+use crate::Result;
+
+/// One parameter tensor's spec (order inside `NetworkManifest::params`
+/// is the PJRT argument order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.field("name")?.as_str()?.to_string(),
+            shape: j
+                .field("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.field("dtype")?.as_str()?.to_string(),
+            init: j
+                .get("init")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Everything AOT-compiled for one network.
+#[derive(Debug, Clone)]
+pub struct NetworkManifest {
+    pub params: Vec<ParamSpec>,
+    pub param_count: usize,
+    pub macs_per_image: u64,
+    pub flops_per_image: u64,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub train_batch_sizes: Vec<usize>,
+    pub eval_batch_size: usize,
+    pub init: String,
+    /// batch size -> artifact relative path
+    pub train: BTreeMap<usize, String>,
+    pub eval: BTreeMap<usize, String>,
+}
+
+fn bs_map(j: &Json) -> Result<BTreeMap<usize, String>> {
+    let mut out = BTreeMap::new();
+    for (k, v) in j.as_obj()? {
+        let bs: usize = k.parse().with_context(|| format!("batch-size key {k:?}"))?;
+        out.insert(bs, v.as_str()?.to_string());
+    }
+    Ok(out)
+}
+
+impl NetworkManifest {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            params: j
+                .field("params")?
+                .as_arr()?
+                .iter()
+                .map(ParamSpec::from_json)
+                .collect::<Result<_>>()?,
+            param_count: j.field("param_count")?.as_usize()?,
+            macs_per_image: j.field("macs_per_image")?.as_u64()?,
+            flops_per_image: j.field("flops_per_image")?.as_u64()?,
+            input_hw: j.field("input_hw")?.as_usize()?,
+            num_classes: j.field("num_classes")?.as_usize()?,
+            train_batch_sizes: j
+                .field("train_batch_sizes")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<Result<_>>()?,
+            eval_batch_size: j.field("eval_batch_size")?.as_usize()?,
+            init: j.field("init")?.as_str()?.to_string(),
+            train: bs_map(j.field("train")?)?,
+            eval: bs_map(j.field("eval")?)?,
+        })
+    }
+
+    pub fn train_artifact(&self, batch_size: usize) -> Option<&str> {
+        self.train.get(&batch_size).map(String::as_str)
+    }
+
+    pub fn eval_artifact(&self, batch_size: usize) -> Option<&str> {
+        self.eval.get(&batch_size).map(String::as_str)
+    }
+
+    /// Total scalar parameter count (recomputed from specs).
+    pub fn num_scalars(&self) -> usize {
+        self.params.iter().map(ParamSpec::num_elements).sum()
+    }
+}
+
+/// Parsed manifest + its root directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub primary: String,
+    pub networks: BTreeMap<String, NetworkManifest>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and sanity-check the contents.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}; run `make artifacts` first", path.display())
+        })?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut networks = BTreeMap::new();
+        for (name, nj) in j.field("networks")?.as_obj()? {
+            let net = NetworkManifest::from_json(nj)
+                .with_context(|| format!("network {name:?}"))?;
+            networks.insert(name.clone(), net);
+        }
+        let m = Manifest {
+            version: j.field("version")?.as_u64()?,
+            primary: j.field("primary")?.as_str()?.to_string(),
+            networks,
+            root: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.version == 1, "unsupported manifest version {}", self.version);
+        anyhow::ensure!(
+            self.networks.contains_key(&self.primary),
+            "primary network {:?} missing from manifest",
+            self.primary
+        );
+        for (name, net) in &self.networks {
+            anyhow::ensure!(!net.params.is_empty(), "{name}: empty param list");
+            anyhow::ensure!(
+                net.param_count == net.num_scalars(),
+                "{name}: param_count {} != sum of spec sizes {}",
+                net.param_count,
+                net.num_scalars()
+            );
+            for bs in &net.train_batch_sizes {
+                anyhow::ensure!(
+                    net.train_artifact(*bs).is_some(),
+                    "{name}: train batch size {bs} has no artifact"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn network(&self, name: &str) -> Result<&NetworkManifest> {
+        self.networks.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "network {name:?} not in manifest (have {:?})",
+                self.networks.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact-relative path.
+    pub fn artifact_path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_json() -> String {
+        r#"{
+          "version": 1,
+          "primary": "net",
+          "networks": {
+            "net": {
+              "params": [{"name": "w", "shape": [2, 3], "dtype": "f32", "init": "he"}],
+              "param_count": 6,
+              "macs_per_image": 10,
+              "flops_per_image": 20,
+              "input_hw": 8,
+              "num_classes": 4,
+              "train_batch_sizes": [2],
+              "eval_batch_size": 2,
+              "init": "net/init.hlo.txt",
+              "train": {"2": "net/train_bs2.hlo.txt"},
+              "eval": {"2": "net/eval_bs2.hlo.txt"}
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_lookup() {
+        let dir = std::env::temp_dir().join(format!("stannis_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), minimal_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let net = m.network("net").unwrap();
+        assert_eq!(net.train_artifact(2), Some("net/train_bs2.hlo.txt"));
+        assert_eq!(net.train_artifact(4), None);
+        assert_eq!(net.num_scalars(), 6);
+        assert!(m.network("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_param_count_rejected() {
+        let dir = std::env::temp_dir().join(format!("stannis_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            minimal_json().replace("\"param_count\": 6", "\"param_count\": 7"),
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_for_declared_bs_rejected() {
+        let dir = std::env::temp_dir().join(format!("stannis_manifest_bs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            minimal_json().replace("\"train_batch_sizes\": [2]", "\"train_batch_sizes\": [2, 4]"),
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

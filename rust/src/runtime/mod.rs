@@ -1,0 +1,32 @@
+//! PJRT runtime: the only place the crate touches XLA.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py` (HLO
+//! text + `manifest.json`) and exposes typed `init` / `train_step` /
+//! `eval_step` execution to the rest of the coordinator.
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, EvalOutput, StepOutput};
+pub use manifest::{Manifest, NetworkManifest, ParamSpec};
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$STANNIS_ARTIFACTS` or
+/// `<repo>/artifacts` relative to the current dir (walking up, so tests
+/// and benches work from any workspace subdirectory).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("STANNIS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

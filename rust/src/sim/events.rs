@@ -1,0 +1,161 @@
+//! Time-ordered event queue with deterministic tie-breaking.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+/// An event scheduled for a point in simulated time, carrying a typed
+/// payload `E` chosen by the embedding model (GC trigger, DLM timeout,
+/// fault injection, ...).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduledEvent<E> {
+    pub at: SimTime,
+    pub seq: u64,
+    pub payload: E,
+}
+
+/// Min-heap of events ordered by (time, insertion sequence).
+///
+/// The sequence tie-break makes simulation runs deterministic even when
+/// many events share a timestamp — a requirement for byte-reproducible
+/// experiment logs.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(SimTime, u64)>>,
+    payloads: std::collections::HashMap<u64, (SimTime, E)>,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            payloads: std::collections::HashMap::new(),
+            next_seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at`; returns the event id.
+    pub fn schedule(&mut self, at: SimTime, payload: E) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse((at, seq)));
+        self.payloads.insert(seq, (at, payload));
+        seq
+    }
+
+    /// Cancel a scheduled event by id. Returns true if it was pending.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        self.payloads.remove(&id).is_some()
+    }
+
+    /// Time of the next (non-cancelled) event.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.skip_cancelled();
+        self.heap.peek().map(|Reverse((t, _))| *t)
+    }
+
+    /// Pop the next event (earliest time, FIFO among ties).
+    pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
+        self.skip_cancelled();
+        let Reverse((at, seq)) = self.heap.pop()?;
+        let (_, payload) = self.payloads.remove(&seq).expect("payload present");
+        Some(ScheduledEvent { at, seq, payload })
+    }
+
+    /// Pop every event with time <= `until`, in order.
+    pub fn pop_until(&mut self, until: SimTime) -> Vec<ScheduledEvent<E>> {
+        let mut out = Vec::new();
+        while let Some(t) = self.peek_time() {
+            if t > until {
+                break;
+            }
+            out.push(self.pop().unwrap());
+        }
+        out
+    }
+
+    fn skip_cancelled(&mut self) {
+        while let Some(Reverse((_, seq))) = self.heap.peek() {
+            if self.payloads.contains_key(seq) {
+                return;
+            }
+            self.heap.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::ms(5), "b");
+        q.schedule(SimTime::ms(1), "a");
+        q.schedule(SimTime::ms(5), "c"); // same time as "b": FIFO
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_removes() {
+        let mut q = EventQueue::new();
+        let id = q.schedule(SimTime::ms(1), 1);
+        q.schedule(SimTime::ms(2), 2);
+        assert!(q.cancel(id));
+        assert!(!q.cancel(id));
+        assert_eq!(q.peek_time(), Some(SimTime::ms(2)));
+        assert_eq!(q.pop().unwrap().payload, 2);
+    }
+
+    #[test]
+    fn pop_until_boundary_inclusive() {
+        let mut q = EventQueue::new();
+        for i in 1..=5u64 {
+            q.schedule(SimTime::ms(i), i);
+        }
+        let drained = q.pop_until(SimTime::ms(3));
+        assert_eq!(drained.iter().map(|e| e.payload).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn property_pop_order_is_sorted() {
+        crate::util::prop::check("event queue pops in time order", |rng| {
+            let mut q = EventQueue::new();
+            let n = 1 + rng.usize_below(100);
+            for _ in 0..n {
+                q.schedule(SimTime::ns(rng.below(1000)), ());
+            }
+            let mut last = (SimTime::ZERO, 0u64);
+            while let Some(e) = q.pop() {
+                assert!(
+                    (e.at, e.seq) >= last,
+                    "out of order: {:?} after {:?}",
+                    (e.at, e.seq),
+                    last
+                );
+                last = (e.at, e.seq);
+            }
+        });
+    }
+}

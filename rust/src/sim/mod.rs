@@ -1,0 +1,24 @@
+//! Discrete-event simulation core.
+//!
+//! Two complementary primitives drive every hardware model in the CSD
+//! substrate:
+//!
+//! * [`Timeline`] / [`MultiTimeline`] — *resource timelines*: FIFO
+//!   service resources whose next-free timestamp advances as work is
+//!   scheduled on them. Flash channels, the PCIe link, the ISP cores
+//!   and the host CPU are all timelines; queueing delay falls out of
+//!   `max(now, next_free)`.
+//! * [`EventQueue`] — a time-ordered event heap (deterministic FIFO
+//!   tie-break) for background processes that are not simple FIFO
+//!   service: garbage collection, DLM heartbeats, fault injection.
+//!
+//! Simulated time is [`SimTime`] nanoseconds. All models are
+//! deterministic: same seed + same schedule → identical timelines.
+
+mod events;
+mod resource;
+mod time;
+
+pub use events::{EventQueue, ScheduledEvent};
+pub use resource::{MultiTimeline, Timeline};
+pub use time::SimTime;

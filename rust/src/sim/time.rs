@@ -1,0 +1,144 @@
+//! Simulated time: nanosecond ticks with ergonomic constructors.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+/// A point in (or span of) simulated time, in nanoseconds.
+///
+/// One type serves both instants and durations — the arithmetic the
+/// models do (max-with-next-free, accumulate-busy) never benefits from
+/// the instant/duration split, and a single u64 keeps the timelines
+/// allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn ns(n: u64) -> Self {
+        SimTime(n)
+    }
+
+    pub fn us(n: u64) -> Self {
+        SimTime(n * 1_000)
+    }
+
+    pub fn ms(n: u64) -> Self {
+        SimTime(n * 1_000_000)
+    }
+
+    pub fn secs(n: u64) -> Self {
+        SimTime(n * 1_000_000_000)
+    }
+
+    /// From fractional seconds (cost-model outputs).
+    pub fn from_secs_f64(s: f64) -> Self {
+        assert!(s >= 0.0 && s.is_finite(), "invalid duration {s}");
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    pub fn as_ns(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        assert!(self.0 >= rhs.0, "SimTime underflow: {} - {}", self.0, rhs.0);
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl Mul<u64> for SimTime {
+    type Output = SimTime;
+    fn mul(self, rhs: u64) -> SimTime {
+        SimTime(self.0 * rhs)
+    }
+}
+
+impl Div<u64> for SimTime {
+    type Output = SimTime;
+    fn div(self, rhs: u64) -> SimTime {
+        SimTime(self.0 / rhs)
+    }
+}
+
+impl Sum for SimTime {
+    fn sum<I: Iterator<Item = SimTime>>(iter: I) -> SimTime {
+        SimTime(iter.map(|t| t.0).sum())
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns >= 1_000_000_000 {
+            write!(f, "{:.3}s", ns as f64 / 1e9)
+        } else if ns >= 1_000_000 {
+            write!(f, "{:.3}ms", ns as f64 / 1e6)
+        } else if ns >= 1_000 {
+            write!(f, "{:.3}us", ns as f64 / 1e3)
+        } else {
+            write!(f, "{ns}ns")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_scale() {
+        assert_eq!(SimTime::us(1), SimTime::ns(1000));
+        assert_eq!(SimTime::ms(1), SimTime::us(1000));
+        assert_eq!(SimTime::secs(1), SimTime::ms(1000));
+        assert_eq!(SimTime::from_secs_f64(0.5), SimTime::ms(500));
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::ms(2) + SimTime::ms(3);
+        assert_eq!(t, SimTime::ms(5));
+        assert_eq!(t - SimTime::ms(1), SimTime::ms(4));
+        assert_eq!(t * 2, SimTime::ms(10));
+        assert_eq!(t / 5, SimTime::ms(1));
+        assert_eq!(SimTime::ms(1).saturating_sub(SimTime::ms(2)), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        let _ = SimTime::ms(1) - SimTime::ms(2);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(SimTime::ns(5).to_string(), "5ns");
+        assert_eq!(SimTime::us(2).to_string(), "2.000us");
+        assert_eq!(SimTime::secs(3).to_string(), "3.000s");
+    }
+}

@@ -1,0 +1,230 @@
+//! TCP/IP-over-PCIe tunnel: the cluster's only interconnect.
+//!
+//! Paper §III: three cooperating processes (host-side, FE-side,
+//! ISP-side) packetize TCP/IP inside PCIe transactions, giving every
+//! CSD and the host a network. Two properties matter for Stannis:
+//!
+//! 1. **Topology** — each CSD talks to the host over its own PCIe
+//!    link; CSD↔CSD traffic relays through the host (two hops), which
+//!    is exactly what a ring allreduce across 24 CSDs stresses.
+//! 2. **Software throughput** — packetization runs on the FE M7 / host
+//!    CPU, so the *effective* tunnel bandwidth is far below raw PCIe;
+//!    this software ceiling (default ~80 MB/s per endpoint, calibrated
+//!    against Fig. 6/7's observed sync slowdown) is what makes gradient sync
+//!    expensive for big models (Fig. 7's InceptionV3 collapse).
+
+use crate::sim::{SimTime, Timeline};
+
+/// A participant in the tunnel network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    Host,
+    Csd(usize),
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NodeId::Host => write!(f, "host"),
+            NodeId::Csd(i) => write!(f, "csd{i}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TunnelConfig {
+    /// Raw PCIe wire bandwidth per CSD link (bytes/s).
+    pub pcie_bw: f64,
+    /// Software packetization throughput per endpoint (bytes/s) — the
+    /// FE M7 on a CSD, one core's worth on the host.
+    pub sw_bw_csd: f64,
+    /// Host-side tunnel processing is DMA/memcpy-bound (the paper's
+    /// host process rides PCIe BAR mappings), so it is far faster than
+    /// the embedded FE stack.
+    pub sw_bw_host: f64,
+    /// Tunnel MTU (payload bytes per PCIe-encapsulated packet).
+    pub mtu: usize,
+    /// Fixed per-packet processing overhead at each endpoint.
+    pub per_packet: SimTime,
+    /// Base propagation latency per hop.
+    pub hop_latency: SimTime,
+}
+
+impl Default for TunnelConfig {
+    fn default() -> Self {
+        Self {
+            pcie_bw: 3.2e9,
+            sw_bw_csd: 80.0e6,
+            sw_bw_host: 6.0e9,
+            mtu: 64 * 1024,
+            per_packet: SimTime::us(20),
+            hop_latency: SimTime::us(15),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TunnelStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub relayed: u64,
+}
+
+/// The tunnel fabric for one host + N CSDs.
+#[derive(Debug)]
+pub struct Tunnel {
+    cfg: TunnelConfig,
+    /// Per-CSD PCIe wire occupancy.
+    links: Vec<Timeline>,
+    /// Per-CSD FE packetization.
+    csd_sw: Vec<Timeline>,
+    /// Host-side packetization (shared by all flows).
+    host_sw: Timeline,
+    stats: TunnelStats,
+}
+
+impl Tunnel {
+    pub fn new(num_csds: usize, cfg: TunnelConfig) -> Self {
+        Self {
+            links: (0..num_csds).map(|_| Timeline::new()).collect(),
+            csd_sw: (0..num_csds).map(|_| Timeline::new()).collect(),
+            host_sw: Timeline::new(),
+            cfg,
+            stats: TunnelStats::default(),
+        }
+    }
+
+    pub fn num_csds(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn config(&self) -> &TunnelConfig {
+        &self.cfg
+    }
+
+    /// Record traffic accounted by an aggregate (fluid) model rather
+    /// than per-message `send` calls — keeps the stats ledger whole.
+    pub fn note_aggregate(&mut self, messages: u64, bytes: u64) {
+        self.stats.messages += messages;
+        self.stats.bytes += bytes;
+    }
+
+    pub fn stats(&self) -> TunnelStats {
+        self.stats
+    }
+
+    /// Total wire bytes that crossed PCIe (relays count twice).
+    pub fn link_busy_total(&self) -> SimTime {
+        self.links.iter().map(Timeline::busy_time).sum()
+    }
+
+    fn packets(&self, bytes: usize) -> u64 {
+        (bytes.div_ceil(self.cfg.mtu)) as u64
+    }
+
+    fn sw_time(&self, bytes: usize, host: bool) -> SimTime {
+        let bw = if host { self.cfg.sw_bw_host } else { self.cfg.sw_bw_csd };
+        SimTime::from_secs_f64(bytes as f64 / bw) + self.cfg.per_packet * self.packets(bytes)
+    }
+
+    fn wire_time(&self, bytes: usize) -> SimTime {
+        SimTime::from_secs_f64(bytes as f64 / self.cfg.pcie_bw)
+    }
+
+    /// One hop host<->csd over the CSD's PCIe link.
+    fn hop(&mut self, csd: usize, bytes: usize, ready: SimTime, to_host: bool) -> SimTime {
+        let sw_csd = self.sw_time(bytes, false);
+        let sw_host = self.sw_time(bytes, true);
+        let wire = self.wire_time(bytes);
+        // Source-side packetization …
+        let (_, src_done) = if to_host {
+            self.csd_sw[csd].schedule(ready, sw_csd)
+        } else {
+            self.host_sw.schedule(ready, sw_host)
+        };
+        // … wire …
+        let (_, wire_done) = self.links[csd].schedule(src_done, wire);
+        let arrived = wire_done + self.cfg.hop_latency;
+        // … destination-side depacketization.
+        let (_, dst_done) = if to_host {
+            self.host_sw.schedule(arrived, sw_host)
+        } else {
+            self.csd_sw[csd].schedule(arrived, sw_csd)
+        };
+        dst_done
+    }
+
+    /// Send `bytes` from `from` to `to`; returns delivery time.
+    pub fn send(&mut self, from: NodeId, to: NodeId, bytes: usize, now: SimTime) -> SimTime {
+        assert_ne!(from, to, "self-send");
+        self.stats.messages += 1;
+        self.stats.bytes += bytes as u64;
+        match (from, to) {
+            (NodeId::Csd(a), NodeId::Host) => self.hop(a, bytes, now, true),
+            (NodeId::Host, NodeId::Csd(b)) => self.hop(b, bytes, now, false),
+            (NodeId::Csd(a), NodeId::Csd(b)) => {
+                // Relay through the host switch: two hops.
+                self.stats.relayed += 1;
+                let at_host = self.hop(a, bytes, now, true);
+                self.hop(b, bytes, at_host, false)
+            }
+            (NodeId::Host, NodeId::Host) => unreachable!(),
+        }
+    }
+
+    /// Effective point-to-point goodput measured over one message.
+    pub fn effective_bw(&mut self, from: NodeId, to: NodeId, bytes: usize) -> f64 {
+        let t0 = self.links.iter().map(Timeline::next_free).max().unwrap_or(SimTime::ZERO);
+        let done = self.send(from, to, bytes, t0);
+        bytes as f64 / (done - t0).as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csd_to_csd_relays_through_host() {
+        let mut t = Tunnel::new(4, TunnelConfig::default());
+        let direct = t.send(NodeId::Csd(0), NodeId::Host, 1 << 20, SimTime::ZERO);
+        let mut t2 = Tunnel::new(4, TunnelConfig::default());
+        let relayed = t2.send(NodeId::Csd(0), NodeId::Csd(1), 1 << 20, SimTime::ZERO);
+        assert!(relayed > direct, "relay must cost more than one hop");
+        assert_eq!(t2.stats().relayed, 1);
+    }
+
+    #[test]
+    fn sw_packetization_dominates_wire() {
+        // 1 MiB at 80 MB/s sw vs 3.2 GB/s wire: the FE is the choke point.
+        let mut t = Tunnel::new(1, TunnelConfig::default());
+        let bw = t.effective_bw(NodeId::Csd(0), NodeId::Host, 1 << 20);
+        assert!(bw < 80.0e6, "effective bw {bw} must sit below the sw ceiling");
+        assert!(bw > 20.0e6, "but not absurdly below it: {bw}");
+    }
+
+    #[test]
+    fn concurrent_flows_share_host_sw() {
+        let mut t = Tunnel::new(2, TunnelConfig::default());
+        let a = t.send(NodeId::Csd(0), NodeId::Host, 1 << 20, SimTime::ZERO);
+        let b = t.send(NodeId::Csd(1), NodeId::Host, 1 << 20, SimTime::ZERO);
+        // Both used distinct PCIe links but the same host de-packetizer:
+        // the second flow finishes later.
+        assert!(b > a);
+    }
+
+    #[test]
+    fn per_link_isolation() {
+        let mut t = Tunnel::new(2, TunnelConfig::default());
+        t.send(NodeId::Host, NodeId::Csd(0), 8 << 20, SimTime::ZERO);
+        // Wire time on csd1's link is untouched.
+        assert_eq!(t.links[1].busy_time(), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-send")]
+    fn self_send_panics() {
+        let mut t = Tunnel::new(1, TunnelConfig::default());
+        t.send(NodeId::Host, NodeId::Host, 10, SimTime::ZERO);
+    }
+}

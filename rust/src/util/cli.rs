@@ -1,0 +1,164 @@
+//! Tiny CLI argument parser (clap-lite, zero-dependency).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Declarative option spec used for usage/help rendering.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).with_context(|| format!("missing required --{name}"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error out on unknown options (catches typos in scripts).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(cmd: &str, summary: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{summary}\n\nUSAGE: {cmd} [options]\n\nOPTIONS:\n");
+    for o in opts {
+        let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn key_value_styles() {
+        // NOTE: a bare `--flag` followed by a positional would consume it
+        // as a value (greedy rule) — subcommands therefore come first.
+        let a = parse("run --net mobilenet --csds=8 --verbose");
+        assert_eq!(a.get("net"), Some("mobilenet"));
+        assert_eq!(a.parse_or("csds", 0usize).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--csds abc");
+        assert!(a.parse_or("csds", 0usize).is_err());
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("--models a,b , c");
+        assert_eq!(a.list_or("models", &[]), vec!["a", "b"]);
+        let b = parse("");
+        assert_eq!(b.list_or("models", &["x"]), vec!["x"]);
+        assert_eq!(b.get_or("net", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse("--whoops 3");
+        assert!(a.check_known(&["net"]).is_err());
+        assert!(a.check_known(&["whoops"]).is_ok());
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse("--k v -- --not-an-opt");
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+}

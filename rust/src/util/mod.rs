@@ -1,0 +1,10 @@
+//! Zero-dependency support substrates: JSON, CLI parsing, PRNG and a
+//! property-testing harness (see DESIGN.md §4, zero-dependency note).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,68 @@
+//! Property-testing harness (proptest-lite, zero-dependency).
+//!
+//! Runs a property over `cases` randomized inputs drawn from a seeded
+//! [`Rng`]; on failure it reports the failing case index and the seed
+//! so the exact input can be replayed (`STANNIS_PROP_SEED=<n>` to
+//! pin, `STANNIS_PROP_CASES=<n>` to widen a local run).
+
+use super::rng::Rng;
+
+/// Number of cases per property (default 64; env-overridable).
+pub fn default_cases() -> u64 {
+    std::env::var("STANNIS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("STANNIS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FF_EE00)
+}
+
+/// Run `prop` over `default_cases()` seeded RNGs. The property gets a
+/// fresh deterministic RNG per case and must panic (assert) on failure.
+pub fn check(name: &str, mut prop: impl FnMut(&mut Rng)) {
+    let cases = default_cases();
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with STANNIS_PROP_SEED={seed0} STANNIS_PROP_CASES={n}): {msg}",
+                n = case + 1,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", |rng| {
+            let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check("always fails eventually", |rng| {
+            assert!(rng.below(4) != 3, "hit the bad value");
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Integration: the CSD substrate composed end-to-end — dataset pages
+//! through FTL/flash, both data paths, the modeled scheduler over real
+//! device state, and cross-module invariants.
+
+use stannis::coordinator::{ScheduleConfig, Scheduler};
+use stannis::csd::{CsdConfig, FlashConfig, FtlConfig, NewportCsd};
+use stannis::perfmodel::PerfModel;
+use stannis::sim::SimTime;
+use stannis::tunnel::TunnelConfig;
+
+fn small_csd_cfg() -> CsdConfig {
+    CsdConfig {
+        ftl: FtlConfig {
+            flash: FlashConfig {
+                channels: 4,
+                dies_per_channel: 2,
+                blocks_per_die: 32,
+                pages_per_block: 16,
+                page_bytes: 4096,
+                ..Default::default()
+            },
+            overprovision: 0.2,
+            gc_low_water: 4,
+            gc_high_water: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn dataset_epoch_through_flash_preserves_tags() {
+    // Write a full "dataset" (one image per page), then run three
+    // epochs of batched ISP reads; tags must always match, GC or not.
+    let mut csd = NewportCsd::new(0, small_csd_cfg(), 11);
+    let images = 512u32;
+    for lpn in 0..images {
+        csd.write_page(lpn, 0xAA00_0000 | lpn as u64, SimTime::ZERO).unwrap();
+    }
+    let mut now = SimTime::ZERO;
+    for _epoch in 0..3 {
+        for batch_start in (0..images).step_by(16) {
+            let lpns: Vec<u32> = (batch_start..batch_start + 16).collect();
+            now = csd.read_for_isp(&lpns, now).unwrap();
+        }
+    }
+    for lpn in (0..images).step_by(37) {
+        let r = csd.ftl().read(lpn, now).unwrap();
+        assert_eq!(r.tag, 0xAA00_0000 | lpn as u64);
+    }
+    assert_eq!(csd.io_stats().isp_path_reads as u32, 3 * images);
+}
+
+#[test]
+fn training_interleaved_with_writes_and_gc() {
+    // Ingest (writes) runs while the ISP trains — the paper's
+    // always-on storage claim. Everything must stay consistent.
+    let mut csd = NewportCsd::new(0, small_csd_cfg(), 13);
+    let logical = csd.ftl_ref().logical_pages() as u32;
+    for lpn in 0..logical {
+        csd.write_page(lpn, lpn as u64, SimTime::ZERO).unwrap();
+    }
+    let mut now = SimTime::ZERO;
+    for round in 0..6u64 {
+        // Ingest: overwrite a third of the space (forces GC pressure).
+        for lpn in (0..logical).step_by(3) {
+            csd.write_page(lpn, (round << 32) | lpn as u64, now).unwrap();
+        }
+        // Train: stage a batch + compute.
+        let lpns: Vec<u32> = (1..65).collect();
+        now = csd
+            .isp_train_step(&lpns, SimTime::secs(1), 14_000_000, 500_000, 16, now)
+            .unwrap();
+    }
+    csd.ftl_ref().check_invariants().unwrap();
+    assert!(csd.ftl_ref().stats().gc_runs > 0, "GC should have run under this churn");
+    // Latest data visible.
+    let r = csd.ftl().read(3, now).unwrap();
+    assert_eq!(r.tag, (5 << 32) | 3);
+}
+
+#[test]
+fn modeled_schedule_over_real_devices_accounts_io() {
+    let mut sched = Scheduler::new(
+        PerfModel::default(),
+        3,
+        TunnelConfig::default(),
+        small_csd_cfg(),
+    );
+    sched.preload_data(64).unwrap();
+    let r = sched
+        .run(&ScheduleConfig {
+            network: "mobilenet_v2".into(),
+            num_csds: 3,
+            include_host: true,
+            bs_csd: 8,
+            bs_host: 32,
+            steps: 4,
+            image_bytes: 4096,
+            stage_io: true,
+        })
+        .unwrap();
+    assert!(r.flash_reads > 0);
+    assert!(r.link_bytes > 0);
+    assert!(r.images_per_sec > 0.0);
+    assert!(r.elapsed > SimTime::ZERO);
+    // 4 steps * (32 host + 3*8 csd) images
+    let expected = 4 * (32 + 24);
+    let images = (r.images_per_sec * r.elapsed.as_secs_f64()).round() as usize;
+    assert_eq!(images, expected);
+}
+
+#[test]
+fn isp_advantage_grows_under_link_contention() {
+    // The §III claim quantified: gradient sync on the PCIe link delays
+    // host-path staging but not ISP-path staging.
+    let stage = |contended: bool| {
+        let mut csd = NewportCsd::new(0, small_csd_cfg(), 17);
+        for lpn in 0..256u32 {
+            csd.write_page(lpn, 0, SimTime::ZERO).unwrap();
+        }
+        let t0 = SimTime::secs(5);
+        if contended {
+            csd.tunnel_transfer(13_880_000, t0);
+        }
+        let lpns: Vec<u32> = (0..64).collect();
+        let host = csd.read_for_host(&lpns, t0).unwrap() - t0;
+        let mut csd2 = NewportCsd::new(0, small_csd_cfg(), 17);
+        for lpn in 0..256u32 {
+            csd2.write_page(lpn, 0, SimTime::ZERO).unwrap();
+        }
+        if contended {
+            csd2.tunnel_transfer(13_880_000, t0);
+        }
+        let isp = csd2.read_for_isp(&lpns, t0).unwrap() - t0;
+        host.as_ns() as f64 / isp.as_ns() as f64
+    };
+    let idle = stage(false);
+    let contended = stage(true);
+    assert!(idle > 1.0, "ISP path must win even on an idle link: {idle}");
+    assert!(contended > idle, "contention must widen the gap: {idle} -> {contended}");
+}
+
+#[test]
+fn ecc_failures_surface_as_errors_at_extreme_wear() {
+    use stannis::csd::{EccConfig, Ftl};
+    let cfg = FtlConfig {
+        flash: FlashConfig {
+            channels: 2,
+            dies_per_channel: 1,
+            blocks_per_die: 16,
+            pages_per_block: 8,
+            page_bytes: 16384,
+            ..Default::default()
+        },
+        // Brutal wear-out model so uncorrectables appear quickly.
+        ecc: EccConfig { rber_per_pe: 5e-4, t: 8, ..Default::default() },
+        overprovision: 0.25,
+        gc_low_water: 2,
+        gc_high_water: 4,
+        ..Default::default()
+    };
+    let mut ftl = Ftl::new(cfg, 23);
+    let n = ftl.logical_pages() as u32;
+    // Hammer the device until blocks accumulate hundreds of P/E cycles.
+    let mut failed = false;
+    'outer: for round in 0..400u64 {
+        for lpn in 0..n {
+            if ftl.write(lpn, round, SimTime::ZERO).is_err() {
+                failed = true;
+                break 'outer;
+            }
+        }
+        for lpn in (0..n).step_by(5) {
+            if ftl.read(lpn, SimTime::ZERO).is_err() {
+                failed = true; // uncorrectable ECC error propagated
+                break 'outer;
+            }
+        }
+    }
+    assert!(
+        failed || ftl.max_pe_cycles() > 100,
+        "either an uncorrectable surfaced or the device absorbed heavy wear"
+    );
+}

@@ -1,0 +1,122 @@
+//! Fault injection: degraded devices, dropped workers, link slowdowns —
+//! the coordinator must stay correct (never silently wrong) and the
+//! models must respond in the physically sensible direction.
+
+use stannis::allreduce::{ring_allreduce_mean, ring_time};
+use stannis::coordinator::{balance, modeled_throughput, tune, TuneConfig};
+use stannis::data::{Dataset, DatasetConfig};
+use stannis::perfmodel::PerfModel;
+use stannis::sim::SimTime;
+use stannis::tunnel::{NodeId, Tunnel, TunnelConfig};
+
+#[test]
+fn degraded_newport_gets_smaller_batch_and_less_work() {
+    // A CSD running at 60% (thermal throttle) must be assigned a
+    // proportionally lighter schedule by Algorithm 1.
+    let cfg = TuneConfig::default();
+    let mut healthy = PerfModel::default();
+    let mut degraded = PerfModel { newport_scale: 0.6, ..Default::default() };
+    let h = tune(&mut healthy, "mobilenet_v2", &cfg).unwrap();
+    let d = tune(&mut degraded, "mobilenet_v2", &cfg).unwrap();
+    assert!(d.newport_ips < h.newport_ips * 0.7);
+    // Same newport batch (saturation point doesn't move) but the host
+    // target time grows, so the host batch grows to compensate.
+    assert!(d.host_bs > h.host_bs, "{} !> {}", d.host_bs, h.host_bs);
+}
+
+#[test]
+fn slow_tunnel_hurts_big_models_most() {
+    // Cut tunnel sw bandwidth 4x: InceptionV3 (23.8M params) must lose
+    // a larger fraction of its throughput than SqueezeNet (1.25M).
+    let loss_frac = |net: &str, bs_csd: usize, bs_host: usize| {
+        let fast = modeled_throughput(net, 12, true, bs_csd, bs_host, 3)
+            .unwrap()
+            .images_per_sec;
+        // Degrade via a custom scheduler run.
+        let mut sched = stannis::coordinator::Scheduler::new(
+            PerfModel::default(),
+            12,
+            TunnelConfig { sw_bw_csd: 20.0e6, ..Default::default() },
+            stannis::csd::CsdConfig::default(),
+        );
+        let slow = sched
+            .run(&stannis::coordinator::ScheduleConfig {
+                network: net.into(),
+                num_csds: 12,
+                include_host: true,
+                bs_csd,
+                bs_host,
+                steps: 3,
+                image_bytes: 12 * 1024,
+                stage_io: false,
+            })
+            .unwrap()
+            .images_per_sec;
+        1.0 - slow / fast
+    };
+    let inc = loss_frac("inception_v3", 16, 370);
+    let sq = loss_frac("squeezenet", 50, 850);
+    assert!(
+        inc > sq + 0.05,
+        "inception must suffer more from a slow tunnel: {inc:.3} vs {sq:.3}"
+    );
+}
+
+#[test]
+fn worker_dropout_mid_allreduce_is_consistent() {
+    // A worker dies between steps: the remaining replicas re-form the
+    // ring and still compute an exact mean among themselves.
+    let mut replicas: Vec<Vec<f32>> = (0..5).map(|w| vec![w as f32; 100]).collect();
+    ring_allreduce_mean(&mut replicas).unwrap();
+    assert!(replicas.iter().all(|r| (r[0] - 2.0).abs() < 1e-6));
+    // Drop worker 3, next step re-rings with 4.
+    replicas.remove(3);
+    for (w, r) in replicas.iter_mut().enumerate() {
+        r.iter_mut().for_each(|x| *x = (w * w) as f32);
+    }
+    ring_allreduce_mean(&mut replicas).unwrap();
+    let want = (0 + 1 + 4 + 9) as f32 / 4.0;
+    assert!(replicas.iter().all(|r| (r[0] - want).abs() < 1e-5));
+}
+
+#[test]
+fn ring_time_degrades_gracefully_with_slow_endpoints() {
+    let bytes = 13_880_000;
+    let ranks: Vec<NodeId> = std::iter::once(NodeId::Host).chain((0..8).map(NodeId::Csd)).collect();
+    let mut fast = Tunnel::new(8, TunnelConfig::default());
+    let t_fast = ring_time(&mut fast, &ranks, bytes, SimTime::ZERO);
+    let mut slow = Tunnel::new(8, TunnelConfig { sw_bw_csd: 20.0e6, ..Default::default() });
+    let t_slow = ring_time(&mut slow, &ranks, bytes, SimTime::ZERO);
+    let ratio = t_slow.as_secs_f64() / t_fast.as_secs_f64();
+    assert!(
+        (2.0..6.0).contains(&ratio),
+        "4x endpoint slowdown should cost ~4x sync, got {ratio:.2}"
+    );
+}
+
+#[test]
+fn empty_private_shard_with_dry_pool_is_rejected() {
+    // A CSD with no private data and no public budget cannot be given
+    // work out of thin air — must be an error, not silent starvation.
+    let d = Dataset::new(DatasetConfig {
+        public_images: 1, // pool effectively dry
+        private_per_csd: vec![64, 0],
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(balance(&d, 2, 8, 32, true).is_err());
+}
+
+#[test]
+fn dataset_visibility_never_panics_at_boundaries() {
+    let d = Dataset::new(DatasetConfig {
+        public_images: 10,
+        private_per_csd: vec![5],
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(d.visibility(0).is_ok());
+    assert!(d.visibility(14).is_ok());
+    assert!(d.visibility(15).is_err());
+    assert!(d.image(15).is_err());
+}

@@ -1,0 +1,110 @@
+//! Integration: AOT artifacts load, compile and execute through PJRT,
+//! and the numerics behave like training (finite grads, loss ↓).
+//!
+//! Requires `make artifacts` to have run (skips otherwise is NOT
+//! allowed — artifacts are a build prerequisite per the Makefile).
+
+use stannis::model::{ParamStore, Sgd, SgdConfig, Tensor};
+use stannis::runtime::{default_artifacts_dir, Engine};
+
+// One engine for the whole file (xla's client is Rc-based/!Send, and
+// artifact compilation is the dominant cost).
+
+fn synth_batch(hw: usize, bs: usize, classes: usize, seed: u64) -> (Tensor, Vec<i32>) {
+    let images = Tensor::randn(vec![bs, hw, hw, 3], 1.0, seed);
+    let labels: Vec<i32> = (0..bs).map(|i| ((seed as usize + i * 7) % classes) as i32).collect();
+    (images, labels)
+}
+
+fn init_params_match_manifest(eng: &Engine) {
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let params = eng.init_params("mobilenet_v2_s", 0).unwrap();
+    params.check_specs(&net.params).unwrap();
+    assert_eq!(params.num_scalars(), net.param_count);
+    assert!(params.is_finite());
+    // seeds differ -> replicas differ
+    let params1 = eng.init_params("mobilenet_v2_s", 1).unwrap();
+    assert!(params.max_abs_diff(&params1) > 1e-3);
+    // same seed -> identical replica (determinism)
+    let params0 = eng.init_params("mobilenet_v2_s", 0).unwrap();
+    assert_eq!(params.max_abs_diff(&params0), 0.0);
+}
+
+fn train_step_returns_finite_grads(eng: &Engine) {
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let params = eng.init_params("mobilenet_v2_s", 42).unwrap();
+    let (x, y) = synth_batch(net.input_hw, 8, net.num_classes, 3);
+    let out = eng.train_step("mobilenet_v2_s", 8, &params, &x, &y).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0, "loss={}", out.loss);
+    assert!(out.grads.is_finite());
+    assert_eq!(out.grads.len(), params.len());
+    // gradient must be non-trivial
+    assert!(out.grads.to_flat().iter().any(|g| g.abs() > 1e-8));
+}
+
+fn loss_decreases_under_sgd(eng: &Engine) {
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let mut params = eng.init_params("mobilenet_v2_s", 7).unwrap();
+    let (x, y) = synth_batch(net.input_hw, 16, net.num_classes, 11);
+    let mut opt = Sgd::new(SgdConfig { base_lr: 0.02, momentum: 0.9, ..Default::default() });
+
+    let first = eng.train_step("mobilenet_v2_s", 16, &params, &x, &y).unwrap().loss;
+    for _ in 0..15 {
+        let out = eng.train_step("mobilenet_v2_s", 16, &params, &x, &y).unwrap();
+        opt.apply(&mut params, &out.grads).unwrap();
+    }
+    let last = eng.train_step("mobilenet_v2_s", 16, &params, &x, &y).unwrap().loss;
+    assert!(
+        last < first * 0.7,
+        "memorizing one batch must cut loss sharply: {first} -> {last}"
+    );
+}
+
+fn wrong_batch_size_is_an_error(eng: &Engine) {
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let params = eng.init_params("mobilenet_v2_s", 0).unwrap();
+    let (x, y) = synth_batch(net.input_hw, 3, net.num_classes, 0);
+    assert!(eng.train_step("mobilenet_v2_s", 3, &params, &x, &y).is_err());
+}
+
+fn wrong_image_shape_is_an_error(eng: &Engine) {
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let params = eng.init_params("mobilenet_v2_s", 0).unwrap();
+    let x = Tensor::randn(vec![8, net.input_hw + 1, net.input_hw, 3], 1.0, 0);
+    let y = vec![0i32; 8];
+    assert!(eng.train_step("mobilenet_v2_s", 8, &params, &x, &y).is_err());
+}
+
+fn eval_step_counts_correct(eng: &Engine) {
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let params = eng.init_params("mobilenet_v2_s", 0).unwrap();
+    let bs = net.eval_batch_size;
+    let (x, y) = synth_batch(net.input_hw, bs, net.num_classes, 5);
+    let out = eng.eval_step("mobilenet_v2_s", &params, &x, &y).unwrap();
+    assert!(out.loss.is_finite());
+    assert!(out.correct >= 0 && out.correct <= bs as i32);
+}
+
+fn replicas_with_same_inputs_get_same_grads(eng: &Engine) {
+    // Determinism across executions — the property that lets one PJRT
+    // client stand in for N physical workers (DESIGN.md §2).
+    let net = eng.network("mobilenet_v2_s").unwrap().clone();
+    let params = eng.init_params("mobilenet_v2_s", 9).unwrap();
+    let (x, y) = synth_batch(net.input_hw, 4, net.num_classes, 13);
+    let a = eng.train_step("mobilenet_v2_s", 4, &params, &x, &y).unwrap();
+    let b = eng.train_step("mobilenet_v2_s", 4, &params, &x, &y).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.grads.max_abs_diff(&b.grads), 0.0);
+}
+
+#[test]
+fn runtime_suite() {
+    let eng = Engine::new(default_artifacts_dir()).expect("run `make artifacts` first");
+    init_params_match_manifest(&eng);
+    train_step_returns_finite_grads(&eng);
+    loss_decreases_under_sgd(&eng);
+    wrong_batch_size_is_an_error(&eng);
+    wrong_image_shape_is_an_error(&eng);
+    eval_step_counts_correct(&eng);
+    replicas_with_same_inputs_get_same_grads(&eng);
+}

@@ -1,0 +1,147 @@
+//! Integration: the full tune → balance → train pipeline with real
+//! PJRT execution, shared across tests via one global engine (artifact
+//! compilation is expensive; numerics are deterministic).
+
+use std::sync::Arc;
+
+use stannis::cluster::Cluster;
+use stannis::config::ExperimentConfig;
+use stannis::coordinator::balance;
+use stannis::data::{Dataset, Visibility};
+use stannis::runtime::{default_artifacts_dir, Engine};
+
+// The xla PJRT client is Rc-based (!Send), so tests that need the
+// engine share ONE instance inside a single sequential #[test] — this
+// also pays the artifact-compilation cost exactly once.
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        network: "mobilenet_v2_s".into(),
+        num_csds: 3,
+        include_host: true,
+        bs_csd: 2,
+        bs_host: 8,
+        steps: 8,
+        base_lr: 0.01,
+        momentum: 0.9,
+        warmup_steps: 0,
+        public_images: 256,
+        private_per_csd: 64,
+        seed: 3,
+        reference_batch: 32,
+    }
+}
+
+fn distributed_training_runs_and_descends(engine: &Arc<Engine>) {
+    let cluster = Cluster::bring_up_with_engine(small_cfg(), engine.clone()).unwrap();
+    let mut trainer = cluster.trainer().unwrap();
+    assert_eq!(trainer.num_workers(), 4);
+    let report = trainer.train(8).unwrap();
+    assert_eq!(report.losses.len(), 8);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    assert_eq!(report.images_processed, 8 * (8 + 3 * 2));
+    // Lockstep: replicas must not diverge at all (identical averaged
+    // grads + identical optimizer state).
+    assert_eq!(trainer.replica_divergence(), 0.0);
+}
+
+fn single_worker_descends(engine: &Arc<Engine>) {
+    let cfg = ExperimentConfig { num_csds: 0, bs_host: 16, steps: 12, ..small_cfg() };
+    let cluster = Cluster::bring_up_with_engine(cfg, engine.clone()).unwrap();
+    let mut trainer = cluster.trainer().unwrap();
+    assert_eq!(trainer.num_workers(), 1);
+    let report = trainer.train(12).unwrap();
+    // Over 12 steps on a 256-image pool, loss should trend down.
+    let head: f32 = report.losses[..3].iter().sum::<f32>() / 3.0;
+    let tail: f32 = report.losses[9..].iter().sum::<f32>() / 3.0;
+    assert!(tail < head, "loss should descend: head {head:.4} tail {tail:.4}");
+}
+
+fn csd_only_cluster_trains(engine: &Arc<Engine>) {
+    // The paper's second deployment scenario (§V): standalone CSDs, no
+    // host participation in training.
+    let cfg = ExperimentConfig {
+        num_csds: 2,
+        include_host: false,
+        steps: 4,
+        ..small_cfg()
+    };
+    let cluster = Cluster::bring_up_with_engine(cfg, engine.clone()).unwrap();
+    let mut trainer = cluster.trainer().unwrap();
+    assert_eq!(trainer.num_workers(), 2);
+    let report = trainer.train(4).unwrap();
+    assert_eq!(report.images_processed, 4 * 2 * 2);
+    assert_eq!(trainer.replica_divergence(), 0.0);
+}
+
+fn different_worker_counts_reach_similar_loss(engine: &Arc<Engine>) {
+    // §V.C parity in miniature: same per-step image budget, 1 vs 3 workers.
+    let steps = 10;
+    let cfg1 = ExperimentConfig {
+        num_csds: 0,
+        bs_host: 8,
+        steps,
+        warmup_steps: 2,
+        ..small_cfg()
+    };
+    let cfg3 = ExperimentConfig {
+        num_csds: 2,
+        include_host: true,
+        bs_csd: 2,
+        bs_host: 4,
+        steps,
+        warmup_steps: 2,
+        ..small_cfg()
+    };
+    let c1 = Cluster::bring_up_with_engine(cfg1, engine.clone()).unwrap();
+    let c3 = Cluster::bring_up_with_engine(cfg3, engine.clone()).unwrap();
+    let r1 = c1.trainer().unwrap().train(steps).unwrap();
+    let r3 = c3.trainer().unwrap().train(steps).unwrap();
+    // Both descend and land in the same ballpark (generous band — ten
+    // steps of SGD on synthetic data is noisy).
+    assert!(r1.last_loss().is_finite() && r3.last_loss().is_finite());
+    let rel = (r1.last_loss() - r3.last_loss()).abs() / r1.last_loss();
+    assert!(rel < 0.6, "1-worker {:.4} vs 3-worker {:.4}", r1.last_loss(), r3.last_loss());
+}
+
+#[test]
+fn placement_respects_privacy_in_full_pipeline() {
+    let cfg = small_cfg();
+    let dataset = Dataset::new(cfg.dataset()).unwrap();
+    let p = balance(&dataset, cfg.num_csds, cfg.bs_csd, cfg.bs_host, true).unwrap();
+    for &id in &p.host_ids {
+        assert!(matches!(dataset.visibility(id).unwrap(), Visibility::Public));
+    }
+    for (c, ids) in p.csd_ids.iter().enumerate() {
+        for &id in ids {
+            if let Visibility::Private { csd } = dataset.visibility(id).unwrap() {
+                assert_eq!(csd, c, "private image {id} leaked to csd{c}");
+            }
+        }
+    }
+}
+
+fn missing_artifact_batch_size_fails_fast(engine: &Arc<Engine>) {
+    let cfg = ExperimentConfig { bs_csd: 3, ..small_cfg() }; // 3 not compiled
+    assert!(Cluster::bring_up_with_engine(cfg, engine.clone()).is_err());
+}
+
+fn evaluation_reports_sane_metrics(engine: &Arc<Engine>) {
+    let cluster = Cluster::bring_up_with_engine(small_cfg(), engine.clone()).unwrap();
+    let mut trainer = cluster.trainer().unwrap();
+    trainer.train(4).unwrap();
+    let (loss, acc) = trainer.evaluate(2).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn full_training_pipeline() {
+    let engine = Arc::new(Engine::new(default_artifacts_dir()).expect("run `make artifacts`"));
+    distributed_training_runs_and_descends(&engine);
+    single_worker_descends(&engine);
+    csd_only_cluster_trains(&engine);
+    different_worker_counts_reach_similar_loss(&engine);
+    evaluation_reports_sane_metrics(&engine);
+    missing_artifact_batch_size_fails_fast(&engine);
+}
