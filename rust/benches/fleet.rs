@@ -1,0 +1,77 @@
+//! Bench: the fleet coordinator under multi-tenancy — makespan,
+//! aggregate throughput and energy as more concurrent jobs share one
+//! 24-bay chassis, plus the cost of a mid-run degradation re-tune and
+//! the simulator's own overhead.
+//!
+//! Run: `cargo bench --bench fleet`
+
+use stannis::config::FleetExperimentConfig;
+use stannis::fleet::{Fleet, FleetConfig, FleetReport};
+use stannis::metrics::{bench, f, print_table};
+use stannis::sim::SimTime;
+
+const POOL: usize = 24;
+
+fn run_mix(n_jobs: usize, fault: Option<(usize, u64, f64)>) -> FleetReport {
+    let spec = FleetExperimentConfig::default_mix(n_jobs, POOL);
+    let mut fleet = Fleet::new(FleetConfig { total_csds: POOL, ..Default::default() });
+    for job in &spec.jobs {
+        fleet.submit(job.clone());
+    }
+    if let Some((device, at_secs, factor)) = fault {
+        fleet.inject_degradation(SimTime::secs(at_secs), device, factor);
+    }
+    fleet.run().expect("fleet run")
+}
+
+fn main() {
+    // --- Multi-tenancy scaling: 1..12 jobs over 24 devices ----------------
+    let mut rows = Vec::new();
+    for n_jobs in [1usize, 2, 4, 8, 12] {
+        let r = run_mix(n_jobs, None);
+        rows.push(vec![
+            n_jobs.to_string(),
+            format!("{}", r.makespan),
+            r.total_images.to_string(),
+            f(r.aggregate_ips, 1),
+            f(r.jobs_energy_j / r.total_images.max(1) as f64, 2),
+            f(r.queue_wait.mean(), 1),
+            f(r.queue_wait.max(), 1),
+        ]);
+    }
+    print_table(
+        "Fleet scaling — default mix on a 24-bay chassis",
+        &["jobs", "makespan", "imgs", "agg img/s", "J/img (jobs)", "wait mean s", "wait max s"],
+        &rows,
+    );
+
+    // --- Degradation: retune cost on a co-tenanted fleet ------------------
+    let clean = run_mix(4, None);
+    let faulted = run_mix(4, Some((0, 60, 0.6)));
+    let mut rows = Vec::new();
+    for (label, r) in [("healthy", &clean), ("device0 @60s -> 60%", &faulted)] {
+        rows.push(vec![
+            label.to_string(),
+            format!("{}", r.makespan),
+            f(r.aggregate_ips, 1),
+            r.retunes.to_string(),
+        ]);
+    }
+    print_table(
+        "Degradation — one throttled device, 4-job fleet",
+        &["scenario", "makespan", "agg img/s", "retunes"],
+        &rows,
+    );
+    let slowdown = faulted.makespan.as_secs_f64() / clean.makespan.as_secs_f64().max(1e-12);
+    println!("makespan slowdown from the fault: {}x", f(slowdown, 3));
+
+    // --- Simulation cost --------------------------------------------------
+    let r = bench("fleet_run(4 jobs, 24 CSDs, staged IO)", 1, 10, || {
+        std::hint::black_box(run_mix(4, None));
+    });
+    println!("\n{}", r.summary());
+    let r = bench("fleet_run(12 jobs, 24 CSDs, staged IO)", 1, 5, || {
+        std::hint::black_box(run_mix(12, None));
+    });
+    println!("{}", r.summary());
+}

@@ -9,7 +9,9 @@
 //! * [`ring_time`] — the *timing*: the same 2(N-1) rounds of
 //!   neighbor-to-neighbor messages booked on the TCP/IP-over-PCIe
 //!   [`Tunnel`], which is where the paper's sync slowdown (Fig. 6/7)
-//!   comes from.
+//!   comes from. [`ring_time_shared`] is the same schedule for a ring
+//!   co-tenanting the fabric with other jobs' rings (the fleet's
+//!   per-job allreduce domains, DESIGN.md §5).
 //!
 //! A parameter-server baseline ([`param_server_time`]) reproduces the
 //! TensorFlow-classic comparison the paper describes in §II.B.
@@ -126,6 +128,37 @@ pub fn ring_time(
     bytes: usize,
     start: SimTime,
 ) -> SimTime {
+    ring_time_fluid(tunnel, ranks, bytes, start, 1.0)
+}
+
+/// [`ring_time`] for a ring that shares the fabric with co-tenant
+/// rings — the fleet's per-job allreduce domains.
+///
+/// Each job's CSDs (and their PCIe links and FE packetizers) are its
+/// own, but every csd↔csd relay of *every* ring crosses the host root,
+/// so `sharers` concurrent domains split the host-side packetization
+/// budget evenly (fluid fair-share). With the default calibration the
+/// FE is the bottleneck, so co-tenancy is nearly free until many rings
+/// stack up — a property `integration_fleet` leans on.
+pub fn ring_time_shared(
+    tunnel: &mut Tunnel,
+    ranks: &[NodeId],
+    bytes: usize,
+    start: SimTime,
+    sharers: usize,
+) -> SimTime {
+    ring_time_fluid(tunnel, ranks, bytes, start, 1.0 / sharers.max(1) as f64)
+}
+
+/// Shared fluid-model core; `host_share` is this ring's fraction of
+/// the host root's packetization bandwidth.
+fn ring_time_fluid(
+    tunnel: &mut Tunnel,
+    ranks: &[NodeId],
+    bytes: usize,
+    start: SimTime,
+    host_share: f64,
+) -> SimTime {
     let n = ranks.len();
     if n <= 1 {
         return start;
@@ -141,7 +174,8 @@ pub fn ring_time(
     // Per-step busy time on each resource class (fluid sharing).
     let t_csd_step = 2.0 * (chunk / cfg.sw_bw_csd + pkts_per_chunk * pkt);
     let host_crossings = if has_host { 2 * n - 2 } else { 2 * n } as f64;
-    let t_host_step = host_crossings * (chunk / cfg.sw_bw_host + pkts_per_chunk * pkt);
+    let t_host_step =
+        host_crossings * (chunk / (cfg.sw_bw_host * host_share) + pkts_per_chunk * pkt);
     let t_wire_step = 2.0 * chunk / cfg.pcie_bw;
     // Pipeline startup: one chunk's first hop must traverse the ring
     // serially before steady state (α term).
@@ -278,6 +312,32 @@ mod tests {
             d8.as_secs_f64() < 2.0 * d4.as_secs_f64(),
             "ring not bandwidth-optimal: {d4} -> {d8}"
         );
+    }
+
+    #[test]
+    fn co_tenant_rings_split_the_host_root() {
+        let bytes = 13_880_000;
+        let ranks: Vec<NodeId> =
+            std::iter::once(NodeId::Host).chain((0..8).map(NodeId::Csd)).collect();
+        let t = |sharers: usize| {
+            let mut tn = Tunnel::new(8, TunnelConfig::default());
+            ring_time_shared(&mut tn, &ranks, bytes, SimTime::ZERO, sharers).as_secs_f64()
+        };
+        let solo = t(1);
+        let duo = t(2);
+        let mob = t(32);
+        // ring_time is exactly the exclusive case.
+        let mut tn = Tunnel::new(8, TunnelConfig::default());
+        assert_eq!(
+            ring_time(&mut tn, &ranks, bytes, SimTime::ZERO).as_secs_f64(),
+            solo
+        );
+        // The FE packetizer is the default bottleneck, so light
+        // co-tenancy is nearly free...
+        assert!(duo >= solo);
+        assert!(duo < solo * 1.5, "2 sharers must not blow up sync: {solo} -> {duo}");
+        // ...but enough concurrent rings choke the shared host root.
+        assert!(mob > duo * 2.0, "32 sharers must choke the root: {duo} -> {mob}");
     }
 
     #[test]

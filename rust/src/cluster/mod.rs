@@ -1,22 +1,36 @@
 //! Cluster assembly: turn an [`ExperimentConfig`] into the live pieces
-//! a run needs (engine, dataset, placement, trainer) — the glue between
-//! the config system and the coordinator.
+//! a run needs (engine, dataset, placement, trainer).
+//!
+//! Since the fleet subsystem landed, a `Cluster` is the *single-job
+//! special case* of a fleet group: all the per-job wiring (artifact
+//! validation, dataset generation, Eq. 1 balancing, trainer
+//! construction) lives in [`fleet::group::JobGroup`](crate::fleet::JobGroup),
+//! and `Cluster` wraps exactly one group. Multi-job callers go through
+//! [`crate::fleet::Fleet`] instead (DESIGN.md §5).
 
+use std::ops::Deref;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{balance, Placement, StannisTrainer, TrainConfig};
-use crate::data::Dataset;
+use crate::fleet::JobGroup;
 use crate::runtime::{default_artifacts_dir, Engine};
 
-/// A fully wired real-execution cluster.
+/// A fully wired real-execution cluster — one provisioned [`JobGroup`].
+///
+/// Derefs to the group, so `cluster.engine`, `cluster.placement`,
+/// `cluster.cfg` and `cluster.trainer()` keep their historical shape.
 pub struct Cluster {
-    pub engine: Arc<Engine>,
-    pub dataset: Dataset,
-    pub placement: Placement,
-    pub cfg: ExperimentConfig,
+    group: JobGroup,
+}
+
+impl Deref for Cluster {
+    type Target = JobGroup;
+
+    fn deref(&self) -> &JobGroup {
+        &self.group
+    }
 }
 
 impl Cluster {
@@ -30,44 +44,11 @@ impl Cluster {
     /// Same, reusing an existing engine (tests share one to avoid
     /// recompiling artifacts).
     pub fn bring_up_with_engine(cfg: ExperimentConfig, engine: Arc<Engine>) -> Result<Self> {
-        // Validate the network + batch artifacts up front.
-        let net = engine.network(&cfg.network)?;
-        anyhow::ensure!(
-            net.train_artifact(cfg.bs_csd).is_some(),
-            "network {} has no train artifact for bs_csd={} (have {:?})",
-            cfg.network,
-            cfg.bs_csd,
-            net.train_batch_sizes
-        );
-        let dataset = Dataset::new(cfg.dataset())?;
-        let placement = balance(
-            &dataset,
-            cfg.num_csds,
-            cfg.bs_csd,
-            cfg.bs_host,
-            cfg.include_host,
-        )?;
-        Ok(Self { engine, dataset, placement, cfg })
+        Ok(Self { group: JobGroup::provision(cfg, engine)? })
     }
 
-    /// Construct the trainer for this cluster.
-    pub fn trainer(&self) -> Result<StannisTrainer> {
-        StannisTrainer::new(
-            self.engine.clone(),
-            self.dataset.clone(),
-            &self.placement,
-            TrainConfig {
-                network: self.cfg.network.clone(),
-                num_csds: self.cfg.num_csds,
-                include_host: self.cfg.include_host,
-                bs_csd: self.cfg.bs_csd,
-                bs_host: self.cfg.bs_host,
-                steps: self.cfg.steps,
-                sgd: self.cfg.sgd(),
-                seed: self.cfg.seed as i32,
-                consistency_every: 10,
-                weighted_grads: true,
-            },
-        )
+    /// Unwrap into the underlying fleet group.
+    pub fn into_group(self) -> JobGroup {
+        self.group
     }
 }

@@ -57,7 +57,13 @@ impl ExperimentConfig {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         let j = Json::parse(&text)?;
-        Self::default().merged_with(&j)
+        Self::from_json(&j)
+    }
+
+    /// Build from a parsed JSON object (one job entry of a fleet spec);
+    /// missing keys keep defaults.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Self::default().merged_with(j)
     }
 
     fn merged_with(mut self, j: &Json) -> Result<Self> {
@@ -140,6 +146,129 @@ impl ExperimentConfig {
     }
 }
 
+/// A scheduled device fault for fleet runs (DESIGN.md §5): at
+/// `at_secs` of simulated time, multiply `device`'s health by
+/// `factor`.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    pub at_secs: f64,
+    pub device: usize,
+    pub factor: f64,
+}
+
+impl FaultSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Self {
+            at_secs: j.field("at_secs")?.as_f64()?,
+            device: j.field("device")?.as_usize()?,
+            factor: j.field("factor")?.as_f64()?,
+        }
+        .validated()
+    }
+
+    /// Parse the CLI form `device:at_secs:factor` (e.g. `3:30:0.6`).
+    pub fn parse_cli(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "fault spec {s:?} must be device:at_secs:factor (e.g. 3:30:0.6)"
+        );
+        Self {
+            device: parts[0].parse().with_context(|| format!("device in {s:?}"))?,
+            at_secs: parts[1].parse().with_context(|| format!("at_secs in {s:?}"))?,
+            factor: parts[2].parse().with_context(|| format!("factor in {s:?}"))?,
+        }
+        .validated()
+    }
+
+    fn validated(self) -> Result<Self> {
+        anyhow::ensure!(
+            self.at_secs >= 0.0 && self.at_secs.is_finite(),
+            "fault at_secs must be a non-negative time, got {}",
+            self.at_secs
+        );
+        anyhow::ensure!(
+            self.factor > 0.0 && self.factor.is_finite(),
+            "fault factor must be a positive scale, got {}",
+            self.factor
+        );
+        Ok(self)
+    }
+}
+
+/// Multi-job experiment spec for the fleet coordinator: a shared
+/// device pool plus many per-job [`ExperimentConfig`]s and an optional
+/// fault schedule.
+#[derive(Debug, Clone)]
+pub struct FleetExperimentConfig {
+    /// Devices in the shared pool.
+    pub total_csds: usize,
+    /// Stage batches through the CSD flash substrate.
+    pub stage_io: bool,
+    pub jobs: Vec<ExperimentConfig>,
+    pub faults: Vec<FaultSpec>,
+}
+
+impl Default for FleetExperimentConfig {
+    fn default() -> Self {
+        Self { total_csds: 12, stage_io: true, jobs: Vec::new(), faults: Vec::new() }
+    }
+}
+
+impl FleetExperimentConfig {
+    /// Load from a JSON file shaped like
+    /// `{"total_csds": 12, "jobs": [{...}, ...], "faults": [{...}]}`;
+    /// each job object takes [`ExperimentConfig`] keys.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let j = Json::parse(&text)?;
+        let mut out = Self::default();
+        if let Some(v) = j.get("total_csds") {
+            out.total_csds = v.as_usize()?;
+        }
+        if let Some(v) = j.get("stage_io") {
+            out.stage_io = v.as_bool()?;
+        }
+        if let Some(v) = j.get("jobs") {
+            for job in v.as_arr()? {
+                out.jobs.push(ExperimentConfig::from_json(job)?);
+            }
+        }
+        if let Some(v) = j.get("faults") {
+            for f in v.as_arr()? {
+                out.faults.push(FaultSpec::from_json(f)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// A deterministic default workload mix: `n_jobs` jobs cycling the
+    /// paper's four networks, the first one holding the host, devices
+    /// spread evenly across the pool.
+    pub fn default_mix(n_jobs: usize, total_csds: usize) -> Self {
+        const NETS: [&str; 4] = ["mobilenet_v2", "squeezenet", "nasnet", "inception_v3"];
+        let n_jobs = n_jobs.max(1);
+        let base = (total_csds / n_jobs).max(1);
+        let mut spare = total_csds.saturating_sub(base * n_jobs);
+        let jobs = (0..n_jobs)
+            .map(|i| {
+                let extra = usize::from(spare > 0);
+                spare = spare.saturating_sub(1);
+                ExperimentConfig {
+                    network: NETS[i % NETS.len()].into(),
+                    num_csds: (base + extra).min(total_csds),
+                    include_host: i == 0,
+                    steps: 20,
+                    seed: i as i64,
+                    ..Default::default()
+                }
+            })
+            .collect();
+        Self { total_csds, jobs, ..Default::default() }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +305,58 @@ mod tests {
     fn bad_type_errors() {
         let args = crate::util::cli::Args::parse(["--steps", "many"].map(String::from)).unwrap();
         assert!(ExperimentConfig::default().apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_parses_jobs_and_faults() {
+        let dir = std::env::temp_dir().join(format!("stannis_fleet_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("fleet.json");
+        std::fs::write(
+            &p,
+            r#"{
+                "total_csds": 8,
+                "stage_io": false,
+                "jobs": [
+                    {"network": "mobilenet_v2", "num_csds": 3, "steps": 5},
+                    {"network": "squeezenet", "num_csds": 4, "include_host": false}
+                ],
+                "faults": [{"at_secs": 30.5, "device": 1, "factor": 0.6}]
+            }"#,
+        )
+        .unwrap();
+        let f = FleetExperimentConfig::from_file(&p).unwrap();
+        assert_eq!(f.total_csds, 8);
+        assert!(!f.stage_io);
+        assert_eq!(f.jobs.len(), 2);
+        assert_eq!(f.jobs[0].num_csds, 3);
+        assert_eq!(f.jobs[0].steps, 5);
+        assert_eq!(f.jobs[1].network, "squeezenet");
+        assert!(!f.jobs[1].include_host);
+        // Unset keys keep per-job defaults.
+        assert_eq!(f.jobs[1].steps, ExperimentConfig::default().steps);
+        assert_eq!(f.faults.len(), 1);
+        assert_eq!(f.faults[0].device, 1);
+        assert!((f.faults[0].at_secs - 30.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_cli_form_parses() {
+        let f = FaultSpec::parse_cli("3:30:0.6").unwrap();
+        assert_eq!(f.device, 3);
+        assert!((f.at_secs - 30.0).abs() < 1e-12);
+        assert!((f.factor - 0.6).abs() < 1e-12);
+        assert!(FaultSpec::parse_cli("3:30").is_err());
+        assert!(FaultSpec::parse_cli("a:b:c").is_err());
+    }
+
+    #[test]
+    fn default_mix_spreads_devices_and_grants_one_host() {
+        let f = FleetExperimentConfig::default_mix(3, 8);
+        assert_eq!(f.jobs.len(), 3);
+        assert_eq!(f.jobs.iter().map(|j| j.num_csds).sum::<usize>(), 8);
+        assert_eq!(f.jobs.iter().filter(|j| j.include_host).count(), 1);
+        assert!(f.jobs[0].include_host);
     }
 }

@@ -1,0 +1,609 @@
+//! The fleet coordinator: an event-driven multi-job scheduler over the
+//! shared CSD pool (DESIGN.md §5).
+//!
+//! A [`Fleet`] owns every Newport in the chassis plus the host. Jobs
+//! ([`ExperimentConfig`]s) enter a FIFO admission queue with backfill:
+//! the head waits for its device group (and the host, if requested —
+//! the host is granted to at most one job at a time), while smaller
+//! jobs behind it may start on leftover devices. Admission runs the
+//! full single-job pipeline per group:
+//!
+//! 1. carve a device group from the pool,
+//! 2. Algorithm 1 tuning at the group's slowest health
+//!    ([`crate::coordinator::tune`]),
+//! 3. Eq. 1 balancing ([`super::group::provision_placement`]),
+//! 4. per-job synchronous steps on the shared [`EventQueue`], each
+//!    step's ring allreduce confined to the job's own domain
+//!    ([`ring_time_shared`] — co-tenant rings share the host root's
+//!    packetization budget).
+//!
+//! **Dynamic rebalancing:** a `Degrade` event multiplies one device's
+//! health. The owning job abandons its in-flight step, re-runs
+//! Algorithm 1 at the new slowest health and re-balances its placement
+//! — co-tenant jobs are never re-tuned or rescheduled. Their contention
+//! price is sampled per step from the set of active ring domains, so a
+//! co-tenant's metrics are bit-identical with or without the fault as
+//! long as that set is unchanged at its own step boundaries (the
+//! degraded job slowing down but staying active — the scenario
+//! `integration_fleet` asserts); a fault that shifts a completion
+//! across a co-tenant's step boundary legitimately reprices that step.
+//!
+//! Everything is deterministic: same submissions + same fault schedule
+//! → identical reports.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{ensure, Result};
+
+use crate::allreduce::ring_time_shared;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{tune, TuneConfig};
+use crate::csd::CsdConfig;
+use crate::metrics::RunningStat;
+use crate::perfmodel::{Device, PerfModel};
+use crate::power::{EnergyMeter, PowerConfig};
+use crate::sim::{EventQueue, SimTime};
+use crate::tunnel::{NodeId, Tunnel, TunnelConfig};
+
+use super::group::provision_placement;
+use super::job::{Job, JobId, JobReport, JobState, PendingStep};
+use super::pool::DevicePool;
+
+/// Logical pages preloaded per device; training reads cycle over them
+/// (mirrors the single-job scheduler's staging model).
+const PRELOADED_PAGES: u32 = 64;
+
+/// Fleet-level knobs (per-job shape comes from each job's
+/// [`ExperimentConfig`]).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Devices in the shared pool (chassis bays holding Newports).
+    pub total_csds: usize,
+    /// Stage training batches through the CSD flash substrate (energy
+    /// accounting fidelity) vs pure compute+sync timing.
+    pub stage_io: bool,
+    /// Bytes of one staged image on flash.
+    pub image_bytes: usize,
+    pub tune: TuneConfig,
+    pub power: PowerConfig,
+    pub tunnel: TunnelConfig,
+    pub csd: CsdConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            total_csds: 24,
+            stage_io: true,
+            image_bytes: 12 * 1024,
+            tune: TuneConfig::default(),
+            power: PowerConfig::default(),
+            tunnel: TunnelConfig::default(),
+            csd: CsdConfig::default(),
+        }
+    }
+}
+
+/// Events driving the fleet's discrete-event loop.
+#[derive(Debug, Clone, Copy)]
+enum FleetEvent {
+    /// One synchronous step of `job` (compute + ring sync) completed.
+    StepDone { job: JobId },
+    /// Device fault: multiply `device`'s health by `factor`.
+    Degrade { device: usize, factor: f64 },
+}
+
+/// A submitted-but-not-yet-admitted job.
+struct QueuedJob {
+    id: JobId,
+    spec: ExperimentConfig,
+    submitted_at: SimTime,
+}
+
+/// Fleet-wide summary across all jobs.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Per-job reports, in submission (id) order.
+    pub jobs: Vec<JobReport>,
+    /// Time the last job finished.
+    pub makespan: SimTime,
+    pub total_images: usize,
+    /// Aggregate fleet throughput over the makespan, img/s.
+    pub aggregate_ips: f64,
+    /// Sum of per-job energy (devices + host-active + link + flash).
+    pub jobs_energy_j: f64,
+    /// Shared-chassis energy not attributable to any job (base, idle
+    /// bays, idle host).
+    pub overhead_energy_j: f64,
+    pub total_energy_j: f64,
+    /// Total tunnel traffic across all ring domains.
+    pub link_bytes: u64,
+    /// Queue-wait statistics across jobs (seconds).
+    pub queue_wait: RunningStat,
+    /// Total degradation-driven re-tunes across the fleet.
+    pub retunes: usize,
+}
+
+/// The multi-job coordinator.
+pub struct Fleet {
+    cfg: FleetConfig,
+    pool: DevicePool,
+    tunnel: Tunnel,
+    queue: VecDeque<QueuedJob>,
+    jobs: BTreeMap<JobId, Job>,
+    events: EventQueue<FleetEvent>,
+    now: SimTime,
+    host_held_by: Option<JobId>,
+    next_id: u64,
+    overhead: EnergyMeter,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetConfig) -> Self {
+        Self {
+            pool: DevicePool::new(cfg.total_csds, &cfg.csd),
+            tunnel: Tunnel::new(cfg.total_csds, cfg.tunnel.clone()),
+            queue: VecDeque::new(),
+            jobs: BTreeMap::new(),
+            events: EventQueue::new(),
+            now: SimTime::ZERO,
+            host_held_by: None,
+            next_id: 0,
+            overhead: EnergyMeter::new(),
+            cfg,
+        }
+    }
+
+    /// Enqueue a job. Demands come from the spec: `num_csds` devices,
+    /// plus the host iff `include_host`.
+    pub fn submit(&mut self, spec: ExperimentConfig) -> JobId {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        self.queue.push_back(QueuedJob { id, spec, submitted_at: self.now });
+        id
+    }
+
+    /// Schedule a device fault: at simulated time `at`, multiply
+    /// `device`'s health by `factor` (0.6 = thermal throttle to 60%).
+    pub fn inject_degradation(&mut self, at: SimTime, device: usize, factor: f64) {
+        self.events.schedule(at, FleetEvent::Degrade { device, factor });
+    }
+
+    /// Run every submitted job to completion; returns the fleet report.
+    pub fn run(&mut self) -> Result<FleetReport> {
+        for q in &self.queue {
+            ensure!(
+                q.spec.num_csds <= self.pool.len(),
+                "{} demands {} CSDs but the pool has {}",
+                q.id,
+                q.spec.num_csds,
+                self.pool.len()
+            );
+        }
+        self.try_admit()?;
+        while let Some(ev) = self.events.pop() {
+            if let FleetEvent::Degrade { device, factor } = ev.payload {
+                // A fault landing after the last job finished changes
+                // pool health but must not stretch the fleet timeline
+                // (makespan/overhead end with the last job).
+                let idle = self.queue.is_empty()
+                    && self.jobs.values().all(|j| j.state == JobState::Completed);
+                if idle {
+                    self.pool.degrade(device, factor)?;
+                    continue;
+                }
+            }
+            self.advance_overhead(ev.at);
+            self.now = ev.at;
+            match ev.payload {
+                FleetEvent::StepDone { job } => self.on_step_done(job)?,
+                FleetEvent::Degrade { device, factor } => self.on_degrade(device, factor)?,
+            }
+        }
+        ensure!(
+            self.queue.is_empty(),
+            "{} job(s) were never admitted (pool too small for their combined demands)",
+            self.queue.len()
+        );
+        ensure!(
+            self.jobs.values().all(|j| j.state == JobState::Completed),
+            "internal: event queue drained with jobs still running"
+        );
+        Ok(self.report())
+    }
+
+    fn report(&self) -> FleetReport {
+        let jobs: Vec<JobReport> = self.jobs.values().map(Job::report).collect();
+        let total_images: usize = jobs.iter().map(|j| j.images).sum();
+        let jobs_energy_j: f64 = jobs.iter().map(|j| j.energy_j).sum();
+        let overhead_energy_j = self.overhead.total_joules();
+        let mut queue_wait = RunningStat::new();
+        for j in &jobs {
+            queue_wait.add(j.queue_wait.as_secs_f64());
+        }
+        let secs = self.now.as_secs_f64();
+        FleetReport {
+            makespan: self.now,
+            total_images,
+            aggregate_ips: if secs > 0.0 { total_images as f64 / secs } else { 0.0 },
+            jobs_energy_j,
+            overhead_energy_j,
+            total_energy_j: jobs_energy_j + overhead_energy_j,
+            link_bytes: self.tunnel.stats().bytes,
+            queue_wait,
+            retunes: jobs.iter().map(|j| j.retunes).sum(),
+            jobs,
+        }
+    }
+
+    /// Integrate shared-chassis power (base, idle bays, idle host) over
+    /// the interval between events — the piece of Table II's meter no
+    /// single job owns.
+    fn advance_overhead(&mut self, to: SimTime) {
+        if to <= self.now {
+            return;
+        }
+        let dt = to - self.now;
+        let pw = &self.cfg.power;
+        self.overhead.add_power("base", pw.base_w, dt);
+        self.overhead
+            .add_power("idle_storage", self.pool.free_count() as f64 * pw.storage_idle_w, dt);
+        if self.host_held_by.is_none() {
+            self.overhead.add_power("host_idle", pw.host_idle_w, dt);
+        }
+    }
+
+    /// FIFO admission with backfill: admit every queued job whose
+    /// device-group (and host) demand fits the currently free pool.
+    /// First steps are scheduled only after the whole admission pass,
+    /// so jobs admitted at the same instant see the same co-tenant
+    /// count (symmetric contention pricing).
+    fn try_admit(&mut self) -> Result<()> {
+        let mut admitted = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let fits = {
+                let q = &self.queue[i];
+                (!q.spec.include_host || self.host_held_by.is_none())
+                    && self.pool.free_count() >= q.spec.num_csds
+            };
+            if !fits {
+                i += 1;
+                continue;
+            }
+            let q = self.queue.remove(i).expect("index in bounds");
+            admitted.push(self.admit(q)?);
+        }
+        for id in admitted {
+            self.schedule_step(id)?;
+        }
+        Ok(())
+    }
+
+    /// Algorithm 1 at the group's slowest health. Host-only jobs keep
+    /// their configured batch (the paper's 0-CSD baseline has nothing
+    /// to equalize against).
+    fn tune_group(
+        &self,
+        spec: &ExperimentConfig,
+        group_health: f64,
+    ) -> Result<(usize, usize)> {
+        if spec.num_csds == 0 {
+            return Ok((spec.bs_csd.max(1), spec.bs_host.max(1)));
+        }
+        let mut model = PerfModel { newport_scale: group_health, host_scale: 1.0 };
+        let r = tune(&mut model, &spec.network, &self.cfg.tune)?;
+        let bs_host = if spec.include_host { r.host_bs } else { spec.bs_host.max(1) };
+        Ok((r.newport_bs, bs_host))
+    }
+
+    fn admit(&mut self, q: QueuedJob) -> Result<JobId> {
+        let devices = self
+            .pool
+            .carve(q.spec.num_csds, q.id)
+            .expect("try_admit checked the free count");
+        let holds_host = q.spec.include_host;
+        if holds_host {
+            self.host_held_by = Some(q.id);
+        }
+        let group_health = self.pool.group_health(&devices);
+        let (bs_csd, bs_host) = self.tune_group(&q.spec, group_health)?;
+        let (_dataset, placement) = provision_placement(&q.spec, bs_csd, bs_host)?;
+        if self.cfg.stage_io {
+            for &d in &devices {
+                self.pool.preload(d, PRELOADED_PAGES, self.now)?;
+            }
+        }
+        let mut job = Job {
+            id: q.id,
+            state: JobState::Running,
+            devices,
+            holds_host,
+            bs_csd,
+            bs_host,
+            steps_per_epoch: placement.steps_per_epoch,
+            images_target: 0,
+            images_done: 0,
+            steps_done: 0,
+            retunes: 0,
+            submitted_at: q.submitted_at,
+            admitted_at: self.now,
+            finished_at: SimTime::ZERO,
+            sync_time: SimTime::ZERO,
+            link_bytes: 0,
+            meter: EnergyMeter::new(),
+            pending: None,
+            data_cursor: 0,
+            spec: q.spec,
+        };
+        job.images_target = job.spec.steps.max(1) * job.images_per_step();
+        let id = job.id;
+        self.jobs.insert(id, job);
+        Ok(id)
+    }
+
+    /// Ring domains currently active (incl. the caller's) — co-tenants
+    /// sharing the host root's packetization budget.
+    fn running_ring_jobs(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| {
+                j.state == JobState::Running
+                    && j.devices.len() + usize::from(j.holds_host) > 1
+            })
+            .count()
+            .max(1)
+    }
+
+    /// Book one synchronous step for `id` starting at `self.now`:
+    /// per-device staging + compute (health-scaled), host compute if
+    /// held, then the job's own ring-allreduce domain.
+    fn schedule_step(&mut self, id: JobId) -> Result<()> {
+        let (devices, holds_host, bs_csd, bs_host, network, data_cursor, images) = {
+            let j = &self.jobs[&id];
+            (
+                j.devices.clone(),
+                j.holds_host,
+                j.bs_csd,
+                j.bs_host,
+                j.spec.network.clone(),
+                j.data_cursor,
+                j.images_per_step(),
+            )
+        };
+        let sharers = self.running_ring_jobs();
+        let sync_bytes = PerfModel::default().sync_bytes(&network)?;
+        let now = self.now;
+        let mut compute_done = now;
+        let mut flash_reads = 0u64;
+        for &d in &devices {
+            let health = self.pool.health(d);
+            let compute = PerfModel { newport_scale: health, host_scale: 1.0 }
+                .step_time(Device::NewportIsp, &network, bs_csd)?;
+            let done = if self.cfg.stage_io {
+                let ppi = self
+                    .cfg
+                    .image_bytes
+                    .div_ceil(self.pool.device(d).page_bytes())
+                    .max(1);
+                let lpns: Vec<u32> = (0..(bs_csd * ppi) as u32)
+                    .map(|i| (data_cursor + i) % PRELOADED_PAGES)
+                    .collect();
+                flash_reads += lpns.len() as u64;
+                self.pool.device_mut(d).isp_train_step(
+                    &lpns,
+                    compute,
+                    sync_bytes as u64,
+                    self.cfg.image_bytes as u64 * 4, // activations ≈ 4x input
+                    bs_csd,
+                    now,
+                )?
+            } else {
+                now + compute
+            };
+            compute_done = compute_done.max(done);
+        }
+        if holds_host {
+            let host_compute =
+                PerfModel::default().step_time(Device::HostXeon, &network, bs_host)?;
+            compute_done = compute_done.max(now + host_compute);
+        }
+        let ranks: Vec<NodeId> = holds_host
+            .then_some(NodeId::Host)
+            .into_iter()
+            .chain(devices.iter().map(|&d| NodeId::Csd(d)))
+            .collect();
+        let link_before = self.tunnel.stats().bytes;
+        let sync_end = if ranks.len() > 1 {
+            ring_time_shared(&mut self.tunnel, &ranks, sync_bytes, compute_done, sharers)
+        } else {
+            compute_done
+        };
+        let link_bytes = self.tunnel.stats().bytes - link_before;
+        let event = self.events.schedule(sync_end, FleetEvent::StepDone { job: id });
+        let j = self.jobs.get_mut(&id).expect("job exists");
+        j.data_cursor = j.data_cursor.wrapping_add(37);
+        j.pending = Some(PendingStep {
+            event,
+            start: now,
+            end: sync_end,
+            sync: sync_end - compute_done,
+            link_bytes,
+            flash_reads,
+            images,
+        });
+        Ok(())
+    }
+
+    fn on_step_done(&mut self, id: JobId) -> Result<()> {
+        let finished = {
+            let pw = &self.cfg.power;
+            let now = self.now;
+            let j = self.jobs.get_mut(&id).expect("StepDone for unknown job");
+            let p = j.pending.take().expect("StepDone without a pending step");
+            let dt = p.end - p.start;
+            j.steps_done += 1;
+            j.images_done += p.images;
+            j.sync_time += p.sync;
+            j.link_bytes += p.link_bytes;
+            j.meter.add_power(
+                "newport",
+                j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
+                dt,
+            );
+            if j.holds_host {
+                j.meter.add_power("host", pw.host_active_w, dt);
+            }
+            j.meter.add_energy("link", p.link_bytes as f64 * pw.link_pj_per_byte * 1e-12);
+            j.meter.add_energy("flash", p.flash_reads as f64 * pw.flash_read_uj * 1e-6);
+            if j.images_done >= j.images_target {
+                j.state = JobState::Completed;
+                j.finished_at = now;
+                true
+            } else {
+                false
+            }
+        };
+        if finished {
+            self.pool.release(id);
+            if self.host_held_by == Some(id) {
+                self.host_held_by = None;
+            }
+            self.try_admit()
+        } else {
+            self.schedule_step(id)
+        }
+    }
+
+    /// Device fault: degrade health; if a job holds the device, abandon
+    /// its in-flight step (its compute is lost — no images/steps are
+    /// credited), re-tune at the new slowest health and re-balance.
+    /// Co-tenant jobs are not touched. The abandoned step's staged
+    /// flash pages and ring traffic were already booked on the device
+    /// and fabric ledgers, so their bytes and energy stay attributed to
+    /// the job — keeping fleet totals equal to the per-job sums even
+    /// across faults.
+    fn on_degrade(&mut self, device: usize, factor: f64) -> Result<()> {
+        self.pool.degrade(device, factor)?;
+        let Some(id) = self.pool.assigned_job(device) else {
+            return Ok(()); // unassigned bay: health change only
+        };
+        let cancelled = {
+            let pw = &self.cfg.power;
+            let now = self.now;
+            let j = self.jobs.get_mut(&id).expect("assigned job exists");
+            j.retunes += 1;
+            j.pending.take().map(|p| {
+                let dt = now.saturating_sub(p.start);
+                j.meter.add_power(
+                    "newport",
+                    j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
+                    dt,
+                );
+                if j.holds_host {
+                    j.meter.add_power("host", pw.host_active_w, dt);
+                }
+                j.link_bytes += p.link_bytes;
+                j.meter.add_energy("link", p.link_bytes as f64 * pw.link_pj_per_byte * 1e-12);
+                j.meter.add_energy("flash", p.flash_reads as f64 * pw.flash_read_uj * 1e-6);
+                p.event
+            })
+        };
+        if let Some(ev) = cancelled {
+            self.events.cancel(ev);
+        }
+        let (devices, spec) = {
+            let j = &self.jobs[&id];
+            (j.devices.clone(), j.spec.clone())
+        };
+        let health = self.pool.group_health(&devices);
+        let (bs_csd, bs_host) = self.tune_group(&spec, health)?;
+        let (_dataset, placement) = provision_placement(&spec, bs_csd, bs_host)?;
+        {
+            let j = self.jobs.get_mut(&id).expect("assigned job exists");
+            j.bs_csd = bs_csd;
+            if j.holds_host {
+                j.bs_host = bs_host;
+            }
+            j.steps_per_epoch = placement.steps_per_epoch;
+        }
+        self.schedule_step(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(network: &str, num_csds: usize, include_host: bool, steps: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            network: network.into(),
+            num_csds,
+            include_host,
+            steps,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_job_fleet_completes_with_tuned_batches() {
+        let mut fleet = Fleet::new(FleetConfig {
+            total_csds: 3,
+            stage_io: false,
+            ..Default::default()
+        });
+        let id = fleet.submit(job("mobilenet_v2", 3, true, 4));
+        let r = fleet.run().unwrap();
+        assert_eq!(r.jobs.len(), 1);
+        let j = &r.jobs[0];
+        assert_eq!(j.id, id);
+        // Algorithm 1 ran at admission: paper Table I batches.
+        assert_eq!(j.bs_csd, 25);
+        assert!((j.bs_host as i64 - 315).unsigned_abs() <= 16, "host bs {}", j.bs_host);
+        assert_eq!(j.steps_done, 4);
+        assert_eq!(j.images, r.total_images);
+        assert!(j.images_per_sec > 0.0);
+        assert!(j.sync_fraction > 0.0 && j.sync_fraction < 1.0);
+        assert_eq!(r.retunes, 0);
+    }
+
+    #[test]
+    fn host_only_job_runs_without_a_ring() {
+        let mut fleet = Fleet::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        fleet.submit(job("mobilenet_v2", 0, true, 3));
+        let r = fleet.run().unwrap();
+        assert_eq!(r.jobs[0].sync_fraction, 0.0);
+        assert_eq!(r.link_bytes, 0);
+        assert_eq!(r.jobs[0].images, 3 * ExperimentConfig::default().bs_host);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected() {
+        let mut fleet = Fleet::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        fleet.submit(job("mobilenet_v2", 5, false, 2));
+        assert!(fleet.run().is_err());
+    }
+
+    #[test]
+    fn degrading_an_idle_bay_touches_no_job() {
+        let mut fleet = Fleet::new(FleetConfig {
+            total_csds: 4,
+            stage_io: false,
+            ..Default::default()
+        });
+        fleet.submit(job("mobilenet_v2", 2, true, 3));
+        // Device 3 is never carved (job takes 0,1).
+        fleet.inject_degradation(SimTime::secs(1), 3, 0.5);
+        let r = fleet.run().unwrap();
+        assert_eq!(r.retunes, 0);
+        assert_eq!(r.jobs[0].retunes, 0);
+    }
+}

@@ -1,0 +1,101 @@
+//! One provisioned fleet group: the per-job wiring every job needs —
+//! dataset generation and Eq. 1 balancing, plus (for real execution)
+//! artifact validation and the PJRT trainer.
+//!
+//! [`Cluster`](crate::cluster::Cluster) is the single-job special case:
+//! it wraps exactly one [`JobGroup`]. The modeled [`Fleet`](super::Fleet)
+//! provisions many groups over the shared pool through the same
+//! [`provision_placement`] path, so both execution modes share one
+//! Eq. 1 implementation (DESIGN.md §5).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{balance, Placement, StannisTrainer, TrainConfig};
+use crate::data::Dataset;
+use crate::runtime::Engine;
+
+/// Dataset + Eq. 1 placement for one job, at explicit batch sizes
+/// (which Algorithm 1 may have overridden relative to the config).
+pub fn provision_placement(
+    cfg: &ExperimentConfig,
+    bs_csd: usize,
+    bs_host: usize,
+) -> Result<(Dataset, Placement)> {
+    let dataset = Dataset::new(cfg.dataset())?;
+    let placement = balance(&dataset, cfg.num_csds, bs_csd, bs_host, cfg.include_host)?;
+    Ok((dataset, placement))
+}
+
+/// A fully wired real-execution group (engine + dataset + placement).
+pub struct JobGroup {
+    pub engine: Arc<Engine>,
+    pub dataset: Dataset,
+    pub placement: Placement,
+    pub cfg: ExperimentConfig,
+}
+
+impl JobGroup {
+    /// Provision from config: validate the network + batch artifacts,
+    /// generate the dataset, balance the shards (Eq. 1).
+    pub fn provision(cfg: ExperimentConfig, engine: Arc<Engine>) -> Result<Self> {
+        let net = engine.network(&cfg.network)?;
+        anyhow::ensure!(
+            net.train_artifact(cfg.bs_csd).is_some(),
+            "network {} has no train artifact for bs_csd={} (have {:?})",
+            cfg.network,
+            cfg.bs_csd,
+            net.train_batch_sizes
+        );
+        let (dataset, placement) = provision_placement(&cfg, cfg.bs_csd, cfg.bs_host)?;
+        Ok(Self { engine, dataset, placement, cfg })
+    }
+
+    /// Construct the real-execution trainer for this group.
+    pub fn trainer(&self) -> Result<StannisTrainer> {
+        StannisTrainer::new(
+            self.engine.clone(),
+            self.dataset.clone(),
+            &self.placement,
+            TrainConfig {
+                network: self.cfg.network.clone(),
+                num_csds: self.cfg.num_csds,
+                include_host: self.cfg.include_host,
+                bs_csd: self.cfg.bs_csd,
+                bs_host: self.cfg.bs_host,
+                steps: self.cfg.steps,
+                sgd: self.cfg.sgd(),
+                seed: self.cfg.seed as i32,
+                consistency_every: 10,
+                weighted_grads: true,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provision_placement_respects_eq1() {
+        let cfg = ExperimentConfig {
+            num_csds: 2,
+            public_images: 10_000,
+            private_per_csd: 500,
+            ..Default::default()
+        };
+        let (_, p) = provision_placement(&cfg, 25, 315).unwrap();
+        // dataset_card = 500, bs_card = 25 -> 20 steps; host = 20*315.
+        assert_eq!(p.steps_per_epoch, 20);
+        assert_eq!(p.host_ids.len(), 20 * 315);
+    }
+
+    #[test]
+    fn provision_placement_rejects_zero_batch() {
+        let cfg = ExperimentConfig::default();
+        assert!(provision_placement(&cfg, 0, 16).is_err());
+    }
+}

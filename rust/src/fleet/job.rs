@@ -1,0 +1,144 @@
+//! Job identity, lifecycle state and the per-job report the fleet
+//! emits (DESIGN.md §5).
+
+use crate::config::ExperimentConfig;
+use crate::power::EnergyMeter;
+use crate::sim::SimTime;
+
+/// Stable identifier of one submitted job, assigned at `submit` time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+/// Lifecycle of a job inside the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the admission queue for a device group (and the
+    /// host, if requested).
+    Queued,
+    /// Admitted: device group carved, batches tuned, placement
+    /// balanced, steps in flight.
+    Running,
+    /// All target images processed; devices released.
+    Completed,
+}
+
+/// One step currently in flight for a job: everything needed to commit
+/// (on completion) or abandon (on a mid-step degradation) its effects.
+#[derive(Debug, Clone)]
+pub(crate) struct PendingStep {
+    /// Event id of the scheduled `StepDone`, for cancellation.
+    pub event: u64,
+    pub start: SimTime,
+    pub end: SimTime,
+    /// Share of the step spent in the ring allreduce barrier.
+    pub sync: SimTime,
+    /// Tunnel bytes this step's ring moved (attributed on completion).
+    pub link_bytes: u64,
+    /// Flash pages staged on the group's devices this step.
+    pub flash_reads: u64,
+    /// Images the step trains across the whole group.
+    pub images: usize,
+}
+
+/// Internal bookkeeping for one admitted job.
+#[derive(Debug)]
+pub(crate) struct Job {
+    pub id: JobId,
+    pub spec: ExperimentConfig,
+    pub state: JobState,
+    /// Global pool indices of the carved device group.
+    pub devices: Vec<usize>,
+    pub holds_host: bool,
+    /// Batch sizes currently in force (Algorithm 1 output; re-tuned on
+    /// degradation).
+    pub bs_csd: usize,
+    pub bs_host: usize,
+    /// Eq. 1 steps-per-epoch of the current placement.
+    pub steps_per_epoch: usize,
+    /// Total images the job must train (fixed at admission).
+    pub images_target: usize,
+    pub images_done: usize,
+    pub steps_done: usize,
+    pub retunes: usize,
+    pub submitted_at: SimTime,
+    pub admitted_at: SimTime,
+    pub finished_at: SimTime,
+    pub sync_time: SimTime,
+    pub link_bytes: u64,
+    pub meter: EnergyMeter,
+    pub pending: Option<PendingStep>,
+    /// Rolling offset into the preloaded flash pages (mirrors the
+    /// single-job scheduler's data cursor).
+    pub data_cursor: u32,
+}
+
+impl Job {
+    /// Images one synchronous step trains across the group.
+    pub fn images_per_step(&self) -> usize {
+        self.devices.len() * self.bs_csd + if self.holds_host { self.bs_host } else { 0 }
+    }
+}
+
+/// Public per-job summary in the fleet report.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: JobId,
+    pub network: String,
+    pub devices: Vec<usize>,
+    pub held_host: bool,
+    pub bs_csd: usize,
+    pub bs_host: usize,
+    pub steps_done: usize,
+    pub steps_per_epoch: usize,
+    pub images: usize,
+    pub submitted_at: SimTime,
+    pub admitted_at: SimTime,
+    pub finished_at: SimTime,
+    /// Time spent waiting in the admission queue.
+    pub queue_wait: SimTime,
+    /// Wall time from admission to completion.
+    pub elapsed: SimTime,
+    pub images_per_sec: f64,
+    pub sync_fraction: f64,
+    pub energy_j: f64,
+    pub j_per_image: f64,
+    pub link_bytes: u64,
+    /// How many times a device degradation forced a re-tune/re-balance.
+    pub retunes: usize,
+}
+
+impl Job {
+    pub(crate) fn report(&self) -> JobReport {
+        let elapsed = self.finished_at.saturating_sub(self.admitted_at);
+        let secs = elapsed.as_secs_f64();
+        let energy = self.meter.total_joules();
+        JobReport {
+            id: self.id,
+            network: self.spec.network.clone(),
+            devices: self.devices.clone(),
+            held_host: self.holds_host,
+            bs_csd: self.bs_csd,
+            bs_host: self.bs_host,
+            steps_done: self.steps_done,
+            steps_per_epoch: self.steps_per_epoch,
+            images: self.images_done,
+            submitted_at: self.submitted_at,
+            admitted_at: self.admitted_at,
+            finished_at: self.finished_at,
+            queue_wait: self.admitted_at.saturating_sub(self.submitted_at),
+            elapsed,
+            images_per_sec: if secs > 0.0 { self.images_done as f64 / secs } else { 0.0 },
+            sync_fraction: if secs > 0.0 { self.sync_time.as_secs_f64() / secs } else { 0.0 },
+            energy_j: energy,
+            j_per_image: if self.images_done > 0 { energy / self.images_done as f64 } else { 0.0 },
+            link_bytes: self.link_bytes,
+            retunes: self.retunes,
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Fleet-scale multi-job coordination (DESIGN.md §5).
+//!
+//! STANNIS (DAC'20) schedules *one* training job across a host and a
+//! pool of Newport CSDs. The deployment target its follow-up line of
+//! work describes is a shared chassis serving many concurrent
+//! workloads — different networks, batch ladders and privacy
+//! placements time-sharing one device fleet. This module turns the
+//! single-experiment pipeline into that system:
+//!
+//! * [`pool`] — the shared [`DevicePool`]: every Newport in the
+//!   chassis, with per-device health and job assignment.
+//! * [`group`] — per-job provisioning ([`JobGroup`], Eq. 1 balancing);
+//!   [`crate::cluster::Cluster`] is the single-job special case.
+//! * [`job`] — job identity, lifecycle and per-job reports.
+//! * [`coordinator`] — the [`Fleet`] itself: FIFO-with-backfill
+//!   admission, per-group Algorithm 1 tuning, concurrent synchronous
+//!   steps on the shared discrete-event loop with per-job
+//!   ring-allreduce domains, and degradation-driven re-tuning that
+//!   never disturbs co-tenants.
+
+pub mod coordinator;
+pub mod group;
+pub mod job;
+pub mod pool;
+
+pub use coordinator::{Fleet, FleetConfig, FleetReport};
+pub use group::{provision_placement, JobGroup};
+pub use job::{JobId, JobReport, JobState};
+pub use pool::{DevicePool, FleetDevice};

@@ -1,0 +1,182 @@
+//! The fleet's shared device pool: every Newport CSD in the chassis,
+//! with per-device health and job assignment (DESIGN.md §5).
+//!
+//! Health is a multiplicative throughput scale (1.0 = calibrated
+//! speed); a thermal throttle or flash wear event degrades it via
+//! [`DevicePool::degrade`], which is the same fault axis
+//! `PerfModel::newport_scale` models for a whole cluster — here it is
+//! tracked per device so one sick drive only slows its own job.
+
+use anyhow::{ensure, Result};
+
+use crate::csd::{CsdConfig, NewportCsd};
+use crate::sim::SimTime;
+
+use super::job::JobId;
+
+/// Floor on degraded health: a device never models as fully dead here
+/// (worker dropout is a different fault path, see `integration_faults`).
+const MIN_HEALTH: f64 = 0.01;
+
+/// One bay of the pool.
+pub struct FleetDevice {
+    pub csd: NewportCsd,
+    /// Relative throughput (1.0 = calibrated Newport speed).
+    pub health: f64,
+    /// The job currently holding this device, if any.
+    pub assigned: Option<JobId>,
+    preloaded: bool,
+}
+
+/// All CSDs of the chassis, carved into per-job groups.
+pub struct DevicePool {
+    devices: Vec<FleetDevice>,
+}
+
+impl DevicePool {
+    pub fn new(total: usize, cfg: &CsdConfig) -> Self {
+        let devices = (0..total)
+            .map(|i| FleetDevice {
+                csd: NewportCsd::new(i, cfg.clone(), 0xF1EE7 + i as u64),
+                health: 1.0,
+                assigned: None,
+                preloaded: false,
+            })
+            .collect();
+        Self { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.assigned.is_none()).count()
+    }
+
+    /// Carve `n` free devices for `job` (lowest indices first, so
+    /// admission is deterministic). Returns `None` — without mutating
+    /// anything — if fewer than `n` are free.
+    pub fn carve(&mut self, n: usize, job: JobId) -> Option<Vec<usize>> {
+        let free: Vec<usize> = self
+            .devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.assigned.is_none())
+            .map(|(i, _)| i)
+            .take(n)
+            .collect();
+        if free.len() < n {
+            return None;
+        }
+        for &i in &free {
+            self.devices[i].assigned = Some(job);
+        }
+        Some(free)
+    }
+
+    /// Release every device held by `job`.
+    pub fn release(&mut self, job: JobId) {
+        for d in &mut self.devices {
+            if d.assigned == Some(job) {
+                d.assigned = None;
+            }
+        }
+    }
+
+    pub fn health(&self, device: usize) -> f64 {
+        self.devices[device].health
+    }
+
+    /// Multiply a device's health by `factor` (thermal throttle, wear).
+    pub fn degrade(&mut self, device: usize, factor: f64) -> Result<()> {
+        ensure!(device < self.devices.len(), "no device {device} in the pool");
+        ensure!(factor > 0.0 && factor.is_finite(), "bad degradation factor {factor}");
+        let d = &mut self.devices[device];
+        d.health = (d.health * factor).max(MIN_HEALTH);
+        Ok(())
+    }
+
+    pub fn assigned_job(&self, device: usize) -> Option<JobId> {
+        self.devices.get(device).and_then(|d| d.assigned)
+    }
+
+    /// The slowest health in a group — the scale the whole group's
+    /// synchronous step is gated by.
+    pub fn group_health(&self, devices: &[usize]) -> f64 {
+        devices
+            .iter()
+            .map(|&d| self.devices[d].health)
+            .fold(1.0, f64::min)
+    }
+
+    pub fn device(&self, device: usize) -> &NewportCsd {
+        &self.devices[device].csd
+    }
+
+    pub fn device_mut(&mut self, device: usize) -> &mut NewportCsd {
+        &mut self.devices[device].csd
+    }
+
+    /// Stage `pages` logical pages on a device once, so training reads
+    /// hit mapped flash (mirrors `Scheduler::preload_data`).
+    pub fn preload(&mut self, device: usize, pages: u32, now: SimTime) -> Result<()> {
+        let d = &mut self.devices[device];
+        if d.preloaded {
+            return Ok(());
+        }
+        for lpn in 0..pages {
+            d.csd.write_page(lpn, lpn as u64, now)?;
+        }
+        d.preloaded = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carve_is_deterministic_and_atomic() {
+        let mut p = DevicePool::new(4, &CsdConfig::default());
+        let a = p.carve(3, JobId(0)).unwrap();
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(p.free_count(), 1);
+        // Not enough left: must fail without grabbing the last device.
+        assert!(p.carve(2, JobId(1)).is_none());
+        assert_eq!(p.free_count(), 1);
+        let b = p.carve(1, JobId(1)).unwrap();
+        assert_eq!(b, vec![3]);
+        p.release(JobId(0));
+        assert_eq!(p.free_count(), 3);
+        assert_eq!(p.assigned_job(3), Some(JobId(1)));
+        assert_eq!(p.assigned_job(0), None);
+    }
+
+    #[test]
+    fn degrade_compounds_and_floors() {
+        let mut p = DevicePool::new(2, &CsdConfig::default());
+        p.degrade(0, 0.5).unwrap();
+        p.degrade(0, 0.5).unwrap();
+        assert!((p.health(0) - 0.25).abs() < 1e-12);
+        assert_eq!(p.health(1), 1.0);
+        p.degrade(0, 1e-9).unwrap();
+        assert!(p.health(0) >= MIN_HEALTH);
+        assert!(p.degrade(5, 0.5).is_err());
+        assert!(p.degrade(1, 0.0).is_err());
+    }
+
+    #[test]
+    fn group_health_is_min() {
+        let mut p = DevicePool::new(3, &CsdConfig::default());
+        p.degrade(1, 0.6).unwrap();
+        assert!((p.group_health(&[0, 1, 2]) - 0.6).abs() < 1e-12);
+        assert_eq!(p.group_health(&[0, 2]), 1.0);
+        assert_eq!(p.group_health(&[]), 1.0);
+    }
+}

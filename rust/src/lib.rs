@@ -9,13 +9,19 @@
 //!   placement, ring-allreduce gradient synchronization, and the full
 //!   Newport CSD substrate (NAND flash, FTL, ECC, NVMe, ISP engine,
 //!   TCP/IP-over-PCIe tunnel, OCFS2-style metadata sync) as a
-//!   discrete-event simulation.
+//!   discrete-event simulation. The [`fleet`] subsystem scales this to
+//!   a shared chassis: a multi-job coordinator that admits many
+//!   experiments onto one device pool, tunes and balances each job's
+//!   group independently, runs them concurrently with per-job
+//!   ring-allreduce domains, and re-tunes a job in place when one of
+//!   its devices degrades mid-run.
 //! * **L2/L1 (build-time Python)** — JAX models + Pallas kernels,
 //!   AOT-lowered to HLO text artifacts executed here via PJRT
 //!   ([`runtime`]). Python never runs on the training path.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment
-//! index mapping each paper table/figure to a module and bench.
+//! See `DESIGN.md` for the system inventory (§2), the fleet
+//! architecture (§5) and the per-experiment index mapping each paper
+//! table/figure to a module and bench (§7).
 
 pub mod allreduce;
 pub mod cluster;
@@ -23,6 +29,7 @@ pub mod config;
 pub mod coordinator;
 pub mod csd;
 pub mod data;
+pub mod fleet;
 pub mod fsync;
 pub mod metrics;
 pub mod model;

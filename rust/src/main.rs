@@ -3,16 +3,19 @@
 //! ```text
 //! stannis tune   [--network mobilenet_v2]           Algorithm 1 (modeled)
 //! stannis train  [--steps N --num-csds K ...]       real-exec training
+//! stannis fleet  [--jobs K --total-csds N ...]      multi-job coordinator
 //! stannis report table1|fig6|fig7|table2            paper artifacts
 //! ```
 
 use anyhow::{bail, Result};
 
-use stannis::config::ExperimentConfig;
+use stannis::config::{ExperimentConfig, FaultSpec, FleetExperimentConfig};
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
+use stannis::fleet::{Fleet, FleetConfig};
 use stannis::metrics::{f, print_table};
 use stannis::perfmodel::PerfModel;
 use stannis::power::PowerConfig;
+use stannis::sim::SimTime;
 use stannis::util::cli::{usage, Args, OptSpec};
 
 const NETS: [(&str, usize, usize); 4] = [
@@ -36,6 +39,7 @@ fn run() -> Result<()> {
     match cmd {
         "tune" => cmd_tune(&args),
         "train" => cmd_train(&args),
+        "fleet" => cmd_fleet(&args),
         "report" => match args.positional().get(1).map(String::as_str) {
             Some("table1") => report_table1(),
             Some("fig6") => report_fig6(),
@@ -53,7 +57,7 @@ fn run() -> Result<()> {
             print!(
                 "{}",
                 usage(
-                    "stannis <tune|train|report> [options]",
+                    "stannis <tune|train|fleet|report> [options]",
                     "STANNIS reproduction: in-storage distributed DNN training",
                     &[
                         OptSpec { name: "network", help: "network name", default: Some("mobilenet_v2_s") },
@@ -63,6 +67,10 @@ fn run() -> Result<()> {
                         OptSpec { name: "steps", help: "training steps", default: Some("50") },
                         OptSpec { name: "config", help: "JSON experiment config", default: None },
                         OptSpec { name: "no-host", help: "CSD-only cluster", default: None },
+                        OptSpec { name: "total-csds", help: "fleet: pool size", default: Some("12") },
+                        OptSpec { name: "jobs", help: "fleet: concurrent jobs", default: Some("3") },
+                        OptSpec { name: "degrade", help: "fleet: fault dev:secs:factor", default: None },
+                        OptSpec { name: "no-stage-io", help: "fleet: skip flash staging", default: None },
                     ],
                 )
             );
@@ -131,6 +139,86 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let (eval_loss, acc) = trainer.evaluate(4)?;
     println!("eval: loss {eval_loss:.4}, accuracy {acc:.3}");
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let mut spec = match args.get("config") {
+        Some(path) => FleetExperimentConfig::from_file(path)?,
+        None => FleetExperimentConfig::default(),
+    };
+    spec.total_csds = args.parse_or("total-csds", spec.total_csds)?;
+    if spec.jobs.is_empty() {
+        let n_jobs = args.parse_or("jobs", 3)?;
+        spec.jobs = FleetExperimentConfig::default_mix(n_jobs, spec.total_csds).jobs;
+    } else if args.get("jobs").is_some() {
+        bail!("--jobs conflicts with a config file that already defines jobs");
+    }
+    if args.flag("no-stage-io") {
+        spec.stage_io = false;
+    }
+    if let Some(d) = args.get("degrade") {
+        spec.faults.push(FaultSpec::parse_cli(d)?);
+    }
+
+    println!(
+        "fleet: {} CSDs, {} jobs, {} fault(s), stage_io={}",
+        spec.total_csds,
+        spec.jobs.len(),
+        spec.faults.len(),
+        spec.stage_io
+    );
+    let mut fleet = Fleet::new(FleetConfig {
+        total_csds: spec.total_csds,
+        stage_io: spec.stage_io,
+        ..Default::default()
+    });
+    for job in &spec.jobs {
+        fleet.submit(job.clone());
+    }
+    for fault in &spec.faults {
+        fleet.inject_degradation(SimTime::from_secs_f64(fault.at_secs), fault.device, fault.factor);
+    }
+    let r = fleet.run()?;
+
+    let rows: Vec<Vec<String>> = r
+        .jobs
+        .iter()
+        .map(|j| {
+            vec![
+                j.id.to_string(),
+                j.network.clone(),
+                format!("{}{}", j.devices.len(), if j.held_host { "+host" } else { "" }),
+                format!("{}/{}", j.bs_csd, if j.held_host { j.bs_host.to_string() } else { "-".into() }),
+                j.steps_done.to_string(),
+                j.images.to_string(),
+                f(j.images_per_sec, 2),
+                format!("{}%", f(100.0 * j.sync_fraction, 0)),
+                f(j.j_per_image, 2),
+                j.retunes.to_string(),
+                format!("{}", j.queue_wait),
+                format!("{}", j.elapsed),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fleet — per-job schedule and outcome",
+        &[
+            "job", "network", "devices", "bs csd/host", "steps", "imgs", "img/s", "sync",
+            "J/img", "retunes", "wait", "span",
+        ],
+        &rows,
+    );
+    println!(
+        "\nfleet: makespan {}, {} images ({} img/s aggregate), energy {:.0} J jobs + {:.0} J shared chassis, {} retune(s), mean queue wait {:.1}s",
+        r.makespan,
+        r.total_images,
+        f(r.aggregate_ips, 2),
+        r.jobs_energy_j,
+        r.overhead_energy_j,
+        r.retunes,
+        r.queue_wait.mean(),
+    );
     Ok(())
 }
 

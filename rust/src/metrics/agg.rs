@@ -1,0 +1,83 @@
+//! Streaming aggregation: a running summary statistic for fleet-level
+//! reporting (queue waits, per-step times) — constant memory, no
+//! sample buffer (DESIGN.md §4).
+
+/// Running count/sum/min/max/mean over a stream of f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct RunningStat {
+    n: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_all_moments() {
+        let mut s = RunningStat::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        for v in [3.0, -1.0, 4.0] {
+            s.add(v);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.sum() - 6.0).abs() < 1e-12);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn single_sample_is_its_own_extremes() {
+        let mut s = RunningStat::new();
+        s.add(7.5);
+        assert_eq!(s.min(), 7.5);
+        assert_eq!(s.max(), 7.5);
+        assert_eq!(s.mean(), 7.5);
+    }
+}

@@ -1,9 +1,12 @@
-//! Measurement + reporting: a criterion-style micro-bench harness and
-//! the fixed-width table printer the paper-row reports use.
+//! Measurement + reporting: a criterion-style micro-bench harness,
+//! streaming aggregation for fleet reports, and the fixed-width table
+//! printer the paper-row reports use.
 //! (In-tree because the offline build has no criterion — DESIGN.md §4.)
 
+pub mod agg;
 pub mod bench;
 
+pub use agg::RunningStat;
 pub use bench::{bench, BenchResult};
 
 /// Print a fixed-width table (paper-style rows).

@@ -1,0 +1,211 @@
+//! Fleet coordinator end-to-end: concurrent jobs on one device pool,
+//! per-job tuning/balancing, degradation-driven re-tuning that leaves
+//! co-tenants untouched, and metric conservation (DESIGN.md §5).
+
+use stannis::config::ExperimentConfig;
+use stannis::fleet::{Fleet, FleetConfig, FleetReport};
+use stannis::sim::SimTime;
+
+fn job(network: &str, num_csds: usize, include_host: bool, steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        network: network.into(),
+        num_csds,
+        include_host,
+        steps,
+        ..Default::default()
+    }
+}
+
+fn fleet(total_csds: usize, stage_io: bool) -> Fleet {
+    Fleet::new(FleetConfig { total_csds, stage_io, ..Default::default() })
+}
+
+/// (a) Two concurrent jobs on disjoint device groups both converge
+/// their schedules: Algorithm 1 tunes each group to its own network's
+/// paper batches and Eq. 1 gives each a consistent epoch shape.
+#[test]
+fn two_concurrent_jobs_converge_schedules() {
+    let mut fl = fleet(8, true);
+    let a = fl.submit(job("mobilenet_v2", 3, true, 6));
+    let b = fl.submit(job("squeezenet", 4, false, 6));
+    let r = fl.run().unwrap();
+    assert_eq!(r.jobs.len(), 2);
+    let (ja, jb) = (&r.jobs[0], &r.jobs[1]);
+    assert_eq!(ja.id, a);
+    assert_eq!(jb.id, b);
+
+    // Disjoint groups, both admitted immediately (true concurrency).
+    assert!(ja.devices.iter().all(|d| !jb.devices.contains(d)));
+    assert_eq!(ja.admitted_at, SimTime::ZERO);
+    assert_eq!(jb.admitted_at, SimTime::ZERO);
+    assert!(ja.held_host && !jb.held_host);
+
+    // Algorithm 1 per group: paper Table I batches for each network.
+    assert_eq!(ja.bs_csd, 25, "mobilenet Newport batch");
+    assert!((ja.bs_host as i64 - 315).unsigned_abs() <= 16, "host bs {}", ja.bs_host);
+    assert!((jb.bs_csd as i64 - 50).unsigned_abs() <= 10, "squeezenet Newport batch {}", jb.bs_csd);
+
+    // Eq. 1 per group: steps_per_epoch = ceil(private_shard / bs_csd).
+    let private = ExperimentConfig::default().private_per_csd;
+    assert_eq!(ja.steps_per_epoch, private.div_ceil(ja.bs_csd));
+    assert_eq!(jb.steps_per_epoch, private.div_ceil(jb.bs_csd));
+
+    // Both ran their full schedule and made progress.
+    assert_eq!(ja.steps_done, 6);
+    assert_eq!(jb.steps_done, 6);
+    assert_eq!(ja.images, 6 * (3 * ja.bs_csd + ja.bs_host));
+    assert_eq!(jb.images, 6 * (4 * jb.bs_csd));
+    assert!(ja.sync_fraction > 0.0 && jb.sync_fraction > 0.0);
+    assert_eq!(r.retunes, 0);
+}
+
+/// Run the (b) scenario twice: identical two-job fleets, one with a
+/// mid-run degradation on a device of job A.
+fn degradation_pair() -> (FleetReport, FleetReport) {
+    let build = || {
+        let mut fl = fleet(8, true);
+        // A: long-running, holds the host, devices 0..=2.
+        fl.submit(job("mobilenet_v2", 3, true, 8));
+        // B: CSD-only co-tenant, devices 3..=6, finishes while A runs.
+        fl.submit(job("squeezenet", 4, false, 12));
+        fl
+    };
+    let clean = build().run().unwrap();
+    let mut faulted_fleet = build();
+    // Device 0 belongs to job A (deterministic lowest-index carve);
+    // throttle it to 60% at t=30s, mid-run for both jobs.
+    faulted_fleet.inject_degradation(SimTime::secs(30), 0, 0.6);
+    let faulted = faulted_fleet.run().unwrap();
+    (clean, faulted)
+}
+
+/// (b) Mid-run degradation of one device re-tunes only the affected
+/// job; the co-tenant's entire report is bit-identical.
+#[test]
+fn degradation_retunes_only_affected_job() {
+    let (clean, faulted) = degradation_pair();
+    let (a_clean, b_clean) = (&clean.jobs[0], &clean.jobs[1]);
+    let (a_faulted, b_faulted) = (&faulted.jobs[0], &faulted.jobs[1]);
+
+    // The affected job re-tuned exactly once and slowed down.
+    assert_eq!(a_clean.retunes, 0);
+    assert_eq!(a_faulted.retunes, 1);
+    assert!(
+        a_faulted.finished_at > a_clean.finished_at,
+        "degraded job must slow: {} !> {}",
+        a_faulted.finished_at,
+        a_clean.finished_at
+    );
+    // Re-tuning at the degraded speed grows the host batch to keep the
+    // Eq. 1 margin (same behaviour as integration_faults' whole-cluster
+    // case, now scoped to one job's group).
+    assert!(
+        a_faulted.bs_host > a_clean.bs_host,
+        "host batch must grow to match the slower group: {} !> {}",
+        a_faulted.bs_host,
+        a_clean.bs_host
+    );
+    assert_eq!(a_faulted.bs_csd, a_clean.bs_csd, "Newport saturation batch does not move");
+
+    // The co-tenant is untouched in every observable.
+    assert_eq!(b_faulted.retunes, 0);
+    assert_eq!(b_faulted.bs_csd, b_clean.bs_csd);
+    assert_eq!(b_faulted.steps_done, b_clean.steps_done);
+    assert_eq!(b_faulted.images, b_clean.images);
+    assert_eq!(b_faulted.finished_at, b_clean.finished_at);
+    assert_eq!(b_faulted.link_bytes, b_clean.link_bytes);
+    assert!((b_faulted.energy_j - b_clean.energy_j).abs() < 1e-9);
+
+    // Ledger conservation survives the fault: the abandoned step's ring
+    // traffic stays attributed to the affected job, so fabric totals
+    // still equal the per-job sums.
+    let link: u64 = faulted.jobs.iter().map(|j| j.link_bytes).sum();
+    assert_eq!(faulted.link_bytes, link);
+}
+
+/// (c) Fleet-wide metrics are conserved: totals equal the sum of the
+/// per-job metrics (shared-chassis overhead is ledgered separately).
+#[test]
+fn fleet_metrics_sum_to_per_job_metrics() {
+    let mut fl = fleet(10, true);
+    fl.submit(job("mobilenet_v2", 3, true, 5));
+    fl.submit(job("squeezenet", 4, false, 5));
+    fl.submit(job("nasnet", 3, false, 4));
+    let r = fl.run().unwrap();
+    assert_eq!(r.jobs.len(), 3);
+
+    let images: usize = r.jobs.iter().map(|j| j.images).sum();
+    assert_eq!(r.total_images, images);
+
+    let energy: f64 = r.jobs.iter().map(|j| j.energy_j).sum();
+    assert!(
+        (r.jobs_energy_j - energy).abs() < 1e-6 * energy.max(1.0),
+        "job energy ledger must be conservative: {} vs {}",
+        r.jobs_energy_j,
+        energy
+    );
+    assert!(
+        (r.total_energy_j - (r.jobs_energy_j + r.overhead_energy_j)).abs() < 1e-9,
+        "total = jobs + overhead"
+    );
+    assert!(r.overhead_energy_j > 0.0, "chassis overhead must be metered");
+
+    // Every ring byte on the fabric is attributed to exactly one job.
+    let link: u64 = r.jobs.iter().map(|j| j.link_bytes).sum();
+    assert_eq!(r.link_bytes, link);
+
+    let ips: f64 = r.total_images as f64 / r.makespan.as_secs_f64();
+    assert!((r.aggregate_ips - ips).abs() < 1e-9);
+}
+
+/// Oversubscription: jobs queue and admit in waves as devices free up,
+/// FIFO with backfill.
+#[test]
+fn oversubscribed_jobs_admit_in_waves() {
+    let mut fl = fleet(4, false);
+    let a = fl.submit(job("mobilenet_v2", 3, true, 3));
+    let b = fl.submit(job("squeezenet", 3, false, 3)); // must wait for A
+    let c = fl.submit(job("nasnet", 1, false, 3)); // backfills A's leftover
+    let r = fl.run().unwrap();
+    let find = |id| r.jobs.iter().find(|j| j.id == id).unwrap();
+    let (ja, jb, jc) = (find(a), find(b), find(c));
+
+    assert_eq!(ja.admitted_at, SimTime::ZERO);
+    assert_eq!(jc.admitted_at, SimTime::ZERO, "small job must backfill the idle device");
+    assert!(jb.queue_wait > SimTime::ZERO, "B must wait for a free group");
+    assert_eq!(jb.admitted_at, ja.finished_at, "B admits the moment A releases");
+    assert_eq!(r.queue_wait.count(), 3);
+    assert!(r.queue_wait.max() >= jb.queue_wait.as_secs_f64());
+}
+
+/// A job demanding more devices than the pool holds is a hard error,
+/// not silent starvation.
+#[test]
+fn unplaceable_job_is_an_error() {
+    let mut fl = fleet(2, false);
+    fl.submit(job("mobilenet_v2", 3, false, 2));
+    assert!(fl.run().is_err());
+}
+
+/// Determinism: the same submissions + fault schedule give identical
+/// reports (the fleet inherits the sim core's guarantee).
+#[test]
+fn fleet_runs_are_deterministic() {
+    let run = || {
+        let mut fl = fleet(8, true);
+        fl.submit(job("mobilenet_v2", 3, true, 4));
+        fl.submit(job("inception_v3", 4, false, 4));
+        fl.inject_degradation(SimTime::secs(20), 4, 0.7);
+        fl.run().unwrap()
+    };
+    let (r1, r2) = (run(), run());
+    assert_eq!(r1.makespan, r2.makespan);
+    assert_eq!(r1.total_images, r2.total_images);
+    assert_eq!(r1.link_bytes, r2.link_bytes);
+    assert!((r1.total_energy_j - r2.total_energy_j).abs() < 1e-12);
+    for (a, b) in r1.jobs.iter().zip(&r2.jobs) {
+        assert_eq!(a.finished_at, b.finished_at);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.retunes, b.retunes);
+    }
+}
