@@ -123,6 +123,7 @@ fn main() -> anyhow::Result<()> {
         steps,
         image_bytes: 12 * 1024,
         stage_io: true,
+        per_step: false,
     })?;
     let mut meter = EnergyMeter::new();
     account_interval(

@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
             steps: 3,
             image_bytes: 12 * 1024,
             stage_io: true,
+            per_step: false,
         })?;
         let mut meter = EnergyMeter::new();
         account_interval(&mut meter, &power, r.elapsed, n, 24, true, r.link_bytes, r.flash_reads, 0);

@@ -6,13 +6,14 @@
 //! Run: `cargo bench --bench fig7`
 
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
-use stannis::metrics::{f, print_table};
+use stannis::metrics::{f, print_table, record_bench_json};
 use stannis::perfmodel::{calib_for, PerfModel};
 
 const COUNTS: [usize; 10] = [0, 1, 2, 4, 6, 8, 12, 16, 20, 24];
 const NETS: [&str; 4] = ["mobilenet_v2", "nasnet", "inception_v3", "squeezenet"];
 
 fn main() {
+    let t0 = std::time::Instant::now();
     let cfg = TuneConfig::default();
     let mut speedup_at_24 = Vec::new();
 
@@ -69,4 +70,8 @@ fn main() {
     assert!(inc < nn && nn < mv, "ordering must hold: inception < nasnet < mobilenet");
     assert!(sq < mv, "squeezenet must trail mobilenet (paper §V-A)");
     println!("\nshape checks passed: mobilenet {mv:.2}x, squeezenet {sq:.2}x, nasnet {nn:.2}x, inception {inc:.2}x");
+
+    let wall = t0.elapsed().as_secs_f64();
+    println!("fig7 end-to-end wall time: {:.3} ms", wall * 1e3);
+    record_bench_json("fig7", &[("end_to_end_wall_s", wall)]);
 }

@@ -1,16 +1,25 @@
 //! Bench: the fleet coordinator under multi-tenancy — makespan,
 //! aggregate throughput and energy as more concurrent jobs share one
-//! 24-bay chassis, plus the cost of a mid-run degradation re-tune and
-//! the simulator's own overhead.
+//! 24-bay chassis, the cost of a mid-run degradation re-tune, the
+//! simulator's own overhead, and the steady-state fast-forward against
+//! the per-step reference at production step counts (both measured in
+//! the same run via the `fast_forward` switch — the CLI's `--per-step`).
+//!
+//! Emits machine-readable numbers to `BENCH_2.json` (section `"fleet"`).
 //!
 //! Run: `cargo bench --bench fleet`
 
+use std::time::Instant;
+
 use stannis::config::FleetExperimentConfig;
 use stannis::fleet::{Fleet, FleetConfig, FleetReport};
-use stannis::metrics::{bench, f, print_table};
+use stannis::metrics::{bench, f, print_table, record_bench_json, RunningStat};
 use stannis::sim::SimTime;
 
 const POOL: usize = 24;
+/// Step count for the fast-forward comparison: large enough that the
+/// per-step event loop dominates wall time.
+const LARGE_STEPS: usize = 20_000;
 
 fn run_mix(n_jobs: usize, fault: Option<(usize, u64, f64)>) -> FleetReport {
     let spec = FleetExperimentConfig::default_mix(n_jobs, POOL);
@@ -24,14 +33,37 @@ fn run_mix(n_jobs: usize, fault: Option<(usize, u64, f64)>) -> FleetReport {
     fleet.run().expect("fleet run")
 }
 
+fn run_large(n_jobs: usize, fast_forward: bool) -> (FleetReport, f64) {
+    let mut spec = FleetExperimentConfig::default_mix(n_jobs, POOL);
+    for job in &mut spec.jobs {
+        job.steps = LARGE_STEPS;
+    }
+    let mut fleet = Fleet::new(FleetConfig {
+        total_csds: POOL,
+        stage_io: false,
+        fast_forward,
+        ..Default::default()
+    });
+    for job in &spec.jobs {
+        fleet.submit(job.clone());
+    }
+    // A late fault forces one mid-run re-tune window split.
+    fleet.inject_degradation(SimTime::secs(3600), 0, 0.8);
+    let t0 = Instant::now();
+    let report = fleet.run().expect("fleet run");
+    (report, t0.elapsed().as_secs_f64())
+}
+
 fn main() {
     // --- Multi-tenancy scaling: 1..12 jobs over 24 devices ----------------
     let mut rows = Vec::new();
+    let mut sweep_wait = RunningStat::new();
     for n_jobs in [1usize, 2, 4, 8, 12] {
         let r = run_mix(n_jobs, None);
+        sweep_wait.merge(&r.queue_wait);
         rows.push(vec![
             n_jobs.to_string(),
-            format!("{}", r.makespan),
+            r.makespan.to_string(),
             r.total_images.to_string(),
             f(r.aggregate_ips, 1),
             f(r.jobs_energy_j / r.total_images.max(1) as f64, 2),
@@ -44,6 +76,12 @@ fn main() {
         &["jobs", "makespan", "imgs", "agg img/s", "J/img (jobs)", "wait mean s", "wait max s"],
         &rows,
     );
+    println!(
+        "whole-sweep queue wait: {} jobs, mean {}s, max {}s",
+        sweep_wait.count(),
+        f(sweep_wait.mean(), 1),
+        f(sweep_wait.max(), 1),
+    );
 
     // --- Degradation: retune cost on a co-tenanted fleet ------------------
     let clean = run_mix(4, None);
@@ -52,7 +90,7 @@ fn main() {
     for (label, r) in [("healthy", &clean), ("device0 @60s -> 60%", &faulted)] {
         rows.push(vec![
             label.to_string(),
-            format!("{}", r.makespan),
+            r.makespan.to_string(),
             f(r.aggregate_ips, 1),
             r.retunes.to_string(),
         ]);
@@ -66,12 +104,53 @@ fn main() {
     println!("makespan slowdown from the fault: {}x", f(slowdown, 3));
 
     // --- Simulation cost --------------------------------------------------
-    let r = bench("fleet_run(4 jobs, 24 CSDs, staged IO)", 1, 10, || {
+    let r4 = bench("fleet_run(4 jobs, 24 CSDs, staged IO)", 1, 10, || {
         std::hint::black_box(run_mix(4, None));
     });
-    println!("\n{}", r.summary());
-    let r = bench("fleet_run(12 jobs, 24 CSDs, staged IO)", 1, 5, || {
+    println!("\n{}", r4.summary());
+    let r12 = bench("fleet_run(12 jobs, 24 CSDs, staged IO)", 1, 5, || {
         std::hint::black_box(run_mix(12, None));
     });
-    println!("{}", r.summary());
+    println!("{}", r12.summary());
+
+    // --- Fast-forward vs per-step at production step counts ---------------
+    let (ff_report, ff_wall) = run_large(4, true);
+    let (ps_report, ps_wall) = run_large(4, false);
+    assert_eq!(
+        ff_report.makespan, ps_report.makespan,
+        "fast-forward must be bit-identical to the per-step reference"
+    );
+    assert_eq!(ff_report.total_images, ps_report.total_images);
+    assert_eq!(ff_report.link_bytes, ps_report.link_bytes);
+    assert_eq!(ff_report.retunes, ps_report.retunes);
+    let steps: usize = ps_report.jobs.iter().map(|j| j.steps_done).sum();
+    let speedup = ps_wall / ff_wall.max(1e-9);
+    let mut rows = Vec::new();
+    for (label, wall) in [("per-step", ps_wall), ("fast-forward", ff_wall)] {
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.3} ms", wall * 1e3),
+            f(steps as f64 / wall.max(1e-9), 0),
+        ]);
+    }
+    print_table(
+        &format!("Fast-forward — 4 jobs x {LARGE_STEPS} steps, one fault (identical reports)"),
+        &["executor", "wall", "simulated steps/s"],
+        &rows,
+    );
+    println!("fast-forward speedup: {}x", f(speedup, 1));
+
+    record_bench_json(
+        "fleet",
+        &[
+            ("staged_run_4_jobs_wall_s", r4.mean_secs()),
+            ("staged_run_12_jobs_wall_s", r12.mean_secs()),
+            ("large_steps", steps as f64),
+            ("large_per_step_wall_s", ps_wall),
+            ("large_fast_forward_wall_s", ff_wall),
+            ("large_fast_forward_speedup", speedup),
+            ("large_per_step_steps_per_sec", steps as f64 / ps_wall.max(1e-9)),
+            ("large_fast_forward_steps_per_sec", steps as f64 / ff_wall.max(1e-9)),
+        ],
+    );
 }

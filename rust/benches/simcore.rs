@@ -1,0 +1,131 @@
+//! Bench: the simulation core's own cost — slab event-queue throughput,
+//! interned vs string-keyed perfmodel lookups, the memoized Algorithm-1
+//! sweep, and a fig7-shaped sweep at production step counts (which the
+//! scheduler's steady-state fast-forward collapses to closed form).
+//! The fleet-level fast-forward-vs-per-step comparison lives in
+//! `rust/benches/fleet.rs` — one owner for that harness.
+//!
+//! Emits machine-readable numbers to `BENCH_2.json` (section
+//! `"simcore"`) so the perf trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench simcore`
+
+use std::time::Instant;
+
+use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
+use stannis::metrics::{bench, record_bench_json};
+use stannis::perfmodel::{Device, NetId, PerfModel};
+use stannis::sim::{EventQueue, SimTime};
+use stannis::util::Rng;
+
+const QUEUE_EVENTS: u64 = 200_000;
+const MODEL_CALLS: u64 = 200_000;
+
+fn queue_churn(events: u64, cancel_every: u64) -> u64 {
+    let mut rng = Rng::new(0x51AB);
+    let mut q = EventQueue::new();
+    let mut ops = 0u64;
+    let mut ids = Vec::new();
+    for i in 0..events {
+        ids.push(q.schedule(SimTime::ns(rng.below(1 << 40)), i));
+        ops += 1;
+        if cancel_every > 0 && i % cancel_every == cancel_every - 1 {
+            let pick = ids.swap_remove(rng.usize_below(ids.len()));
+            if q.cancel(pick) {
+                ops += 1;
+            }
+        }
+    }
+    while q.pop().is_some() {
+        ops += 1;
+    }
+    ops
+}
+
+fn main() {
+    let mut ledger: Vec<(&str, f64)> = Vec::new();
+
+    // --- Event queue ------------------------------------------------------
+    let r = bench("event_queue schedule+pop (200k)", 1, 10, || {
+        std::hint::black_box(queue_churn(QUEUE_EVENTS, 0));
+    });
+    println!("{}", r.summary());
+    ledger.push(("event_queue_events_per_sec", 2.0 * QUEUE_EVENTS as f64 / r.mean_secs()));
+
+    // The op count is deterministic: capture it from the warmup-shaped
+    // pre-run instead of re-churning after the timed loop.
+    let cancel_ops = queue_churn(QUEUE_EVENTS, 2) as f64;
+    let r = bench("event_queue with 1-in-2 cancels", 0, 10, || {
+        std::hint::black_box(queue_churn(QUEUE_EVENTS, 2));
+    });
+    println!("{}", r.summary());
+    ledger.push(("event_queue_cancel_heavy_ops_per_sec", cancel_ops / r.mean_secs()));
+
+    let r = bench("event_queue drain_until (batched)", 1, 10, || {
+        let mut q = EventQueue::new();
+        for i in 0..QUEUE_EVENTS {
+            q.schedule(SimTime::ns(i * 7 % (1 << 20)), i);
+        }
+        let mut n = 0u64;
+        for e in q.drain_until(SimTime::ns(1 << 20)) {
+            n += e.payload & 1;
+        }
+        std::hint::black_box(n);
+    });
+    println!("{}", r.summary());
+    ledger.push(("drain_until_events_per_sec", 2.0 * QUEUE_EVENTS as f64 / r.mean_secs()));
+
+    // --- Perf model: string shim vs interned id ---------------------------
+    let model = PerfModel::default();
+    let net = NetId::resolve("mobilenet_v2").unwrap();
+    let r_str = bench("step_time via string resolve", 1, 10, || {
+        let mut acc = SimTime::ZERO;
+        for i in 0..MODEL_CALLS {
+            acc += model
+                .step_time(Device::NewportIsp, "mobilenet_v2_s", 1 + (i % 64) as usize)
+                .unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", r_str.summary());
+    let r_id = bench("step_time via interned NetId", 1, 10, || {
+        let mut acc = SimTime::ZERO;
+        for i in 0..MODEL_CALLS {
+            acc += model
+                .step_time_id(Device::NewportIsp, net, 1 + (i % 64) as usize)
+                .unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", r_id.summary());
+    ledger.push(("step_time_string_ns", r_str.mean_ns / MODEL_CALLS as f64));
+    ledger.push(("step_time_interned_ns", r_id.mean_ns / MODEL_CALLS as f64));
+
+    let r = bench("tune() full Algorithm-1 sweep", 2, 20, || {
+        let mut m = PerfModel::default();
+        for n in ["mobilenet_v2", "nasnet", "inception_v3", "squeezenet"] {
+            std::hint::black_box(tune(&mut m, n, &TuneConfig::default()).unwrap());
+        }
+    });
+    println!("{}", r.summary());
+    ledger.push(("tune_four_nets_ns", r.mean_ns));
+
+    // --- Fig. 7-shaped sweep at production step counts --------------------
+    // Each datapoint is a 10k-step modeled run; the scheduler's
+    // fast-forward makes this closed-form per point.
+    let t0 = Instant::now();
+    let mut checksum = 0.0f64;
+    for net in ["mobilenet_v2", "nasnet", "inception_v3", "squeezenet"] {
+        for n in [0usize, 4, 12, 24] {
+            checksum += modeled_throughput(net, n, true, 25, 315, 10_000)
+                .unwrap()
+                .images_per_sec;
+        }
+    }
+    std::hint::black_box(checksum);
+    let sweep_wall = t0.elapsed().as_secs_f64();
+    println!("\nfig7-shaped sweep @10k steps: {:.3} ms", sweep_wall * 1e3);
+    ledger.push(("fig7_sweep_10k_steps_wall_s", sweep_wall));
+
+    record_bench_json("simcore", &ledger);
+}

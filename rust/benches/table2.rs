@@ -38,6 +38,7 @@ fn run_point(n: usize, nbs: usize, hbs: usize) -> (f64, f64) {
             steps: 3,
             image_bytes: 12 * 1024,
             stage_io: true,
+            per_step: false,
         })
         .unwrap();
 

@@ -7,6 +7,14 @@
 //! construction) lives in [`fleet::group::JobGroup`](crate::fleet::JobGroup),
 //! and `Cluster` wraps exactly one group. Multi-job callers go through
 //! [`crate::fleet::Fleet`] instead (DESIGN.md §5).
+//!
+//! `Cluster` is the *real-execution* path (PJRT engine, wallclock
+//! steps). Its modeled twin — the single-job special case of the
+//! simulated fleet — is [`crate::coordinator::Scheduler`], which, like
+//! the fleet coordinator, collapses steady-state runs into a
+//! closed-form fast-forward when flash staging is off (bit-identical
+//! to the per-step loop; DESIGN.md §Perf). Real execution cannot be
+//! fast-forwarded: wallclock steps are not repeats.
 
 use std::ops::Deref;
 use std::sync::Arc;

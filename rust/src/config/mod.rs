@@ -205,13 +205,23 @@ pub struct FleetExperimentConfig {
     pub total_csds: usize,
     /// Stage batches through the CSD flash substrate.
     pub stage_io: bool,
+    /// Steady-state fast-forward (bit-identical closed-form windows;
+    /// see DESIGN.md §Perf). `false` forces the per-step reference
+    /// path — the CLI spelling is `--per-step`.
+    pub fast_forward: bool,
     pub jobs: Vec<ExperimentConfig>,
     pub faults: Vec<FaultSpec>,
 }
 
 impl Default for FleetExperimentConfig {
     fn default() -> Self {
-        Self { total_csds: 12, stage_io: true, jobs: Vec::new(), faults: Vec::new() }
+        Self {
+            total_csds: 12,
+            stage_io: true,
+            fast_forward: true,
+            jobs: Vec::new(),
+            faults: Vec::new(),
+        }
     }
 }
 
@@ -229,6 +239,9 @@ impl FleetExperimentConfig {
         }
         if let Some(v) = j.get("stage_io") {
             out.stage_io = v.as_bool()?;
+        }
+        if let Some(v) = j.get("fast_forward") {
+            out.fast_forward = v.as_bool()?;
         }
         if let Some(v) = j.get("jobs") {
             for job in v.as_arr()? {
@@ -317,6 +330,7 @@ mod tests {
             r#"{
                 "total_csds": 8,
                 "stage_io": false,
+                "fast_forward": false,
                 "jobs": [
                     {"network": "mobilenet_v2", "num_csds": 3, "steps": 5},
                     {"network": "squeezenet", "num_csds": 4, "include_host": false}
@@ -328,6 +342,8 @@ mod tests {
         let f = FleetExperimentConfig::from_file(&p).unwrap();
         assert_eq!(f.total_csds, 8);
         assert!(!f.stage_io);
+        assert!(!f.fast_forward);
+        assert!(FleetExperimentConfig::default().fast_forward, "fast path is the default");
         assert_eq!(f.jobs.len(), 2);
         assert_eq!(f.jobs[0].num_csds, 3);
         assert_eq!(f.jobs[0].steps, 5);

@@ -22,7 +22,10 @@ pub trait StepBench {
 
 impl StepBench for crate::perfmodel::PerfModel {
     fn time_per_batch(&mut self, device: Device, network: &str, bs: usize) -> Result<f64> {
-        Ok(self.step_time(device, network, bs)?.as_secs_f64())
+        // Memoized: the sweep revisits the same probes (and callers
+        // like fig6/fig7 re-tune every network repeatedly).
+        let net = crate::perfmodel::NetId::resolve(network)?;
+        Ok(self.step_time_cached(device, net, bs)?.as_secs_f64())
     }
 }
 
@@ -211,7 +214,7 @@ mod tests {
 
     #[test]
     fn slower_host_gets_smaller_batch() {
-        let mut slow = PerfModel { host_scale: 0.5, ..Default::default() };
+        let mut slow = PerfModel::with_scales(0.5, 1.0);
         let mut fast = PerfModel::default();
         let cfg = TuneConfig::default();
         let rs = tune(&mut slow, "mobilenet_v2", &cfg).unwrap();

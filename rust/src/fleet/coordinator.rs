@@ -30,8 +30,23 @@
 //!
 //! Everything is deterministic: same submissions + same fault schedule
 //! → identical reports.
+//!
+//! **Steady-state fast-forward:** between structural events (an
+//! admission, a completion, a degradation), every running job repeats
+//! bit-identical steps — the compute model is pure and the fluid ring
+//! model is shift-invariant. When staging is off, the coordinator
+//! therefore advances whole windows in closed form (`Fleet::fast_forward`):
+//! it computes the number of steps each job completes strictly before
+//! the window's end, credits their time/images/energy/link totals with
+//! integer arithmetic (exactly what per-step accumulation would have
+//! summed), and re-schedules each job's one in-flight step at its
+//! post-window position. `FleetConfig::fast_forward = false` forces the
+//! per-step reference path; the two are bit-identical (asserted by the
+//! `integration_fleet` equivalence property; legality conditions in
+//! DESIGN.md §Perf).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use anyhow::{ensure, Result};
 
@@ -40,7 +55,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{tune, TuneConfig};
 use crate::csd::CsdConfig;
 use crate::metrics::RunningStat;
-use crate::perfmodel::{Device, PerfModel};
+use crate::perfmodel::{Device, NetId, PerfModel};
 use crate::power::{EnergyMeter, PowerConfig};
 use crate::sim::{EventQueue, SimTime};
 use crate::tunnel::{NodeId, Tunnel, TunnelConfig};
@@ -64,6 +79,11 @@ pub struct FleetConfig {
     pub stage_io: bool,
     /// Bytes of one staged image on flash.
     pub image_bytes: usize,
+    /// Advance steady-state windows analytically instead of scheduling
+    /// every step (bit-identical results; only effective when
+    /// `stage_io` is off, since flash staging is stateful). `false` is
+    /// the per-step reference path for equivalence checks and benches.
+    pub fast_forward: bool,
     pub tune: TuneConfig,
     pub power: PowerConfig,
     pub tunnel: TunnelConfig,
@@ -76,6 +96,7 @@ impl Default for FleetConfig {
             total_csds: 24,
             stage_io: true,
             image_bytes: 12 * 1024,
+            fast_forward: true,
             tune: TuneConfig::default(),
             power: PowerConfig::default(),
             tunnel: TunnelConfig::default(),
@@ -136,6 +157,9 @@ pub struct Fleet {
     host_held_by: Option<JobId>,
     next_id: u64,
     overhead: EnergyMeter,
+    /// Times of injected-but-not-yet-fired degradations — the
+    /// fast-forward horizon (a fault must never be jumped over).
+    degrades: BinaryHeap<Reverse<SimTime>>,
 }
 
 impl Fleet {
@@ -150,6 +174,7 @@ impl Fleet {
             host_held_by: None,
             next_id: 0,
             overhead: EnergyMeter::new(),
+            degrades: BinaryHeap::new(),
             cfg,
         }
     }
@@ -167,6 +192,7 @@ impl Fleet {
     /// `device`'s health by `factor` (0.6 = thermal throttle to 60%).
     pub fn inject_degradation(&mut self, at: SimTime, device: usize, factor: f64) {
         self.events.schedule(at, FleetEvent::Degrade { device, factor });
+        self.degrades.push(Reverse(at));
     }
 
     /// Run every submitted job to completion; returns the fleet report.
@@ -181,8 +207,13 @@ impl Fleet {
             );
         }
         self.try_admit()?;
-        while let Some(ev) = self.events.pop() {
+        loop {
+            if self.cfg.fast_forward {
+                self.fast_forward()?;
+            }
+            let Some(ev) = self.events.pop() else { break };
             if let FleetEvent::Degrade { device, factor } = ev.payload {
+                self.degrades.pop();
                 // A fault landing after the last job finished changes
                 // pool health but must not stretch the fleet timeline
                 // (makespan/overhead end with the last job).
@@ -213,7 +244,8 @@ impl Fleet {
     }
 
     fn report(&self) -> FleetReport {
-        let jobs: Vec<JobReport> = self.jobs.values().map(Job::report).collect();
+        let jobs: Vec<JobReport> =
+            self.jobs.values().map(|j| j.report(&self.cfg.power)).collect();
         let total_images: usize = jobs.iter().map(|j| j.images).sum();
         let jobs_energy_j: f64 = jobs.iter().map(|j| j.energy_j).sum();
         let overhead_energy_j = self.overhead.total_joules();
@@ -291,13 +323,14 @@ impl Fleet {
         if spec.num_csds == 0 {
             return Ok((spec.bs_csd.max(1), spec.bs_host.max(1)));
         }
-        let mut model = PerfModel { newport_scale: group_health, host_scale: 1.0 };
+        let mut model = PerfModel::with_scales(1.0, group_health);
         let r = tune(&mut model, &spec.network, &self.cfg.tune)?;
         let bs_host = if spec.include_host { r.host_bs } else { spec.bs_host.max(1) };
         Ok((r.newport_bs, bs_host))
     }
 
     fn admit(&mut self, q: QueuedJob) -> Result<JobId> {
+        let net = NetId::resolve(&q.spec.network)?;
         let devices = self
             .pool
             .carve(q.spec.num_csds, q.id)
@@ -316,6 +349,7 @@ impl Fleet {
         }
         let mut job = Job {
             id: q.id,
+            net,
             state: JobState::Running,
             devices,
             holds_host,
@@ -331,6 +365,7 @@ impl Fleet {
             finished_at: SimTime::ZERO,
             sync_time: SimTime::ZERO,
             link_bytes: 0,
+            flash_reads: 0,
             meter: EnergyMeter::new(),
             pending: None,
             data_cursor: 0,
@@ -359,27 +394,27 @@ impl Fleet {
     /// per-device staging + compute (health-scaled), host compute if
     /// held, then the job's own ring-allreduce domain.
     fn schedule_step(&mut self, id: JobId) -> Result<()> {
-        let (devices, holds_host, bs_csd, bs_host, network, data_cursor, images) = {
+        let (devices, holds_host, bs_csd, bs_host, net, data_cursor, images) = {
             let j = &self.jobs[&id];
             (
                 j.devices.clone(),
                 j.holds_host,
                 j.bs_csd,
                 j.bs_host,
-                j.spec.network.clone(),
+                j.net,
                 j.data_cursor,
                 j.images_per_step(),
             )
         };
         let sharers = self.running_ring_jobs();
-        let sync_bytes = PerfModel::default().sync_bytes(&network)?;
+        let sync_bytes = net.sync_bytes();
         let now = self.now;
         let mut compute_done = now;
         let mut flash_reads = 0u64;
         for &d in &devices {
             let health = self.pool.health(d);
-            let compute = PerfModel { newport_scale: health, host_scale: 1.0 }
-                .step_time(Device::NewportIsp, &network, bs_csd)?;
+            let compute = PerfModel::with_scales(1.0, health)
+                .step_time_id(Device::NewportIsp, net, bs_csd)?;
             let done = if self.cfg.stage_io {
                 let ppi = self
                     .cfg
@@ -405,7 +440,7 @@ impl Fleet {
         }
         if holds_host {
             let host_compute =
-                PerfModel::default().step_time(Device::HostXeon, &network, bs_host)?;
+                PerfModel::default().step_time_id(Device::HostXeon, net, bs_host)?;
             compute_done = compute_done.max(now + host_compute);
         }
         let ranks: Vec<NodeId> = holds_host
@@ -413,13 +448,13 @@ impl Fleet {
             .into_iter()
             .chain(devices.iter().map(|&d| NodeId::Csd(d)))
             .collect();
-        let link_before = self.tunnel.stats().bytes;
+        let stats_before = self.tunnel.stats();
         let sync_end = if ranks.len() > 1 {
             ring_time_shared(&mut self.tunnel, &ranks, sync_bytes, compute_done, sharers)
         } else {
             compute_done
         };
-        let link_bytes = self.tunnel.stats().bytes - link_before;
+        let stats_after = self.tunnel.stats();
         let event = self.events.schedule(sync_end, FleetEvent::StepDone { job: id });
         let j = self.jobs.get_mut(&id).expect("job exists");
         j.data_cursor = j.data_cursor.wrapping_add(37);
@@ -428,7 +463,8 @@ impl Fleet {
             start: now,
             end: sync_end,
             sync: sync_end - compute_done,
-            link_bytes,
+            link_bytes: stats_after.bytes - stats_before.bytes,
+            link_msgs: stats_after.messages - stats_before.messages,
             flash_reads,
             images,
         });
@@ -441,21 +477,7 @@ impl Fleet {
             let now = self.now;
             let j = self.jobs.get_mut(&id).expect("StepDone for unknown job");
             let p = j.pending.take().expect("StepDone without a pending step");
-            let dt = p.end - p.start;
-            j.steps_done += 1;
-            j.images_done += p.images;
-            j.sync_time += p.sync;
-            j.link_bytes += p.link_bytes;
-            j.meter.add_power(
-                "newport",
-                j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
-                dt,
-            );
-            if j.holds_host {
-                j.meter.add_power("host", pw.host_active_w, dt);
-            }
-            j.meter.add_energy("link", p.link_bytes as f64 * pw.link_pj_per_byte * 1e-12);
-            j.meter.add_energy("flash", p.flash_reads as f64 * pw.flash_read_uj * 1e-6);
+            commit_steps(j, pw, &p, 1);
             if j.images_done >= j.images_target {
                 j.state = JobState::Completed;
                 j.finished_at = now;
@@ -473,6 +495,100 @@ impl Fleet {
         } else {
             self.schedule_step(id)
         }
+    }
+
+    /// Advance every running job to just before the next *structural*
+    /// event — the earliest completion or injected degradation — in one
+    /// closed-form jump, instead of scheduling each intermediate step.
+    ///
+    /// Legal because, inside such a window, a job's steps are exact
+    /// repeats: compute times are pure functions of (health, net,
+    /// batch), the fluid ring model is shift-invariant and stateless
+    /// (beyond its byte ledger), and the co-tenant count is frozen.
+    /// Each job's last pre-window-end step stays a real event, so
+    /// completions, admissions and degradations still run through the
+    /// ordinary per-step machinery. No-op (exact fallback to per-step)
+    /// when flash staging is on — the FTL/timeline state makes steps
+    /// non-repeating — or when nothing can be skipped.
+    fn fast_forward(&mut self) -> Result<()> {
+        if self.cfg.stage_io {
+            return Ok(());
+        }
+        // Scan phase: per running job, the in-flight step's period and
+        // the projected completion time at one step per period.
+        struct Window {
+            id: JobId,
+            period: SimTime,
+            end: SimTime,
+            skip: u64,
+        }
+        let mut windows: Vec<Window> = Vec::new();
+        let mut horizon = self.degrades.peek().map(|Reverse(t)| *t);
+        for j in self.jobs.values() {
+            if j.state != JobState::Running {
+                continue;
+            }
+            let Some(p) = &j.pending else { return Ok(()) };
+            let period = p.end - p.start;
+            if period == SimTime::ZERO || p.images == 0 {
+                return Ok(()); // degenerate config: keep the reference path
+            }
+            let remaining = (j.images_target - j.images_done).div_ceil(p.images) as u64;
+            let finish = p.end + period * (remaining - 1);
+            horizon = Some(horizon.map_or(finish, |h| h.min(finish)));
+            windows.push(Window { id: j.id, period, end: p.end, skip: 0 });
+        }
+        let Some(w_end) = horizon else { return Ok(()) };
+        // Steps that END strictly before the window end are skippable;
+        // the step ending at (or beyond) it remains in-flight.
+        for w in &mut windows {
+            if w.end < w_end {
+                // Ends at end, end+period, ...: how many land before
+                // w_end — i.e. ceil(span / period).
+                let span = w_end - w.end;
+                w.skip = span.as_ns().div_ceil(w.period.as_ns());
+            }
+        }
+        windows.retain(|w| w.skip > 0);
+        if windows.is_empty() {
+            return Ok(());
+        }
+        // Re-schedule in the order the per-step path would have
+        // scheduled the surviving steps: by their (virtual) start time;
+        // at equal starts the longer period was scheduled earlier (its
+        // predecessor fired first); full ties keep the existing seq
+        // order. This reproduces the deterministic FIFO tie-break of
+        // the reference path.
+        windows.sort_by_key(|w| {
+            let start = w.end + w.period * w.skip - w.period;
+            let pending = self.jobs[&w.id].pending.as_ref().expect("scanned above");
+            (start, Reverse(w.period), self.events.seq_of(pending.event))
+        });
+        let pw = &self.cfg.power;
+        for w in &windows {
+            let j = self.jobs.get_mut(&w.id).expect("job exists");
+            let p = j.pending.take().expect("scanned above");
+            commit_steps(j, pw, &p, w.skip);
+            // Mirror the data-cursor advance of the skipped
+            // `schedule_step` calls (unobservable with staging off, but
+            // keeps the cursor phase identical if configs evolve).
+            j.data_cursor = j.data_cursor.wrapping_add(37u32.wrapping_mul(w.skip as u32));
+            let shift = w.period * w.skip;
+            // The skipped rings' traffic, credited on the fabric ledger
+            // exactly as `ring_time_shared` would have.
+            self.tunnel.note_aggregate(w.skip * p.link_msgs, w.skip * p.link_bytes);
+            self.events.cancel(p.event);
+            let event = self
+                .events
+                .schedule(p.end + shift, FleetEvent::StepDone { job: w.id });
+            j.pending = Some(PendingStep {
+                event,
+                start: p.start + shift,
+                end: p.end + shift,
+                ..p
+            });
+        }
+        Ok(())
     }
 
     /// Device fault: degrade health; if a job holds the device, abandon
@@ -504,8 +620,7 @@ impl Fleet {
                     j.meter.add_power("host", pw.host_active_w, dt);
                 }
                 j.link_bytes += p.link_bytes;
-                j.meter.add_energy("link", p.link_bytes as f64 * pw.link_pj_per_byte * 1e-12);
-                j.meter.add_energy("flash", p.flash_reads as f64 * pw.flash_read_uj * 1e-6);
+                j.flash_reads += p.flash_reads;
                 p.event
             })
         };
@@ -528,6 +643,29 @@ impl Fleet {
             j.steps_per_epoch = placement.steps_per_epoch;
         }
         self.schedule_step(id)
+    }
+}
+
+/// Credit `k` completed repeats of the in-flight step `p` to `j` — the
+/// single commit path shared by the per-step executor (`k = 1`) and the
+/// fast-forward executor (`k = steps skipped`). All accumulators are
+/// integers (`SimTime`, byte/step counts) or chop-invariant power
+/// integrals, so `k` calls with 1 and 1 call with `k` book bit-identical
+/// totals (DESIGN.md §Perf).
+fn commit_steps(j: &mut Job, pw: &PowerConfig, p: &PendingStep, k: u64) {
+    let dt = (p.end - p.start) * k;
+    j.steps_done += k as usize;
+    j.images_done += p.images * k as usize;
+    j.sync_time += p.sync * k;
+    j.link_bytes += p.link_bytes * k;
+    j.flash_reads += p.flash_reads * k;
+    j.meter.add_power(
+        "newport",
+        j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
+        dt,
+    );
+    if j.holds_host {
+        j.meter.add_power("host", pw.host_active_w, dt);
     }
 }
 
@@ -590,6 +728,63 @@ mod tests {
         });
         fleet.submit(job("mobilenet_v2", 5, false, 2));
         assert!(fleet.run().is_err());
+    }
+
+    #[test]
+    fn fast_forward_matches_per_step_reference() {
+        let run = |ff: bool| {
+            let mut fleet = Fleet::new(FleetConfig {
+                total_csds: 6,
+                stage_io: false,
+                fast_forward: ff,
+                ..Default::default()
+            });
+            fleet.submit(job("mobilenet_v2", 3, true, 40));
+            fleet.submit(job("squeezenet", 3, false, 25));
+            // Mid-run fault on job 0's group: the window must stop at
+            // the fault, re-tune, then fast-forward again.
+            fleet.inject_degradation(SimTime::secs(100), 0, 0.7);
+            fleet.run().unwrap()
+        };
+        let a = run(true);
+        let b = run(false);
+        assert_eq!(a.makespan, b.makespan, "makespan must be bit-identical");
+        assert_eq!(a.total_images, b.total_images);
+        assert_eq!(a.link_bytes, b.link_bytes);
+        assert_eq!(a.retunes, b.retunes);
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.finished_at, y.finished_at);
+            assert_eq!(x.steps_done, y.steps_done);
+            assert_eq!(x.images, y.images);
+            assert_eq!(x.link_bytes, y.link_bytes);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn identical_lockstep_jobs_stay_in_admission_order() {
+        // Two bit-identical jobs tie at every step boundary — the
+        // fast-forward must preserve the per-step FIFO tie-break, so
+        // both complete at the same instant and in submission order.
+        let run = |ff: bool| {
+            let mut fleet = Fleet::new(FleetConfig {
+                total_csds: 4,
+                stage_io: false,
+                fast_forward: ff,
+                ..Default::default()
+            });
+            fleet.submit(job("squeezenet", 2, false, 30));
+            fleet.submit(job("squeezenet", 2, false, 30));
+            fleet.run().unwrap()
+        };
+        let (a, b) = (run(true), run(false));
+        assert_eq!(a.jobs[0].finished_at, a.jobs[1].finished_at);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.finished_at, y.finished_at);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+        assert_eq!(a.makespan, b.makespan);
     }
 
     #[test]

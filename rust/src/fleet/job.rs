@@ -2,7 +2,8 @@
 //! emits (DESIGN.md §5).
 
 use crate::config::ExperimentConfig;
-use crate::power::EnergyMeter;
+use crate::perfmodel::NetId;
+use crate::power::{EnergyMeter, PowerConfig};
 use crate::sim::SimTime;
 
 /// Stable identifier of one submitted job, assigned at `submit` time.
@@ -40,6 +41,8 @@ pub(crate) struct PendingStep {
     pub sync: SimTime,
     /// Tunnel bytes this step's ring moved (attributed on completion).
     pub link_bytes: u64,
+    /// Tunnel messages the ring moved (fast-forward re-credits both).
+    pub link_msgs: u64,
     /// Flash pages staged on the group's devices this step.
     pub flash_reads: u64,
     /// Images the step trains across the whole group.
@@ -51,6 +54,9 @@ pub(crate) struct PendingStep {
 pub(crate) struct Job {
     pub id: JobId,
     pub spec: ExperimentConfig,
+    /// Interned network, resolved once at admission — the per-step hot
+    /// path never re-parses the spec's network string.
+    pub net: NetId,
     pub state: JobState,
     /// Global pool indices of the carved device group.
     pub devices: Vec<usize>,
@@ -71,6 +77,10 @@ pub(crate) struct Job {
     pub finished_at: SimTime,
     pub sync_time: SimTime,
     pub link_bytes: u64,
+    /// Total flash pages staged for this job (energy conversion happens
+    /// once, in [`Job::report`], so per-step and fast-forward paths
+    /// book identical integers rather than accumulated floats).
+    pub flash_reads: u64,
     pub meter: EnergyMeter,
     pub pending: Option<PendingStep>,
     /// Rolling offset into the preloaded flash pages (mirrors the
@@ -114,10 +124,16 @@ pub struct JobReport {
 }
 
 impl Job {
-    pub(crate) fn report(&self) -> JobReport {
+    /// Summarize for the fleet report. Link/flash traffic converts to
+    /// energy here (integer counters × per-unit cost) rather than being
+    /// accumulated per step — one float multiply at the end is both
+    /// cheaper and independent of how steps were batched.
+    pub(crate) fn report(&self, pw: &PowerConfig) -> JobReport {
         let elapsed = self.finished_at.saturating_sub(self.admitted_at);
         let secs = elapsed.as_secs_f64();
-        let energy = self.meter.total_joules();
+        let energy = self.meter.total_joules()
+            + self.link_bytes as f64 * pw.link_pj_per_byte * 1e-12
+            + self.flash_reads as f64 * pw.flash_read_uj * 1e-6;
         JobReport {
             id: self.id,
             network: self.spec.network.clone(),

@@ -71,6 +71,7 @@ fn run() -> Result<()> {
                         OptSpec { name: "jobs", help: "fleet: concurrent jobs", default: Some("3") },
                         OptSpec { name: "degrade", help: "fleet: fault dev:secs:factor", default: None },
                         OptSpec { name: "no-stage-io", help: "fleet: skip flash staging", default: None },
+                        OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
                     ],
                 )
             );
@@ -157,20 +158,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if args.flag("no-stage-io") {
         spec.stage_io = false;
     }
+    if args.flag("per-step") {
+        spec.fast_forward = false;
+    }
     if let Some(d) = args.get("degrade") {
         spec.faults.push(FaultSpec::parse_cli(d)?);
     }
 
     println!(
-        "fleet: {} CSDs, {} jobs, {} fault(s), stage_io={}",
+        "fleet: {} CSDs, {} jobs, {} fault(s), stage_io={}, fast_forward={}",
         spec.total_csds,
         spec.jobs.len(),
         spec.faults.len(),
-        spec.stage_io
+        spec.stage_io,
+        spec.fast_forward
     );
     let mut fleet = Fleet::new(FleetConfig {
         total_csds: spec.total_csds,
         stage_io: spec.stage_io,
+        fast_forward: spec.fast_forward,
         ..Default::default()
     });
     for job in &spec.jobs {
@@ -196,8 +202,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 format!("{}%", f(100.0 * j.sync_fraction, 0)),
                 f(j.j_per_image, 2),
                 j.retunes.to_string(),
-                format!("{}", j.queue_wait),
-                format!("{}", j.elapsed),
+                j.queue_wait.to_string(),
+                j.elapsed.to_string(),
             ]
         })
         .collect();

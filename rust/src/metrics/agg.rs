@@ -28,6 +28,24 @@ impl RunningStat {
         self.sum += v;
     }
 
+    /// Fold another stat into this one — roll-ups across runs or
+    /// shards (e.g. the fleet bench's queue-wait summary over a whole
+    /// multi-tenancy sweep).
+    pub fn merge(&mut self, other: &RunningStat) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+    }
+
     pub fn count(&self) -> usize {
         self.n
     }
@@ -79,5 +97,24 @@ mod tests {
         assert_eq!(s.min(), 7.5);
         assert_eq!(s.max(), 7.5);
         assert_eq!(s.mean(), 7.5);
+    }
+
+    #[test]
+    fn merge_folds_all_moments() {
+        let mut a = RunningStat::new();
+        a.add(1.0);
+        a.add(3.0);
+        let mut b = RunningStat::new();
+        b.add(-2.0);
+        let mut empty = RunningStat::new();
+        a.merge(&b);
+        a.merge(&empty);
+        empty.merge(&a);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min(), -2.0);
+        assert_eq!(a.max(), 3.0);
+        assert!((a.mean() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(empty.count(), 3);
+        assert_eq!(empty.min(), -2.0);
     }
 }

@@ -1,7 +1,11 @@
 //! Micro-benchmark harness (criterion-lite): warmup, timed iterations,
 //! robust summary statistics. Used by every target in rust/benches/.
+//! Also the machine-readable bench ledger (`BENCH_<pr>.json`) that
+//! tracks the perf trajectory across PRs.
 
 use std::time::Instant;
+
+use crate::util::Json;
 
 /// Summary of one benchmark.
 #[derive(Debug, Clone)]
@@ -73,6 +77,68 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
     }
 }
 
+/// Default path of the machine-readable bench ledger, relative to the
+/// working directory `cargo bench` runs targets in (the workspace
+/// root). Overridable via `STANNIS_BENCH_JSON`.
+pub const BENCH_JSON_PATH: &str = "BENCH_2.json";
+
+/// Merge `values` into `section` of the bench ledger and rewrite it.
+///
+/// Each bench target owns one section, so running targets in any order
+/// accumulates a single JSON file (`{"simcore": {...}, "fleet": {...}}`)
+/// that CI prints and future PRs diff against. Failures are reported to
+/// stderr but never fail the bench — the ledger is telemetry, not a
+/// gate.
+pub fn record_bench_json(section: &str, values: &[(&str, f64)]) {
+    let path = std::env::var("STANNIS_BENCH_JSON")
+        .unwrap_or_else(|_| BENCH_JSON_PATH.to_string());
+    let existing = std::fs::read_to_string(&path).ok();
+    let merged = merge_bench_json(existing.as_deref(), section, values);
+    if let Err(e) = std::fs::write(&path, merged) {
+        eprintln!("warning: could not write bench ledger {path}: {e}");
+    } else {
+        println!("[bench ledger] {path} <- section {section:?} ({} values)", values.len());
+    }
+}
+
+/// Pure merge step of [`record_bench_json`] (separated for testing):
+/// returns the new ledger text given the existing one.
+pub fn merge_bench_json(existing: Option<&str>, section: &str, values: &[(&str, f64)]) -> String {
+    let mut root = match existing.and_then(|t| Json::parse(t).ok()) {
+        Some(Json::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    let mut sec = match root.remove(section) {
+        Some(Json::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    for (k, v) in values {
+        let val = if v.is_finite() { Json::Num(*v) } else { Json::Null };
+        sec.insert((*k).to_string(), val);
+    }
+    root.insert(section.to_string(), Json::Obj(sec));
+    // Stamp the ledger as measured: the checked-in file ships with a
+    // placeholder `_meta.status`, which must not outlive real numbers.
+    let mut meta = match root.remove("_meta") {
+        Some(Json::Obj(m)) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    meta.entry("schema".to_string()).or_insert_with(|| Json::Str("stannis-bench-v1".into()));
+    meta.insert("status".to_string(), Json::Str("measured".into()));
+    meta.insert(
+        "note".to_string(),
+        Json::Str(
+            "Written by cargo bench targets via metrics::record_bench_json; \
+             each target owns one section."
+                .into(),
+        ),
+    );
+    root.insert("_meta".to_string(), Json::Obj(meta));
+    let mut out = Json::Obj(root).to_string();
+    out.push('\n');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +159,42 @@ mod tests {
     #[should_panic]
     fn zero_iters_rejected() {
         bench("bad", 0, 0, || {});
+    }
+
+    #[test]
+    fn bench_json_merge_preserves_other_sections() {
+        let first = merge_bench_json(None, "simcore", &[("events_per_sec", 1.5e6)]);
+        let second = merge_bench_json(Some(&first), "fleet", &[("speedup", 12.0)]);
+        // Update one key of an existing section; keep the sibling.
+        let third =
+            merge_bench_json(Some(&second), "simcore", &[("events_per_sec", 2.0e6)]);
+        let j = Json::parse(third.trim()).unwrap();
+        let sim = j.field("simcore").unwrap();
+        assert_eq!(sim.field("events_per_sec").unwrap().as_f64().unwrap(), 2.0e6);
+        assert_eq!(
+            j.field("fleet").unwrap().field("speedup").unwrap().as_f64().unwrap(),
+            12.0
+        );
+        // Corrupt/absent ledgers start fresh; non-finite values are null.
+        let fresh = merge_bench_json(Some("not json"), "s", &[("nan", f64::NAN)]);
+        assert_eq!(
+            Json::parse(fresh.trim()).unwrap().field("s").unwrap().field("nan").unwrap(),
+            &Json::Null
+        );
+    }
+
+    #[test]
+    fn bench_json_merge_replaces_placeholder_meta() {
+        // A checked-in ledger carries a pending-placeholder _meta; the
+        // first real recording must re-stamp it as measured.
+        let placeholder = r#"{"_meta":{"schema":"stannis-bench-v1",
+            "status":"pending-first-measured-run","note":"placeholders"},
+            "simcore":{"events_per_sec":null}}"#;
+        let out = merge_bench_json(Some(placeholder), "simcore", &[("events_per_sec", 1.0)]);
+        let j = Json::parse(out.trim()).unwrap();
+        let meta = j.field("_meta").unwrap();
+        assert_eq!(meta.field("status").unwrap().as_str().unwrap(), "measured");
+        assert_eq!(meta.field("schema").unwrap().as_str().unwrap(), "stannis-bench-v1");
+        assert!(!meta.field("note").unwrap().as_str().unwrap().contains("placeholder"));
     }
 }

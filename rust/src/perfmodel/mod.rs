@@ -13,6 +13,14 @@
 //! which matches both quoted saturation points and gives Algorithm 1 a
 //! realistic landscape to search. Sync costs are *not* modeled here —
 //! they come from the tunnel + allreduce modules.
+//!
+//! Network names are interned into [`NetId`]s at config-load /
+//! admission time; the `*_id` methods are the allocation-free hot path
+//! and the string-keyed methods are compatibility shims over
+//! [`NetId::resolve`] (DESIGN.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -89,20 +97,67 @@ pub const CALIBRATION: &[NetCalib] = &[
     },
 ];
 
-/// Map repo network names (scaled models) to calibration rows.
-pub fn calib_for(name: &str) -> Result<&'static NetCalib> {
-    let key = match name {
-        "mobilenet_v2" | "mobilenet_v2_s" | "mobilenetv2" => "mobilenet_v2",
-        "nasnet" | "nasnet_s" => "nasnet",
-        "inception_v3" | "inception_v3_s" | "inceptionv3" => "inception_v3",
-        "squeezenet" | "squeezenet_s" => "squeezenet",
-        other => other,
-    };
-    CALIBRATION
-        .iter()
-        .find(|c| c.name == key)
-        .ok_or_else(|| anyhow::anyhow!("no calibration for network {name:?}"))
+/// Interned network identity: an index into [`CALIBRATION`].
+///
+/// Resolved once (config load / job admission) so the per-step hot
+/// path — `ips_id` / `step_time_id` / `sync_bytes` — is plain array
+/// indexing instead of a string-compare chain (DESIGN.md §Perf). The
+/// string-keyed entry points remain as thin shims over
+/// [`NetId::resolve`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NetId(u16);
+
+impl NetId {
+    /// Map a repo network name (including scaled-model aliases) to its
+    /// calibration row.
+    pub fn resolve(name: &str) -> Result<NetId> {
+        let key = match name {
+            "mobilenet_v2" | "mobilenet_v2_s" | "mobilenetv2" => "mobilenet_v2",
+            "nasnet" | "nasnet_s" => "nasnet",
+            "inception_v3" | "inception_v3_s" | "inceptionv3" => "inception_v3",
+            "squeezenet" | "squeezenet_s" => "squeezenet",
+            other => other,
+        };
+        CALIBRATION
+            .iter()
+            .position(|c| c.name == key)
+            .map(|i| NetId(i as u16))
+            .ok_or_else(|| anyhow::anyhow!("no calibration for network {name:?}"))
+    }
+
+    /// The calibration row — a direct array index.
+    #[inline]
+    pub fn calib(self) -> &'static NetCalib {
+        &CALIBRATION[self.0 as usize]
+    }
+
+    /// Canonical (calibration-table) name.
+    pub fn name(self) -> &'static str {
+        self.calib().name
+    }
+
+    /// Gradient bytes synchronized per step (paper-scale params, f32).
+    #[inline]
+    pub fn sync_bytes(self) -> usize {
+        self.calib().params as usize * 4
+    }
+
+    /// Every interned network, in calibration order.
+    pub fn all() -> impl Iterator<Item = NetId> {
+        (0..CALIBRATION.len()).map(|i| NetId(i as u16))
+    }
 }
+
+/// Map repo network names (scaled models) to calibration rows — the
+/// historical string-keyed entry point, now a shim over [`NetId`].
+pub fn calib_for(name: &str) -> Result<&'static NetCalib> {
+    Ok(NetId::resolve(name)?.calib())
+}
+
+/// Memo key for [`PerfModel::step_time_cached`]. The scale factors are
+/// keyed by bit pattern so mutating `host_scale`/`newport_scale` after
+/// populating the cache can never serve a stale entry.
+type StepTimeKey = (Device, NetId, usize, u64, u64);
 
 /// The device model used by tuning/scheduling in modeled mode.
 #[derive(Debug, Clone)]
@@ -111,19 +166,35 @@ pub struct PerfModel {
     /// 1.0 = calibrated speed).
     pub host_scale: f64,
     pub newport_scale: f64,
+    /// Memoized step times for the Algorithm-1 tuning sweep, which
+    /// revisits the same (device, net, batch) probes many times.
+    memo: RefCell<HashMap<StepTimeKey, SimTime>>,
 }
 
 impl Default for PerfModel {
     fn default() -> Self {
-        Self { host_scale: 1.0, newport_scale: 1.0 }
+        Self::with_scales(1.0, 1.0)
     }
 }
 
 impl PerfModel {
-    /// Images/sec for (device, network) at a given batch size.
+    /// A model with per-device speed multipliers (1.0 = calibrated).
+    pub fn with_scales(host_scale: f64, newport_scale: f64) -> Self {
+        Self { host_scale, newport_scale, memo: RefCell::new(HashMap::new()) }
+    }
+
+    /// Images/sec for (device, network) at a given batch size — the
+    /// string-keyed shim over [`PerfModel::ips_id`].
     pub fn ips(&self, device: Device, network: &str, batch: usize) -> Result<f64> {
+        self.ips_id(device, NetId::resolve(network)?, batch)
+    }
+
+    /// Images/sec for an interned network: branch-free table lookup,
+    /// no allocation — the per-step hot path.
+    #[inline]
+    pub fn ips_id(&self, device: Device, net: NetId, batch: usize) -> Result<f64> {
         bail_on_zero_batch(batch)?;
-        let c = calib_for(network)?;
+        let c = net.calib();
         let (peak, half, scale) = match device {
             Device::HostXeon => (c.host_peak, c.host_bs_half, self.host_scale),
             Device::NewportIsp => (c.newport_peak, c.newport_bs_half, self.newport_scale),
@@ -132,15 +203,38 @@ impl PerfModel {
         Ok(scale * peak * bs / (bs + half))
     }
 
-    /// Wall time for one training step (one batch) on the device.
+    /// Wall time for one training step (one batch) on the device — the
+    /// string-keyed shim over [`PerfModel::step_time_id`].
     pub fn step_time(&self, device: Device, network: &str, batch: usize) -> Result<SimTime> {
-        let ips = self.ips(device, network, batch)?;
+        self.step_time_id(device, NetId::resolve(network)?, batch)
+    }
+
+    /// Step time for an interned network (pure computation, no cache —
+    /// callers on the simulation hot path construct throwaway models).
+    #[inline]
+    pub fn step_time_id(&self, device: Device, net: NetId, batch: usize) -> Result<SimTime> {
+        let ips = self.ips_id(device, net, batch)?;
         Ok(SimTime::from_secs_f64(batch as f64 / ips))
     }
 
-    /// Gradient bytes synchronized per step (paper-scale params, f32).
+    /// Memoized [`PerfModel::step_time_id`] for the tuning sweep:
+    /// Algorithm 1 probes the same batch ladder repeatedly, and
+    /// hypertuning-style searches multiply the probe count further.
+    pub fn step_time_cached(&self, device: Device, net: NetId, batch: usize) -> Result<SimTime> {
+        let key =
+            (device, net, batch, self.host_scale.to_bits(), self.newport_scale.to_bits());
+        if let Some(&t) = self.memo.borrow().get(&key) {
+            return Ok(t);
+        }
+        let t = self.step_time_id(device, net, batch)?;
+        self.memo.borrow_mut().insert(key, t);
+        Ok(t)
+    }
+
+    /// Gradient bytes synchronized per step (paper-scale params, f32)
+    /// — string-keyed shim over [`NetId::sync_bytes`].
     pub fn sync_bytes(&self, network: &str) -> Result<usize> {
-        Ok(calib_for(network)?.params as usize * 4)
+        Ok(NetId::resolve(network)?.sync_bytes())
     }
 }
 
@@ -219,5 +313,40 @@ mod tests {
     fn sync_bytes_paper_scale() {
         let m = PerfModel::default();
         assert_eq!(m.sync_bytes("mobilenet_v2").unwrap(), 13_880_000);
+    }
+
+    #[test]
+    fn interned_ids_agree_with_string_shims() {
+        let m = PerfModel::with_scales(1.0, 0.7);
+        for name in ["mobilenet_v2_s", "nasnet", "inception_v3", "squeezenet_s"] {
+            let id = NetId::resolve(name).unwrap();
+            for bs in [1usize, 16, 64] {
+                assert_eq!(
+                    m.ips(Device::NewportIsp, name, bs).unwrap(),
+                    m.ips_id(Device::NewportIsp, id, bs).unwrap()
+                );
+                assert_eq!(
+                    m.step_time(Device::HostXeon, name, bs).unwrap(),
+                    m.step_time_id(Device::HostXeon, id, bs).unwrap()
+                );
+            }
+            assert_eq!(m.sync_bytes(name).unwrap(), id.sync_bytes());
+            assert_eq!(calib_for(name).unwrap().name, id.name());
+        }
+        assert!(NetId::resolve("nonexistent_net").is_err());
+        assert_eq!(NetId::all().count(), CALIBRATION.len());
+    }
+
+    #[test]
+    fn memo_is_coherent_under_scale_mutation() {
+        let mut m = PerfModel::default();
+        let id = NetId::resolve("mobilenet_v2").unwrap();
+        let t1 = m.step_time_cached(Device::HostXeon, id, 32).unwrap();
+        assert_eq!(t1, m.step_time_cached(Device::HostXeon, id, 32).unwrap());
+        // Mutating a pub scale field must not serve the stale entry.
+        m.host_scale = 0.5;
+        let t2 = m.step_time_cached(Device::HostXeon, id, 32).unwrap();
+        assert!(t2 > t1, "half-speed host must take longer: {t1} -> {t2}");
+        assert_eq!(t2, m.step_time_id(Device::HostXeon, id, 32).unwrap());
     }
 }

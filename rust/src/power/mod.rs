@@ -72,10 +72,21 @@ impl PowerConfig {
 }
 
 /// Energy ledger, integrated over simulated time.
+///
+/// Power draws are accumulated as *integer simulated time* per
+/// `(component, watts)` pair and converted to joules only when read.
+/// Because `SimTime` addition is exact, the total is independent of how
+/// an interval was chopped into sub-intervals — integrating a window in
+/// one `add_power` call is bit-identical to integrating it event by
+/// event. This is what lets the steady-state fast-forward path book the
+/// same energy as the per-step path down to the last bit
+/// (DESIGN.md §Perf).
 #[derive(Debug, Clone, Default)]
 pub struct EnergyMeter {
-    joules: f64,
-    by_component: std::collections::BTreeMap<&'static str, f64>,
+    /// Exact time integrated per (component, watts-bit-pattern).
+    power: std::collections::BTreeMap<(&'static str, u64), SimTime>,
+    /// Direct energy events (page read, link transfer), joules.
+    energy: std::collections::BTreeMap<&'static str, f64>,
 }
 
 impl EnergyMeter {
@@ -85,27 +96,41 @@ impl EnergyMeter {
 
     /// Integrate `watts` over `dt`.
     pub fn add_power(&mut self, component: &'static str, watts: f64, dt: SimTime) {
-        let j = watts * dt.as_secs_f64();
-        self.joules += j;
-        *self.by_component.entry(component).or_insert(0.0) += j;
+        *self.power.entry((component, watts.to_bits())).or_insert(SimTime::ZERO) += dt;
     }
 
     /// Add a fixed energy event (page read, link transfer).
     pub fn add_energy(&mut self, component: &'static str, joules: f64) {
-        self.joules += joules;
-        *self.by_component.entry(component).or_insert(0.0) += joules;
+        *self.energy.entry(component).or_insert(0.0) += joules;
     }
 
     pub fn total_joules(&self) -> f64 {
-        self.joules
+        // Deterministic summation order (BTreeMap key order), so two
+        // meters holding identical ledgers report identical floats.
+        let p: f64 = self
+            .power
+            .iter()
+            .map(|(&(_, w), &dt)| f64::from_bits(w) * dt.as_secs_f64())
+            .sum();
+        p + self.energy.values().sum::<f64>()
     }
 
     pub fn component_joules(&self, component: &str) -> f64 {
-        self.by_component.get(component).copied().unwrap_or(0.0)
+        let p: f64 = self
+            .power
+            .iter()
+            .filter(|((c, _), _)| *c == component)
+            .map(|(&(_, w), &dt)| f64::from_bits(w) * dt.as_secs_f64())
+            .sum();
+        p + self.energy.get(component).copied().unwrap_or(0.0)
     }
 
     pub fn breakdown(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
-        self.by_component.iter().map(|(k, v)| (*k, *v))
+        let mut by: std::collections::BTreeMap<&'static str, f64> = self.energy.clone();
+        for (&(c, w), &dt) in &self.power {
+            *by.entry(c).or_insert(0.0) += f64::from_bits(w) * dt.as_secs_f64();
+        }
+        by.into_iter()
     }
 }
 
@@ -189,6 +214,32 @@ mod tests {
         assert!((m.total_joules() - 1000.5).abs() < 1e-9);
         assert!((m.component_joules("host") - 1000.0).abs() < 1e-9);
         assert_eq!(m.component_joules("nope"), 0.0);
+    }
+
+    #[test]
+    fn integration_is_chop_invariant() {
+        // The fast-forward guarantee: one big interval and many small
+        // ones must produce the *bit-identical* total.
+        let mut whole = EnergyMeter::new();
+        whole.add_power("newport", 3.1, SimTime::ns(7 * 1_234_567));
+        whole.add_power("host", 145.0, SimTime::ns(7 * 1_234_567));
+        let mut chopped = EnergyMeter::new();
+        for _ in 0..7 {
+            chopped.add_power("newport", 3.1, SimTime::ns(1_234_567));
+            chopped.add_power("host", 145.0, SimTime::ns(1_234_567));
+        }
+        assert_eq!(whole.total_joules().to_bits(), chopped.total_joules().to_bits());
+        assert_eq!(
+            whole.component_joules("newport").to_bits(),
+            chopped.component_joules("newport").to_bits()
+        );
+        let a: Vec<_> = whole.breakdown().collect();
+        let b: Vec<_> = chopped.breakdown().collect();
+        assert_eq!(a.len(), b.len());
+        for ((ka, va), (kb, vb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
     }
 
     #[test]

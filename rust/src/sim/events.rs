@@ -1,4 +1,12 @@
 //! Time-ordered event queue with deterministic tie-breaking.
+//!
+//! Slab-backed: payloads live inline in a generational slab and the
+//! binary heap holds only `(time, seq, slot, stamp)` keys, so the hot
+//! schedule/pop cycle never touches a hash map and `peek_time` needs no
+//! exclusive access. Cancellation is O(1) (bump the slot stamp, making
+//! the heap entry a *tombstone*); tombstones are popped over lazily and
+//! the heap is compacted whenever they exceed half of it, so cancelled
+//! events can never dominate memory or pop cost (DESIGN.md §Perf).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -15,88 +23,213 @@ pub struct ScheduledEvent<E> {
     pub payload: E,
 }
 
+/// Heap key: `(time, insertion sequence, slot, stamp)`. The sequence is
+/// unique, so `slot`/`stamp` never influence ordering — they only route
+/// the popped key back to its slab payload and expose staleness.
+type HeapKey = Reverse<(SimTime, u64, u32, u32)>;
+
+/// One slab cell. `stamp` is bumped every time the cell is freed, so a
+/// heap entry (or an external event id) carrying an older stamp is
+/// recognisably stale even after the cell is reused.
+#[derive(Debug)]
+struct Slot<E> {
+    stamp: u32,
+    seq: u64,
+    payload: Option<E>,
+}
+
+/// Don't bother compacting tiny heaps: below this many tombstones the
+/// lazy pop-over path is cheaper than a rebuild.
+const COMPACT_FLOOR: usize = 64;
+
 /// Min-heap of events ordered by (time, insertion sequence).
 ///
 /// The sequence tie-break makes simulation runs deterministic even when
 /// many events share a timestamp — a requirement for byte-reproducible
 /// experiment logs.
+///
+/// Invariant: the heap top is never a tombstone (every mutating method
+/// restores this), which is what lets [`EventQueue::peek_time`] take
+/// `&self`.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<(SimTime, u64)>>,
-    payloads: std::collections::HashMap<u64, (SimTime, E)>,
+    heap: BinaryHeap<HeapKey>,
+    slots: Vec<Slot<E>>,
+    free: Vec<u32>,
     next_seq: u64,
+    /// Scheduled-and-not-yet-popped events (excludes tombstones).
+    live: usize,
+    /// Stale heap entries awaiting lazy removal or compaction.
+    tombstones: usize,
 }
 
+// Manual (not derived) so `E` needs no `Default` bound.
+#[allow(clippy::derivable_impls)]
 impl<E> Default for EventQueue<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
+fn event_id(slot: u32, stamp: u32) -> u64 {
+    (u64::from(stamp) << 32) | u64::from(slot)
+}
+
+fn split_id(id: u64) -> (u32, u32) {
+    (id as u32, (id >> 32) as u32)
+}
+
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         Self {
             heap: BinaryHeap::new(),
-            payloads: std::collections::HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
             next_seq: 0,
+            live: 0,
+            tombstones: 0,
         }
     }
 
+    /// Number of pending (non-cancelled) events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.live == 0
     }
 
     /// Schedule `payload` at absolute time `at`; returns the event id.
     pub fn schedule(&mut self, at: SimTime, payload: E) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse((at, seq)));
-        self.payloads.insert(seq, (at, payload));
-        seq
+        let slot = match self.free.pop() {
+            Some(slot) => {
+                let s = &mut self.slots[slot as usize];
+                s.seq = seq;
+                s.payload = Some(payload);
+                slot
+            }
+            None => {
+                let slot = u32::try_from(self.slots.len()).expect("slab capacity");
+                self.slots.push(Slot { stamp: 0, seq, payload: Some(payload) });
+                slot
+            }
+        };
+        let stamp = self.slots[slot as usize].stamp;
+        self.heap.push(Reverse((at, seq, slot, stamp)));
+        self.live += 1;
+        event_id(slot, stamp)
     }
 
     /// Cancel a scheduled event by id. Returns true if it was pending.
     pub fn cancel(&mut self, id: u64) -> bool {
-        self.payloads.remove(&id).is_some()
+        let (slot, stamp) = split_id(id);
+        let Some(s) = self.slots.get_mut(slot as usize) else { return false };
+        if s.stamp != stamp || s.payload.is_none() {
+            return false;
+        }
+        s.payload = None;
+        s.stamp = s.stamp.wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        self.tombstones += 1;
+        self.fix_top();
+        self.maybe_compact();
+        true
     }
 
-    /// Time of the next (non-cancelled) event.
-    pub fn peek_time(&mut self) -> Option<SimTime> {
-        self.skip_cancelled();
-        self.heap.peek().map(|Reverse((t, _))| *t)
+    /// Insertion sequence number of a pending event (None if the id is
+    /// stale). Sequence order is the deterministic tie-break among
+    /// same-time events — the fleet's fast-forward uses it to replay
+    /// scheduling order exactly.
+    pub fn seq_of(&self, id: u64) -> Option<u64> {
+        let (slot, stamp) = split_id(id);
+        let s = self.slots.get(slot as usize)?;
+        (s.stamp == stamp && s.payload.is_some()).then_some(s.seq)
+    }
+
+    /// Time of the next (non-cancelled) event. `&self`: the top of the
+    /// heap is live by invariant, so no lazy cleanup is needed here.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse((t, ..))| *t)
     }
 
     /// Pop the next event (earliest time, FIFO among ties).
     pub fn pop(&mut self) -> Option<ScheduledEvent<E>> {
-        self.skip_cancelled();
-        let Reverse((at, seq)) = self.heap.pop()?;
-        let (_, payload) = self.payloads.remove(&seq).expect("payload present");
+        let Reverse((at, seq, slot, _stamp)) = self.heap.pop()?;
+        let s = &mut self.slots[slot as usize];
+        let payload = s.payload.take().expect("heap top is live by invariant");
+        s.stamp = s.stamp.wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        self.fix_top();
         Some(ScheduledEvent { at, seq, payload })
     }
 
-    /// Pop every event with time <= `until`, in order.
-    pub fn pop_until(&mut self, until: SimTime) -> Vec<ScheduledEvent<E>> {
-        let mut out = Vec::new();
-        while let Some(t) = self.peek_time() {
-            if t > until {
-                break;
-            }
-            out.push(self.pop().unwrap());
-        }
-        out
+    /// Drain every event with time <= `until`, in order, without
+    /// allocating. The iterator is lazy: events stay queued until
+    /// consumed, so dropping it early leaves the remainder pending.
+    pub fn drain_until(&mut self, until: SimTime) -> DrainUntil<'_, E> {
+        DrainUntil { queue: self, until }
     }
 
-    fn skip_cancelled(&mut self) {
-        while let Some(Reverse((_, seq))) = self.heap.peek() {
-            if self.payloads.contains_key(seq) {
+    /// Pop every event with time <= `until`, in order. Compatibility
+    /// wrapper over [`EventQueue::drain_until`] for callers that want
+    /// an owned batch.
+    pub fn pop_until(&mut self, until: SimTime) -> Vec<ScheduledEvent<E>> {
+        self.drain_until(until).collect()
+    }
+
+    /// Restore the "heap top is live" invariant after a mutation.
+    fn fix_top(&mut self) {
+        while let Some(Reverse((_, _, slot, stamp))) = self.heap.peek() {
+            let s = &self.slots[*slot as usize];
+            if s.stamp == *stamp && s.payload.is_some() {
                 return;
             }
             self.heap.pop();
+            self.tombstones -= 1;
         }
+    }
+
+    /// Rebuild the heap without tombstones once they outnumber live
+    /// entries — keeps heap size O(live) no matter how many events are
+    /// cancelled (the former design leaked them until popped over).
+    fn maybe_compact(&mut self) {
+        if self.tombstones <= COMPACT_FLOOR || self.tombstones * 2 <= self.heap.len() {
+            return;
+        }
+        let entries = std::mem::take(&mut self.heap).into_vec();
+        let slots = &self.slots;
+        self.heap = entries
+            .into_iter()
+            .filter(|Reverse((_, _, slot, stamp))| {
+                let s = &slots[*slot as usize];
+                s.stamp == *stamp && s.payload.is_some()
+            })
+            .collect();
+        self.tombstones = 0;
+    }
+}
+
+/// Borrowing iterator over events up to (and including) a deadline —
+/// see [`EventQueue::drain_until`].
+#[derive(Debug)]
+pub struct DrainUntil<'a, E> {
+    queue: &'a mut EventQueue<E>,
+    until: SimTime,
+}
+
+impl<E> Iterator for DrainUntil<'_, E> {
+    type Item = ScheduledEvent<E>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.queue.peek_time()? > self.until {
+            return None;
+        }
+        self.queue.pop()
     }
 }
 
@@ -128,6 +261,28 @@ mod tests {
     }
 
     #[test]
+    fn peek_time_needs_no_exclusive_access() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::ms(3), ());
+        let shared: &EventQueue<()> = &q;
+        assert_eq!(shared.peek_time(), Some(SimTime::ms(3)));
+    }
+
+    #[test]
+    fn stale_id_cannot_touch_reused_slot() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(SimTime::ms(1), "a");
+        assert!(q.cancel(a));
+        // The freed slot is reused; the stale id must not hit it.
+        let b = q.schedule(SimTime::ms(2), "b");
+        assert_ne!(a, b, "reuse must be stamped");
+        assert!(!q.cancel(a));
+        assert_eq!(q.seq_of(a), None);
+        assert_eq!(q.seq_of(b), Some(1));
+        assert_eq!(q.pop().unwrap().payload, "b");
+    }
+
+    #[test]
     fn pop_until_boundary_inclusive() {
         let mut q = EventQueue::new();
         for i in 1..=5u64 {
@@ -136,6 +291,58 @@ mod tests {
         let drained = q.pop_until(SimTime::ms(3));
         assert_eq!(drained.iter().map(|e| e.payload).collect::<Vec<_>>(), vec![1, 2, 3]);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_until_matches_pop_until_at_the_boundary() {
+        // Regression: the allocation-free iterator must keep the old
+        // Vec-returning semantics exactly — inclusive deadline, events
+        // beyond it untouched, early drop leaves the rest pending.
+        let build = || {
+            let mut q = EventQueue::new();
+            for i in [4u64, 1, 3, 3, 2, 5] {
+                q.schedule(SimTime::ms(i), i);
+            }
+            q
+        };
+        let mut a = build();
+        let mut b = build();
+        let via_vec = a.pop_until(SimTime::ms(3));
+        let via_iter: Vec<_> = b.drain_until(SimTime::ms(3)).collect();
+        assert_eq!(via_vec, via_iter);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.peek_time(), b.peek_time());
+
+        // Early drop: one event consumed, the rest still queued.
+        let mut c = build();
+        let first = c.drain_until(SimTime::ms(3)).next().unwrap();
+        assert_eq!(first.payload, 1);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn tombstones_stay_bounded() {
+        let mut q = EventQueue::new();
+        let ids: Vec<u64> = (0..4096u64).map(|i| q.schedule(SimTime::ns(i), i)).collect();
+        for id in &ids[1..] {
+            assert!(q.cancel(*id));
+            // The compaction bound: tombstones never exceed half the
+            // heap beyond the small-rebuild floor.
+            assert!(
+                q.tombstones <= COMPACT_FLOOR || q.tombstones * 2 <= q.heap.len(),
+                "tombstones {} vs heap {}",
+                q.tombstones,
+                q.heap.len()
+            );
+        }
+        assert_eq!(q.len(), 1);
+        assert!(
+            q.heap.len() <= 1 + COMPACT_FLOOR,
+            "cancelled events must not linger in the heap: {}",
+            q.heap.len()
+        );
+        assert_eq!(q.pop().unwrap().payload, 0);
+        assert!(q.pop().is_none());
     }
 
     #[test]
@@ -155,6 +362,54 @@ mod tests {
                     last
                 );
                 last = (e.at, e.seq);
+            }
+        });
+    }
+
+    #[test]
+    fn property_matches_reference_model() {
+        // The slab queue must behave exactly like a naive sorted-Vec
+        // model under random schedule/cancel/pop interleavings.
+        crate::util::prop::check("slab queue == reference model", |rng| {
+            let mut q = EventQueue::new();
+            // (id, at, seq, payload) of still-pending events.
+            let mut model: Vec<(u64, SimTime, u64, u64)> = Vec::new();
+            let mut seq = 0u64;
+            for step in 0..200u64 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let at = SimTime::ns(rng.below(50));
+                        let id = q.schedule(at, step);
+                        model.push((id, at, seq, step));
+                        seq += 1;
+                    }
+                    2 => {
+                        if !model.is_empty() {
+                            let i = rng.usize_below(model.len());
+                            let (id, ..) = model.swap_remove(i);
+                            assert!(q.cancel(id));
+                            assert!(!q.cancel(id));
+                        }
+                    }
+                    _ => {
+                        let want = model
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, &(_, at, s, _))| (at, s))
+                            .map(|(i, _)| i);
+                        match want {
+                            Some(i) => {
+                                let (_, at, s, payload) = model.remove(i);
+                                let got = q.pop().unwrap();
+                                assert_eq!((got.at, got.seq, got.payload), (at, s, payload));
+                            }
+                            None => assert!(q.pop().is_none()),
+                        }
+                    }
+                }
+                let next = model.iter().map(|&(_, at, s, _)| (at, s)).min();
+                assert_eq!(q.peek_time(), next.map(|(at, _)| at));
+                assert_eq!(q.len(), model.len());
             }
         });
     }

@@ -8,8 +8,9 @@
 //!   scheduled on them. Flash channels, the PCIe link, the ISP cores
 //!   and the host CPU are all timelines; queueing delay falls out of
 //!   `max(now, next_free)`.
-//! * [`EventQueue`] — a time-ordered event heap (deterministic FIFO
-//!   tie-break) for background processes that are not simple FIFO
+//! * [`EventQueue`] — a slab-backed, time-ordered event queue
+//!   (deterministic FIFO tie-break, O(1) cancellation with bounded
+//!   tombstones) for background processes that are not simple FIFO
 //!   service: garbage collection, DLM heartbeats, fault injection.
 //!
 //! Simulated time is [`SimTime`] nanoseconds. All models are
@@ -19,6 +20,6 @@ mod events;
 mod resource;
 mod time;
 
-pub use events::{EventQueue, ScheduledEvent};
+pub use events::{DrainUntil, EventQueue, ScheduledEvent};
 pub use resource::{MultiTimeline, Timeline};
 pub use time::SimTime;

@@ -24,8 +24,20 @@ fn base_seed() -> u64 {
 
 /// Run `prop` over `default_cases()` seeded RNGs. The property gets a
 /// fresh deterministic RNG per case and must panic (assert) on failure.
-pub fn check(name: &str, mut prop: impl FnMut(&mut Rng)) {
-    let cases = default_cases();
+pub fn check(name: &str, prop: impl FnMut(&mut Rng)) {
+    check_n(name, default_cases(), prop);
+}
+
+/// [`check`] with an explicit case count — for expensive properties
+/// (e.g. whole-fleet equivalence runs) that would blow the test budget
+/// at the default width. `STANNIS_PROP_CASES` only widens an explicit
+/// count (a deliberate wide local run must never silently *shrink* a
+/// deliberately-sized property).
+pub fn check_n(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    let cases = match std::env::var("STANNIS_PROP_CASES") {
+        Ok(v) => v.parse().map_or(cases, |env: u64| env.max(cases)),
+        Err(_) => cases,
+    };
     let seed0 = base_seed();
     for case in 0..cases {
         let seed = seed0 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -56,6 +68,16 @@ mod tests {
             let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
             assert_eq!(a + b, b + a);
         });
+    }
+
+    #[test]
+    fn check_n_runs_exactly_n_cases() {
+        if std::env::var("STANNIS_PROP_CASES").is_ok() {
+            return; // the env override intentionally wins
+        }
+        let mut ran = 0u64;
+        check_n("counts cases", 7, |_| ran += 1);
+        assert_eq!(ran, 7);
     }
 
     #[test]

@@ -98,6 +98,7 @@ fn modeled_schedule_over_real_devices_accounts_io() {
             steps: 4,
             image_bytes: 4096,
             stage_io: true,
+            per_step: false,
         })
         .unwrap();
     assert!(r.flash_reads > 0);

@@ -15,7 +15,7 @@ fn degraded_newport_gets_smaller_batch_and_less_work() {
     // proportionally lighter schedule by Algorithm 1.
     let cfg = TuneConfig::default();
     let mut healthy = PerfModel::default();
-    let mut degraded = PerfModel { newport_scale: 0.6, ..Default::default() };
+    let mut degraded = PerfModel::with_scales(1.0, 0.6);
     let h = tune(&mut healthy, "mobilenet_v2", &cfg).unwrap();
     let d = tune(&mut degraded, "mobilenet_v2", &cfg).unwrap();
     assert!(d.newport_ips < h.newport_ips * 0.7);
@@ -49,6 +49,7 @@ fn slow_tunnel_hurts_big_models_most() {
                 steps: 3,
                 image_bytes: 12 * 1024,
                 stage_io: false,
+                per_step: false,
             })
             .unwrap()
             .images_per_sec;

@@ -187,6 +187,77 @@ fn unplaceable_job_is_an_error() {
     assert!(fl.run().is_err());
 }
 
+/// The steady-state fast-forward is an *exact* optimization: across
+/// randomized fleets (shapes, queueing, faults), the analytic path and
+/// the per-step reference produce bit-identical times, step counts,
+/// energy and link-byte totals.
+#[test]
+fn fast_forward_is_bit_identical_to_per_step() {
+    stannis::util::prop::check_n("fleet fast-forward equivalence", 24, |rng| {
+        let pool = 2 + rng.usize_below(5); // 2..=6 bays
+        let n_jobs = 1 + rng.usize_below(3); // 1..=3 jobs
+        let nets = ["mobilenet_v2", "squeezenet", "nasnet", "inception_v3"];
+        let specs: Vec<ExperimentConfig> = (0..n_jobs)
+            .map(|_| {
+                let num_csds = rng.usize_below(pool + 1);
+                ExperimentConfig {
+                    network: nets[rng.usize_below(nets.len())].into(),
+                    num_csds,
+                    // Every job needs at least one worker.
+                    include_host: num_csds == 0 || rng.bool(0.5),
+                    steps: 1 + rng.usize_below(24),
+                    ..Default::default()
+                }
+            })
+            .collect();
+        let faults: Vec<(u64, usize, f64)> = (0..rng.usize_below(3))
+            .map(|_| {
+                (rng.below(200_000_000_000), rng.usize_below(pool), 0.3 + 0.6 * rng.f64())
+            })
+            .collect();
+        let run = |fast_forward: bool| {
+            let mut fl = Fleet::new(FleetConfig {
+                total_csds: pool,
+                stage_io: false,
+                fast_forward,
+                ..Default::default()
+            });
+            for s in &specs {
+                fl.submit(s.clone());
+            }
+            for &(at_ns, device, factor) in &faults {
+                fl.inject_degradation(SimTime::ns(at_ns), device, factor);
+            }
+            fl.run().unwrap()
+        };
+        let a = run(true);
+        let b = run(false);
+        assert_eq!(a.makespan, b.makespan, "makespan must be bit-identical");
+        assert_eq!(a.total_images, b.total_images);
+        assert_eq!(a.link_bytes, b.link_bytes);
+        assert_eq!(a.retunes, b.retunes);
+        assert_eq!(
+            a.total_energy_j.to_bits(),
+            b.total_energy_j.to_bits(),
+            "energy must be bit-identical: {} vs {}",
+            a.total_energy_j,
+            b.total_energy_j
+        );
+        assert_eq!(a.overhead_energy_j.to_bits(), b.overhead_energy_j.to_bits());
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.admitted_at, y.admitted_at);
+            assert_eq!(x.finished_at, y.finished_at);
+            assert_eq!(x.steps_done, y.steps_done);
+            assert_eq!(x.images, y.images);
+            assert_eq!(x.link_bytes, y.link_bytes);
+            assert_eq!(x.retunes, y.retunes);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+    });
+}
+
 /// Determinism: the same submissions + fault schedule give identical
 /// reports (the fleet inherits the sim core's guarantee).
 #[test]
