@@ -1,0 +1,126 @@
+//! Bench: the fleet data plane — admission layout cost, the simulated
+//! price of staged reads, DLM-locked rebalance movement under a
+//! mid-run degradation, and the hot-path `Dataset::visibility` lookup
+//! (binary search over the private ranges).
+//!
+//! Emits machine-readable numbers to `BENCH_3.json` (section
+//! `"dataplane"`).
+//!
+//! Run: `cargo bench --bench dataplane`
+
+use std::time::Instant;
+
+use stannis::config::ExperimentConfig;
+use stannis::data::{Dataset, DatasetConfig, Visibility};
+use stannis::fleet::{Fleet, FleetConfig, FleetReport};
+use stannis::metrics::{bench, f, print_table, record_bench_json_to};
+use stannis::sim::SimTime;
+
+const BENCH_JSON: &str = "BENCH_3.json";
+
+fn run_fleet(data_plane: bool, fault: bool) -> (FleetReport, u64, f64) {
+    let mut fleet = Fleet::new(FleetConfig {
+        total_csds: 6,
+        stage_io: false,
+        data_plane,
+        ..Default::default()
+    });
+    for (i, net) in ["mobilenet_v2", "squeezenet"].iter().enumerate() {
+        fleet.submit(ExperimentConfig {
+            network: (*net).into(),
+            num_csds: 3,
+            include_host: i == 0,
+            steps: 25,
+            ..Default::default()
+        });
+    }
+    if fault {
+        fleet.inject_degradation(SimTime::secs(60), 0, 0.6);
+    }
+    let t0 = Instant::now();
+    let report = fleet.run().expect("fleet run");
+    let wall = t0.elapsed().as_secs_f64();
+    let layout_pages = fleet.data_plane().stats().layout_pages;
+    (report, layout_pages, wall)
+}
+
+fn main() {
+    // --- Simulated cost of the data plane ---------------------------------
+    let (with_dp, layout_pages, _) = run_fleet(true, false);
+    let (without_dp, _, _) = run_fleet(false, false);
+    let overhead =
+        with_dp.makespan.as_secs_f64() / without_dp.makespan.as_secs_f64().max(1e-12);
+    let mut rows = Vec::new();
+    for (label, r) in [("data plane", &with_dp), ("compute+sync only", &without_dp)] {
+        rows.push(vec![
+            label.to_string(),
+            r.makespan.to_string(),
+            f(r.aggregate_ips, 1),
+            f(r.jobs_energy_j, 0),
+        ]);
+    }
+    print_table(
+        "Data plane — simulated cost of physical staging (2 jobs, 6 CSDs)",
+        &["executor", "makespan", "agg img/s", "jobs J"],
+        &rows,
+    );
+    println!(
+        "staged reads stretch the makespan {}x; admission laid out {layout_pages} flash pages",
+        f(overhead, 3)
+    );
+
+    // --- Rebalance movement under a mid-run degradation -------------------
+    let (faulted, _, _) = run_fleet(true, true);
+    let moved = faulted.bytes_moved;
+    let lock_wait_ms = 1e3 * faulted.lock_wait.mean();
+    println!(
+        "\nrebalance: {} retune(s), {:.2} MB moved, mean shard-map lock wait {:.3} ms",
+        faulted.retunes,
+        moved as f64 / 1e6,
+        lock_wait_ms
+    );
+    assert!(faulted.retunes > 0, "the fault must land mid-run");
+    assert!(moved > 0, "the rebalance must move the public delta");
+
+    // --- Simulator overhead ----------------------------------------------
+    let r = bench("fleet_run(2 jobs, 6 CSDs, data plane, fault)", 1, 10, || {
+        std::hint::black_box(run_fleet(true, true));
+    });
+    println!("\n{}", r.summary());
+
+    // --- Hot-path visibility lookup (binary search) -----------------------
+    let d = Dataset::new(DatasetConfig {
+        public_images: 72_000,
+        private_per_csd: vec![500; 24],
+        ..Default::default()
+    })
+    .expect("dataset");
+    let total = d.len();
+    let mut acc = 0usize;
+    let vis = bench("visibility(24 private shards)", 10, 200, || {
+        for id in (0..total).step_by(97) {
+            acc += match d.visibility(id).expect("in range") {
+                Visibility::Public => 1,
+                Visibility::Private { csd } => csd,
+            };
+        }
+    });
+    std::hint::black_box(acc);
+    let lookups = total.div_ceil(97) as f64;
+    let per_lookup_ns = vis.mean_ns / lookups;
+    println!("{}", vis.summary());
+    println!("visibility lookup: {per_lookup_ns:.1} ns over {} ids", total);
+
+    record_bench_json_to(
+        BENCH_JSON,
+        "dataplane",
+        &[
+            ("run_2job_6csd_wall_s", r.mean_secs()),
+            ("makespan_overhead_ratio", overhead),
+            ("admission_layout_pages", layout_pages as f64),
+            ("rebalance_bytes_moved", moved as f64),
+            ("rebalance_lock_wait_ms", lock_wait_ms),
+            ("visibility_lookup_ns", per_lookup_ns),
+        ],
+    );
+}

@@ -23,7 +23,14 @@ const LARGE_STEPS: usize = 20_000;
 
 fn run_mix(n_jobs: usize, fault: Option<(usize, u64, f64)>) -> FleetReport {
     let spec = FleetExperimentConfig::default_mix(n_jobs, POOL);
-    let mut fleet = Fleet::new(FleetConfig { total_csds: POOL, ..Default::default() });
+    // Legacy per-step staging (data plane off) so this section keeps
+    // measuring the stateful staged-IO executor; the data plane has
+    // its own ledger in benches/dataplane.rs -> BENCH_3.json.
+    let mut fleet = Fleet::new(FleetConfig {
+        total_csds: POOL,
+        data_plane: false,
+        ..Default::default()
+    });
     for job in &spec.jobs {
         fleet.submit(job.clone());
     }

@@ -203,8 +203,13 @@ impl FaultSpec {
 pub struct FleetExperimentConfig {
     /// Devices in the shared pool.
     pub total_csds: usize,
-    /// Stage batches through the CSD flash substrate.
+    /// Legacy per-step flash staging (superseded by `data_plane`).
     pub stage_io: bool,
+    /// Model the physical data plane: flash-page shard maps at
+    /// admission, per-window staged-read charging, DLM-locked
+    /// public-shard movement on rebalance (DESIGN.md §Data-Plane).
+    /// Default on — the CLI spelling to disable is `--no-data-plane`.
+    pub data_plane: bool,
     /// Steady-state fast-forward (bit-identical closed-form windows;
     /// see DESIGN.md §Perf). `false` forces the per-step reference
     /// path — the CLI spelling is `--per-step`.
@@ -218,6 +223,7 @@ impl Default for FleetExperimentConfig {
         Self {
             total_csds: 12,
             stage_io: true,
+            data_plane: true,
             fast_forward: true,
             jobs: Vec::new(),
             faults: Vec::new(),
@@ -239,6 +245,9 @@ impl FleetExperimentConfig {
         }
         if let Some(v) = j.get("stage_io") {
             out.stage_io = v.as_bool()?;
+        }
+        if let Some(v) = j.get("data_plane") {
+            out.data_plane = v.as_bool()?;
         }
         if let Some(v) = j.get("fast_forward") {
             out.fast_forward = v.as_bool()?;
@@ -330,6 +339,7 @@ mod tests {
             r#"{
                 "total_csds": 8,
                 "stage_io": false,
+                "data_plane": false,
                 "fast_forward": false,
                 "jobs": [
                     {"network": "mobilenet_v2", "num_csds": 3, "steps": 5},
@@ -342,8 +352,10 @@ mod tests {
         let f = FleetExperimentConfig::from_file(&p).unwrap();
         assert_eq!(f.total_csds, 8);
         assert!(!f.stage_io);
+        assert!(!f.data_plane);
         assert!(!f.fast_forward);
         assert!(FleetExperimentConfig::default().fast_forward, "fast path is the default");
+        assert!(FleetExperimentConfig::default().data_plane, "data plane is the default");
         assert_eq!(f.jobs.len(), 2);
         assert_eq!(f.jobs[0].num_csds, 3);
         assert_eq!(f.jobs[0].steps, 5);

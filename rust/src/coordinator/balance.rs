@@ -46,7 +46,36 @@ pub fn balance(
     bs_host: usize,
     include_host: bool,
 ) -> Result<Placement> {
+    balance_weighted(dataset, num_csds, bs_csd, bs_host, include_host, &[])
+}
+
+/// [`balance`] with per-CSD health weights: the public top-up is dealt
+/// to CSDs in descending-health order (ties keep index order), so the
+/// earliest — most-reused — public ids sit on the healthiest devices,
+/// whose flash staging and movement relays are the least contended.
+/// Shard *sizes* are untouched (Eq. 1 fixes them), only which public
+/// ids land where. After a degradation the deal order changes and the
+/// affected ids physically move; the fleet's data plane charges that
+/// movement (DESIGN.md §Data-Plane). Uniform (or empty) weights
+/// reproduce [`balance`] exactly.
+pub fn balance_weighted(
+    dataset: &Dataset,
+    num_csds: usize,
+    bs_csd: usize,
+    bs_host: usize,
+    include_host: bool,
+    health: &[f64],
+) -> Result<Placement> {
     ensure!(bs_csd > 0 && bs_host > 0, "zero batch size");
+    ensure!(
+        health.is_empty() || health.len() >= num_csds,
+        "got {} health weights for {num_csds} CSDs",
+        health.len()
+    );
+    ensure!(
+        health.iter().all(|h| h.is_finite()),
+        "non-finite health weight in {health:?}"
+    );
     ensure!(
         num_csds > 0 || include_host,
         "cluster needs at least one worker"
@@ -88,9 +117,18 @@ pub fn balance(
     let total_public = dataset.num_public();
     let mut public_used = 0usize;
 
-    let mut csd_ids = Vec::with_capacity(num_csds);
+    // Deal order: healthiest first (stable on ties, so uniform weights
+    // keep the plain 0..n order and the unweighted behaviour).
+    let mut order: Vec<usize> = (0..num_csds).collect();
+    if !health.is_empty() {
+        order.sort_by(|&a, &b| {
+            health[b].partial_cmp(&health[a]).expect("finite ensured").then(a.cmp(&b))
+        });
+    }
+
+    let mut csd_ids = vec![Vec::new(); num_csds];
     let mut duplicated = vec![0usize; num_csds];
-    for c in 0..num_csds {
+    for &c in &order {
         let mut ids: Vec<ImageId> = dataset.private_ids(c)?.collect();
         // Top up from the public pool.
         while ids.len() < per_csd && next_public < total_public {
@@ -111,7 +149,7 @@ pub fn balance(
             dup_cursor += 1;
             duplicated[c] += 1;
         }
-        csd_ids.push(ids);
+        csd_ids[c] = ids;
     }
 
     // Host: Eq. 1 — steps * bs_host public images (wrapping the pool if
@@ -213,6 +251,44 @@ mod tests {
         for &id in &p.host_ids {
             assert!(matches!(d.visibility(id).unwrap(), Visibility::Public));
         }
+    }
+
+    #[test]
+    fn weighted_balance_uniform_matches_unweighted() {
+        let d = dataset(5000, vec![300, 200, 100]);
+        let plain = balance(&d, 3, 16, 100, true).unwrap();
+        let weighted = balance_weighted(&d, 3, 16, 100, true, &[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(plain.csd_ids, weighted.csd_ids);
+        assert_eq!(plain.host_ids, weighted.host_ids);
+        assert_eq!(plain.steps_per_epoch, weighted.steps_per_epoch);
+    }
+
+    #[test]
+    fn weighted_balance_moves_public_topup_to_healthy_devices() {
+        // Equal private shards of 50 at bs 20: Eq. 1 rounds the epoch
+        // to 3 steps = 60 images per CSD, so each tops up 10 public
+        // images — and the deal order decides which block lands where.
+        let d = dataset(5000, vec![50, 50]);
+        let before = balance_weighted(&d, 2, 20, 50, false, &[1.0, 1.0]).unwrap();
+        let after = balance_weighted(&d, 2, 20, 50, false, &[0.5, 1.0]).unwrap();
+        // Healthy csd1 now draws first: it holds the block csd0 held.
+        let publics = |p: &Placement, c: usize| -> Vec<ImageId> {
+            p.csd_ids[c]
+                .iter()
+                .copied()
+                .filter(|&id| matches!(d.visibility(id).unwrap(), Visibility::Public))
+                .collect()
+        };
+        assert_eq!(publics(&before, 0), publics(&after, 1), "public block must swap");
+        assert_eq!(publics(&before, 1), publics(&after, 0));
+        // Private data never moves, sizes and host share are untouched.
+        for c in 0..2 {
+            assert!(after.csd_ids[c].contains(&d.private_ids(c).unwrap().start));
+            assert_eq!(after.csd_ids[c].len(), before.csd_ids[c].len());
+        }
+        assert_eq!(before.host_ids, after.host_ids);
+        assert!(balance_weighted(&d, 2, 20, 50, false, &[1.0]).is_err(), "short weights");
+        assert!(balance_weighted(&d, 2, 20, 50, false, &[f64::NAN, 1.0]).is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod scheduler;
 pub mod stannis;
 pub mod tuning;
 
-pub use balance::{balance, Placement};
+pub use balance::{balance, balance_weighted, Placement};
 pub use scheduler::{modeled_throughput, EpochReport, ScheduleConfig, Scheduler};
 pub use stannis::{StannisTrainer, TrainConfig, TrainReport};
 pub use tuning::{tune, StepBench, TuneConfig, TuneResult};

@@ -14,7 +14,7 @@
 //! enforced by [`Shard::batch`] and tested here and in the placement
 //! integration tests.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{ensure, Result};
 
 use crate::model::Tensor;
 use crate::util::Rng;
@@ -97,17 +97,25 @@ impl Dataset {
     }
 
     /// Visibility of an image id.
+    ///
+    /// Private ids are a contiguous ascending range partitioned by
+    /// `private_offsets`, so the owner is found by binary search — this
+    /// sits on the batch hot path (`batch_from_ids` callers validate
+    /// per id) where the old per-CSD linear scan was O(num_csds).
     pub fn visibility(&self, id: ImageId) -> Result<Visibility> {
         if id < self.cfg.public_images {
             return Ok(Visibility::Public);
         }
-        for (csd, &off) in self.private_offsets.iter().enumerate() {
-            let end = off + self.cfg.private_per_csd[csd];
-            if id >= off && id < end {
-                return Ok(Visibility::Private { csd });
-            }
-        }
-        bail!("image id {id} out of range (total {})", self.total)
+        ensure!(id < self.total, "image id {id} out of range (total {})", self.total);
+        // Owner = last CSD whose offset is <= id. A zero-length shard
+        // shares its successor's offset and loses the tie (the
+        // partition point lands past it), so it can never claim an id.
+        let csd = self.private_offsets.partition_point(|&off| off <= id) - 1;
+        debug_assert!(
+            id >= self.private_offsets[csd]
+                && id < self.private_offsets[csd] + self.cfg.private_per_csd[csd]
+        );
+        Ok(Visibility::Private { csd })
     }
 
     /// Ids of one CSD's private shard.
@@ -210,7 +218,16 @@ impl Shard {
     }
 
     /// Next `bs` ids, reshuffling at epoch boundaries.
-    pub fn next_ids(&mut self, bs: usize) -> Vec<ImageId> {
+    ///
+    /// An empty shard is an error, not a panic: a degraded CSD whose
+    /// re-balance emptied its shard must be skipped by the caller, and
+    /// the old `self.ids[0]` on a zero-length vec index-panicked here.
+    pub fn next_ids(&mut self, bs: usize) -> Result<Vec<ImageId>> {
+        ensure!(
+            !self.ids.is_empty(),
+            "cannot draw a batch of {bs}: the {} shard is empty (skip this worker)",
+            self.csd.map_or("host".to_string(), |c| format!("csd{c}")),
+        );
         let mut out = Vec::with_capacity(bs);
         for _ in 0..bs {
             if self.cursor >= self.ids.len() {
@@ -220,12 +237,12 @@ impl Shard {
             out.push(self.ids[self.cursor]);
             self.cursor += 1;
         }
-        out
+        Ok(out)
     }
 
     /// Draw the next batch as tensors.
     pub fn batch(&mut self, dataset: &Dataset, bs: usize) -> Result<(Tensor, Vec<i32>)> {
-        let ids = self.next_ids(bs);
+        let ids = self.next_ids(bs)?;
         dataset.batch_from_ids(&ids)
     }
 }
@@ -298,12 +315,51 @@ mod tests {
         let d = dataset();
         let mut s = Shard::new(&d, None, (0..10).collect(), 3).unwrap();
         let mut seen = std::collections::HashSet::new();
-        for id in s.next_ids(10) {
+        for id in s.next_ids(10).unwrap() {
             seen.insert(id);
         }
         assert_eq!(seen.len(), 10, "first epoch covers every id exactly once");
         // Crossing the boundary reshuffles and keeps serving.
-        assert_eq!(s.next_ids(15).len(), 15);
+        assert_eq!(s.next_ids(15).unwrap().len(), 15);
+    }
+
+    #[test]
+    fn empty_shard_batch_errors_instead_of_panicking() {
+        // Regression: cursor 0 >= len 0 used to shuffle and then index
+        // `self.ids[0]` — the fate of a degraded CSD whose re-balance
+        // emptied its shard.
+        let d = dataset();
+        let mut s = Shard::new(&d, Some(0), Vec::new(), 9).unwrap();
+        assert!(s.is_empty());
+        let err = s.next_ids(4).unwrap_err().to_string();
+        assert!(err.contains("csd0") && err.contains("empty"), "got: {err}");
+        assert!(s.batch(&d, 4).is_err());
+        // A host shard reports itself as such.
+        let mut h = Shard::new(&d, None, Vec::new(), 9).unwrap();
+        assert!(h.next_ids(1).unwrap_err().to_string().contains("host"));
+    }
+
+    #[test]
+    fn visibility_binary_search_handles_zero_length_shards() {
+        // csd1 holds no private data: its offset collides with csd2's
+        // and must never claim an id.
+        let d = Dataset::new(DatasetConfig {
+            public_images: 100,
+            private_per_csd: vec![10, 0, 20],
+            hw: 8,
+            classes: 10,
+            seed: 1,
+            noise: 0.5,
+        })
+        .unwrap();
+        assert_eq!(d.visibility(99).unwrap(), Visibility::Public);
+        assert_eq!(d.visibility(100).unwrap(), Visibility::Private { csd: 0 });
+        assert_eq!(d.visibility(109).unwrap(), Visibility::Private { csd: 0 });
+        assert_eq!(d.visibility(110).unwrap(), Visibility::Private { csd: 2 });
+        assert_eq!(d.visibility(129).unwrap(), Visibility::Private { csd: 2 });
+        let err = d.visibility(130).unwrap_err().to_string();
+        assert!(err.contains("out of range (total 130)"), "got: {err}");
+        assert_eq!(d.private_ids(1).unwrap(), 110..110);
     }
 
     #[test]

@@ -11,8 +11,12 @@
 //! 1. carve a device group from the pool,
 //! 2. Algorithm 1 tuning at the group's slowest health
 //!    ([`crate::coordinator::tune`]),
-//! 3. Eq. 1 balancing ([`super::group::provision_placement`]),
-//! 4. per-job synchronous steps on the shared [`EventQueue`], each
+//! 3. health-weighted Eq. 1 balancing
+//!    ([`super::group::provision_placement_weighted`]),
+//! 4. data-plane installation ([`super::dataplane::DataPlane`]): the
+//!    placement becomes a physical flash-page shard map and the
+//!    window's staged-read plan is measured (DESIGN.md §Data-Plane),
+//! 5. per-job synchronous steps on the shared [`EventQueue`], each
 //!    step's ring allreduce confined to the job's own domain
 //!    ([`ring_time_shared`] — co-tenant rings share the host root's
 //!    packetization budget).
@@ -60,7 +64,8 @@ use crate::power::{EnergyMeter, PowerConfig};
 use crate::sim::{EventQueue, SimTime};
 use crate::tunnel::{NodeId, Tunnel, TunnelConfig};
 
-use super::group::provision_placement;
+use super::dataplane::DataPlane;
+use super::group::provision_placement_weighted;
 use super::job::{Job, JobId, JobReport, JobState, PendingStep};
 use super::pool::DevicePool;
 
@@ -74,15 +79,27 @@ const PRELOADED_PAGES: u32 = 64;
 pub struct FleetConfig {
     /// Devices in the shared pool (chassis bays holding Newports).
     pub total_csds: usize,
-    /// Stage training batches through the CSD flash substrate (energy
-    /// accounting fidelity) vs pure compute+sync timing.
+    /// Legacy per-step staging toggle: push every batch through the
+    /// CSD flash substrate inside `schedule_step` (stateful, so it
+    /// forces the per-step executor). Superseded by `data_plane` when
+    /// that is on.
     pub stage_io: bool,
+    /// Model the physical data plane (DESIGN.md §Data-Plane): Eq. 1
+    /// placements become flash-page shard maps at admission, staged
+    /// reads are charged from per-window flash/NVMe measurements fed
+    /// into each step, and a degradation's re-balance physically moves
+    /// the public-shard delta under `fsync::Dlm` EX locks. Default on;
+    /// per-step costs stay window-constant, so the steady-state
+    /// fast-forward remains exact.
+    pub data_plane: bool,
     /// Bytes of one staged image on flash.
     pub image_bytes: usize,
     /// Advance steady-state windows analytically instead of scheduling
-    /// every step (bit-identical results; only effective when
-    /// `stage_io` is off, since flash staging is stateful). `false` is
-    /// the per-step reference path for equivalence checks and benches.
+    /// every step (bit-identical results; inert only under the legacy
+    /// per-step `stage_io` staging, whose FTL state makes steps
+    /// non-repeating — the data plane's window-constant staging is
+    /// fast-forward-safe). `false` is the per-step reference path for
+    /// equivalence checks and benches.
     pub fast_forward: bool,
     pub tune: TuneConfig,
     pub power: PowerConfig,
@@ -90,11 +107,22 @@ pub struct FleetConfig {
     pub csd: CsdConfig,
 }
 
+impl FleetConfig {
+    /// ISP DRAM footprint heuristic: activations ≈ 4× the input image.
+    /// Single source for every DRAM-admission check (admission window,
+    /// rebalance window, legacy per-step staging) so the three can
+    /// never disagree.
+    pub fn activation_bytes_per_image(&self) -> u64 {
+        self.image_bytes as u64 * 4
+    }
+}
+
 impl Default for FleetConfig {
     fn default() -> Self {
         Self {
             total_csds: 24,
             stage_io: true,
+            data_plane: true,
             image_bytes: 12 * 1024,
             fast_forward: true,
             tune: TuneConfig::default(),
@@ -137,8 +165,13 @@ pub struct FleetReport {
     /// bays, idle host).
     pub overhead_energy_j: f64,
     pub total_energy_j: f64,
-    /// Total tunnel traffic across all ring domains.
+    /// Total tunnel traffic across all ring domains (plus data-plane
+    /// movement and DLM lock traffic, each attributed to its job).
     pub link_bytes: u64,
+    /// Bytes of public-shard data physically moved by rebalances.
+    pub bytes_moved: u64,
+    /// Shard-map DLM request-to-grant wait per job (seconds).
+    pub lock_wait: RunningStat,
     /// Queue-wait statistics across jobs (seconds).
     pub queue_wait: RunningStat,
     /// Total degradation-driven re-tunes across the fleet.
@@ -150,6 +183,7 @@ pub struct Fleet {
     cfg: FleetConfig,
     pool: DevicePool,
     tunnel: Tunnel,
+    plane: DataPlane,
     queue: VecDeque<QueuedJob>,
     jobs: BTreeMap<JobId, Job>,
     events: EventQueue<FleetEvent>,
@@ -167,6 +201,7 @@ impl Fleet {
         Self {
             pool: DevicePool::new(cfg.total_csds, &cfg.csd),
             tunnel: Tunnel::new(cfg.total_csds, cfg.tunnel.clone()),
+            plane: DataPlane::new(cfg.image_bytes),
             queue: VecDeque::new(),
             jobs: BTreeMap::new(),
             events: EventQueue::new(),
@@ -186,6 +221,12 @@ impl Fleet {
         self.next_id += 1;
         self.queue.push_back(QueuedJob { id, spec, submitted_at: self.now });
         id
+    }
+
+    /// The data plane's ledgers (transfer log, movement totals, DLM
+    /// stats) — populated only when `FleetConfig::data_plane` is on.
+    pub fn data_plane(&self) -> &DataPlane {
+        &self.plane
     }
 
     /// Schedule a device fault: at simulated time `at`, multiply
@@ -250,8 +291,10 @@ impl Fleet {
         let jobs_energy_j: f64 = jobs.iter().map(|j| j.energy_j).sum();
         let overhead_energy_j = self.overhead.total_joules();
         let mut queue_wait = RunningStat::new();
+        let mut lock_wait = RunningStat::new();
         for j in &jobs {
             queue_wait.add(j.queue_wait.as_secs_f64());
+            lock_wait.add(j.lock_wait.as_secs_f64());
         }
         let secs = self.now.as_secs_f64();
         FleetReport {
@@ -262,6 +305,8 @@ impl Fleet {
             overhead_energy_j,
             total_energy_j: jobs_energy_j + overhead_energy_j,
             link_bytes: self.tunnel.stats().bytes,
+            bytes_moved: jobs.iter().map(|j| j.bytes_moved).sum(),
+            lock_wait,
             queue_wait,
             retunes: jobs.iter().map(|j| j.retunes).sum(),
             jobs,
@@ -341,8 +386,14 @@ impl Fleet {
         }
         let group_health = self.pool.group_health(&devices);
         let (bs_csd, bs_host) = self.tune_group(&q.spec, group_health)?;
-        let (_dataset, placement) = provision_placement(&q.spec, bs_csd, bs_host)?;
-        if self.cfg.stage_io {
+        // Health-weighted Eq. 1: the public top-up lands on the
+        // healthiest devices first, which is what a later degradation
+        // re-deals — producing the physical shard delta the data plane
+        // then moves.
+        let health: Vec<f64> = devices.iter().map(|&d| self.pool.health(d)).collect();
+        let (dataset, placement) =
+            provision_placement_weighted(&q.spec, bs_csd, bs_host, &health)?;
+        if self.cfg.stage_io && !self.cfg.data_plane {
             for &d in &devices {
                 self.pool.preload(d, PRELOADED_PAGES, self.now)?;
             }
@@ -366,6 +417,13 @@ impl Fleet {
             sync_time: SimTime::ZERO,
             link_bytes: 0,
             flash_reads: 0,
+            flash_progs: 0,
+            staged_host_bytes: 0,
+            moved_bytes: 0,
+            moved_images: 0,
+            lock_wait: SimTime::ZERO,
+            stage_ready: self.now,
+            staging: Default::default(),
             meter: EnergyMeter::new(),
             pending: None,
             data_cursor: 0,
@@ -373,6 +431,32 @@ impl Fleet {
         };
         job.images_target = job.spec.steps.max(1) * job.images_per_step();
         let id = job.id;
+        if self.cfg.data_plane {
+            // Install the physical shard map (flash-page layout under
+            // the host's EX lock) and measure the first window's
+            // staging plan; the first step starts once layout is done.
+            let before = self.tunnel.stats();
+            let cost = self.plane.admit(
+                id,
+                dataset,
+                &placement,
+                &job.devices,
+                holds_host,
+                bs_csd,
+                bs_host,
+                net.sync_bytes() as u64,
+                self.cfg.activation_bytes_per_image(),
+                &mut self.pool,
+                &mut self.tunnel,
+                self.now,
+            )?;
+            let after = self.tunnel.stats();
+            job.flash_progs += cost.pages_written;
+            job.link_bytes += after.bytes - before.bytes;
+            job.lock_wait += cost.lock_wait;
+            job.stage_ready = cost.ready;
+            job.staging = self.plane.staging(id).clone();
+        }
         self.jobs.insert(id, job);
         Ok(id)
     }
@@ -390,11 +474,17 @@ impl Fleet {
             .max(1)
     }
 
-    /// Book one synchronous step for `id` starting at `self.now`:
-    /// per-device staging + compute (health-scaled), host compute if
+    /// Book one synchronous step for `id` starting at `self.now` (or
+    /// the job's data-plane `stage_ready`, if later): per-device
+    /// staging + compute (health-scaled), host staging + compute if
     /// held, then the job's own ring-allreduce domain.
+    ///
+    /// With the data plane on, staging is charged from the job's
+    /// window-constant [`StepStaging`](super::dataplane::StepStaging)
+    /// plan — pure data, no hardware state — so steps inside a window
+    /// are exact repeats and the fast-forward stays bit-identical.
     fn schedule_step(&mut self, id: JobId) -> Result<()> {
-        let (devices, holds_host, bs_csd, bs_host, net, data_cursor, images) = {
+        let (devices, holds_host, bs_csd, bs_host, net, data_cursor, images, stage_ready) = {
             let j = &self.jobs[&id];
             (
                 j.devices.clone(),
@@ -404,18 +494,34 @@ impl Fleet {
                 j.net,
                 j.data_cursor,
                 j.images_per_step(),
+                j.stage_ready,
             )
+        };
+        // Take the window plan out of the job for the booking (no
+        // per-step clone; restored below with the pending step).
+        let staging = if self.cfg.data_plane {
+            let j = self.jobs.get_mut(&id).expect("job exists");
+            Some(std::mem::take(&mut j.staging))
+        } else {
+            None
         };
         let sharers = self.running_ring_jobs();
         let sync_bytes = net.sync_bytes();
-        let now = self.now;
+        let now = self.now.max(stage_ready);
         let mut compute_done = now;
         let mut flash_reads = 0u64;
-        for &d in &devices {
+        let mut host_bytes = 0u64;
+        if let Some(st) = &staging {
+            flash_reads = st.flash_reads;
+            host_bytes = st.host_bytes;
+        }
+        for (i, &d) in devices.iter().enumerate() {
             let health = self.pool.health(d);
             let compute = PerfModel::with_scales(1.0, health)
                 .step_time_id(Device::NewportIsp, net, bs_csd)?;
-            let done = if self.cfg.stage_io {
+            let done = if let Some(st) = &staging {
+                now + st.stage[i] + compute
+            } else if self.cfg.stage_io {
                 let ppi = self
                     .cfg
                     .image_bytes
@@ -429,7 +535,7 @@ impl Fleet {
                     &lpns,
                     compute,
                     sync_bytes as u64,
-                    self.cfg.image_bytes as u64 * 4, // activations ≈ 4x input
+                    self.cfg.activation_bytes_per_image(),
                     bs_csd,
                     now,
                 )?
@@ -441,7 +547,8 @@ impl Fleet {
         if holds_host {
             let host_compute =
                 PerfModel::default().step_time_id(Device::HostXeon, net, bs_host)?;
-            compute_done = compute_done.max(now + host_compute);
+            let host_stage = staging.as_ref().map_or(SimTime::ZERO, |st| st.host_stage);
+            compute_done = compute_done.max(now + host_stage + host_compute);
         }
         let ranks: Vec<NodeId> = holds_host
             .then_some(NodeId::Host)
@@ -457,6 +564,9 @@ impl Fleet {
         let stats_after = self.tunnel.stats();
         let event = self.events.schedule(sync_end, FleetEvent::StepDone { job: id });
         let j = self.jobs.get_mut(&id).expect("job exists");
+        if let Some(st) = staging {
+            j.staging = st;
+        }
         j.data_cursor = j.data_cursor.wrapping_add(37);
         j.pending = Some(PendingStep {
             event,
@@ -466,6 +576,7 @@ impl Fleet {
             link_bytes: stats_after.bytes - stats_before.bytes,
             link_msgs: stats_after.messages - stats_before.messages,
             flash_reads,
+            host_bytes,
             images,
         });
         Ok(())
@@ -488,6 +599,7 @@ impl Fleet {
         };
         if finished {
             self.pool.release(id);
+            self.plane.complete(id);
             if self.host_held_by == Some(id) {
                 self.host_held_by = None;
             }
@@ -508,10 +620,13 @@ impl Fleet {
     /// Each job's last pre-window-end step stays a real event, so
     /// completions, admissions and degradations still run through the
     /// ordinary per-step machinery. No-op (exact fallback to per-step)
-    /// when flash staging is on — the FTL/timeline state makes steps
-    /// non-repeating — or when nothing can be skipped.
+    /// when the *legacy* per-step flash staging is on — its FTL/
+    /// timeline state makes steps non-repeating. The data plane is
+    /// fast-forward-safe: its staged-read charge is a window constant
+    /// and every stateful booking (layout, movement, locks) happens at
+    /// structural events, which both executors run identically.
     fn fast_forward(&mut self) -> Result<()> {
-        if self.cfg.stage_io {
+        if self.cfg.stage_io && !self.cfg.data_plane {
             return Ok(());
         }
         // Scan phase: per running job, the in-flight step's period and
@@ -621,19 +736,22 @@ impl Fleet {
                 }
                 j.link_bytes += p.link_bytes;
                 j.flash_reads += p.flash_reads;
+                j.staged_host_bytes += p.host_bytes;
                 p.event
             })
         };
         if let Some(ev) = cancelled {
             self.events.cancel(ev);
         }
-        let (devices, spec) = {
+        let (devices, spec, holds_host, net) = {
             let j = &self.jobs[&id];
-            (j.devices.clone(), j.spec.clone())
+            (j.devices.clone(), j.spec.clone(), j.holds_host, j.net)
         };
-        let health = self.pool.group_health(&devices);
-        let (bs_csd, bs_host) = self.tune_group(&spec, health)?;
-        let (_dataset, placement) = provision_placement(&spec, bs_csd, bs_host)?;
+        let group_health = self.pool.group_health(&devices);
+        let (bs_csd, bs_host) = self.tune_group(&spec, group_health)?;
+        let health: Vec<f64> = devices.iter().map(|&d| self.pool.health(d)).collect();
+        let (_dataset, placement) =
+            provision_placement_weighted(&spec, bs_csd, bs_host, &health)?;
         {
             let j = self.jobs.get_mut(&id).expect("assigned job exists");
             j.bs_csd = bs_csd;
@@ -641,6 +759,39 @@ impl Fleet {
                 j.bs_host = bs_host;
             }
             j.steps_per_epoch = placement.steps_per_epoch;
+        }
+        if self.cfg.data_plane {
+            // The public-shard delta of the health-weighted re-balance
+            // physically moves (flash read → tunnel relay → flash
+            // write) under DLM EX locks; the next step starts once the
+            // movement completes and the group has observed the new
+            // journal version. All traffic inside the window is
+            // attributed to the affected job, so fleet ledgers stay
+            // conservative across faults.
+            let before = self.tunnel.stats();
+            let cost = self.plane.rebalance(
+                id,
+                &placement,
+                holds_host,
+                bs_csd,
+                bs_host,
+                net.sync_bytes() as u64,
+                self.cfg.activation_bytes_per_image(),
+                &mut self.pool,
+                &mut self.tunnel,
+                self.now,
+            )?;
+            let after = self.tunnel.stats();
+            let staging = self.plane.staging(id).clone();
+            let j = self.jobs.get_mut(&id).expect("assigned job exists");
+            j.link_bytes += after.bytes - before.bytes;
+            j.flash_reads += cost.pages_read;
+            j.flash_progs += cost.pages_written;
+            j.moved_bytes += cost.bytes_moved;
+            j.moved_images += cost.images_moved;
+            j.lock_wait += cost.lock_wait;
+            j.stage_ready = cost.ready;
+            j.staging = staging;
         }
         self.schedule_step(id)
     }
@@ -659,6 +810,7 @@ fn commit_steps(j: &mut Job, pw: &PowerConfig, p: &PendingStep, k: u64) {
     j.sync_time += p.sync * k;
     j.link_bytes += p.link_bytes * k;
     j.flash_reads += p.flash_reads * k;
+    j.staged_host_bytes += p.host_bytes * k;
     j.meter.add_power(
         "newport",
         j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
@@ -767,10 +919,14 @@ mod tests {
         // Two bit-identical jobs tie at every step boundary — the
         // fast-forward must preserve the per-step FIFO tie-break, so
         // both complete at the same instant and in submission order.
+        // (Data plane off: physical staging on *different* device
+        // groups differs by per-device ECC draws, which would
+        // legitimately break the exact tie this test exists to probe.)
         let run = |ff: bool| {
             let mut fleet = Fleet::new(FleetConfig {
                 total_csds: 4,
                 stage_io: false,
+                data_plane: false,
                 fast_forward: ff,
                 ..Default::default()
             });
@@ -785,6 +941,70 @@ mod tests {
             assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
         }
         assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn data_plane_charges_staging_and_moves_shards_on_degradation() {
+        let run = |data_plane: bool| {
+            let mut fleet = Fleet::new(FleetConfig {
+                total_csds: 3,
+                stage_io: false,
+                data_plane,
+                ..Default::default()
+            });
+            fleet.submit(job("mobilenet_v2", 3, true, 8));
+            fleet.inject_degradation(SimTime::secs(30), 0, 0.6);
+            fleet.run().unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        let j = &on.jobs[0];
+        assert_eq!(j.retunes, 1);
+        assert!(j.bytes_moved > 0, "public-shard delta must physically move");
+        assert!(j.images_moved > 0);
+        assert!(j.lock_wait > SimTime::ZERO, "DLM grants cross the tunnel");
+        assert_eq!(on.bytes_moved, j.bytes_moved);
+        assert_eq!(off.jobs[0].bytes_moved, 0, "no data plane, no movement");
+        assert!(
+            on.makespan > off.makespan,
+            "staged reads + movement must cost simulated time: {} !> {}",
+            on.makespan,
+            off.makespan
+        );
+        assert!(j.energy_j > off.jobs[0].energy_j, "flash + link energy is charged");
+        // Movement and lock traffic crossed the tunnel and stayed
+        // attributed to the job (ledger conservation).
+        assert_eq!(on.link_bytes, on.jobs.iter().map(|x| x.link_bytes).sum::<u64>());
+        assert!(on.link_bytes > off.link_bytes);
+    }
+
+    #[test]
+    fn data_plane_host_pushes_grown_host_shard() {
+        // Degradation re-tunes the host batch upward; with a public
+        // pool bigger than the initial host shard, the growth is
+        // staged by host→CSD pushes rather than CSD→CSD moves alone.
+        let mut fleet = Fleet::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        fleet.submit(ExperimentConfig {
+            network: "mobilenet_v2".into(),
+            num_csds: 2,
+            include_host: true,
+            steps: 8,
+            public_images: 20_000,
+            ..Default::default()
+        });
+        fleet.inject_degradation(SimTime::secs(30), 0, 0.5);
+        let r = fleet.run().unwrap();
+        assert_eq!(r.jobs[0].retunes, 1);
+        assert!(fleet.data_plane().stats().host_pushes > 0, "grown host shard is pushed");
+        assert!(fleet
+            .data_plane()
+            .transfers()
+            .iter()
+            .any(|t| t.from == crate::tunnel::NodeId::Host));
     }
 
     #[test]

@@ -1,0 +1,876 @@
+//! The modeled data plane for fleet runs (DESIGN.md §Data-Plane).
+//!
+//! STANNIS's headline invariant (paper §III, §V.C) is that *private
+//! data never leaves its CSD* while *public data is shared under full
+//! control*. The fleet coordinator models time and energy; this module
+//! gives its jobs the physical substrate those claims live on:
+//!
+//! * **Shard map** — at admission, each job's Eq. 1 [`Placement`]
+//!   becomes a physical layout: every image of every CSD shard is
+//!   written as flash pages through that device's FTL (private images
+//!   pinned to their home CSD, public images slot-allocated), and the
+//!   host's public shard is staged round-robin across the group so the
+//!   host path has real pages to read.
+//! * **Staged reads** — every (re)balance window measures one batch's
+//!   staging cost per device through the real flash / NVMe timelines;
+//!   the coordinator charges that window-constant cost on every step,
+//!   which keeps steps exact repeats inside a window — the legality
+//!   condition of the steady-state fast-forward (DESIGN.md §Perf).
+//! * **Rebalance movement** — a degradation re-runs Eq. 1 with health
+//!   weights; the public-shard delta then physically moves: source-CSD
+//!   flash read → TCP-over-PCIe tunnel relay through the host →
+//!   destination flash write, each destination holding the shard-map
+//!   resource in EX through its phase (OCFS2-style: the [`Dlm`] master
+//!   is host-resident, every request/grant crosses the tunnel, and an
+//!   EX release commits a journal version the group's readers then
+//!   observe under PR). Lock wait and journal traffic land in the
+//!   job's epoch timings exactly as §III describes.
+//! * **Privacy guard** — the transfer layer is the enforcement point:
+//!   a `Visibility::Private` id appearing in any cross-node transfer
+//!   is a hard error (`integration_fleet` property-tests this over
+//!   randomized degraded fleets).
+//!
+//! Everything here is driven at *structural* events only (admission,
+//! degradation, completion); the per-step hot path reads the
+//! precomputed [`StepStaging`] plan and touches no hardware state, so
+//! the per-step and fast-forward executors stay bit-identical.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::Placement;
+use crate::csd::NewportCsd;
+use crate::data::{Dataset, ImageId, Visibility};
+use crate::fsync::{Dlm, DlmStats, LockMode, LockReply};
+use crate::sim::SimTime;
+use crate::tunnel::{NodeId, Tunnel};
+
+use super::job::JobId;
+use super::pool::DevicePool;
+
+/// One cross-node movement of staged image data (page-granular).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferRecord {
+    pub job: JobId,
+    pub image: ImageId,
+    pub from: NodeId,
+    pub to: NodeId,
+    pub bytes: u64,
+}
+
+/// Fleet-wide data-plane totals (per-job numbers live in the job
+/// reports; these survive job completion).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DataPlaneStats {
+    /// Flash pages programmed by admission layouts.
+    pub layout_pages: u64,
+    /// Rebalance windows executed (including empty-delta ones).
+    pub rebalances: u64,
+    /// Images relocated CSD→CSD by rebalances.
+    pub moved_images: u64,
+    /// Bytes those relocations carried (plus host pushes).
+    pub moved_bytes: u64,
+    /// Public images newly pushed host→CSD (grown host/CSD shards).
+    pub host_pushes: u64,
+}
+
+/// Per-step staged-I/O charge for a job's current window. Measured
+/// once per (re)balance; pure data on the per-step hot path.
+#[derive(Debug, Clone, Default)]
+pub struct StepStaging {
+    /// Per group-device latency of staging one batch via the ISP path.
+    pub stage: Vec<SimTime>,
+    /// Latency of staging the host batch via flash → NVMe.
+    pub host_stage: SimTime,
+    /// Flash pages read per step (ISP-path + host-path).
+    pub flash_reads: u64,
+    /// Bytes the host batch crosses NVMe per step.
+    pub host_bytes: u64,
+}
+
+/// Cost summary of one data-plane window (admission layout or
+/// rebalance movement), for the coordinator's ledgers.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowCost {
+    /// When the job's next step may start (layout / movement done and
+    /// journal version observed by the group).
+    pub ready: SimTime,
+    pub pages_read: u64,
+    pub pages_written: u64,
+    pub bytes_moved: u64,
+    pub images_moved: u64,
+    /// Total DLM request-to-grant wait across the window.
+    pub lock_wait: SimTime,
+}
+
+/// Page-slot allocator of one device's staging area: an image holds
+/// `ppi` consecutive logical pages at `slot * ppi`. Slots are reused
+/// lowest-first so layouts are deterministic.
+#[derive(Debug, Default)]
+struct DeviceSlots {
+    of: BTreeMap<ImageId, u32>,
+    free: BTreeSet<u32>,
+    next: u32,
+}
+
+impl DeviceSlots {
+    fn alloc(&mut self, id: ImageId) -> u32 {
+        let slot = match self.free.pop_first() {
+            Some(s) => s,
+            None => {
+                let s = self.next;
+                self.next += 1;
+                s
+            }
+        };
+        self.of.insert(id, slot);
+        slot
+    }
+
+    fn release(&mut self, id: ImageId) {
+        if let Some(slot) = self.of.remove(&id) {
+            self.free.insert(slot);
+        }
+    }
+}
+
+/// One job's physical shard map + current staging plan.
+struct JobPlane {
+    /// Global pool indices of the job's device group.
+    devices: Vec<usize>,
+    dataset: Dataset,
+    /// Flash pages per image.
+    ppi: u32,
+    /// Per group-device slot allocation (image → slot).
+    slots: Vec<DeviceSlots>,
+    /// Which group device holds the staged copy of each public image.
+    public_home: BTreeMap<ImageId, usize>,
+    /// Current Eq. 1 shards (per group device, in shard order).
+    shards: Vec<Vec<ImageId>>,
+    host_shard: Vec<ImageId>,
+    staging: StepStaging,
+    /// Journal version of the shard-map resource the group last
+    /// observed (monotone across rebalances).
+    version: u64,
+}
+
+/// Where a missing image comes from during a rebalance.
+#[derive(Debug, Clone, Copy)]
+enum MoveSrc {
+    /// Staged copy lives on another group device: flash read there,
+    /// tunnel relay (two hops through the host), flash write here.
+    Csd(usize),
+    /// Never staged in this group: the host pushes it from the public
+    /// pool (one host→CSD hop + flash write).
+    HostPush,
+}
+
+/// The fleet's data plane: shard maps, the host-resident DLM, and the
+/// movement/transfer ledger.
+pub struct DataPlane {
+    dlm: Dlm,
+    image_bytes: usize,
+    jobs: BTreeMap<JobId, JobPlane>,
+    transfers: Vec<TransferRecord>,
+    stats: DataPlaneStats,
+}
+
+/// Privacy enforcement point: every cross-node movement of staged data
+/// funnels through here. A transfer always has distinct endpoints, so
+/// a private image on one *necessarily* leaves (or never came from)
+/// its home CSD — any private id here is a hard error, which is
+/// exactly the §III invariant "a transfer whose source or destination
+/// is not the image's home CSD must not carry it".
+fn record_transfer(
+    transfers: &mut Vec<TransferRecord>,
+    dataset: &Dataset,
+    rec: TransferRecord,
+) -> Result<()> {
+    ensure!(rec.from != rec.to, "degenerate self-transfer of image {}", rec.image);
+    if let Visibility::Private { csd } = dataset.visibility(rec.image)? {
+        bail!(
+            "privacy violation: image {} is private to group csd{csd} and must never \
+             cross nodes, but was put on a {} -> {} transfer",
+            rec.image,
+            rec.from,
+            rec.to,
+        );
+    }
+    transfers.push(rec);
+    Ok(())
+}
+
+/// Write one image's pages onto a device (no-op if already resident).
+/// Returns (completion, pages written).
+fn lay_out(
+    plane: &mut JobPlane,
+    group_idx: usize,
+    id: ImageId,
+    dev: &mut NewportCsd,
+    at: SimTime,
+) -> Result<(SimTime, u64)> {
+    if plane.slots[group_idx].of.contains_key(&id) {
+        return Ok((at, 0));
+    }
+    let slot = plane.slots[group_idx].alloc(id);
+    let mut end = at;
+    for k in 0..plane.ppi {
+        end = end.max(dev.write_page(slot * plane.ppi + k, id as u64, at)?);
+    }
+    Ok((end, plane.ppi as u64))
+}
+
+impl DataPlane {
+    pub fn new(image_bytes: usize) -> Self {
+        Self {
+            dlm: Dlm::new(),
+            image_bytes,
+            jobs: BTreeMap::new(),
+            transfers: Vec::new(),
+            stats: DataPlaneStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> DataPlaneStats {
+        self.stats
+    }
+
+    pub fn dlm_stats(&self) -> DlmStats {
+        self.dlm.stats()
+    }
+
+    /// Every cross-node transfer the plane executed, in order — the
+    /// privacy property test's evidence ledger.
+    pub fn transfers(&self) -> &[TransferRecord] {
+        &self.transfers
+    }
+
+    /// Journal version of a job's shard-map resource.
+    pub fn version(&self, job: JobId) -> u64 {
+        self.dlm.version(&Self::resource(job))
+    }
+
+    /// The current window's per-step staging plan for a job.
+    pub fn staging(&self, job: JobId) -> &StepStaging {
+        &self.jobs.get(&job).expect("job admitted to the data plane").staging
+    }
+
+    /// Drop a completed job's map (ledgers and stats persist).
+    pub fn complete(&mut self, job: JobId) {
+        self.jobs.remove(&job);
+    }
+
+    fn resource(job: JobId) -> String {
+        format!("shardmap:{job}")
+    }
+
+    /// Admission: install the physical shard map under the
+    /// coordinator's (host-side) EX lock and measure the first window's
+    /// staging plan. Returns the window cost; `ready` is when the first
+    /// step may begin.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit(
+        &mut self,
+        job: JobId,
+        dataset: Dataset,
+        placement: &Placement,
+        devices: &[usize],
+        holds_host: bool,
+        bs_csd: usize,
+        bs_host: usize,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        pool: &mut DevicePool,
+        tunnel: &mut Tunnel,
+        now: SimTime,
+    ) -> Result<WindowCost> {
+        ensure!(!self.jobs.contains_key(&job), "{job} already admitted to the data plane");
+        let page = if devices.is_empty() {
+            self.image_bytes.max(1)
+        } else {
+            pool.device(devices[0]).page_bytes()
+        };
+        let ppi = self.image_bytes.div_ceil(page).max(1) as u32;
+        let mut plane = JobPlane {
+            devices: devices.to_vec(),
+            dataset,
+            ppi,
+            slots: devices.iter().map(|_| DeviceSlots::default()).collect(),
+            public_home: BTreeMap::new(),
+            shards: placement.csd_ids.clone(),
+            host_shard: placement.host_ids.clone(),
+            staging: StepStaging::default(),
+            version: 0,
+        };
+
+        // The lock master (host) installs the map under EX; no tunnel
+        // round-trip since the requester is the master itself.
+        let res = Self::resource(job);
+        let granted_at = match self.dlm.request(tunnel, NodeId::Host, &res, LockMode::Ex, now) {
+            LockReply::Granted { at, .. } => at,
+            LockReply::Queued => bail!("internal: fresh shard-map resource {res:?} contended"),
+        };
+        self.dlm.check_invariants()?;
+
+        let mut pages_written = 0u64;
+        let mut done = granted_at;
+        // CSD shards: private images pinned home, public images
+        // slot-allocated on their assigned device.
+        for i in 0..plane.devices.len() {
+            let d = plane.devices[i];
+            let shard = plane.shards[i].clone();
+            for &id in &shard {
+                if let Visibility::Private { csd } = plane.dataset.visibility(id)? {
+                    ensure!(
+                        csd == i,
+                        "privacy violation: {job} placed private image {id} of csd{csd} \
+                         on group device {i}"
+                    );
+                }
+                let (end, w) = lay_out(&mut plane, i, id, pool.device_mut(d), granted_at)?;
+                if w > 0 && matches!(plane.dataset.visibility(id)?, Visibility::Public) {
+                    plane.public_home.insert(id, i);
+                }
+                pages_written += w;
+                done = done.max(end);
+            }
+        }
+        // Host shard: public-only, staged round-robin across the group
+        // (reusing any copy a CSD shard already placed).
+        if holds_host && !plane.devices.is_empty() {
+            let host_shard = plane.host_shard.clone();
+            for (k, &id) in host_shard.iter().enumerate() {
+                ensure!(
+                    matches!(plane.dataset.visibility(id)?, Visibility::Public),
+                    "privacy violation: private image {id} in {job}'s host shard"
+                );
+                if plane.public_home.contains_key(&id) {
+                    continue;
+                }
+                let i = k % plane.devices.len();
+                let d = plane.devices[i];
+                let (end, w) = lay_out(&mut plane, i, id, pool.device_mut(d), granted_at)?;
+                plane.public_home.insert(id, i);
+                pages_written += w;
+                done = done.max(end);
+            }
+        }
+        self.dlm.release(tunnel, NodeId::Host, &res, done)?;
+        self.dlm.check_invariants()?;
+        plane.version = self.dlm.version(&res);
+
+        Self::remeasure(
+            &mut plane,
+            pool,
+            bs_csd,
+            bs_host,
+            holds_host,
+            param_bytes,
+            activation_bytes_per_image,
+            done,
+        )?;
+        self.stats.layout_pages += pages_written;
+        self.jobs.insert(job, plane);
+        Ok(WindowCost {
+            ready: done,
+            pages_read: 0,
+            pages_written,
+            bytes_moved: 0,
+            images_moved: 0,
+            lock_wait: granted_at.saturating_sub(now),
+        })
+    }
+
+    /// Rebalance after a re-tune: install the new Eq. 1 shards and
+    /// physically move the public-shard delta. Each destination device
+    /// acquires the shard-map resource in EX (FIFO through the DLM, so
+    /// lock wait is real), receives its images, and releases —
+    /// committing a journal version. The whole group then takes PR to
+    /// observe the commit before the next step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rebalance(
+        &mut self,
+        job: JobId,
+        placement: &Placement,
+        holds_host: bool,
+        bs_csd: usize,
+        bs_host: usize,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        pool: &mut DevicePool,
+        tunnel: &mut Tunnel,
+        now: SimTime,
+    ) -> Result<WindowCost> {
+        let plane = match self.jobs.get_mut(&job) {
+            Some(p) => p,
+            None => bail!("{job} was never admitted to the data plane"),
+        };
+        plane.shards = placement.csd_ids.clone();
+        plane.host_shard = placement.host_ids.clone();
+        self.stats.rebalances += 1;
+        let ndev = plane.devices.len();
+        let ppi = plane.ppi;
+        let page = if ndev == 0 { 0 } else { pool.device(plane.devices[0]).page_bytes() };
+        let res = Self::resource(job);
+
+        // Plan the delta: per destination device, which images it is
+        // missing and where each comes from. A retained image keeps its
+        // slot; private images are laid out at admission and never
+        // appear here (they cannot miss their home).
+        let mut planned: BTreeSet<ImageId> = BTreeSet::new();
+        let mut incoming: Vec<Vec<(ImageId, MoveSrc)>> = vec![Vec::new(); ndev];
+        for (i, shard) in plane.shards.iter().enumerate() {
+            for &id in shard {
+                if plane.slots[i].of.contains_key(&id) {
+                    continue;
+                }
+                match plane.dataset.visibility(id)? {
+                    Visibility::Private { csd } => bail!(
+                        "internal: private image {id} of csd{csd} missing from its home \
+                         shard map in {job}"
+                    ),
+                    Visibility::Public => {
+                        let src = match plane.public_home.get(&id) {
+                            Some(&j) => MoveSrc::Csd(j),
+                            None => MoveSrc::HostPush,
+                        };
+                        if planned.insert(id) {
+                            incoming[i].push((id, src));
+                        }
+                    }
+                }
+            }
+        }
+        // Host-shard growth: stage any never-seen public image
+        // round-robin (the host pushes from the public pool).
+        if holds_host && ndev > 0 {
+            for (k, &id) in plane.host_shard.iter().enumerate() {
+                ensure!(
+                    matches!(plane.dataset.visibility(id)?, Visibility::Public),
+                    "privacy violation: private image {id} in {job}'s host shard"
+                );
+                if plane.public_home.contains_key(&id) || planned.contains(&id) {
+                    continue;
+                }
+                planned.insert(id);
+                incoming[k % ndev].push((id, MoveSrc::HostPush));
+            }
+        }
+
+        let dests: Vec<usize> = (0..ndev).filter(|&i| !incoming[i].is_empty()).collect();
+        let mut lock_wait = SimTime::ZERO;
+        let mut pages_read = 0u64;
+        let mut pages_written = 0u64;
+        let mut bytes_moved = 0u64;
+        let mut images_moved = 0u64;
+        let mut movement_done = now;
+
+        if dests.is_empty() {
+            // Empty delta (e.g. only the host batch was re-tuned): the
+            // coordinator still commits the new map under a host EX so
+            // the journal version advances monotonically per window.
+            match self.dlm.request(tunnel, NodeId::Host, &res, LockMode::Ex, now) {
+                LockReply::Granted { at, .. } => {
+                    self.dlm.check_invariants()?;
+                    self.dlm.release(tunnel, NodeId::Host, &res, at)?;
+                    movement_done = movement_done.max(at);
+                }
+                LockReply::Queued => bail!("internal: shard-map resource {res:?} contended"),
+            }
+        } else {
+            // All destinations request EX up front: the first is
+            // granted, the rest queue FIFO behind it and are granted by
+            // the previous holder's release — their wait is the modeled
+            // lock contention.
+            let mut grant: VecDeque<(usize, SimTime)> = VecDeque::new();
+            for &i in &dests {
+                let node = NodeId::Csd(plane.devices[i]);
+                if let LockReply::Granted { at, .. } =
+                    self.dlm.request(tunnel, node, &res, LockMode::Ex, now)
+                {
+                    grant.push_back((i, at));
+                }
+                self.dlm.check_invariants()?;
+            }
+            ensure!(grant.len() == 1, "internal: {} EX grants on {res:?}", grant.len());
+            while let Some((i, at)) = grant.pop_front() {
+                lock_wait += at.saturating_sub(now);
+                let gi = plane.devices[i];
+                let mut phase_done = at;
+                let moves = incoming[i].clone();
+                for &(id, src) in &moves {
+                    let bytes = ppi as u64 * page as u64;
+                    let arrived = match src {
+                        MoveSrc::Csd(j) => {
+                            let gj = plane.devices[j];
+                            let sslot = match plane.slots[j].of.get(&id) {
+                                Some(&s) => s,
+                                None => bail!(
+                                    "internal: image {id} homed on group device {j} \
+                                     without a slot"
+                                ),
+                            };
+                            let mut read_done = at;
+                            for p in 0..ppi {
+                                read_done = read_done.max(
+                                    pool.device_mut(gj)
+                                        .ftl()
+                                        .read(sslot * ppi + p, at)?
+                                        .done,
+                                );
+                            }
+                            pages_read += ppi as u64;
+                            record_transfer(
+                                &mut self.transfers,
+                                &plane.dataset,
+                                TransferRecord {
+                                    job,
+                                    image: id,
+                                    from: NodeId::Csd(gj),
+                                    to: NodeId::Csd(gi),
+                                    bytes,
+                                },
+                            )?;
+                            // The delta *moves*: the source copy is
+                            // trimmed and its slot freed.
+                            plane.slots[j].release(id);
+                            self.stats.moved_images += 1;
+                            tunnel.send(NodeId::Csd(gj), NodeId::Csd(gi), bytes as usize, read_done)
+                        }
+                        MoveSrc::HostPush => {
+                            record_transfer(
+                                &mut self.transfers,
+                                &plane.dataset,
+                                TransferRecord {
+                                    job,
+                                    image: id,
+                                    from: NodeId::Host,
+                                    to: NodeId::Csd(gi),
+                                    bytes,
+                                },
+                            )?;
+                            self.stats.host_pushes += 1;
+                            tunnel.send(NodeId::Host, NodeId::Csd(gi), bytes as usize, at)
+                        }
+                    };
+                    let (end, w) = lay_out(plane, i, id, pool.device_mut(gi), arrived)?;
+                    plane.public_home.insert(id, i);
+                    pages_written += w;
+                    bytes_moved += bytes;
+                    images_moved += 1;
+                    phase_done = phase_done.max(end);
+                }
+                // EX release = journal commit; it hands the lock to the
+                // next queued destination (FIFO, exactly one EX).
+                let granted =
+                    self.dlm.release(tunnel, NodeId::Csd(gi), &res, phase_done)?;
+                self.dlm.check_invariants()?;
+                movement_done = movement_done.max(phase_done);
+                for (node, g_at, _version) in granted {
+                    let idx = dests
+                        .iter()
+                        .copied()
+                        .find(|&x| NodeId::Csd(plane.devices[x]) == node)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("internal: {node} granted {res:?} unexpectedly")
+                        })?;
+                    grant.push_back((idx, g_at));
+                }
+            }
+        }
+
+        // Journal read-back: every group device takes PR to observe the
+        // committed version before the next step (OCFS2 readers replay
+        // the journal the EX releases committed).
+        let new_version = self.dlm.version(&res);
+        ensure!(
+            new_version > plane.version,
+            "journal version must advance across a rebalance window \
+             ({} -> {new_version})",
+            plane.version
+        );
+        let mut ready = movement_done;
+        for &d in &plane.devices {
+            match self.dlm.request(tunnel, NodeId::Csd(d), &res, LockMode::Pr, movement_done) {
+                LockReply::Granted { at, version } => {
+                    ensure!(
+                        version == new_version,
+                        "reader on csd{d} observed stale journal version {version} \
+                         (committed {new_version})"
+                    );
+                    ready = ready.max(at);
+                }
+                LockReply::Queued => {
+                    bail!("internal: PR on {res:?} queued with no EX holder")
+                }
+            }
+            self.dlm.check_invariants()?;
+        }
+        for &d in &plane.devices {
+            self.dlm.release(tunnel, NodeId::Csd(d), &res, ready)?;
+        }
+        self.dlm.check_invariants()?;
+        plane.version = new_version;
+
+        self.stats.moved_bytes += bytes_moved;
+        Self::remeasure(
+            plane,
+            pool,
+            bs_csd,
+            bs_host,
+            holds_host,
+            param_bytes,
+            activation_bytes_per_image,
+            ready,
+        )?;
+        Ok(WindowCost {
+            ready,
+            pages_read,
+            pages_written,
+            bytes_moved,
+            images_moved,
+            lock_wait,
+        })
+    }
+
+    /// Measure the window's per-step staging plan: one batch per device
+    /// through the ISP path, the host batch through flash → NVMe. Pages
+    /// are channel-striped by the slot layout, so every batch of the
+    /// epoch costs the same — which is what lets one measurement stand
+    /// for the whole window (and keeps fast-forward exact).
+    #[allow(clippy::too_many_arguments)]
+    fn remeasure(
+        plane: &mut JobPlane,
+        pool: &mut DevicePool,
+        bs_csd: usize,
+        bs_host: usize,
+        holds_host: bool,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        t0: SimTime,
+    ) -> Result<()> {
+        let ndev = plane.devices.len();
+        let ppi = plane.ppi;
+        let mut staging = StepStaging { stage: vec![SimTime::ZERO; ndev], ..Default::default() };
+        for i in 0..ndev {
+            if plane.shards[i].is_empty() {
+                continue; // empty shard: skip the worker (see data::Shard)
+            }
+            let lpns: Vec<u32> = plane.shards[i]
+                .iter()
+                .take(bs_csd)
+                .flat_map(|id| {
+                    let slot = plane.slots[i].of[id];
+                    slot * ppi..(slot + 1) * ppi
+                })
+                .collect();
+            let dev = pool.device_mut(plane.devices[i]);
+            dev.isp().admit(param_bytes, activation_bytes_per_image, bs_csd)?;
+            let done = dev.read_for_isp(&lpns, t0)?;
+            staging.stage[i] = done.saturating_sub(t0);
+            staging.flash_reads += lpns.len() as u64;
+        }
+        if holds_host && ndev > 0 && !plane.host_shard.is_empty() {
+            let page = pool.device(plane.devices[0]).page_bytes();
+            let mut per_dev: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+            for id in plane.host_shard.iter().take(bs_host) {
+                let &home = plane
+                    .public_home
+                    .get(id)
+                    .ok_or_else(|| anyhow::anyhow!("host image {id} was never staged"))?;
+                let slot = plane.slots[home].of[id];
+                per_dev.entry(home).or_default().extend(slot * ppi..(slot + 1) * ppi);
+            }
+            let mut done = t0;
+            for (i, lpns) in &per_dev {
+                done = done.max(pool.device_mut(plane.devices[*i]).read_for_host(lpns, t0)?);
+                staging.flash_reads += lpns.len() as u64;
+                staging.host_bytes += lpns.len() as u64 * page as u64;
+            }
+            staging.host_stage = done.saturating_sub(t0);
+        }
+        plane.staging = staging;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csd::CsdConfig;
+    use crate::data::DatasetConfig;
+    use crate::tunnel::TunnelConfig;
+
+    fn dataset(public: usize, private: Vec<usize>) -> Dataset {
+        Dataset::new(DatasetConfig {
+            public_images: public,
+            private_per_csd: private,
+            hw: 8,
+            classes: 4,
+            seed: 7,
+            noise: 0.5,
+        })
+        .unwrap()
+    }
+
+    fn setup(n: usize) -> (DataPlane, DevicePool, Tunnel) {
+        (
+            DataPlane::new(8 * 1024),
+            DevicePool::new(n, &CsdConfig::default()),
+            Tunnel::new(n, TunnelConfig::default()),
+        )
+    }
+
+    fn placement(d: &Dataset, csds: usize, bs_csd: usize, bs_host: usize, host: bool) -> Placement {
+        crate::coordinator::balance(d, csds, bs_csd, bs_host, host).unwrap()
+    }
+
+    #[test]
+    fn admission_lays_out_and_measures() {
+        let (mut plane, mut pool, mut tun) = setup(2);
+        let d = dataset(200, vec![16, 16]);
+        let p = placement(&d, 2, 8, 16, true);
+        let cost = plane
+            .admit(
+                JobId(0),
+                d,
+                &p,
+                &[0, 1],
+                true,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::ZERO,
+            )
+            .unwrap();
+        assert!(cost.pages_written > 0, "layout must program pages");
+        assert!(cost.ready > SimTime::ZERO, "layout takes simulated time");
+        assert_eq!(cost.bytes_moved, 0);
+        let st = plane.staging(JobId(0)).clone();
+        assert_eq!(st.stage.len(), 2);
+        assert!(st.stage.iter().all(|&s| s > SimTime::ZERO), "staging must cost time");
+        assert!(st.host_stage > SimTime::ZERO);
+        assert!(st.flash_reads > 0 && st.host_bytes > 0);
+        // Version 1 after the admission commit; no tunnel traffic (the
+        // host is the lock master).
+        assert_eq!(plane.version(JobId(0)), 1);
+        assert_eq!(tun.stats().bytes, 0);
+    }
+
+    #[test]
+    fn rebalance_moves_delta_under_locks_and_rejects_private_leaks() {
+        let (mut plane, mut pool, mut tun) = setup(2);
+        // Small private shards force a public top-up (4 images per
+        // device) whose blocks swap when the health order flips.
+        let d = dataset(400, vec![4, 4]);
+        let before = placement(&d, 2, 8, 16, false);
+        plane
+            .admit(
+                JobId(0),
+                d.clone(),
+                &before,
+                &[0, 1],
+                false,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::ZERO,
+            )
+            .unwrap();
+        // Health-weighted re-balance: device 0 degraded, so the public
+        // top-up blocks swap between the two devices.
+        let after = crate::coordinator::balance_weighted(&d, 2, 8, 16, false, &[0.5, 1.0]).unwrap();
+        let t = SimTime::secs(10);
+        let cost = plane
+            .rebalance(
+                JobId(0),
+                &after,
+                false,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                t,
+            )
+            .unwrap();
+        assert!(cost.images_moved > 0, "delta must physically move");
+        assert!(cost.bytes_moved > 0);
+        assert!(cost.ready > t, "movement takes simulated time");
+        assert!(tun.stats().bytes > 0, "movement + lock traffic crosses the tunnel");
+        assert!(tun.stats().relayed > 0, "csd->csd moves relay through the host");
+        assert!(plane.version(JobId(0)) > 1, "EX releases commit journal versions");
+        // Every transfer is public; no private id ever crossed nodes.
+        assert!(!plane.transfers().is_empty());
+        for rec in plane.transfers() {
+            assert!(matches!(d.visibility(rec.image).unwrap(), Visibility::Public));
+        }
+        // The guard itself hard-errors on a private cross-CSD transfer.
+        let priv_id = d.private_ids(0).unwrap().start;
+        let mut log = Vec::new();
+        let err = record_transfer(
+            &mut log,
+            &d,
+            TransferRecord {
+                job: JobId(0),
+                image: priv_id,
+                from: NodeId::Csd(0),
+                to: NodeId::Csd(1),
+                bytes: 1,
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("privacy violation"), "got: {err}");
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn empty_delta_rebalance_still_commits_a_version() {
+        let (mut plane, mut pool, mut tun) = setup(1);
+        let d = dataset(100, vec![16]);
+        let p = placement(&d, 1, 8, 16, false);
+        plane
+            .admit(
+                JobId(3),
+                d,
+                &p,
+                &[0],
+                false,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::ZERO,
+            )
+            .unwrap();
+        let v1 = plane.version(JobId(3));
+        // Same placement again: nothing moves, version still advances.
+        let cost = plane
+            .rebalance(
+                JobId(3),
+                &p,
+                false,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::secs(5),
+            )
+            .unwrap();
+        assert_eq!(cost.images_moved, 0);
+        assert_eq!(cost.bytes_moved, 0);
+        assert!(plane.version(JobId(3)) > v1);
+    }
+}

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{balance, Placement, StannisTrainer, TrainConfig};
+use crate::coordinator::{balance_weighted, Placement, StannisTrainer, TrainConfig};
 use crate::data::Dataset;
 use crate::runtime::Engine;
 
@@ -24,8 +24,23 @@ pub fn provision_placement(
     bs_csd: usize,
     bs_host: usize,
 ) -> Result<(Dataset, Placement)> {
+    provision_placement_weighted(cfg, bs_csd, bs_host, &[])
+}
+
+/// [`provision_placement`] with per-device health weights: the fleet
+/// passes its group's current healths so the public top-up lands on
+/// the healthiest devices first (`balance_weighted`), which is what
+/// makes a degradation-driven re-balance *move* public shards — the
+/// movement the data plane then charges (DESIGN.md §Data-Plane).
+pub fn provision_placement_weighted(
+    cfg: &ExperimentConfig,
+    bs_csd: usize,
+    bs_host: usize,
+    health: &[f64],
+) -> Result<(Dataset, Placement)> {
     let dataset = Dataset::new(cfg.dataset())?;
-    let placement = balance(&dataset, cfg.num_csds, bs_csd, bs_host, cfg.include_host)?;
+    let placement =
+        balance_weighted(&dataset, cfg.num_csds, bs_csd, bs_host, cfg.include_host, health)?;
     Ok((dataset, placement))
 }
 

@@ -6,6 +6,8 @@ use crate::perfmodel::NetId;
 use crate::power::{EnergyMeter, PowerConfig};
 use crate::sim::SimTime;
 
+use super::dataplane::StepStaging;
+
 /// Stable identifier of one submitted job, assigned at `submit` time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct JobId(pub u64);
@@ -45,6 +47,9 @@ pub(crate) struct PendingStep {
     pub link_msgs: u64,
     /// Flash pages staged on the group's devices this step.
     pub flash_reads: u64,
+    /// Bytes the host's staged batch crossed NVMe this step (data
+    /// plane; zero on the legacy staging paths).
+    pub host_bytes: u64,
     /// Images the step trains across the whole group.
     pub images: usize,
 }
@@ -81,6 +86,26 @@ pub(crate) struct Job {
     /// once, in [`Job::report`], so per-step and fast-forward paths
     /// book identical integers rather than accumulated floats).
     pub flash_reads: u64,
+    /// Flash pages programmed for this job (data-plane layout and
+    /// rebalance movement writes).
+    pub flash_progs: u64,
+    /// Bytes the host's staged batches moved over NVMe (data plane).
+    pub staged_host_bytes: u64,
+    /// Bytes of public-shard data physically moved by rebalances
+    /// (flash read -> tunnel relay -> flash write) plus host pushes.
+    pub moved_bytes: u64,
+    /// Images those movements relocated.
+    pub moved_images: u64,
+    /// Total DLM request-to-grant time across this job's shard-map
+    /// lock acquisitions (admission + rebalance windows).
+    pub lock_wait: SimTime,
+    /// The job's next step may start no earlier than this (data-plane
+    /// layout / movement completion).
+    pub stage_ready: SimTime,
+    /// The current window's staged-read plan (copied from the data
+    /// plane once per window; empty when the data plane is off). The
+    /// per-step hot path takes it by `mem::take` rather than cloning.
+    pub staging: StepStaging,
     pub meter: EnergyMeter,
     pub pending: Option<PendingStep>,
     /// Rolling offset into the preloaded flash pages (mirrors the
@@ -119,6 +144,13 @@ pub struct JobReport {
     pub energy_j: f64,
     pub j_per_image: f64,
     pub link_bytes: u64,
+    /// Public-shard bytes physically moved by data-plane rebalances
+    /// (and host pushes of newly staged public images).
+    pub bytes_moved: u64,
+    /// Images those movements relocated.
+    pub images_moved: u64,
+    /// Total shard-map DLM request-to-grant wait.
+    pub lock_wait: SimTime,
     /// How many times a device degradation forced a re-tune/re-balance.
     pub retunes: usize,
 }
@@ -132,8 +164,9 @@ impl Job {
         let elapsed = self.finished_at.saturating_sub(self.admitted_at);
         let secs = elapsed.as_secs_f64();
         let energy = self.meter.total_joules()
-            + self.link_bytes as f64 * pw.link_pj_per_byte * 1e-12
-            + self.flash_reads as f64 * pw.flash_read_uj * 1e-6;
+            + (self.link_bytes + self.staged_host_bytes) as f64 * pw.link_pj_per_byte * 1e-12
+            + self.flash_reads as f64 * pw.flash_read_uj * 1e-6
+            + self.flash_progs as f64 * pw.flash_prog_uj * 1e-6;
         JobReport {
             id: self.id,
             network: self.spec.network.clone(),
@@ -154,6 +187,9 @@ impl Job {
             energy_j: energy,
             j_per_image: if self.images_done > 0 { energy / self.images_done as f64 } else { 0.0 },
             link_bytes: self.link_bytes,
+            bytes_moved: self.moved_bytes,
+            images_moved: self.moved_images,
+            lock_wait: self.lock_wait,
             retunes: self.retunes,
         }
     }

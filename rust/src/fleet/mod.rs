@@ -12,6 +12,10 @@
 //! * [`group`] — per-job provisioning ([`JobGroup`], Eq. 1 balancing);
 //!   [`crate::cluster::Cluster`] is the single-job special case.
 //! * [`job`] — job identity, lifecycle and per-job reports.
+//! * [`dataplane`] — the physical data plane: flash-page shard maps,
+//!   DLM-guarded rebalance movement, per-window staged-read costing,
+//!   and the privacy guard on every cross-node transfer
+//!   (DESIGN.md §Data-Plane).
 //! * [`coordinator`] — the [`Fleet`] itself: FIFO-with-backfill
 //!   admission, per-group Algorithm 1 tuning, concurrent synchronous
 //!   steps on the shared discrete-event loop with per-job
@@ -19,11 +23,13 @@
 //!   never disturbs co-tenants.
 
 pub mod coordinator;
+pub mod dataplane;
 pub mod group;
 pub mod job;
 pub mod pool;
 
 pub use coordinator::{Fleet, FleetConfig, FleetReport};
-pub use group::{provision_placement, JobGroup};
+pub use dataplane::{DataPlane, DataPlaneStats, StepStaging, TransferRecord};
+pub use group::{provision_placement, provision_placement_weighted, JobGroup};
 pub use job::{JobId, JobReport, JobState};
 pub use pool::{DevicePool, FleetDevice};

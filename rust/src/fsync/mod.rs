@@ -102,6 +102,11 @@ impl Dlm {
         self.resources.get(resource).map_or_else(Vec::new, |s| s.holders.clone())
     }
 
+    /// Requests currently queued behind incompatible holders.
+    pub fn queue_len(&self, resource: &str) -> usize {
+        self.resources.get(resource).map_or(0, |s| s.queue.len())
+    }
+
     /// Request `mode` on `resource` from `node` at `now`, paying the
     /// tunnel round-trip when the requester is not the master (host).
     pub fn request(
@@ -184,7 +189,8 @@ impl Dlm {
         Ok(granted)
     }
 
-    /// Invariant: at most one EX holder, and EX never coexists with PR.
+    /// Invariant: at most one EX holder, EX never coexists with PR,
+    /// and no node holds the same resource twice.
     pub fn check_invariants(&self) -> Result<()> {
         for (res, state) in &self.resources {
             let ex = state.holders.iter().filter(|(_, m)| *m == LockMode::Ex).count();
@@ -193,6 +199,13 @@ impl Dlm {
                 anyhow::ensure!(
                     state.holders.len() == 1,
                     "{res}: EX coexists with other holders: {:?}",
+                    state.holders
+                );
+            }
+            for (i, (node, _)) in state.holders.iter().enumerate() {
+                anyhow::ensure!(
+                    !state.holders[i + 1..].iter().any(|(n, _)| n == node),
+                    "{res}: {node} holds the resource twice: {:?}",
                     state.holders
                 );
             }
@@ -244,6 +257,8 @@ mod tests {
         dlm.request(&mut tun, NodeId::Csd(0), "r", LockMode::Ex, SimTime::ZERO);
         let pr = dlm.request(&mut tun, NodeId::Csd(1), "r", LockMode::Pr, SimTime::ZERO);
         assert_eq!(pr, LockReply::Queued, "PR must not overtake queued EX");
+        assert_eq!(dlm.queue_len("r"), 2);
+        assert_eq!(dlm.queue_len("unknown"), 0);
         let g1 = dlm.release(&mut tun, NodeId::Host, "r", SimTime::ms(1)).unwrap();
         assert_eq!(g1[0].0, NodeId::Csd(0), "FIFO: EX waiter first");
         assert_eq!(g1.len(), 1);

@@ -70,7 +70,8 @@ fn run() -> Result<()> {
                         OptSpec { name: "total-csds", help: "fleet: pool size", default: Some("12") },
                         OptSpec { name: "jobs", help: "fleet: concurrent jobs", default: Some("3") },
                         OptSpec { name: "degrade", help: "fleet: fault dev:secs:factor", default: None },
-                        OptSpec { name: "no-stage-io", help: "fleet: skip flash staging", default: None },
+                        OptSpec { name: "no-stage-io", help: "fleet: skip legacy flash staging", default: None },
+                        OptSpec { name: "no-data-plane", help: "fleet: skip the modeled data plane (shard maps, DLM-locked rebalance movement)", default: None },
                         OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
                     ],
                 )
@@ -158,6 +159,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if args.flag("no-stage-io") {
         spec.stage_io = false;
     }
+    if args.flag("no-data-plane") {
+        spec.data_plane = false;
+    }
     if args.flag("per-step") {
         spec.fast_forward = false;
     }
@@ -166,16 +170,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
 
     println!(
-        "fleet: {} CSDs, {} jobs, {} fault(s), stage_io={}, fast_forward={}",
+        "fleet: {} CSDs, {} jobs, {} fault(s), stage_io={}, data_plane={}, fast_forward={}",
         spec.total_csds,
         spec.jobs.len(),
         spec.faults.len(),
         spec.stage_io,
+        spec.data_plane,
         spec.fast_forward
     );
     let mut fleet = Fleet::new(FleetConfig {
         total_csds: spec.total_csds,
         stage_io: spec.stage_io,
+        data_plane: spec.data_plane,
         fast_forward: spec.fast_forward,
         ..Default::default()
     });
@@ -202,6 +208,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 format!("{}%", f(100.0 * j.sync_fraction, 0)),
                 f(j.j_per_image, 2),
                 j.retunes.to_string(),
+                format!("{:.1}M", j.bytes_moved as f64 / 1e6),
+                j.lock_wait.to_string(),
                 j.queue_wait.to_string(),
                 j.elapsed.to_string(),
             ]
@@ -211,7 +219,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "Fleet — per-job schedule and outcome",
         &[
             "job", "network", "devices", "bs csd/host", "steps", "imgs", "img/s", "sync",
-            "J/img", "retunes", "wait", "span",
+            "J/img", "retunes", "moved", "lockw", "wait", "span",
         ],
         &rows,
     );
@@ -224,6 +232,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         r.overhead_energy_j,
         r.retunes,
         r.queue_wait.mean(),
+    );
+    println!(
+        "data plane: {:.1} MB moved across {} rebalance window(s), mean shard-map lock wait {:.2}ms, {} host push(es)",
+        r.bytes_moved as f64 / 1e6,
+        fleet.data_plane().stats().rebalances,
+        1e3 * r.lock_wait.mean(),
+        fleet.data_plane().stats().host_pushes,
     );
     Ok(())
 }

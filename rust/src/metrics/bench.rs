@@ -90,8 +90,16 @@ pub const BENCH_JSON_PATH: &str = "BENCH_2.json";
 /// stderr but never fail the bench — the ledger is telemetry, not a
 /// gate.
 pub fn record_bench_json(section: &str, values: &[(&str, f64)]) {
-    let path = std::env::var("STANNIS_BENCH_JSON")
-        .unwrap_or_else(|_| BENCH_JSON_PATH.to_string());
+    record_bench_json_to(BENCH_JSON_PATH, section, values);
+}
+
+/// [`record_bench_json`] with an explicit default ledger path — each
+/// PR's new bench targets own a fresh `BENCH_<pr>.json` without moving
+/// the older ledgers. `STANNIS_BENCH_JSON` still overrides everything
+/// (all sections then land in one file).
+pub fn record_bench_json_to(default_path: &str, section: &str, values: &[(&str, f64)]) {
+    let path =
+        std::env::var("STANNIS_BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
     let existing = std::fs::read_to_string(&path).ok();
     let merged = merge_bench_json(existing.as_deref(), section, values);
     if let Err(e) = std::fs::write(&path, merged) {

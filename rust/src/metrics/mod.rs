@@ -7,7 +7,7 @@ pub mod agg;
 pub mod bench;
 
 pub use agg::RunningStat;
-pub use bench::{bench, record_bench_json, BenchResult};
+pub use bench::{bench, record_bench_json, record_bench_json_to, BenchResult};
 
 /// Print a fixed-width table (paper-style rows).
 pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {

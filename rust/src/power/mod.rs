@@ -31,10 +31,14 @@ pub struct PowerConfig {
     pub newport_idle_w: f64,
     /// Added power when a Newport ISP engine trains (quad A53 + DRAM).
     pub newport_isp_active_w: f64,
-    /// NVMe/PCIe link energy per byte moved host<->device.
+    /// NVMe/PCIe link energy per byte moved host<->device. Also prices
+    /// the fleet data plane's movement relays and host staged batches
+    /// (integer byte counters converted once in `fleet::Job::report`).
     pub link_pj_per_byte: f64,
     /// Flash array energy per page read (16 KiB).
     pub flash_read_uj: f64,
+    /// Flash array energy per page program — layout and rebalance
+    /// writes of the data plane's shard maps book against this.
     pub flash_prog_uj: f64,
 }
 

@@ -14,6 +14,10 @@ pub struct Timeline {
     next_free: SimTime,
     busy: SimTime,
     ops: u64,
+    /// Start of the current contiguous busy run ending at `next_free`.
+    run_start: SimTime,
+    /// Busy time completed before `run_start` (earlier runs).
+    busy_before_run: SimTime,
 }
 
 impl Timeline {
@@ -24,6 +28,11 @@ impl Timeline {
     /// Book `service` time beginning no earlier than `now`.
     pub fn schedule(&mut self, now: SimTime, service: SimTime) -> (SimTime, SimTime) {
         let start = self.next_free.max(now);
+        if start > self.next_free {
+            // Idle gap: a new contiguous busy run begins here.
+            self.busy_before_run = self.busy;
+            self.run_start = start;
+        }
         let done = start + service;
         self.next_free = done;
         self.busy += service;
@@ -45,12 +54,30 @@ impl Timeline {
         self.ops
     }
 
-    /// Utilization over [0, horizon].
+    /// Utilization over [0, horizon]: busy time *completed within* the
+    /// horizon, divided by the horizon.
+    ///
+    /// A backlogged resource has service booked beyond the horizon
+    /// (`next_free > horizon`); that tail has not executed yet at the
+    /// horizon, so it is excluded — a saturated server reports exactly
+    /// 1.0, never more. The timeline tracks the final contiguous busy
+    /// run (`run_start..next_free`), so the result is exact for any
+    /// horizon at or after that run's start; for a horizon inside an
+    /// earlier idle gap only the coarse bound `min(earlier busy,
+    /// horizon)` is available (full interval history is not kept), and
+    /// the result is capped at 1.0 either way.
     pub fn utilization(&self, horizon: SimTime) -> f64 {
         if horizon == SimTime::ZERO {
             return 0.0;
         }
-        self.busy.as_ns() as f64 / horizon.as_ns() as f64
+        let within = if horizon >= self.next_free {
+            self.busy
+        } else if horizon >= self.run_start {
+            self.busy_before_run + (horizon - self.run_start)
+        } else {
+            self.busy_before_run.min(horizon)
+        };
+        within.min(horizon).as_ns() as f64 / horizon.as_ns() as f64
     }
 }
 
@@ -106,13 +133,15 @@ impl MultiTimeline {
         self.servers.iter().map(Timeline::ops).sum()
     }
 
-    /// Aggregate utilization over [0, horizon] (mean across servers).
+    /// Aggregate utilization over [0, horizon] (mean across servers,
+    /// each clamped to work completed within the horizon — see
+    /// [`Timeline::utilization`]).
     pub fn utilization(&self, horizon: SimTime) -> f64 {
         if horizon == SimTime::ZERO {
             return 0.0;
         }
-        self.total_busy().as_ns() as f64
-            / (horizon.as_ns() as f64 * self.servers.len() as f64)
+        self.servers.iter().map(|s| s.utilization(horizon)).sum::<f64>()
+            / self.servers.len() as f64
     }
 }
 
@@ -140,6 +169,48 @@ mod tests {
         let mut t = Timeline::new();
         t.schedule(SimTime::ZERO, SimTime::ms(25));
         assert!((t.utilization(SimTime::ms(100)) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_clamps_backlog_to_one() {
+        // Three 10ms ops booked at t=0 back up to 30ms of busy time;
+        // over a 10ms horizon only 10ms has actually executed, so a
+        // saturated server reports exactly 1.0 — never 3.0.
+        let mut t = Timeline::new();
+        for _ in 0..3 {
+            t.schedule(SimTime::ZERO, SimTime::ms(10));
+        }
+        assert_eq!(t.busy_time(), SimTime::ms(30));
+        assert!((t.utilization(SimTime::ms(10)) - 1.0).abs() < 1e-12);
+        // Mid-backlog horizon: 15ms of a 15ms window was busy.
+        assert!((t.utilization(SimTime::ms(15)) - 1.0).abs() < 1e-12);
+        // Horizon past the backlog: plain busy/horizon again.
+        assert!((t.utilization(SimTime::ms(60)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_handles_idle_gap_before_final_run() {
+        // 10ms op at t=0, then (after a long gap) a 10ms op at t=100.
+        let mut t = Timeline::new();
+        t.schedule(SimTime::ZERO, SimTime::ms(10));
+        t.schedule(SimTime::ms(100), SimTime::ms(10));
+        // Horizon inside the gap: only the first op's 10ms was busy.
+        assert!((t.utilization(SimTime::ms(50)) - 0.2).abs() < 1e-12);
+        // Horizon inside the final run: exact (10 + 5 of 105).
+        assert!((t.utilization(SimTime::ms(105)) - 15.0 / 105.0).abs() < 1e-12);
+        // Horizon past everything: total busy over horizon.
+        assert!((t.utilization(SimTime::ms(200)) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_utilization_clamps_per_server() {
+        let mut m = MultiTimeline::new(2);
+        // Server 0 backlogged 4x past the horizon, server 1 idle.
+        for _ in 0..4 {
+            m.schedule_on(0, SimTime::ZERO, SimTime::ms(10));
+        }
+        let u = m.utilization(SimTime::ms(10));
+        assert!((u - 0.5).abs() < 1e-12, "mean of clamped 1.0 and 0.0, got {u}");
     }
 
     #[test]
