@@ -60,6 +60,72 @@ impl BlockInfo {
     }
 }
 
+/// Free-block pool: one FIFO queue per channel, so a channel-local
+/// refill is O(1) instead of the old single-queue `iter().position` +
+/// mid-queue `VecDeque::remove` scan (O(free) with an element shift).
+/// A monotone sequence number per insertion preserves the old global
+/// FIFO order, and a membership bitmap gives O(1) `contains` for the
+/// GC victim scan.
+#[derive(Debug, Clone)]
+struct FreeBlocks {
+    /// `(insertion seq, block id)` per channel, FIFO.
+    per_channel: Vec<VecDeque<(u64, u32)>>,
+    /// O(1) membership, mirrors the queues.
+    member: Vec<bool>,
+    len: usize,
+    next_seq: u64,
+}
+
+impl FreeBlocks {
+    fn new(channels: usize, total_blocks: usize) -> Self {
+        Self {
+            per_channel: vec![VecDeque::new(); channels],
+            member: vec![false; total_blocks],
+            len: 0,
+            next_seq: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn contains(&self, block: u32) -> bool {
+        self.member[block as usize]
+    }
+
+    fn push(&mut self, channel: usize, block: u32) {
+        debug_assert!(!self.member[block as usize], "block {block} freed twice");
+        self.per_channel[channel].push_back((self.next_seq, block));
+        self.next_seq += 1;
+        self.member[block as usize] = true;
+        self.len += 1;
+    }
+
+    /// Oldest free block on `channel` (the block the old global-queue
+    /// scan would have found first).
+    fn pop_channel(&mut self, channel: usize) -> Option<u32> {
+        let (_, block) = self.per_channel[channel].pop_front()?;
+        self.member[block as usize] = false;
+        self.len -= 1;
+        Some(block)
+    }
+
+    /// Globally oldest free block across all channels (the old
+    /// `pop_front`) — O(channels), only reached when every channel's
+    /// local pool is empty.
+    fn pop_oldest(&mut self) -> Option<u32> {
+        let ch = self
+            .per_channel
+            .iter()
+            .enumerate()
+            .filter_map(|(ch, q)| q.front().map(|&(seq, _)| (seq, ch)))
+            .min()
+            .map(|(_, ch)| ch)?;
+        self.pop_channel(ch)
+    }
+}
+
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FtlStats {
     pub host_writes: u64,
@@ -98,7 +164,7 @@ pub struct Ftl {
     /// content tags, indexed by logical page
     tags: Vec<u64>,
     blocks: Vec<BlockInfo>,
-    free_blocks: VecDeque<u32>,
+    free: FreeBlocks,
     /// per-channel active write block (stripes programs across channels)
     active: Vec<Option<u32>>,
     next_channel: usize,
@@ -114,14 +180,21 @@ impl Ftl {
         let flash = FlashArray::new(cfg.flash.clone());
         let ecc = Ecc::new(cfg.ecc.clone(), seed);
         let blocks = (0..total_blocks).map(|_| BlockInfo::new(pages)).collect();
-        let free_blocks: VecDeque<u32> = (0..total_blocks as u32).collect();
         let channels = cfg.flash.channels;
+        // Blocks enter the free pool in id order (the old global FIFO);
+        // a block's channel is fixed by its id, so per-channel queues
+        // filtered from that order are the same FIFO the old scan saw.
+        let per_channel_blocks = cfg.flash.dies_per_channel * cfg.flash.blocks_per_die;
+        let mut free = FreeBlocks::new(channels, total_blocks);
+        for b in 0..total_blocks as u32 {
+            free.push(b as usize / per_channel_blocks, b);
+        }
         Self {
             l2p: vec![None; logical_pages],
             p2l: vec![None; cfg.flash.total_pages()],
             tags: vec![0; logical_pages],
             blocks,
-            free_blocks,
+            free,
             active: vec![None; channels],
             next_channel: 0,
             stats: FtlStats::default(),
@@ -148,7 +221,7 @@ impl Ftl {
     }
 
     pub fn free_block_count(&self) -> usize {
-        self.free_blocks.len()
+        self.free.len()
     }
 
     pub fn max_pe_cycles(&self) -> u32 {
@@ -191,6 +264,13 @@ impl Ftl {
     // ---- write path ---------------------------------------------------
 
     /// Allocate the next physical page on some channel's active block.
+    ///
+    /// A channel refill pops its own free queue in O(1); the old code
+    /// scanned one global queue (`iter().position` + mid-queue
+    /// `remove`) per refill, O(free blocks) with an element shift. The
+    /// order is unchanged: each channel still receives its blocks in
+    /// global free-FIFO order (erased blocks re-enter oldest-first, so
+    /// wear keeps spreading).
     fn alloc_page(&mut self, now: SimTime) -> Result<PhysAddr> {
         let channels = self.active.len();
         for _ in 0..channels {
@@ -202,17 +282,8 @@ impl Ftl {
                 Some(b) => self.blocks[b as usize].is_full(self.cfg.flash.pages_per_block),
             };
             if need_new {
-                // Prefer a free block living on this channel (wear-aware:
-                // lowest PE first among the scan window).
-                let pos = self
-                    .free_blocks
-                    .iter()
-                    .position(|&b| self.block_addr(b, 0).channel as usize == ch);
-                match pos {
-                    Some(p) => {
-                        let b = self.free_blocks.remove(p).unwrap();
-                        self.active[ch] = Some(b);
-                    }
+                match self.free.pop_channel(ch) {
+                    Some(b) => self.active[ch] = Some(b),
                     None => continue, // this channel exhausted; try next
                 }
             }
@@ -222,8 +293,10 @@ impl Ftl {
             info.write_ptr += 1;
             return Ok(self.block_addr(b, page));
         }
-        // No channel-local free block anywhere: take any free block.
-        if let Some(b) = self.free_blocks.pop_front() {
+        // No channel-local free block anywhere: take the globally
+        // oldest free block (only reachable once every queue is empty,
+        // kept for faithfulness to the old fallback).
+        if let Some(b) = self.free.pop_oldest() {
             let ch = self.block_addr(b, 0).channel as usize;
             self.active[ch] = Some(b);
             let info = &mut self.blocks[b as usize];
@@ -293,11 +366,11 @@ impl Ftl {
     // ---- garbage collection ----------------------------------------------
 
     fn maybe_gc(&mut self, now: SimTime) -> Result<()> {
-        if self.free_blocks.len() >= self.cfg.gc_low_water {
+        if self.free.len() >= self.cfg.gc_low_water {
             return Ok(());
         }
         self.stats.gc_runs += 1;
-        while self.free_blocks.len() < self.cfg.gc_high_water {
+        while self.free.len() < self.cfg.gc_high_water {
             let Some(victim) = self.select_victim() else { break };
             self.collect_block(victim, now)?;
         }
@@ -317,7 +390,7 @@ impl Ftl {
                 let id = *i as u32;
                 b.write_ptr > 0                       // has been written
                     && !active.contains(&id)          // not a write frontier
-                    && !self.free_blocks.contains(&id)
+                    && !self.free.contains(id)
                     && (b.valid_count as usize) < b.write_ptr as usize // something to reclaim
             })
             .map(|(i, b)| {
@@ -350,7 +423,8 @@ impl Ftl {
         info.valid_count = 0;
         info.write_ptr = 0;
         info.pe_cycles += 1;
-        self.free_blocks.push_back(victim);
+        let ch = addr.channel as usize;
+        self.free.push(ch, victim);
         Ok(())
     }
 
@@ -403,6 +477,30 @@ mod tests {
             ..Default::default()
         };
         Ftl::new(cfg, 42)
+    }
+
+    /// Regression pin for the per-channel free-list refill: allocation
+    /// order (channel striping, lowest-id-first block refill within a
+    /// channel, append-only pages) must be exactly what the old
+    /// global-queue scan produced.
+    #[test]
+    fn allocation_order_is_pinned() {
+        // small_ftl geometry: 2 channels x 2 dies x 8 blocks x 8 pages.
+        // Block ids 0..16 live on channel 0, 16..32 on channel 1; the
+        // first 8 blocks of each channel are on die 0.
+        let mut ftl = small_ftl();
+        for lpn in 0..36u32 {
+            ftl.write(lpn, lpn as u64, SimTime::ZERO).unwrap();
+        }
+        for lpn in 0..36u32 {
+            let addr = ftl.l2p[lpn as usize].expect("written");
+            let seq = lpn / 2; // per-channel program sequence
+            assert_eq!(addr.channel, (lpn % 2) as u16, "lpn {lpn}");
+            assert_eq!(addr.die, (seq / 8 / 8) as u16, "lpn {lpn}");
+            assert_eq!(addr.block, (seq / 8) % 8, "lpn {lpn}");
+            assert_eq!(addr.page, seq % 8, "lpn {lpn}");
+        }
+        ftl.check_invariants().unwrap();
     }
 
     #[test]
