@@ -25,7 +25,7 @@ pub struct CsdConfig {
     pub internal_bus_bw: Option<f64>,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CsdIoStats {
     pub host_path_reads: u64,
     pub host_path_bytes: u64,
@@ -88,6 +88,13 @@ impl NewportCsd {
         self.ftl.write(lpn, tag, now)
     }
 
+    /// Write an extent: `len` logical pages from `lpn0`, all tagged
+    /// `tag` (an image's pages carry its image id). Bit-identical to a
+    /// [`Self::write_page`] loop, without the per-page call overhead.
+    pub fn write_run(&mut self, lpn0: u32, len: u32, tag: u64, now: SimTime) -> Result<SimTime> {
+        self.ftl.write_fill(lpn0, len, tag, now)
+    }
+
     /// Host path: read `lpns` and ship them over NVMe. Returns arrival
     /// time of the last byte at the host.
     pub fn read_for_host(&mut self, lpns: &[u32], now: SimTime) -> Result<SimTime> {
@@ -118,6 +125,81 @@ impl NewportCsd {
         Ok(done)
     }
 
+    /// [`Self::read_for_host`] over one contiguous LPN extent: each
+    /// page is read and shipped over NVMe exactly as the slice path
+    /// would book it — bit-identical, with no LPN scratch list.
+    pub fn read_for_host_run(&mut self, lpn0: u32, len: u32, now: SimTime) -> Result<SimTime> {
+        let page = self.ftl.page_bytes();
+        let NewportCsd { ftl, nvme, io, .. } = self;
+        let mut done = now;
+        // Flash and NVMe occupy disjoint timelines, so pipelining each
+        // page's transfer from the run callback books the same times.
+        ftl.read_run_with(lpn0, len, now, |_, page_done| {
+            done = done.max(nvme.transfer(page, now, page_done));
+        })?;
+        io.host_path_reads += len as u64;
+        io.host_path_bytes += len as u64 * page as u64;
+        Ok(done)
+    }
+
+    /// [`Self::read_for_isp`] over one contiguous LPN extent.
+    pub fn read_for_isp_run(&mut self, lpn0: u32, len: u32, now: SimTime) -> Result<SimTime> {
+        if len == 0 {
+            return Ok(now);
+        }
+        let page = self.ftl.page_bytes();
+        let bus_time = SimTime::from_secs_f64(page as f64 / self.internal_bus_bw);
+        let done = self.ftl.read_run(lpn0, len, now)?;
+        self.io.isp_path_reads += len as u64;
+        self.io.isp_path_bytes += len as u64 * page as u64;
+        Ok(done + bus_time)
+    }
+
+    /// ISP path over a wrapping LPN range: pages `(start + i) % wrap`
+    /// for `i in 0..count` — the cyclic preloaded-staging shape of the
+    /// legacy `stage_io` executors, without building the LPN list.
+    fn read_for_isp_wrapped(
+        &mut self,
+        start: u32,
+        count: u32,
+        wrap: u32,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        anyhow::ensure!(wrap > 0, "wrapping LPN range needs a nonzero modulus");
+        let page = self.ftl.page_bytes();
+        let bus_time = SimTime::from_secs_f64(page as f64 / self.internal_bus_bw);
+        let mut done = now;
+        for i in 0..count {
+            let r = self.ftl.read(start.wrapping_add(i) % wrap, now)?;
+            done = done.max(r.done + bus_time);
+        }
+        self.io.isp_path_reads += count as u64;
+        self.io.isp_path_bytes += count as u64 * page as u64;
+        Ok(done)
+    }
+
+    /// Host path over a wrapping LPN range (see
+    /// [`Self::read_for_isp_wrapped`]); mirrors a
+    /// [`Self::read_for_host`] call on the expanded list.
+    pub fn read_for_host_wrapped(
+        &mut self,
+        start: u32,
+        count: u32,
+        wrap: u32,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        anyhow::ensure!(wrap > 0, "wrapping LPN range needs a nonzero modulus");
+        let page = self.ftl.page_bytes();
+        let mut done = now;
+        for i in 0..count {
+            let r = self.ftl.read(start.wrapping_add(i) % wrap, now)?;
+            done = done.max(self.nvme.transfer(page, now, r.done));
+        }
+        self.io.host_path_reads += count as u64;
+        self.io.host_path_bytes += count as u64 * page as u64;
+        Ok(done)
+    }
+
     /// Run one in-storage training step: stage `data_lpns` via the ISP
     /// path, then occupy the ISP cluster for `compute`. DRAM admission
     /// is checked against the batch footprint.
@@ -132,6 +214,26 @@ impl NewportCsd {
     ) -> Result<SimTime> {
         self.isp.admit(param_bytes, activation_bytes_per_image, batch)?;
         let inputs_ready = self.read_for_isp(data_lpns, now)?;
+        Ok(self.isp.run_step(compute, inputs_ready, batch))
+    }
+
+    /// [`Self::isp_train_step`] over a wrapping LPN range: stages
+    /// `count` pages starting at `start` modulo `wrap` — the
+    /// scratch-free variant for cyclic preloaded staging.
+    #[allow(clippy::too_many_arguments)]
+    pub fn isp_train_step_range(
+        &mut self,
+        start: u32,
+        count: u32,
+        wrap: u32,
+        compute: SimTime,
+        param_bytes: u64,
+        activation_bytes_per_image: u64,
+        batch: usize,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        self.isp.admit(param_bytes, activation_bytes_per_image, batch)?;
+        let inputs_ready = self.read_for_isp_wrapped(start, count, wrap, now)?;
         Ok(self.isp.run_step(compute, inputs_ready, batch))
     }
 
@@ -214,6 +316,47 @@ mod tests {
             SimTime::ZERO,
         );
         assert!(r.is_err());
+    }
+
+    /// Extent entry points are bit-identical to the slice/per-page
+    /// paths: completion times, FTL/flash state and io stats — on twin
+    /// devices fed the same workload.
+    #[test]
+    fn extent_paths_match_slice_paths() {
+        let mut a = small_csd();
+        let mut b = small_csd();
+        for img in 0..8u32 {
+            let ea = a.write_run(img * 4, 4, img as u64, SimTime::ZERO).unwrap();
+            let mut eb = SimTime::ZERO;
+            for k in 0..4 {
+                eb = eb.max(b.write_page(img * 4 + k, img as u64, SimTime::ZERO).unwrap());
+            }
+            assert_eq!(ea, eb, "image {img} extent layout");
+        }
+        let lpns: Vec<u32> = (8..20).collect();
+        let ia = a.read_for_isp_run(8, 12, SimTime::ms(1)).unwrap();
+        let ib = b.read_for_isp(&lpns, SimTime::ms(1)).unwrap();
+        assert_eq!(ia, ib, "ISP staging");
+        let ha = a.read_for_host_run(8, 12, SimTime::ms(2)).unwrap();
+        let hb = b.read_for_host(&lpns, SimTime::ms(2)).unwrap();
+        assert_eq!(ha, hb, "host staging");
+        assert_eq!(a.io_stats(), b.io_stats());
+        // Wrapping ranges == the expanded LPN list.
+        let wrapped: Vec<u32> = (0..10).map(|i| (30 + i) % 32).collect();
+        let wa = a.read_for_host_wrapped(30, 10, 32, SimTime::ms(3)).unwrap();
+        let wb = b.read_for_host(&wrapped, SimTime::ms(3)).unwrap();
+        assert_eq!(wa, wb, "wrapped host staging");
+        let ta = a
+            .isp_train_step_range(30, 10, 32, SimTime::secs(1), 1 << 20, 1 << 16, 4, SimTime::ms(4))
+            .unwrap();
+        let tb = b
+            .isp_train_step(&wrapped, SimTime::secs(1), 1 << 20, 1 << 16, 4, SimTime::ms(4))
+            .unwrap();
+        assert_eq!(ta, tb, "wrapped train step");
+        assert_eq!(a.io_stats(), b.io_stats());
+        assert_eq!(a.isp_stats().steps, b.isp_stats().steps);
+        assert_eq!(a.ftl_ref().stats(), b.ftl_ref().stats());
+        assert_eq!(a.ftl_ref().flash_stats(), b.ftl_ref().flash_stats());
     }
 
     #[test]

@@ -72,7 +72,7 @@ impl FlashConfig {
 }
 
 /// Cumulative operation counters (drives the power model).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FlashStats {
     pub reads: u64,
     pub programs: u64,
@@ -141,6 +141,133 @@ impl FlashArray {
         self.stats.programs += 1;
         self.stats.bytes_written += self.cfg.page_bytes as u64;
         done
+    }
+
+    /// Read a run of `count` physically consecutive pages of one block
+    /// (starting at `addr0`) with coalesced timeline bookings:
+    ///
+    /// * the die cell reads all arrive at `now`, so their `count`
+    ///   back-to-back tR bookings collapse into one `count * tR`
+    ///   booking landing on exactly the same timeline state;
+    /// * the channel-bus transfers arrive tR apart and serialize FIFO;
+    ///   maximal contiguous stretches (each next arrival no later than
+    ///   the rolling completion) collapse into one booking per
+    ///   stretch — a stretch boundary is precisely where the per-page
+    ///   loop would have left the bus idle.
+    ///
+    /// Per-page completion times are reconstructed in closed form and
+    /// reported through `per_page(offset, done)` in run order; they,
+    /// the final timeline state and the stats are bit-identical to a
+    /// [`Self::read_page`] loop (property-tested below). Returns the
+    /// last page's completion.
+    pub fn read_run_with(
+        &mut self,
+        addr0: PhysAddr,
+        count: u32,
+        now: SimTime,
+        mut per_page: impl FnMut(u32, SimTime),
+    ) -> SimTime {
+        if count == 0 {
+            return now;
+        }
+        assert!(self.check_addr(addr0), "bad address {addr0:?}");
+        assert!(
+            addr0.page as usize + count as usize <= self.cfg.pages_per_block,
+            "run of {count} pages overflows the block at {addr0:?}"
+        );
+        let die = self.die_index(addr0);
+        let t_read = self.cfg.t_read;
+        let (cell_start, _) = self.dies.schedule_on(die, now, t_read * count as u64);
+        let xfer = self.cfg.xfer_time(self.cfg.page_bytes);
+        let bus = addr0.channel as usize;
+        let mut done = now;
+        let mut i = 0u32;
+        while i < count {
+            let arrive = cell_start + t_read * (i as u64 + 1);
+            let bus_free = self.buses.server(bus).next_free();
+            // Offsets j = 1.. behind page i stay contiguous while
+            // j * (tR - xfer) <= start - arrive (for tR <= xfer, every
+            // later arrival lands on a busy bus: one stretch).
+            let gap = arrive.max(bus_free) - arrive;
+            let drain = t_read.as_ns().saturating_sub(xfer.as_ns());
+            let stretch = if drain == 0 {
+                count - i
+            } else {
+                (count - i).min(1 + (gap.as_ns() / drain) as u32)
+            };
+            let (start, _) = self.buses.schedule_on(bus, arrive, xfer * stretch as u64);
+            debug_assert_eq!(start, arrive.max(bus_free));
+            for j in 0..stretch {
+                done = start + xfer * (j as u64 + 1);
+                per_page(i + j, done);
+            }
+            i += stretch;
+        }
+        self.stats.reads += count as u64;
+        self.stats.bytes_read += count as u64 * self.cfg.page_bytes as u64;
+        done
+    }
+
+    /// [`Self::read_run_with`] without the per-page callback.
+    pub fn read_run(&mut self, addr0: PhysAddr, count: u32, now: SimTime) -> SimTime {
+        self.read_run_with(addr0, count, now, |_, _| ())
+    }
+
+    /// Program a run of `count` physically consecutive pages of one
+    /// block with coalesced bookings — the mirror of
+    /// [`Self::read_run_with`]: the bus transfers in all arrive at
+    /// `now` (one booking), the die programs arrive one transfer apart
+    /// and coalesce per contiguous stretch. Bit-identical to a
+    /// [`Self::program_page`] loop; returns the last page's completion
+    /// and reports each page's through `per_page`.
+    pub fn program_run_with(
+        &mut self,
+        addr0: PhysAddr,
+        count: u32,
+        now: SimTime,
+        mut per_page: impl FnMut(u32, SimTime),
+    ) -> SimTime {
+        if count == 0 {
+            return now;
+        }
+        assert!(self.check_addr(addr0), "bad address {addr0:?}");
+        assert!(
+            addr0.page as usize + count as usize <= self.cfg.pages_per_block,
+            "run of {count} pages overflows the block at {addr0:?}"
+        );
+        let xfer = self.cfg.xfer_time(self.cfg.page_bytes);
+        let bus = addr0.channel as usize;
+        let (in_start, _) = self.buses.schedule_on(bus, now, xfer * count as u64);
+        let die = self.die_index(addr0);
+        let t_prog = self.cfg.t_prog;
+        let mut done = now;
+        let mut i = 0u32;
+        while i < count {
+            let arrive = in_start + xfer * (i as u64 + 1);
+            let die_free = self.dies.server(die).next_free();
+            let gap = arrive.max(die_free) - arrive;
+            let drain = xfer.as_ns().saturating_sub(t_prog.as_ns());
+            let stretch = if drain == 0 {
+                count - i
+            } else {
+                (count - i).min(1 + (gap.as_ns() / drain) as u32)
+            };
+            let (start, _) = self.dies.schedule_on(die, arrive, t_prog * stretch as u64);
+            debug_assert_eq!(start, arrive.max(die_free));
+            for j in 0..stretch {
+                done = start + t_prog * (j as u64 + 1);
+                per_page(i + j, done);
+            }
+            i += stretch;
+        }
+        self.stats.programs += count as u64;
+        self.stats.bytes_written += count as u64 * self.cfg.page_bytes as u64;
+        done
+    }
+
+    /// [`Self::program_run_with`] without the per-page callback.
+    pub fn program_run(&mut self, addr0: PhysAddr, count: u32, now: SimTime) -> SimTime {
+        self.program_run_with(addr0, count, now, |_, _| ())
     }
 
     /// Erase a whole block (die busy for tBERS).
@@ -226,6 +353,104 @@ mod tests {
         let t_single = arr2.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
         assert_eq!(t_parallel, t_single);
         assert_eq!(arr.stats().reads, channels as u64);
+    }
+
+    /// Property: run bookings are bit-identical to the per-page loop —
+    /// per-page completion times, final timeline state (observed via
+    /// probe bookings on every die and bus) and stats — across both
+    /// stretch regimes (cell-bound tR > xfer with bus idle gaps, and
+    /// bus-bound tR <= xfer with one contiguous stretch).
+    #[test]
+    fn property_run_bookings_match_per_page() {
+        crate::util::prop::check("flash run ops match per-page bookings", |rng| {
+            let cfg = FlashConfig {
+                channels: 2,
+                dies_per_channel: 2,
+                blocks_per_die: 4,
+                pages_per_block: 16,
+                page_bytes: 4096,
+                t_read: [SimTime::us(5), SimTime::us(60), SimTime::us(200)]
+                    [rng.usize_below(3)],
+                t_prog: [SimTime::us(20), SimTime::us(660)][rng.usize_below(2)],
+                channel_bw: [50.0e6, 400.0e6][rng.usize_below(2)],
+                ..Default::default()
+            };
+            let mut a = FlashArray::new(cfg.clone());
+            let mut b = FlashArray::new(cfg);
+            for _ in 0..40 {
+                let page = rng.usize_below(16) as u32;
+                let base = PhysAddr {
+                    channel: rng.usize_below(2) as u16,
+                    die: rng.usize_below(2) as u16,
+                    block: rng.usize_below(4) as u32,
+                    page,
+                };
+                let now = SimTime::us(rng.below(500));
+                let count = 1 + rng.usize_below((16 - page as usize).min(8)) as u32;
+                match rng.usize_below(4) {
+                    // Interleave plain ops so runs start from varied
+                    // (and sometimes backlogged) timeline states.
+                    0 => {
+                        assert_eq!(a.read_page(base, now), b.read_page(base, now));
+                    }
+                    1 => {
+                        assert_eq!(a.program_page(base, now), b.program_page(base, now));
+                    }
+                    2 => {
+                        let mut runs = Vec::new();
+                        let last = a.read_run_with(base, count, now, |i, d| runs.push((i, d)));
+                        let mut pages = Vec::new();
+                        for i in 0..count {
+                            let d = b.read_page(PhysAddr { page: base.page + i, ..base }, now);
+                            pages.push((i, d));
+                        }
+                        assert_eq!(runs, pages, "read-run per-page completions");
+                        assert_eq!(last, pages.last().unwrap().1);
+                    }
+                    _ => {
+                        let mut runs = Vec::new();
+                        let last =
+                            a.program_run_with(base, count, now, |i, d| runs.push((i, d)));
+                        let mut pages = Vec::new();
+                        for i in 0..count {
+                            let d =
+                                b.program_page(PhysAddr { page: base.page + i, ..base }, now);
+                            pages.push((i, d));
+                        }
+                        assert_eq!(runs, pages, "program-run per-page completions");
+                        assert_eq!(last, pages.last().unwrap().1);
+                    }
+                }
+            }
+            assert_eq!(a.stats(), b.stats());
+            // Probe every die: identical next-free state on both sides.
+            for c in 0..2u16 {
+                for d in 0..2u16 {
+                    let probe = PhysAddr { channel: c, die: d, block: 0, page: 0 };
+                    assert_eq!(
+                        a.read_page(probe, SimTime::ZERO),
+                        b.read_page(probe, SimTime::ZERO)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_run_is_a_no_op() {
+        let mut arr = FlashArray::new(FlashConfig::default());
+        let t = SimTime::ms(3);
+        assert_eq!(arr.read_run(addr(0, 0, 0, 0), 0, t), t);
+        assert_eq!(arr.program_run(addr(0, 0, 0, 0), 0, t), t);
+        assert_eq!(arr.stats(), FlashStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the block")]
+    fn overlong_run_panics() {
+        let mut arr = FlashArray::new(FlashConfig::default());
+        let pages = arr.config().pages_per_block as u32;
+        arr.read_run(addr(0, 0, 0, 1), pages, SimTime::ZERO);
     }
 
     #[test]

@@ -6,8 +6,19 @@
 //! array, decoded, and accounted. Data *content* is modeled as a u64
 //! tag per logical page — enough to prove end-to-end integrity without
 //! simulating 16 KiB payloads.
+//!
+//! The data path is **extent-based** (DESIGN.md §Perf, "Extent I/O"):
+//! [`Ftl::write_run`] / [`Ftl::read_run`] move whole logical runs with
+//! one bounds check, batched stats and (where pages are physically
+//! consecutive) coalesced flash bookings, while `write`/`read` remain
+//! as thin len-1 wrappers. Results are bit-identical to the per-page
+//! loops, which stay in-tree as the property-test oracle. Block
+//! allocation pops per-channel free lists in O(1), and GC victim
+//! selection reads an incrementally-maintained cost-benefit index
+//! instead of scanning every block per reclaimed victim.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, VecDeque};
 
 use anyhow::{bail, Result};
 
@@ -126,7 +137,7 @@ impl FreeBlocks {
     }
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FtlStats {
     pub host_writes: u64,
     pub gc_writes: u64,
@@ -168,7 +179,38 @@ pub struct Ftl {
     /// per-channel active write block (stripes programs across channels)
     active: Vec<Option<u32>>,
     next_channel: usize,
+    /// GC victim index: `(score key, Reverse(block id))` for every
+    /// block with something to reclaim, kept in sync on every
+    /// valid-count / write-pointer / erase change. `last()` (skipping
+    /// active frontiers) is exactly the block the full cost-benefit
+    /// scan picks, same tie-break — O(log blocks) instead of a scan
+    /// per GC-loop iteration.
+    victim_index: BTreeSet<(u64, Reverse<u32>)>,
+    /// Each block's current key in `victim_index` (for O(log) removal).
+    in_index: Vec<Option<u64>>,
     stats: FtlStats,
+}
+
+/// Cost-benefit score with wear bias — the single expression both the
+/// victim index and the reference full scan evaluate, so their floats
+/// are bit-identical.
+fn victim_score(pages: f64, b: &BlockInfo) -> f64 {
+    let invalid = b.write_ptr as f64 - b.valid_count as f64;
+    invalid / pages - 0.01 * b.pe_cycles as f64
+}
+
+/// Order-preserving u64 key for a finite f64 score (sign-flip trick):
+/// `a < b  ⇔  key(a) < key(b)`. Scores are finite by construction and
+/// `-0.0` cannot arise (`x - y` with `x == y` rounds to `+0.0`), so
+/// key equality coincides with float equality — ties break exactly as
+/// the scan's `partial_cmp` does.
+fn score_key(score: f64) -> u64 {
+    let bits = score.to_bits();
+    if bits & (1 << 63) == 0 {
+        bits | (1 << 63)
+    } else {
+        !bits
+    }
 }
 
 impl Ftl {
@@ -197,6 +239,8 @@ impl Ftl {
             free,
             active: vec![None; channels],
             next_channel: 0,
+            victim_index: BTreeSet::new(),
+            in_index: vec![None; total_blocks],
             stats: FtlStats::default(),
             cfg,
             flash,
@@ -309,10 +353,45 @@ impl Ftl {
     }
 
     /// Write `tag` to logical page `lpn`. Returns completion time.
+    /// Thin len-1 wrapper over the run path.
     pub fn write(&mut self, lpn: u32, tag: u64, now: SimTime) -> Result<SimTime> {
-        anyhow::ensure!((lpn as usize) < self.l2p.len(), "lpn {lpn} out of range");
-        let done = self.write_inner(lpn, tag, now, false)?;
-        self.maybe_gc(now)?;
+        self.write_fill(lpn, 1, tag, now)
+    }
+
+    /// Bulk write: `tags[i]` lands on logical page `lpn0 + i`. One
+    /// bounds check for the whole run; GC is checked at the same
+    /// per-page points as the page-at-a-time path, so physical layout,
+    /// timing and stats are bit-identical to a `write` loop. Returns
+    /// the completion time of the last-finishing page.
+    pub fn write_run(&mut self, lpn0: u32, tags: &[u64], now: SimTime) -> Result<SimTime> {
+        self.write_run_with(lpn0, tags.len() as u32, |i| tags[i as usize], now)
+    }
+
+    /// Bulk write of `len` pages all tagged `tag` — the image-layout
+    /// shape (every flash page of an image carries the image id),
+    /// allocation-free at the call site.
+    pub fn write_fill(&mut self, lpn0: u32, len: u32, tag: u64, now: SimTime) -> Result<SimTime> {
+        self.write_run_with(lpn0, len, |_| tag, now)
+    }
+
+    fn write_run_with(
+        &mut self,
+        lpn0: u32,
+        len: u32,
+        tag_at: impl Fn(u32) -> u64,
+        now: SimTime,
+    ) -> Result<SimTime> {
+        let end = lpn0 as u64 + len as u64;
+        anyhow::ensure!(
+            end <= self.l2p.len() as u64,
+            "lpn run {lpn0}..{end} out of range (logical pages {})",
+            self.l2p.len()
+        );
+        let mut done = now;
+        for i in 0..len {
+            done = done.max(self.write_inner(lpn0 + i, tag_at(i), now, false)?);
+            self.maybe_gc(now)?;
+        }
         Ok(done)
     }
 
@@ -327,6 +406,7 @@ impl Ftl {
                 info.valid_count -= 1;
             }
             self.p2l[pidx] = None;
+            self.reindex(bid as u32);
         }
         let addr = self.alloc_page(now)?;
         let done = self.flash.program_page(addr, now);
@@ -338,6 +418,7 @@ impl Ftl {
         self.l2p[lpn as usize] = Some(addr);
         self.p2l[pidx] = Some(lpn);
         self.tags[lpn as usize] = tag;
+        self.reindex(bid as u32);
         if is_gc {
             self.stats.gc_writes += 1;
         } else {
@@ -363,6 +444,90 @@ impl Ftl {
         Ok(ReadResult { tag: self.tags[lpn as usize], done: flash_done + ecc_lat, ecc })
     }
 
+    /// Bulk read of `len` consecutive logical pages starting at `lpn0`.
+    /// One bounds check for the run; per-page ECC decodes run in the
+    /// same order as a `read` loop (the decoder is a seeded RNG, so
+    /// order is part of the equivalence contract). Physically
+    /// consecutive pages of one block coalesce their flash bookings
+    /// ([`FlashArray::read_run_with`]) with identical completion
+    /// times. Returns the completion time of the last-finishing page.
+    pub fn read_run(&mut self, lpn0: u32, len: u32, now: SimTime) -> Result<SimTime> {
+        self.read_run_with(lpn0, len, now, |_, _| ())
+    }
+
+    /// [`Self::read_run`] with a per-page completion callback
+    /// `(offset in run, page done)`, invoked in run order — for
+    /// callers that pipeline each page into another resource (e.g. the
+    /// NVMe host path).
+    ///
+    /// Error paths match the per-page loop: an unwritten page or an
+    /// uncorrectable ECC error aborts the run with the same message
+    /// after booking the same pages (modulo the remainder of a
+    /// coalesced stretch on the abandoned timeline — the run is dead
+    /// either way).
+    pub fn read_run_with(
+        &mut self,
+        lpn0: u32,
+        len: u32,
+        now: SimTime,
+        mut per_page: impl FnMut(u32, SimTime),
+    ) -> Result<SimTime> {
+        let end = lpn0 as u64 + len as u64;
+        anyhow::ensure!(
+            end <= self.l2p.len() as u64,
+            "lpn run {lpn0}..{end} out of range (logical pages {})",
+            self.l2p.len()
+        );
+        let mut done = now;
+        let mut i = 0u32;
+        while i < len {
+            let lpn = lpn0 + i;
+            let addr = self.l2p[lpn as usize]
+                .ok_or_else(|| anyhow::anyhow!("lpn {lpn} never written"))?;
+            // Extend over physically consecutive pages of the same
+            // block: exactly these coalesce into one die booking (plus
+            // stretch-segmented bus bookings) without reordering any
+            // timeline relative to the per-page loop.
+            let mut k = 1u32;
+            while i + k < len {
+                match self.l2p[(lpn0 + i + k) as usize] {
+                    Some(a)
+                        if a.channel == addr.channel
+                            && a.die == addr.die
+                            && a.block == addr.block
+                            && a.page == addr.page + k =>
+                    {
+                        k += 1;
+                    }
+                    _ => break,
+                }
+            }
+            let pe = self.blocks[self.block_id_of(addr) as usize].pe_cycles;
+            let page_bytes = self.cfg.flash.page_bytes;
+            let Ftl { flash, ecc, stats, .. } = &mut *self;
+            let mut bad = None;
+            flash.read_run_with(addr, k, now, |j, flash_done| {
+                if bad.is_some() {
+                    return; // fatal ECC error: the run aborts below
+                }
+                let (out, ecc_lat) = ecc.decode_page(page_bytes, pe);
+                stats.reads += 1;
+                if out == EccOutcome::Uncorrectable {
+                    bad = Some(lpn + j);
+                    return;
+                }
+                let page_done = flash_done + ecc_lat;
+                done = done.max(page_done);
+                per_page(i + j, page_done);
+            });
+            if let Some(l) = bad {
+                bail!("uncorrectable ECC error reading lpn {l} (pe={pe})");
+            }
+            i += k;
+        }
+        Ok(done)
+    }
+
     // ---- garbage collection ----------------------------------------------
 
     fn maybe_gc(&mut self, now: SimTime) -> Result<()> {
@@ -377,10 +542,41 @@ impl Ftl {
         Ok(())
     }
 
+    /// Re-sync one block's entry in the victim index after any change
+    /// to its valid count, write pointer or P/E count. A block is
+    /// indexed iff it has something to reclaim (`0 < valid < written`
+    /// or fully invalid); write frontiers stay indexed and are skipped
+    /// at selection time, because `active` membership changes without
+    /// touching the block itself.
+    fn reindex(&mut self, bid: u32) {
+        if let Some(key) = self.in_index[bid as usize].take() {
+            self.victim_index.remove(&(key, Reverse(bid)));
+        }
+        let b = &self.blocks[bid as usize];
+        if b.write_ptr > 0 && b.valid_count < b.write_ptr {
+            let key = score_key(victim_score(self.cfg.flash.pages_per_block as f64, b));
+            self.victim_index.insert((key, Reverse(bid)));
+            self.in_index[bid as usize] = Some(key);
+        }
+    }
+
     /// Cost-benefit victim selection with wear bias: prefer blocks with
     /// many invalid pages; among similar benefit prefer low wear so
-    /// erases spread out (wear leveling).
+    /// erases spread out (wear leveling). Served from the incremental
+    /// index: walk down from the best score, skipping write frontiers
+    /// (at most `channels` entries). Returns exactly the block
+    /// [`Self::select_victim_scan`] picks.
     fn select_victim(&self) -> Option<u32> {
+        self.victim_index
+            .iter()
+            .rev()
+            .map(|&(_, Reverse(id))| id)
+            .find(|id| !self.active.iter().any(|a| *a == Some(*id)))
+    }
+
+    /// Reference full-scan selection — the oracle the index is
+    /// property-tested against (and the pre-index implementation).
+    fn select_victim_scan(&self) -> Option<u32> {
         let pages = self.cfg.flash.pages_per_block as f64;
         let active: Vec<u32> = self.active.iter().flatten().copied().collect();
         self.blocks
@@ -393,13 +589,21 @@ impl Ftl {
                     && !self.free.contains(id)
                     && (b.valid_count as usize) < b.write_ptr as usize // something to reclaim
             })
-            .map(|(i, b)| {
-                let invalid = b.write_ptr as f64 - b.valid_count as f64;
-                let score = invalid / pages - 0.01 * b.pe_cycles as f64;
-                (i as u32, score)
-            })
+            .map(|(i, b)| (i as u32, victim_score(pages, b)))
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
             .map(|(i, _)| i)
+    }
+
+    /// Current GC victim by the incremental index (bench/test hook).
+    #[doc(hidden)]
+    pub fn gc_victim(&self) -> Option<u32> {
+        self.select_victim()
+    }
+
+    /// Current GC victim by the reference full scan (bench/test hook).
+    #[doc(hidden)]
+    pub fn gc_victim_scan(&self) -> Option<u32> {
+        self.select_victim_scan()
     }
 
     fn collect_block(&mut self, victim: u32, now: SimTime) -> Result<()> {
@@ -425,6 +629,7 @@ impl Ftl {
         info.pe_cycles += 1;
         let ch = addr.channel as usize;
         self.free.push(ch, victim);
+        self.reindex(victim); // reclaimed: drops out of the index
         Ok(())
     }
 
@@ -452,6 +657,28 @@ impl Ftl {
                 info.valid_count
             );
         }
+        // Victim index mirrors block state: every block with something
+        // to reclaim is indexed under its current score; nothing else.
+        for (bid, info) in self.blocks.iter().enumerate() {
+            let eligible = info.write_ptr > 0 && info.valid_count < info.write_ptr;
+            match self.in_index[bid] {
+                Some(key) => {
+                    anyhow::ensure!(eligible, "block {bid} indexed but not eligible");
+                    let want =
+                        score_key(victim_score(self.cfg.flash.pages_per_block as f64, info));
+                    anyhow::ensure!(key == want, "block {bid} indexed under a stale score");
+                    anyhow::ensure!(
+                        self.victim_index.contains(&(key, Reverse(bid as u32))),
+                        "block {bid} missing from the victim index"
+                    );
+                }
+                None => anyhow::ensure!(!eligible, "eligible block {bid} not indexed"),
+            }
+        }
+        anyhow::ensure!(
+            self.victim_index.len() == self.in_index.iter().flatten().count(),
+            "victim index has orphan entries"
+        );
         Ok(())
     }
 }
@@ -616,5 +843,140 @@ mod tests {
             last = ftl.write(lpn, 2, SimTime::ZERO).unwrap();
         }
         assert!(last > t1);
+    }
+
+    // ---- extent-path equivalence oracle -----------------------------
+
+    /// The pre-extent per-page reference: a plain `write` loop.
+    fn write_per_page(ftl: &mut Ftl, lpn0: u32, tags: &[u64], now: SimTime) -> Result<SimTime> {
+        let mut done = now;
+        for (i, &t) in tags.iter().enumerate() {
+            done = done.max(ftl.write(lpn0 + i as u32, t, now)?);
+        }
+        Ok(done)
+    }
+
+    /// The pre-extent per-page reference: a plain `read` loop.
+    fn read_per_page(ftl: &mut Ftl, lpn0: u32, len: u32, now: SimTime) -> Result<SimTime> {
+        let mut done = now;
+        for i in 0..len {
+            done = done.max(ftl.read(lpn0 + i, now)?.done);
+        }
+        Ok(done)
+    }
+
+    /// Full observable mapping state (l2p, tags, per-block counters).
+    fn fingerprint(f: &Ftl) -> (Vec<Option<PhysAddr>>, Vec<u64>, Vec<(u32, u32, u32)>) {
+        (
+            f.l2p.clone(),
+            f.tags.clone(),
+            f.blocks
+                .iter()
+                .map(|b| (b.write_ptr, b.valid_count, b.pe_cycles))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn run_wrappers_roundtrip() {
+        let mut ftl = small_ftl();
+        let done = ftl.write_fill(4, 3, 0xAB, SimTime::ZERO).unwrap();
+        assert!(done > SimTime::ZERO);
+        for lpn in 4..7 {
+            assert_eq!(ftl.read(lpn, SimTime::ZERO).unwrap().tag, 0xAB);
+        }
+        assert!(ftl.read_run(4, 3, SimTime::ZERO).unwrap() > SimTime::ZERO);
+        // Zero-length runs are no-ops.
+        assert_eq!(ftl.write_run(0, &[], SimTime::ms(7)).unwrap(), SimTime::ms(7));
+        assert_eq!(ftl.read_run(0, 0, SimTime::ms(7)).unwrap(), SimTime::ms(7));
+        // Out-of-range runs fail up front (one bounds check per run).
+        let n = ftl.logical_pages() as u32;
+        assert!(ftl.write_fill(n - 1, 2, 1, SimTime::ZERO).is_err());
+        assert!(ftl.read_run(n - 1, 2, SimTime::ZERO).is_err());
+        assert!(ftl.read_run(0, 2, SimTime::ZERO).is_err(), "unwritten page errors");
+        ftl.check_invariants().unwrap();
+    }
+
+    /// Property: bulk runs are bit-identical to the per-page reference
+    /// over randomized mixed workloads — returned completion times,
+    /// `FtlStats`, flash stats, free-pool size, full l2p/tags/block
+    /// state and `check_invariants` — including GC pressure and
+    /// out-of-space edges.
+    #[test]
+    fn property_bulk_ops_match_per_page_reference() {
+        prop::check("bulk FTL ops match the per-page reference", |rng| {
+            let cfg = FtlConfig {
+                flash: FlashConfig {
+                    channels: 1 + rng.usize_below(2),
+                    dies_per_channel: 1 + rng.usize_below(2),
+                    blocks_per_die: 8,
+                    pages_per_block: 8,
+                    page_bytes: 4096,
+                    ..Default::default()
+                },
+                gc_low_water: 3,
+                gc_high_water: 5,
+                // Occasionally under-provision so GC cannot keep up and
+                // the out-of-space error path is exercised too.
+                overprovision: if rng.bool(0.2) { 0.05 } else { 0.25 },
+                ..Default::default()
+            };
+            let mut bulk = Ftl::new(cfg.clone(), 42);
+            let mut refr = Ftl::new(cfg, 42);
+            let n = bulk.logical_pages() as u32;
+            let mut tick = 0u64;
+            for _ in 0..60 {
+                let len = 1 + rng.below(6) as u32;
+                let lpn0 = rng.below(n as u64) as u32;
+                let len = len.min(n - lpn0);
+                let now = SimTime::us(tick);
+                tick += 50;
+                if rng.bool(0.6) {
+                    let tags: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+                    let a = bulk.write_run(lpn0, &tags, now);
+                    let b = write_per_page(&mut refr, lpn0, &tags, now);
+                    match (a, b) {
+                        (Ok(x), Ok(y)) => assert_eq!(x, y, "write-run completion"),
+                        (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string()),
+                        (a, b) => panic!("bulk {a:?} vs per-page {b:?}"),
+                    }
+                } else {
+                    let a = bulk.read_run(lpn0, len, now);
+                    let b = read_per_page(&mut refr, lpn0, len, now);
+                    match (a, b) {
+                        (Ok(x), Ok(y)) => assert_eq!(x, y, "read-run completion"),
+                        (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string()),
+                        (a, b) => panic!("bulk {a:?} vs per-page {b:?}"),
+                    }
+                }
+                assert_eq!(bulk.stats(), refr.stats());
+                assert_eq!(bulk.free_block_count(), refr.free_block_count());
+            }
+            bulk.check_invariants().unwrap();
+            refr.check_invariants().unwrap();
+            assert_eq!(fingerprint(&bulk), fingerprint(&refr));
+            assert_eq!(bulk.flash_stats(), refr.flash_stats());
+        });
+    }
+
+    /// Property: across skewed overwrite workloads, the incremental
+    /// victim index picks exactly the block the full scan picks (same
+    /// tie-break), at every GC decision point.
+    #[test]
+    fn property_victim_index_matches_full_scan() {
+        prop::check("victim index tracks the full cost-benefit scan", |rng| {
+            let mut ftl = small_ftl();
+            let n = ftl.logical_pages() as u32;
+            let hot = 1 + rng.usize_below(8) as u32;
+            for round in 0..1 + rng.below(20) {
+                for lpn in 0..n {
+                    if round == 0 || lpn % hot == 0 {
+                        ftl.write(lpn, round, SimTime::ZERO).unwrap();
+                    }
+                }
+                assert_eq!(ftl.gc_victim(), ftl.gc_victim_scan());
+            }
+            ftl.check_invariants().unwrap();
+        });
     }
 }
