@@ -160,10 +160,10 @@ impl Scheduler {
                     let mut ready = now;
                     let per_csd = (cfg.bs_host * pages_per_image).div_ceil(self.csds.len().max(1));
                     for csd in &mut self.csds {
-                        let lpns: Vec<u32> = (0..per_csd as u32)
-                            .map(|i| (data_cursor + i) % 64)
-                            .collect();
-                        ready = ready.max(csd.read_for_host(&lpns, now)?);
+                        // Wrapping LPN range over the preloaded pages —
+                        // scratch-free (no per-step `Vec<u32>`).
+                        ready = ready
+                            .max(csd.read_for_host_wrapped(data_cursor, per_csd as u32, 64, now)?);
                         flash_reads += per_csd as u64;
                     }
                     ready
@@ -175,12 +175,12 @@ impl Scheduler {
             // CSD steps: stage locally (ISP path), then compute.
             for csd in &mut self.csds {
                 let done = if cfg.stage_io {
-                    let lpns: Vec<u32> = (0..(cfg.bs_csd * pages_per_image) as u32)
-                        .map(|i| (data_cursor + i) % 64)
-                        .collect();
-                    flash_reads += lpns.len() as u64;
-                    csd.isp_train_step(
-                        &lpns,
+                    let count = (cfg.bs_csd * pages_per_image) as u32;
+                    flash_reads += count as u64;
+                    csd.isp_train_step_range(
+                        data_cursor,
+                        count,
+                        64,
                         csd_compute,
                         sync_bytes as u64,
                         cfg.image_bytes as u64 * 4, // activations ≈ 4x input

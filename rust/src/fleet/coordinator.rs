@@ -522,17 +522,19 @@ impl Fleet {
             let done = if let Some(st) = &staging {
                 now + st.stage[i] + compute
             } else if self.cfg.stage_io {
+                // Scratch-free: a wrapping LPN range over the preloaded
+                // pages replaces the old per-step `Vec<u32>` build.
                 let ppi = self
                     .cfg
                     .image_bytes
                     .div_ceil(self.pool.device(d).page_bytes())
                     .max(1);
-                let lpns: Vec<u32> = (0..(bs_csd * ppi) as u32)
-                    .map(|i| (data_cursor + i) % PRELOADED_PAGES)
-                    .collect();
-                flash_reads += lpns.len() as u64;
-                self.pool.device_mut(d).isp_train_step(
-                    &lpns,
+                let count = (bs_csd * ppi) as u32;
+                flash_reads += count as u64;
+                self.pool.device_mut(d).isp_train_step_range(
+                    data_cursor,
+                    count,
+                    PRELOADED_PAGES,
                     compute,
                     sync_bytes as u64,
                     self.cfg.activation_bytes_per_image(),

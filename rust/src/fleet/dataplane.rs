@@ -7,10 +7,14 @@
 //!
 //! * **Shard map** — at admission, each job's Eq. 1 [`Placement`]
 //!   becomes a physical layout: every image of every CSD shard is
-//!   written as flash pages through that device's FTL (private images
-//!   pinned to their home CSD, public images slot-allocated), and the
-//!   host's public shard is staged round-robin across the group so the
-//!   host path has real pages to read.
+//!   written as one contiguous `ppi`-page flash extent through that
+//!   device's FTL (private images pinned to their home CSD, public
+//!   images slot-allocated), and the host's public shard is staged
+//!   round-robin across the group so the host path has real pages to
+//!   read. Layout, movement and staged-read measurement all use the
+//!   extent APIs (`write_run`/`read_run` — DESIGN.md §Perf, "Extent
+//!   I/O"); results are bit-identical to the per-page loops they
+//!   replaced.
 //! * **Staged reads** — every (re)balance window measures one batch's
 //!   staging cost per device through the real flash / NVMe timelines;
 //!   the coordinator charges that window-constant cost on every step,
@@ -42,7 +46,7 @@ use anyhow::{bail, ensure, Result};
 use crate::coordinator::Placement;
 use crate::csd::NewportCsd;
 use crate::data::{Dataset, ImageId, Visibility};
-use crate::fsync::{Dlm, DlmStats, LockMode, LockReply};
+use crate::fsync::{Dlm, DlmStats, LockMode, LockReply, ResourceId};
 use crate::sim::SimTime;
 use crate::tunnel::{NodeId, Tunnel};
 
@@ -153,6 +157,10 @@ struct JobPlane {
     /// Journal version of the shard-map resource the group last
     /// observed (monotone across rebalances).
     version: u64,
+    /// Interned `shardmap:jobN` resource — resolved once at admission
+    /// so every lock op of every window is an array lookup, not a
+    /// `format!` + string hash.
+    res: ResourceId,
 }
 
 /// Where a missing image comes from during a rebalance.
@@ -203,6 +211,11 @@ fn record_transfer(
 
 /// Write one image's pages onto a device (no-op if already resident).
 /// Returns (completion, pages written).
+///
+/// Slots are allocated contiguously per image, so the image is one
+/// `ppi`-page extent: a single [`NewportCsd::write_run`] replaces the
+/// old per-page `write_page` loop (bit-identical layout and timing —
+/// the FTL property tests are the contract).
 fn lay_out(
     plane: &mut JobPlane,
     group_idx: usize,
@@ -214,11 +227,8 @@ fn lay_out(
         return Ok((at, 0));
     }
     let slot = plane.slots[group_idx].alloc(id);
-    let mut end = at;
-    for k in 0..plane.ppi {
-        end = end.max(dev.write_page(slot * plane.ppi + k, id as u64, at)?);
-    }
-    Ok((end, plane.ppi as u64))
+    let end = dev.write_run(slot * plane.ppi, plane.ppi, id as u64, at)?;
+    Ok((end.max(at), plane.ppi as u64))
 }
 
 impl DataPlane {
@@ -261,6 +271,9 @@ impl DataPlane {
         self.jobs.remove(&job);
     }
 
+    /// Canonical shard-map resource name — interned into a
+    /// [`ResourceId`] once at admission; only cold paths (external
+    /// `version` queries) go through the string form.
     fn resource(job: JobId) -> String {
         format!("shardmap:{job}")
     }
@@ -292,6 +305,9 @@ impl DataPlane {
             pool.device(devices[0]).page_bytes()
         };
         let ppi = self.image_bytes.div_ceil(page).max(1) as u32;
+        // Intern the shard-map resource once; every later lock op on
+        // this job's map is id-keyed.
+        let res = self.dlm.resource_id(&Self::resource(job));
         let mut plane = JobPlane {
             devices: devices.to_vec(),
             dataset,
@@ -302,14 +318,17 @@ impl DataPlane {
             host_shard: placement.host_ids.clone(),
             staging: StepStaging::default(),
             version: 0,
+            res,
         };
 
         // The lock master (host) installs the map under EX; no tunnel
         // round-trip since the requester is the master itself.
-        let res = Self::resource(job);
-        let granted_at = match self.dlm.request(tunnel, NodeId::Host, &res, LockMode::Ex, now) {
+        let granted_at = match self.dlm.request_id(tunnel, NodeId::Host, res, LockMode::Ex, now) {
             LockReply::Granted { at, .. } => at,
-            LockReply::Queued => bail!("internal: fresh shard-map resource {res:?} contended"),
+            LockReply::Queued => bail!(
+                "internal: fresh shard-map resource {:?} contended",
+                self.dlm.name(res)
+            ),
         };
         self.dlm.check_invariants()?;
 
@@ -356,9 +375,9 @@ impl DataPlane {
                 done = done.max(end);
             }
         }
-        self.dlm.release(tunnel, NodeId::Host, &res, done)?;
+        self.dlm.release_id(tunnel, NodeId::Host, res, done)?;
         self.dlm.check_invariants()?;
-        plane.version = self.dlm.version(&res);
+        plane.version = self.dlm.version_id(res);
 
         Self::remeasure(
             &mut plane,
@@ -412,7 +431,7 @@ impl DataPlane {
         let ndev = plane.devices.len();
         let ppi = plane.ppi;
         let page = if ndev == 0 { 0 } else { pool.device(plane.devices[0]).page_bytes() };
-        let res = Self::resource(job);
+        let res = plane.res;
 
         // Plan the delta: per destination device, which images it is
         // missing and where each comes from. A retained image keeps its
@@ -470,13 +489,16 @@ impl DataPlane {
             // Empty delta (e.g. only the host batch was re-tuned): the
             // coordinator still commits the new map under a host EX so
             // the journal version advances monotonically per window.
-            match self.dlm.request(tunnel, NodeId::Host, &res, LockMode::Ex, now) {
+            match self.dlm.request_id(tunnel, NodeId::Host, res, LockMode::Ex, now) {
                 LockReply::Granted { at, .. } => {
                     self.dlm.check_invariants()?;
-                    self.dlm.release(tunnel, NodeId::Host, &res, at)?;
+                    self.dlm.release_id(tunnel, NodeId::Host, res, at)?;
                     movement_done = movement_done.max(at);
                 }
-                LockReply::Queued => bail!("internal: shard-map resource {res:?} contended"),
+                LockReply::Queued => bail!(
+                    "internal: shard-map resource {:?} contended",
+                    self.dlm.name(res)
+                ),
             }
         } else {
             // All destinations request EX up front: the first is
@@ -487,13 +509,18 @@ impl DataPlane {
             for &i in &dests {
                 let node = NodeId::Csd(plane.devices[i]);
                 if let LockReply::Granted { at, .. } =
-                    self.dlm.request(tunnel, node, &res, LockMode::Ex, now)
+                    self.dlm.request_id(tunnel, node, res, LockMode::Ex, now)
                 {
                     grant.push_back((i, at));
                 }
                 self.dlm.check_invariants()?;
             }
-            ensure!(grant.len() == 1, "internal: {} EX grants on {res:?}", grant.len());
+            ensure!(
+                grant.len() == 1,
+                "internal: {} EX grants on {:?}",
+                grant.len(),
+                self.dlm.name(res)
+            );
             while let Some((i, at)) = grant.pop_front() {
                 lock_wait += at.saturating_sub(now);
                 let gi = plane.devices[i];
@@ -511,15 +538,10 @@ impl DataPlane {
                                      without a slot"
                                 ),
                             };
-                            let mut read_done = at;
-                            for p in 0..ppi {
-                                read_done = read_done.max(
-                                    pool.device_mut(gj)
-                                        .ftl()
-                                        .read(sslot * ppi + p, at)?
-                                        .done,
-                                );
-                            }
+                            // One extent read: the staged image is a
+                            // contiguous `ppi`-page run on the source.
+                            let read_done =
+                                pool.device_mut(gj).ftl().read_run(sslot * ppi, ppi, at)?;
                             pages_read += ppi as u64;
                             record_transfer(
                                 &mut self.transfers,
@@ -564,7 +586,7 @@ impl DataPlane {
                 // EX release = journal commit; it hands the lock to the
                 // next queued destination (FIFO, exactly one EX).
                 let granted =
-                    self.dlm.release(tunnel, NodeId::Csd(gi), &res, phase_done)?;
+                    self.dlm.release_id(tunnel, NodeId::Csd(gi), res, phase_done)?;
                 self.dlm.check_invariants()?;
                 movement_done = movement_done.max(phase_done);
                 for (node, g_at, _version) in granted {
@@ -573,7 +595,10 @@ impl DataPlane {
                         .copied()
                         .find(|&x| NodeId::Csd(plane.devices[x]) == node)
                         .ok_or_else(|| {
-                            anyhow::anyhow!("internal: {node} granted {res:?} unexpectedly")
+                            anyhow::anyhow!(
+                                "internal: {node} granted {:?} unexpectedly",
+                                self.dlm.name(res)
+                            )
                         })?;
                     grant.push_back((idx, g_at));
                 }
@@ -583,7 +608,7 @@ impl DataPlane {
         // Journal read-back: every group device takes PR to observe the
         // committed version before the next step (OCFS2 readers replay
         // the journal the EX releases committed).
-        let new_version = self.dlm.version(&res);
+        let new_version = self.dlm.version_id(res);
         ensure!(
             new_version > plane.version,
             "journal version must advance across a rebalance window \
@@ -592,7 +617,8 @@ impl DataPlane {
         );
         let mut ready = movement_done;
         for &d in &plane.devices {
-            match self.dlm.request(tunnel, NodeId::Csd(d), &res, LockMode::Pr, movement_done) {
+            match self.dlm.request_id(tunnel, NodeId::Csd(d), res, LockMode::Pr, movement_done)
+            {
                 LockReply::Granted { at, version } => {
                     ensure!(
                         version == new_version,
@@ -602,13 +628,13 @@ impl DataPlane {
                     ready = ready.max(at);
                 }
                 LockReply::Queued => {
-                    bail!("internal: PR on {res:?} queued with no EX holder")
+                    bail!("internal: PR on {:?} queued with no EX holder", self.dlm.name(res))
                 }
             }
             self.dlm.check_invariants()?;
         }
         for &d in &plane.devices {
-            self.dlm.release(tunnel, NodeId::Csd(d), &res, ready)?;
+            self.dlm.release_id(tunnel, NodeId::Csd(d), res, ready)?;
         }
         self.dlm.check_invariants()?;
         plane.version = new_version;
@@ -657,36 +683,43 @@ impl DataPlane {
             if plane.shards[i].is_empty() {
                 continue; // empty shard: skip the worker (see data::Shard)
             }
-            let lpns: Vec<u32> = plane.shards[i]
-                .iter()
-                .take(bs_csd)
-                .flat_map(|id| {
-                    let slot = plane.slots[i].of[id];
-                    slot * ppi..(slot + 1) * ppi
-                })
-                .collect();
+            // Each batch image is one contiguous `ppi`-page extent at
+            // its slot — run reads replace the flattened LPN list (the
+            // per-page bookings and io stats are identical).
             let dev = pool.device_mut(plane.devices[i]);
             dev.isp().admit(param_bytes, activation_bytes_per_image, bs_csd)?;
-            let done = dev.read_for_isp(&lpns, t0)?;
+            let mut done = t0;
+            let mut pages = 0u64;
+            for id in plane.shards[i].iter().take(bs_csd) {
+                let slot = plane.slots[i].of[id];
+                done = done.max(dev.read_for_isp_run(slot * ppi, ppi, t0)?);
+                pages += ppi as u64;
+            }
             staging.stage[i] = done.saturating_sub(t0);
-            staging.flash_reads += lpns.len() as u64;
+            staging.flash_reads += pages;
         }
         if holds_host && ndev > 0 && !plane.host_shard.is_empty() {
             let page = pool.device(plane.devices[0]).page_bytes();
-            let mut per_dev: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+            // Plan the host batch as per-device extent runs, not pages.
+            let mut per_dev: BTreeMap<usize, Vec<(u32, u32)>> = BTreeMap::new();
             for id in plane.host_shard.iter().take(bs_host) {
                 let &home = plane
                     .public_home
                     .get(id)
                     .ok_or_else(|| anyhow::anyhow!("host image {id} was never staged"))?;
                 let slot = plane.slots[home].of[id];
-                per_dev.entry(home).or_default().extend(slot * ppi..(slot + 1) * ppi);
+                per_dev.entry(home).or_default().push((slot * ppi, ppi));
             }
             let mut done = t0;
-            for (i, lpns) in &per_dev {
-                done = done.max(pool.device_mut(plane.devices[*i]).read_for_host(lpns, t0)?);
-                staging.flash_reads += lpns.len() as u64;
-                staging.host_bytes += lpns.len() as u64 * page as u64;
+            for (i, runs) in &per_dev {
+                let dev = pool.device_mut(plane.devices[*i]);
+                let mut pages = 0u64;
+                for &(lpn0, len) in runs {
+                    done = done.max(dev.read_for_host_run(lpn0, len, t0)?);
+                    pages += len as u64;
+                }
+                staging.flash_reads += pages;
+                staging.host_bytes += pages * page as u64;
             }
             staging.host_stage = done.saturating_sub(t0);
         }

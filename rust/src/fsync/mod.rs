@@ -12,6 +12,10 @@
 //! request/grant crosses the tunnel, so lock traffic has a real cost
 //! that shows up in epoch timings when public-data shards are
 //! rebalanced mid-run.
+//!
+//! Resource names are interned into [`ResourceId`]s (mirroring
+//! `perfmodel::NetId`): hot-path requests/releases are array-indexed,
+//! the string entry points remain as shims for cold callers and tests.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -70,9 +74,20 @@ pub struct DlmStats {
     pub releases: u64,
 }
 
+/// Interned DLM resource name: an index into the master's name table.
+/// Resolved once (at job admission, mirroring `perfmodel::NetId`), so
+/// the lock hot path — every request, grant and release of a fleet
+/// rebalance window — is an array index instead of a string hash and
+/// compare. The string entry points below remain as shims.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ResourceId(u32);
+
 /// The lock master (host-resident).
 pub struct Dlm {
-    resources: BTreeMap<String, LockState>,
+    /// Interned resource names; `ResourceId` indexes both tables.
+    names: Vec<String>,
+    by_name: BTreeMap<String, u32>,
+    states: Vec<LockState>,
     stats: DlmStats,
     /// Message size of one DLM request/grant on the tunnel.
     msg_bytes: usize,
@@ -86,29 +101,65 @@ impl Default for Dlm {
 
 impl Dlm {
     pub fn new() -> Self {
-        Self { resources: BTreeMap::new(), stats: DlmStats::default(), msg_bytes: 256 }
+        Self {
+            names: Vec::new(),
+            by_name: BTreeMap::new(),
+            states: Vec::new(),
+            stats: DlmStats::default(),
+            msg_bytes: 256,
+        }
     }
 
     pub fn stats(&self) -> DlmStats {
         self.stats
     }
 
+    /// Intern `name`, creating the resource on first sight. The
+    /// returned id is stable for the lifetime of the master.
+    pub fn resource_id(&mut self, name: &str) -> ResourceId {
+        if let Some(&i) = self.by_name.get(name) {
+            return ResourceId(i);
+        }
+        let i = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), i);
+        self.states.push(LockState::new());
+        ResourceId(i)
+    }
+
+    /// The id of an already-interned resource, if any.
+    pub fn lookup(&self, name: &str) -> Option<ResourceId> {
+        self.by_name.get(name).copied().map(ResourceId)
+    }
+
+    /// The interned name of a resource id.
+    pub fn name(&self, res: ResourceId) -> &str {
+        &self.names[res.0 as usize]
+    }
+
     /// Current metadata version of a resource (journal sequence).
+    /// String shim over [`Self::version_id`].
     pub fn version(&self, resource: &str) -> u64 {
-        self.resources.get(resource).map_or(0, |s| s.version)
+        self.lookup(resource).map_or(0, |id| self.version_id(id))
+    }
+
+    pub fn version_id(&self, res: ResourceId) -> u64 {
+        self.states[res.0 as usize].version
     }
 
     pub fn holders(&self, resource: &str) -> Vec<(NodeId, LockMode)> {
-        self.resources.get(resource).map_or_else(Vec::new, |s| s.holders.clone())
+        self.lookup(resource)
+            .map_or_else(Vec::new, |id| self.states[id.0 as usize].holders.clone())
     }
 
     /// Requests currently queued behind incompatible holders.
     pub fn queue_len(&self, resource: &str) -> usize {
-        self.resources.get(resource).map_or(0, |s| s.queue.len())
+        self.lookup(resource).map_or(0, |id| self.states[id.0 as usize].queue.len())
     }
 
-    /// Request `mode` on `resource` from `node` at `now`, paying the
-    /// tunnel round-trip when the requester is not the master (host).
+    /// Request `mode` on `resource` from `node` at `now` — string shim
+    /// over [`Self::request_id`] (interning on first sight, as the old
+    /// map entry did).
     pub fn request(
         &mut self,
         tunnel: &mut Tunnel,
@@ -117,20 +168,35 @@ impl Dlm {
         mode: LockMode,
         now: SimTime,
     ) -> LockReply {
+        let id = self.resource_id(resource);
+        self.request_id(tunnel, node, id, mode, now)
+    }
+
+    /// Request `mode` on an interned resource, paying the tunnel
+    /// round-trip when the requester is not the master (host).
+    pub fn request_id(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        res: ResourceId,
+        mode: LockMode,
+        now: SimTime,
+    ) -> LockReply {
         self.stats.requests += 1;
         let req_arrive = match node {
             NodeId::Host => now,
             csd => tunnel.send(csd, NodeId::Host, self.msg_bytes, now),
         };
-        let state = self.resources.entry(resource.to_string()).or_insert_with(LockState::new);
+        let state = &mut self.states[res.0 as usize];
         if state.can_grant(mode) {
             state.holders.push((node, mode));
             self.stats.grants += 1;
+            let version = state.version;
             let granted_at = match node {
                 NodeId::Host => req_arrive,
                 csd => tunnel.send(NodeId::Host, csd, self.msg_bytes, req_arrive),
             };
-            LockReply::Granted { at: granted_at, version: state.version }
+            LockReply::Granted { at: granted_at, version }
         } else {
             state.queue.push_back((node, mode));
             self.stats.queued += 1;
@@ -138,9 +204,7 @@ impl Dlm {
         }
     }
 
-    /// Release a held lock; EX release bumps the metadata version
-    /// (journal commit). Returns newly granted (node, time, version)
-    /// tuples from the FIFO queue.
+    /// Release a held lock — string shim over [`Self::release_id`].
     pub fn release(
         &mut self,
         tunnel: &mut Tunnel,
@@ -148,15 +212,30 @@ impl Dlm {
         resource: &str,
         now: SimTime,
     ) -> Result<Vec<(NodeId, SimTime, u64)>> {
-        let state = match self.resources.get_mut(resource) {
-            Some(s) => s,
-            None => bail!("release of unknown resource {resource:?}"),
+        let Some(id) = self.lookup(resource) else {
+            bail!("release of unknown resource {resource:?}");
         };
-        let idx = state
+        self.release_id(tunnel, node, id, now)
+    }
+
+    /// Release a held lock; EX release bumps the metadata version
+    /// (journal commit). Returns newly granted (node, time, version)
+    /// tuples from the FIFO queue.
+    pub fn release_id(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        res: ResourceId,
+        now: SimTime,
+    ) -> Result<Vec<(NodeId, SimTime, u64)>> {
+        let pos = self.states[res.0 as usize]
             .holders
             .iter()
-            .position(|(n, _)| *n == node)
-            .ok_or_else(|| anyhow::anyhow!("{node} does not hold {resource:?}"))?;
+            .position(|(n, _)| *n == node);
+        let Some(idx) = pos else {
+            bail!("{node} does not hold {:?}", self.names[res.0 as usize]);
+        };
+        let state = &mut self.states[res.0 as usize];
         let (_, mode) = state.holders.remove(idx);
         if mode == LockMode::Ex {
             state.version += 1; // journal commit visible to next holders
@@ -192,7 +271,8 @@ impl Dlm {
     /// Invariant: at most one EX holder, EX never coexists with PR,
     /// and no node holds the same resource twice.
     pub fn check_invariants(&self) -> Result<()> {
-        for (res, state) in &self.resources {
+        for (i, state) in self.states.iter().enumerate() {
+            let res = &self.names[i];
             let ex = state.holders.iter().filter(|(_, m)| *m == LockMode::Ex).count();
             anyhow::ensure!(ex <= 1, "{res}: {ex} EX holders");
             if ex == 1 {
@@ -277,6 +357,41 @@ mod tests {
             LockReply::Granted { at, .. } => assert_eq!(at, SimTime::ZERO),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn resource_interning_is_stable_and_matches_string_path() {
+        let (mut dlm, mut tun) = setup();
+        let a = dlm.resource_id("shardmap:job0");
+        let b = dlm.resource_id("shardmap:job1");
+        assert_ne!(a, b);
+        assert_eq!(dlm.resource_id("shardmap:job0"), a);
+        assert_eq!(dlm.lookup("shardmap:job0"), Some(a));
+        assert_eq!(dlm.name(a), "shardmap:job0");
+        assert_eq!(dlm.lookup("never"), None);
+        assert_eq!(dlm.version("never"), 0);
+
+        // The id path and the string shim drive the same state machine.
+        let (mut sdlm, mut stun) = setup();
+        let g1 = dlm.request_id(&mut tun, NodeId::Csd(0), a, LockMode::Ex, SimTime::ZERO);
+        let g2 =
+            sdlm.request(&mut stun, NodeId::Csd(0), "shardmap:job0", LockMode::Ex, SimTime::ZERO);
+        assert_eq!(g1, g2);
+        assert_eq!(
+            dlm.request_id(&mut tun, NodeId::Csd(1), a, LockMode::Pr, SimTime::ZERO),
+            LockReply::Queued
+        );
+        assert_eq!(
+            sdlm.request(&mut stun, NodeId::Csd(1), "shardmap:job0", LockMode::Pr, SimTime::ZERO),
+            LockReply::Queued
+        );
+        let r1 = dlm.release_id(&mut tun, NodeId::Csd(0), a, SimTime::ms(1)).unwrap();
+        let r2 = sdlm.release(&mut stun, NodeId::Csd(0), "shardmap:job0", SimTime::ms(1)).unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(dlm.version_id(a), 1);
+        assert_eq!(sdlm.version("shardmap:job0"), 1);
+        dlm.check_invariants().unwrap();
+        sdlm.check_invariants().unwrap();
     }
 
     #[test]

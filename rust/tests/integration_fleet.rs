@@ -239,10 +239,16 @@ fn fast_forward_is_bit_identical_to_per_step() {
             for &(at_ns, device, factor) in &faults {
                 fl.inject_degradation(SimTime::ns(at_ns), device, factor);
             }
-            fl.run().unwrap()
+            let report = fl.run().unwrap();
+            let transfers = fl.data_plane().transfers().to_vec();
+            (report, transfers)
         };
-        let a = run(true);
-        let b = run(false);
+        let (a, ta) = run(true);
+        let (b, tb) = run(false);
+        // The data plane stages and moves everything through the
+        // extent (bulk I/O) path; the physical transfer ledger must be
+        // untouched by how steps were batched.
+        assert_eq!(ta, tb, "transfer ledger must be identical across executors");
         assert_eq!(a.makespan, b.makespan, "makespan must be bit-identical");
         assert_eq!(a.total_images, b.total_images);
         assert_eq!(a.link_bytes, b.link_bytes);
@@ -318,6 +324,12 @@ fn privacy_invariant_over_randomized_rebalancing_fleets() {
         let report = fl.run().unwrap();
         total_retunes += report.retunes;
         total_transfers += fl.data_plane().transfers().len() as u64;
+        // The shard maps were installed through the extent (bulk write)
+        // path — the privacy audit below covers bulk I/O movement.
+        assert!(
+            fl.data_plane().stats().layout_pages > 0,
+            "admission must stage shard maps onto flash"
+        );
         // Audit the transfer ledger: every image that crossed nodes
         // must be public (JobId order is submission order).
         for t in fl.data_plane().transfers() {
