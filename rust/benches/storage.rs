@@ -1,0 +1,275 @@
+//! Bench: the extent-based storage stack (DESIGN.md §Perf, "Extent
+//! I/O") — bulk FTL write/read runs vs the per-page reference loops
+//! (asserting bit-identical outcomes *before* recording any number),
+//! indexed vs full-scan GC victim selection under overwrite pressure,
+//! a ~100k-image admission layout through the data plane, and a
+//! degraded-fleet rebalance window.
+//!
+//! Emits machine-readable numbers to `BENCH_4.json` (section
+//! `"storage"`).
+//!
+//! Run: `cargo bench --bench storage`
+
+use std::time::Instant;
+
+use stannis::coordinator::{balance, balance_weighted};
+use stannis::csd::{CsdConfig, FlashConfig, Ftl, FtlConfig};
+use stannis::data::{Dataset, DatasetConfig};
+use stannis::fleet::{DataPlane, DevicePool, JobId};
+use stannis::metrics::{bench, f, record_bench_json_to};
+use stannis::sim::SimTime;
+use stannis::tunnel::{Tunnel, TunnelConfig};
+
+const BENCH_JSON: &str = "BENCH_4.json";
+
+/// Mid-sized FTL: big enough that GC victim scans hurt, small enough
+/// that an iteration stays in the millisecond range.
+fn bench_ftl() -> Ftl {
+    let cfg = FtlConfig {
+        flash: FlashConfig {
+            channels: 8,
+            dies_per_channel: 2,
+            blocks_per_die: 64,
+            pages_per_block: 32,
+            page_bytes: 4096,
+            ..Default::default()
+        },
+        overprovision: 0.125,
+        gc_low_water: 8,
+        gc_high_water: 16,
+        ..Default::default()
+    };
+    Ftl::new(cfg, 42)
+}
+
+const RUN: u32 = 32;
+
+/// Write every logical page once (sequential runs), then overwrite a
+/// skewed third — enough churn to keep GC busy.
+fn write_workload_bulk(ftl: &mut Ftl) -> (u64, SimTime) {
+    let n = ftl.logical_pages() as u32;
+    let mut pages = 0u64;
+    let mut last = SimTime::ZERO;
+    let mut lpn = 0u32;
+    while lpn < n {
+        let len = RUN.min(n - lpn);
+        last = last.max(ftl.write_fill(lpn, len, lpn as u64, SimTime::ZERO).unwrap());
+        pages += len as u64;
+        lpn += len;
+    }
+    let mut lpn = 0u32;
+    while lpn + RUN <= n {
+        last = last.max(ftl.write_fill(lpn, RUN, !lpn as u64, SimTime::ZERO).unwrap());
+        pages += RUN as u64;
+        lpn += 3 * RUN;
+    }
+    (pages, last)
+}
+
+/// The per-page reference: the identical workload through `write`.
+fn write_workload_per_page(ftl: &mut Ftl) -> (u64, SimTime) {
+    let n = ftl.logical_pages() as u32;
+    let mut pages = 0u64;
+    let mut last = SimTime::ZERO;
+    let mut lpn = 0u32;
+    while lpn < n {
+        let len = RUN.min(n - lpn);
+        for k in 0..len {
+            last = last.max(ftl.write(lpn + k, lpn as u64, SimTime::ZERO).unwrap());
+        }
+        pages += len as u64;
+        lpn += len;
+    }
+    let mut lpn = 0u32;
+    while lpn + RUN <= n {
+        for k in 0..RUN {
+            last = last.max(ftl.write(lpn + k, !lpn as u64, SimTime::ZERO).unwrap());
+        }
+        pages += RUN as u64;
+        lpn += 3 * RUN;
+    }
+    (pages, last)
+}
+
+fn main() {
+    // --- Bulk vs per-page equality gate -----------------------------------
+    // Two identically-seeded FTLs run the same workload through the
+    // extent path and the per-page reference; every observable must be
+    // bit-identical before any throughput number is recorded.
+    let mut bulk = bench_ftl();
+    let mut refr = bench_ftl();
+    let (wp, bulk_last) = write_workload_bulk(&mut bulk);
+    let (wp_ref, ref_last) = write_workload_per_page(&mut refr);
+    assert_eq!(wp, wp_ref);
+    assert_eq!(bulk_last, ref_last, "bulk write completion must equal per-page");
+    assert_eq!(bulk.stats(), refr.stats(), "FtlStats must be bit-identical");
+    assert_eq!(bulk.flash_stats(), refr.flash_stats());
+    assert_eq!(bulk.free_block_count(), refr.free_block_count());
+    bulk.check_invariants().unwrap();
+    refr.check_invariants().unwrap();
+    let n = bulk.logical_pages() as u32;
+    let mut lpn = 0u32;
+    let mut rd_bulk = SimTime::ZERO;
+    let mut rd_ref = SimTime::ZERO;
+    while lpn < n {
+        let len = RUN.min(n - lpn);
+        rd_bulk = rd_bulk.max(bulk.read_run(lpn, len, SimTime::ZERO).unwrap());
+        for k in 0..len {
+            rd_ref = rd_ref.max(refr.read(lpn + k, SimTime::ZERO).unwrap().done);
+        }
+        lpn += len;
+    }
+    assert_eq!(rd_bulk, rd_ref, "bulk read completion must equal per-page");
+    assert_eq!(bulk.stats(), refr.stats());
+    println!(
+        "equality gate: {wp} pages written + {n} read, bulk == per-page (WAF {})",
+        f(bulk.stats().waf(), 3)
+    );
+    assert_eq!(bulk.gc_victim(), bulk.gc_victim_scan(), "victim index == full scan");
+
+    // --- FTL write/read throughput ----------------------------------------
+    let wr_bulk = bench("ftl write_run (GC churn)", 1, 8, || {
+        let mut ftl = bench_ftl();
+        std::hint::black_box(write_workload_bulk(&mut ftl));
+    });
+    let wr_page = bench("ftl write per-page (GC churn)", 1, 8, || {
+        let mut ftl = bench_ftl();
+        std::hint::black_box(write_workload_per_page(&mut ftl));
+    });
+    let write_run_pps = wp as f64 / wr_bulk.mean_secs();
+    let write_page_pps = wp as f64 / wr_page.mean_secs();
+    println!("{}", wr_bulk.summary());
+    println!("{}", wr_page.summary());
+    println!(
+        "write path: {} pages/s bulk vs {} pages/s per-page ({}x)",
+        f(write_run_pps, 0),
+        f(write_page_pps, 0),
+        f(write_run_pps / write_page_pps, 2)
+    );
+    let mut reader = bench_ftl();
+    write_workload_bulk(&mut reader);
+    let rd = bench("ftl read_run (full sweep)", 1, 8, || {
+        let mut lpn = 0u32;
+        while lpn < n {
+            let len = RUN.min(n - lpn);
+            std::hint::black_box(reader.read_run(lpn, len, SimTime::ZERO).unwrap());
+            lpn += len;
+        }
+    });
+    let read_run_pps = n as f64 / rd.mean_secs();
+    println!("{}", rd.summary());
+
+    // --- GC victim selection: index vs full scan --------------------------
+    // `bulk` is left in a post-churn state with plenty of partially
+    // invalid blocks — selection pressure is realistic.
+    assert_eq!(bulk.gc_victim(), bulk.gc_victim_scan());
+    let idx = bench("gc victim (incremental index)", 10, 400, || {
+        std::hint::black_box(bulk.gc_victim());
+    });
+    let scan = bench("gc victim (full scan)", 10, 400, || {
+        std::hint::black_box(bulk.gc_victim_scan());
+    });
+    let victim_speedup = scan.mean_ns / idx.mean_ns;
+    println!("{}", idx.summary());
+    println!("{}", scan.summary());
+    println!("victim selection speedup: {}x", f(victim_speedup, 1));
+
+    // --- Admission layout: ~100k images through the data plane ------------
+    let csd_cfg = CsdConfig {
+        ftl: FtlConfig {
+            flash: FlashConfig {
+                channels: 16,
+                dies_per_channel: 4,
+                blocks_per_die: 32,
+                pages_per_block: 64,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let image_bytes = 16 * 1024; // one 16 KiB flash page per image
+    let dataset = Dataset::new(DatasetConfig {
+        public_images: 70_000,
+        private_per_csd: vec![9_910; 4],
+        hw: 8,
+        classes: 4,
+        seed: 7,
+        noise: 0.5,
+    })
+    .expect("dataset");
+    let placement = balance(&dataset, 4, 25, 150, true).expect("balance");
+    let admit = |ds: Dataset| {
+        let mut plane = DataPlane::new(image_bytes);
+        let mut pool = DevicePool::new(4, &csd_cfg);
+        let mut tun = Tunnel::new(4, TunnelConfig::default());
+        let t0 = Instant::now();
+        let cost = plane
+            .admit(
+                JobId(0),
+                ds,
+                &placement,
+                &[0, 1, 2, 3],
+                true,
+                25,
+                150,
+                1 << 20,
+                4 * image_bytes as u64,
+                &mut pool,
+                &mut tun,
+                SimTime::ZERO,
+            )
+            .expect("admit");
+        (t0.elapsed().as_secs_f64(), cost, plane, pool, tun)
+    };
+    let (_, warm_cost, ..) = admit(dataset.clone()); // warm-up + sanity
+    assert!(warm_cost.pages_written > 90_000, "layout must stage ~100k images");
+    let (admission_wall, cost, mut plane, mut pool, mut tun) = admit(dataset.clone());
+    println!(
+        "\nadmission layout: {} images as {} flash pages in {} s wall",
+        dataset.len(),
+        cost.pages_written,
+        f(admission_wall, 3)
+    );
+
+    // --- Degraded-fleet rebalance window ----------------------------------
+    let redeal =
+        balance_weighted(&dataset, 4, 25, 150, true, &[0.5, 1.0, 1.0, 1.0]).expect("redeal");
+    let t0 = Instant::now();
+    let rcost = plane
+        .rebalance(
+            JobId(0),
+            &redeal,
+            true,
+            25,
+            150,
+            1 << 20,
+            4 * image_bytes as u64,
+            &mut pool,
+            &mut tun,
+            SimTime::secs(100),
+        )
+        .expect("rebalance");
+    let rebalance_wall = t0.elapsed().as_secs_f64();
+    assert!(rcost.images_moved > 0, "health flip must move the public top-up");
+    println!(
+        "rebalance: {} images moved ({} bytes) in {} s wall, lock wait {}",
+        rcost.images_moved,
+        rcost.bytes_moved,
+        f(rebalance_wall, 4),
+        rcost.lock_wait
+    );
+
+    record_bench_json_to(
+        BENCH_JSON,
+        "storage",
+        &[
+            ("ftl_write_run_pages_per_sec", write_run_pps),
+            ("ftl_write_per_page_pages_per_sec", write_page_pps),
+            ("ftl_read_run_pages_per_sec", read_run_pps),
+            ("gc_victim_index_speedup", victim_speedup),
+            ("admission_layout_100k_images_wall_s", admission_wall),
+            ("rebalance_extent_wall_s", rebalance_wall),
+        ],
+    );
+}
