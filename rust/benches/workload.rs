@@ -1,0 +1,174 @@
+//! Bench: the online fleet runtime under open-loop traffic — a seeded
+//! Poisson arrival sweep (sustained jobs/hour, p50/p99 queue wait) and
+//! a cancel-heavy churn run, on a 24-bay chassis. Before recording
+//! anything the bench asserts that slicing the session into
+//! per-external-event `run_until` calls is bit-identical to draining it
+//! in one shot (the §Runtime window-boundary rule).
+//!
+//! Emits machine-readable numbers to `BENCH_5.json` (section
+//! `"workload"`).
+//!
+//! Run: `cargo bench --bench workload`
+
+use std::time::Instant;
+
+use stannis::config::{CancelSpec, WorkloadSpec};
+use stannis::fleet::{FleetConfig, FleetReport, FleetRuntime};
+use stannis::metrics::{f, print_table, record_bench_json_to};
+
+const POOL: usize = 24;
+
+fn runtime(spec: &WorkloadSpec) -> FleetRuntime {
+    FleetRuntime::new(FleetConfig {
+        total_csds: spec.total_csds,
+        stage_io: spec.stage_io,
+        data_plane: spec.data_plane,
+        fast_forward: spec.fast_forward,
+        ..Default::default()
+    })
+}
+
+/// One-shot run: load the trace, drain to idle. Returns the drained
+/// session (for report + ledgers) and the wall time.
+fn run_trace(spec: &WorkloadSpec) -> (FleetRuntime, f64) {
+    let mut rt = runtime(spec);
+    rt.load_workload(spec).expect("load workload trace");
+    let t0 = Instant::now();
+    rt.run_until_idle().expect("workload run");
+    let wall = t0.elapsed().as_secs_f64();
+    (rt, wall)
+}
+
+/// Sliced run: `run_until` at every external boundary, then idle.
+fn run_trace_sliced(spec: &WorkloadSpec) -> FleetReport {
+    let mut rt = runtime(spec);
+    let boundaries = rt.load_workload(spec).expect("load workload trace");
+    for t in boundaries {
+        rt.run_until(t).expect("workload slice");
+    }
+    rt.run_until_idle().expect("workload run");
+    rt.report()
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+fn main() {
+    // --- Guard: sliced driving must be bit-identical to one-shot ----------
+    let guard_spec = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        jobs: 12,
+        mean_interarrival_secs: 20.0,
+        cancels: vec![CancelSpec { job: 2, at_secs: 90.0 }],
+        faults: vec![
+            stannis::config::FaultSpec { at_secs: 45.0, device: 0, factor: 0.6 },
+            stannis::config::FaultSpec { at_secs: 150.0, device: 0, factor: 2.0 },
+        ],
+        ..Default::default()
+    };
+    let (one_rt, _) = run_trace(&guard_spec);
+    let one = one_rt.report();
+    let sliced = run_trace_sliced(&guard_spec);
+    assert_eq!(one.makespan, sliced.makespan, "slicing must not change the timeline");
+    assert_eq!(one.total_images, sliced.total_images);
+    assert_eq!(one.link_bytes, sliced.link_bytes);
+    assert_eq!(
+        one.total_energy_j.to_bits(),
+        sliced.total_energy_j.to_bits(),
+        "slicing must be energy-bit-identical"
+    );
+
+    // --- Poisson arrival sweep --------------------------------------------
+    const SWEEP_JOBS: usize = 48;
+    let mut rows = Vec::new();
+    let mut sweep_wall = 0.0;
+    let mut heavy = None;
+    for mean_gap in [120.0f64, 60.0, 30.0, 10.0] {
+        let spec = WorkloadSpec {
+            total_csds: POOL,
+            stage_io: false,
+            jobs: SWEEP_JOBS,
+            mean_interarrival_secs: mean_gap,
+            seed: 11,
+            ..Default::default()
+        };
+        let (rt, wall) = run_trace(&spec);
+        let r = rt.report();
+        sweep_wall += wall;
+        let mut waits: Vec<f64> =
+            r.jobs.iter().map(|j| j.queue_wait.as_secs_f64()).collect();
+        waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let hours = r.makespan.as_secs_f64() / 3600.0;
+        let jobs_per_hour = r.jobs.len() as f64 / hours.max(1e-12);
+        let (p50, p99) = (percentile(&waits, 0.50), percentile(&waits, 0.99));
+        rows.push(vec![
+            f(mean_gap, 0),
+            r.jobs.len().to_string(),
+            r.makespan.to_string(),
+            f(jobs_per_hour, 1),
+            f(p50, 1),
+            f(p99, 1),
+            f(r.aggregate_ips, 1),
+            format!("{:.3} ms", wall * 1e3),
+        ]);
+        heavy = Some((jobs_per_hour, p50, p99)); // densest point wins (last)
+    }
+    print_table(
+        &format!("Workload sweep — {SWEEP_JOBS} Poisson arrivals on a {POOL}-bay chassis"),
+        &["mean gap s", "jobs", "makespan", "jobs/h", "wait p50 s", "wait p99 s", "agg img/s", "wall"],
+        &rows,
+    );
+    let (jobs_per_hour, p50, p99) = heavy.expect("sweep ran");
+
+    // --- Cancel-heavy churn -----------------------------------------------
+    // Half the arrivals are torn down mid-flight: admission, layout,
+    // teardown and backfill all churn continuously.
+    const CHURN_JOBS: usize = 40;
+    let churn = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        jobs: CHURN_JOBS,
+        mean_interarrival_secs: 10.0,
+        seed: 13,
+        cancels: (0..CHURN_JOBS)
+            .step_by(2)
+            .map(|i| CancelSpec { job: i, at_secs: 12.0 + 9.0 * i as f64 })
+            .collect(),
+        ..Default::default()
+    };
+    let (churn_rt, churn_wall) = run_trace(&churn);
+    let cr = churn_rt.report();
+    let freed = churn_rt.data_plane().stats().freed_pages;
+    let cancels = churn_rt.data_plane().stats().cancels;
+    println!(
+        "\nchurn: {} arrivals, {} cancelled ({} teardown(s), {} page(s) freed), makespan {}, wall {:.3} ms",
+        CHURN_JOBS,
+        cr.cancelled,
+        cancels,
+        freed,
+        cr.makespan,
+        churn_wall * 1e3,
+    );
+    assert!(cr.cancelled > 0, "churn must actually cancel jobs");
+
+    record_bench_json_to(
+        "BENCH_5.json",
+        "workload",
+        &[
+            ("sweep_jobs", SWEEP_JOBS as f64),
+            ("jobs_per_hour_sustained", jobs_per_hour),
+            ("queue_wait_p50_s", p50),
+            ("queue_wait_p99_s", p99),
+            ("arrival_sweep_wall_s", sweep_wall),
+            ("churn_wall_s", churn_wall),
+            ("churn_cancelled_jobs", cr.cancelled as f64),
+            ("churn_freed_pages", freed as f64),
+        ],
+    );
+}

@@ -146,9 +146,12 @@ impl ExperimentConfig {
     }
 }
 
-/// A scheduled device fault for fleet runs (DESIGN.md §5): at
-/// `at_secs` of simulated time, multiply `device`'s health by
-/// `factor`.
+/// A scheduled device health event for fleet runs (DESIGN.md §5,
+/// §Runtime): at `at_secs` of simulated time, multiply `device`'s
+/// health by `factor`. `factor < 1` is a fault (thermal throttle,
+/// wear); `factor > 1` is a *repair* (throttle lifted, module swapped)
+/// — the pool clamps health at 1.0, so a schedule can express
+/// degrade-then-repair with one mechanism (`0:30:0.5` then `0:90:2`).
 #[derive(Debug, Clone, Copy)]
 pub struct FaultSpec {
     pub at_secs: f64,
@@ -166,12 +169,13 @@ impl FaultSpec {
         .validated()
     }
 
-    /// Parse the CLI form `device:at_secs:factor` (e.g. `3:30:0.6`).
+    /// Parse the CLI form `device:at_secs:factor` (e.g. `3:30:0.6` to
+    /// throttle, `3:90:2` to repair).
     pub fn parse_cli(s: &str) -> Result<Self> {
         let parts: Vec<&str> = s.split(':').collect();
         anyhow::ensure!(
             parts.len() == 3,
-            "fault spec {s:?} must be device:at_secs:factor (e.g. 3:30:0.6)"
+            "fault spec {s:?} must be device:at_secs:factor (e.g. 3:30:0.6; factor > 1 repairs)"
         );
         Self {
             device: parts[0].parse().with_context(|| format!("device in {s:?}"))?,
@@ -179,6 +183,12 @@ impl FaultSpec {
             factor: parts[2].parse().with_context(|| format!("factor in {s:?}"))?,
         }
         .validated()
+    }
+
+    /// True for health-restoring events (`factor > 1`; the pool clamps
+    /// the result at full health).
+    pub fn is_repair(&self) -> bool {
+        self.factor > 1.0
     }
 
     fn validated(self) -> Result<Self> {
@@ -189,8 +199,46 @@ impl FaultSpec {
         );
         anyhow::ensure!(
             self.factor > 0.0 && self.factor.is_finite(),
-            "fault factor must be a positive scale, got {}",
+            "fault factor must be a positive scale (< 1 degrades, > 1 repairs), got {}",
             self.factor
+        );
+        Ok(self)
+    }
+}
+
+/// A scheduled mid-run cancellation for workload runs: tear down the
+/// `job`-th submitted job (submission order, 0-based) at `at_secs`.
+#[derive(Debug, Clone, Copy)]
+pub struct CancelSpec {
+    pub job: usize,
+    pub at_secs: f64,
+}
+
+impl CancelSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Self { job: j.field("job")?.as_usize()?, at_secs: j.field("at_secs")?.as_f64()? }
+            .validated()
+    }
+
+    /// Parse the CLI form `job:at_secs` (e.g. `2:45.5`).
+    pub fn parse_cli(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 2,
+            "cancel spec {s:?} must be job:at_secs (e.g. 2:45.5)"
+        );
+        Self {
+            job: parts[0].parse().with_context(|| format!("job in {s:?}"))?,
+            at_secs: parts[1].parse().with_context(|| format!("at_secs in {s:?}"))?,
+        }
+        .validated()
+    }
+
+    fn validated(self) -> Result<Self> {
+        anyhow::ensure!(
+            self.at_secs >= 0.0 && self.at_secs.is_finite(),
+            "cancel at_secs must be a non-negative time, got {}",
+            self.at_secs
         );
         Ok(self)
     }
@@ -291,6 +339,225 @@ impl FleetExperimentConfig {
     }
 }
 
+/// One entry of a workload's job mix: a job template drawn with
+/// probability proportional to `weight`.
+#[derive(Debug, Clone)]
+pub struct WeightedJob {
+    pub weight: f64,
+    pub job: ExperimentConfig,
+}
+
+/// An *online* multi-job experiment for the fleet runtime
+/// (DESIGN.md §Runtime): a seeded arrival process over a weighted job
+/// mix, plus cancel and degrade/repair schedules — the open-loop
+/// traffic shape a shared chassis actually serves, driven by
+/// `stannis workload`.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Devices in the shared pool.
+    pub total_csds: usize,
+    /// Legacy per-step flash staging (superseded by `data_plane`).
+    pub stage_io: bool,
+    /// Model the physical data plane (DESIGN.md §Data-Plane).
+    pub data_plane: bool,
+    /// Steady-state fast-forward (`--per-step` disables).
+    pub fast_forward: bool,
+    /// Seed of the arrival process and mix draws.
+    pub seed: u64,
+    /// Number of job arrivals to draw.
+    pub jobs: usize,
+    /// Mean of the exponential inter-arrival gap (Poisson process).
+    pub mean_interarrival_secs: f64,
+    /// Job templates, drawn by weight per arrival. Empty = the default
+    /// four-network mix (each job sized `csds_per_job`).
+    pub mix: Vec<WeightedJob>,
+    /// Devices per job in the default mix (ignored with an explicit
+    /// `mix`).
+    pub csds_per_job: usize,
+    /// Mid-run cancellations (`job` is the submission index).
+    pub cancels: Vec<CancelSpec>,
+    /// Health events: `factor < 1` degrades, `> 1` repairs.
+    pub faults: Vec<FaultSpec>,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            total_csds: 12,
+            stage_io: true,
+            data_plane: true,
+            fast_forward: true,
+            seed: 7,
+            jobs: 8,
+            mean_interarrival_secs: 30.0,
+            mix: Vec::new(),
+            csds_per_job: 3,
+            cancels: Vec::new(),
+            faults: Vec::new(),
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Load from a JSON file shaped like
+    /// `{"total_csds": 12, "jobs": 8, "mean_interarrival_secs": 30,
+    ///   "seed": 7, "mix": [{"weight": 2, "network": "squeezenet",
+    ///   ...job keys}], "cancels": [{"job": 1, "at_secs": 45}],
+    ///   "faults": [{"at_secs": 30, "device": 1, "factor": 0.6}]}`;
+    /// missing keys keep defaults. Each mix object takes a `weight`
+    /// plus [`ExperimentConfig`] keys.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let j = Json::parse(&text)?;
+        let mut out = Self::default();
+        if let Some(v) = j.get("total_csds") {
+            out.total_csds = v.as_usize()?;
+        }
+        if let Some(v) = j.get("stage_io") {
+            out.stage_io = v.as_bool()?;
+        }
+        if let Some(v) = j.get("data_plane") {
+            out.data_plane = v.as_bool()?;
+        }
+        if let Some(v) = j.get("fast_forward") {
+            out.fast_forward = v.as_bool()?;
+        }
+        if let Some(v) = j.get("seed") {
+            out.seed = v.as_u64()?;
+        }
+        if let Some(v) = j.get("jobs") {
+            out.jobs = v.as_usize()?;
+        }
+        if let Some(v) = j.get("mean_interarrival_secs") {
+            out.mean_interarrival_secs = v.as_f64()?;
+        }
+        if let Some(v) = j.get("csds_per_job") {
+            out.csds_per_job = v.as_usize()?;
+        }
+        if let Some(v) = j.get("mix") {
+            for m in v.as_arr()? {
+                let weight = match m.get("weight") {
+                    Some(w) => w.as_f64()?,
+                    None => 1.0,
+                };
+                out.mix.push(WeightedJob { weight, job: ExperimentConfig::from_json(m)? });
+            }
+        }
+        if let Some(v) = j.get("cancels") {
+            for c in v.as_arr()? {
+                out.cancels.push(CancelSpec::from_json(c)?);
+            }
+        }
+        if let Some(v) = j.get("faults") {
+            for f in v.as_arr()? {
+                out.faults.push(FaultSpec::from_json(f)?);
+            }
+        }
+        out.validated()
+    }
+
+    /// Apply CLI overrides (`--total-csds`, `--jobs`, `--mean-arrival`,
+    /// `--seed`, `--csds-per-job`).
+    pub fn apply_args(mut self, args: &Args) -> Result<Self> {
+        self.total_csds = args.parse_or("total-csds", self.total_csds)?;
+        self.jobs = args.parse_or("jobs", self.jobs)?;
+        self.mean_interarrival_secs =
+            args.parse_or("mean-arrival", self.mean_interarrival_secs)?;
+        self.seed = args.parse_or("seed", self.seed)?;
+        self.csds_per_job = args.parse_or("csds-per-job", self.csds_per_job)?;
+        if args.flag("no-stage-io") {
+            self.stage_io = false;
+        }
+        if args.flag("no-data-plane") {
+            self.data_plane = false;
+        }
+        if args.flag("per-step") {
+            self.fast_forward = false;
+        }
+        for c in args.get_all("cancel") {
+            self.cancels.push(CancelSpec::parse_cli(c)?);
+        }
+        for d in args.get_all("degrade") {
+            self.faults.push(FaultSpec::parse_cli(d)?);
+        }
+        self.validated()
+    }
+
+    fn validated(self) -> Result<Self> {
+        anyhow::ensure!(self.jobs > 0, "a workload needs at least one job arrival");
+        anyhow::ensure!(
+            self.mean_interarrival_secs >= 0.0 && self.mean_interarrival_secs.is_finite(),
+            "mean_interarrival_secs must be a non-negative time, got {}",
+            self.mean_interarrival_secs
+        );
+        anyhow::ensure!(
+            self.mix.iter().all(|m| m.weight > 0.0 && m.weight.is_finite()),
+            "mix weights must be positive"
+        );
+        for c in &self.cancels {
+            anyhow::ensure!(
+                c.job < self.jobs,
+                "cancel references job {} but only {} arrive",
+                c.job,
+                self.jobs
+            );
+        }
+        Ok(self)
+    }
+
+    /// The effective job mix: the explicit one, or the default
+    /// four-network rotation at `csds_per_job` devices (first template
+    /// holds the host).
+    pub fn effective_mix(&self) -> Vec<WeightedJob> {
+        if !self.mix.is_empty() {
+            return self.mix.clone();
+        }
+        const NETS: [&str; 4] = ["mobilenet_v2", "squeezenet", "nasnet", "inception_v3"];
+        NETS.iter()
+            .enumerate()
+            .map(|(i, net)| WeightedJob {
+                weight: 1.0,
+                job: ExperimentConfig {
+                    network: (*net).into(),
+                    num_csds: self.csds_per_job.min(self.total_csds).max(1),
+                    include_host: i == 0,
+                    steps: 20,
+                    seed: i as i64,
+                    ..Default::default()
+                },
+            })
+            .collect()
+    }
+
+    /// Draw the arrival trace: `jobs` arrivals of a Poisson process
+    /// (exponential inter-arrival gaps of mean `mean_interarrival_secs`)
+    /// over the weighted mix. Deterministic in `seed` — the same spec
+    /// always yields the same trace, byte for byte.
+    pub fn arrivals(&self) -> Vec<(f64, ExperimentConfig)> {
+        let mix = self.effective_mix();
+        let total_w: f64 = mix.iter().map(|m| m.weight).sum();
+        let mut rng = crate::util::Rng::new(self.seed ^ 0x4A0B_70AD);
+        let mut t = 0.0f64;
+        (0..self.jobs)
+            .map(|_| {
+                // Inverse-CDF exponential draw; f64() < 1 keeps ln finite.
+                t += -self.mean_interarrival_secs * (1.0 - rng.f64()).ln();
+                let mut pick = rng.f64() * total_w;
+                let mut job = mix.last().expect("mix is non-empty").job.clone();
+                for m in &mix {
+                    if pick < m.weight {
+                        job = m.job.clone();
+                        break;
+                    }
+                    pick -= m.weight;
+                }
+                (t, job)
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,8 +642,117 @@ mod tests {
         assert_eq!(f.device, 3);
         assert!((f.at_secs - 30.0).abs() < 1e-12);
         assert!((f.factor - 0.6).abs() < 1e-12);
+        assert!(!f.is_repair());
         assert!(FaultSpec::parse_cli("3:30").is_err());
         assert!(FaultSpec::parse_cli("a:b:c").is_err());
+    }
+
+    #[test]
+    fn fault_spec_expresses_repairs() {
+        // factor > 1 is a valid, parseable repair event — both CLI and
+        // JSON forms — so degrade-then-repair needs no second mechanism.
+        let r = FaultSpec::parse_cli("0:90:2.5").unwrap();
+        assert!(r.is_repair());
+        assert!((r.factor - 2.5).abs() < 1e-12);
+        let j = Json::parse(r#"{"at_secs": 90, "device": 0, "factor": 4.0}"#).unwrap();
+        let from_json = FaultSpec::from_json(&j).unwrap();
+        assert!(from_json.is_repair());
+        // Zero/negative/non-finite factors stay invalid in both
+        // directions.
+        assert!(FaultSpec::parse_cli("0:90:0").is_err());
+        assert!(FaultSpec::parse_cli("0:90:-2").is_err());
+        assert!(FaultSpec::parse_cli("0:90:inf").is_err());
+        assert!(FaultSpec::parse_cli("0:-1:0.5").is_err());
+    }
+
+    #[test]
+    fn cancel_cli_form_parses() {
+        let c = CancelSpec::parse_cli("2:45.5").unwrap();
+        assert_eq!(c.job, 2);
+        assert!((c.at_secs - 45.5).abs() < 1e-12);
+        assert!(CancelSpec::parse_cli("2").is_err());
+        assert!(CancelSpec::parse_cli("2:x").is_err());
+        assert!(CancelSpec::parse_cli("2:-5").is_err());
+    }
+
+    #[test]
+    fn workload_spec_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("stannis_wl_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("workload.json");
+        std::fs::write(
+            &p,
+            r#"{
+                "total_csds": 8,
+                "jobs": 5,
+                "seed": 42,
+                "mean_interarrival_secs": 12.5,
+                "mix": [
+                    {"weight": 3, "network": "squeezenet", "num_csds": 2, "steps": 6},
+                    {"network": "mobilenet_v2", "num_csds": 3, "include_host": true}
+                ],
+                "cancels": [{"job": 1, "at_secs": 45.0}],
+                "faults": [{"at_secs": 30.0, "device": 1, "factor": 0.6},
+                           {"at_secs": 90.0, "device": 1, "factor": 2.0}]
+            }"#,
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_file(&p).unwrap();
+        assert_eq!(w.total_csds, 8);
+        assert_eq!(w.jobs, 5);
+        assert_eq!(w.seed, 42);
+        assert!((w.mean_interarrival_secs - 12.5).abs() < 1e-12);
+        assert_eq!(w.mix.len(), 2);
+        assert!((w.mix[0].weight - 3.0).abs() < 1e-12);
+        assert_eq!(w.mix[0].job.network, "squeezenet");
+        assert!((w.mix[1].weight - 1.0).abs() < 1e-12, "weight defaults to 1");
+        assert_eq!(w.cancels.len(), 1);
+        assert_eq!(w.faults.len(), 2);
+        assert!(!w.faults[0].is_repair() && w.faults[1].is_repair());
+        // A cancel referencing a job that never arrives is rejected.
+        std::fs::write(&p, r#"{"jobs": 2, "cancels": [{"job": 5, "at_secs": 1}]}"#).unwrap();
+        assert!(WorkloadSpec::from_file(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn workload_arrivals_are_seeded_and_monotone() {
+        let spec = WorkloadSpec { jobs: 20, ..Default::default() };
+        let a = spec.arrivals();
+        let b = spec.arrivals();
+        assert_eq!(a.len(), 20);
+        // Deterministic in the seed; different seeds give different
+        // traces.
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.0 == y.0 && x.1.network == y.1.network));
+        let c = WorkloadSpec { jobs: 20, seed: 99, ..Default::default() }.arrivals();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.0 != y.0));
+        // Arrival times are non-decreasing and strictly positive mean.
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!(a.last().unwrap().0 > 0.0);
+        // The default mix rotates the paper's four networks.
+        let nets: std::collections::BTreeSet<&str> =
+            a.iter().map(|(_, j)| j.network.as_str()).collect();
+        assert!(nets.len() > 1, "mix must actually vary: {nets:?}");
+        // CLI overrides layer on top, including repeated --cancel and
+        // --degrade occurrences.
+        let args = crate::util::cli::Args::parse(
+            [
+                "--jobs", "4", "--mean-arrival", "5", "--cancel", "0:10", "--cancel", "1:20",
+                "--degrade", "0:30:0.5", "--degrade", "0:60:2", "--per-step",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        let w = WorkloadSpec::default().apply_args(&args).unwrap();
+        assert_eq!(w.jobs, 4);
+        assert!((w.mean_interarrival_secs - 5.0).abs() < 1e-12);
+        assert_eq!(w.cancels.len(), 2, "repeated --cancel must not collapse");
+        assert_eq!(w.faults.len(), 2, "repeated --degrade must not collapse");
+        assert!(w.faults[1].is_repair());
+        assert!(!w.fast_forward);
     }
 
     #[test]

@@ -95,6 +95,13 @@ impl NewportCsd {
         self.ftl.write_fill(lpn0, len, tag, now)
     }
 
+    /// Trim an extent (NVMe Deallocate): unmap `len` logical pages from
+    /// `lpn0` so GC can reclaim them. Metadata-only — no timing booked.
+    /// Returns how many pages were actually mapped (freed).
+    pub fn trim_run(&mut self, lpn0: u32, len: u32) -> Result<u64> {
+        self.ftl.trim_run(lpn0, len)
+    }
+
     /// Host path: read `lpns` and ship them over NVMe. Returns arrival
     /// time of the last byte at the host.
     pub fn read_for_host(&mut self, lpns: &[u32], now: SimTime) -> Result<SimTime> {

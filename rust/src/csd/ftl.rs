@@ -143,6 +143,10 @@ pub struct FtlStats {
     pub gc_writes: u64,
     pub gc_runs: u64,
     pub reads: u64,
+    /// Logical pages unmapped via [`Ftl::trim`]/[`Ftl::trim_run`] (a
+    /// cancelled job's shard teardown shows up here — the per-device
+    /// side of the data plane's freed-page ledger).
+    pub trims: u64,
 }
 
 impl FtlStats {
@@ -425,6 +429,59 @@ impl Ftl {
             self.stats.host_writes += 1;
         }
         Ok(done)
+    }
+
+    // ---- trim path ------------------------------------------------------
+
+    /// Unmap logical page `lpn` (NVMe Deallocate): the physical page is
+    /// invalidated so GC can reclaim it, the mapping is dropped, and a
+    /// subsequent read of the lpn errors like a never-written page.
+    /// A pure metadata operation — no flash timing is booked. Returns
+    /// `true` if the page was mapped. Thin len-1 wrapper over the run
+    /// path.
+    pub fn trim(&mut self, lpn: u32) -> Result<bool> {
+        Ok(self.trim_run(lpn, 1)? == 1)
+    }
+
+    /// Trim `len` consecutive logical pages starting at `lpn0` (one
+    /// bounds check for the run; the GC victim index is re-synced once
+    /// per touched block, not per page — the extent discipline of
+    /// DESIGN.md §Perf). Returns how many pages were actually mapped —
+    /// the freed-page count the data-plane ledger records.
+    pub fn trim_run(&mut self, lpn0: u32, len: u32) -> Result<u64> {
+        let end = lpn0 as u64 + len as u64;
+        anyhow::ensure!(
+            end <= self.l2p.len() as u64,
+            "lpn run {lpn0}..{end} out of range (logical pages {})",
+            self.l2p.len()
+        );
+        let mut freed = 0u64;
+        // A run touches few distinct blocks; a tiny linear-probed list
+        // beats any set. Deferring reindex is safe: nothing allocates
+        // or collects between the unmaps.
+        let mut touched: Vec<u32> = Vec::new();
+        for i in 0..len {
+            let lpn = lpn0 + i;
+            let Some(addr) = self.l2p[lpn as usize].take() else { continue };
+            let bid = self.block_id_of(addr);
+            let pidx = self.phys_index(addr);
+            let info = &mut self.blocks[bid as usize];
+            if info.valid[addr.page as usize] {
+                info.valid[addr.page as usize] = false;
+                info.valid_count -= 1;
+            }
+            self.p2l[pidx] = None;
+            self.tags[lpn as usize] = 0;
+            if !touched.contains(&bid) {
+                touched.push(bid);
+            }
+            freed += 1;
+        }
+        self.stats.trims += freed;
+        for bid in touched {
+            self.reindex(bid);
+        }
+        Ok(freed)
     }
 
     // ---- read path ------------------------------------------------------
@@ -831,6 +888,45 @@ mod tests {
                 assert_eq!(ftl.read(lpn, SimTime::ZERO).unwrap().tag, want);
             }
         });
+    }
+
+    #[test]
+    fn trim_unmaps_and_frees_for_gc() {
+        let mut ftl = small_ftl();
+        ftl.write_fill(4, 3, 0xAB, SimTime::ZERO).unwrap();
+        // Mapped pages trim; never-written ones report false.
+        assert_eq!(ftl.trim_run(4, 3).unwrap(), 3);
+        assert_eq!(ftl.stats().trims, 3);
+        for lpn in 4..7 {
+            let e = ftl.read(lpn, SimTime::ZERO).unwrap_err();
+            assert!(e.to_string().contains("never written"), "got: {e}");
+        }
+        // Idempotent: a second trim frees nothing.
+        assert_eq!(ftl.trim_run(4, 3).unwrap(), 0);
+        assert_eq!(ftl.stats().trims, 3);
+        assert!(!ftl.trim(9).unwrap());
+        // Out-of-range runs fail up front.
+        let n = ftl.logical_pages() as u32;
+        assert!(ftl.trim_run(n - 1, 2).is_err());
+        ftl.check_invariants().unwrap();
+        // The invalidated pages really are reclaimable: fill the device
+        // and keep overwriting — GC must run without out-of-space.
+        for round in 0..3u64 {
+            for lpn in 0..n {
+                ftl.write(lpn, round, SimTime::ZERO).unwrap();
+            }
+        }
+        ftl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn trim_then_rewrite_roundtrips() {
+        let mut ftl = small_ftl();
+        ftl.write(5, 0xA, SimTime::ZERO).unwrap();
+        assert!(ftl.trim(5).unwrap());
+        ftl.write(5, 0xB, SimTime::ZERO).unwrap();
+        assert_eq!(ftl.read(5, SimTime::ZERO).unwrap().tag, 0xB);
+        ftl.check_invariants().unwrap();
     }
 
     #[test]

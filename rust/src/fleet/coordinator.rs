@@ -1,14 +1,35 @@
-//! The fleet coordinator: an event-driven multi-job scheduler over the
-//! shared CSD pool (DESIGN.md §5).
+//! The fleet runtime: an online, event-driven multi-job session over
+//! the shared CSD pool (DESIGN.md §5, §Runtime).
 //!
-//! A [`Fleet`] owns every Newport in the chassis plus the host. Jobs
-//! ([`ExperimentConfig`]s) enter a FIFO admission queue with backfill:
-//! the head waits for its device group (and the host, if requested —
-//! the host is granted to at most one job at a time), while smaller
-//! jobs behind it may start on leftover devices. Admission runs the
-//! full single-job pipeline per group:
+//! A [`FleetRuntime`] owns every Newport in the chassis plus the host
+//! and exposes a *session* API — the shape STANNIS's deployment target
+//! (a shared chassis continuously serving training jobs) actually has:
 //!
-//! 1. carve a device group from the pool,
+//! * [`FleetRuntime::submit`] / [`FleetRuntime::submit_at`] enqueue a
+//!   job at a simulated arrival instant,
+//! * [`FleetRuntime::cancel`] tears a job down mid-run (devices
+//!   released, shard pages trimmed under the DLM lock, partial report),
+//! * [`FleetRuntime::inject_degradation`] /
+//!   [`FleetRuntime::inject_repair`] are time-stamped health events
+//!   (`factor < 1` throttles, `factor > 1` restores, clamped at 1.0),
+//! * the clock is driven by [`FleetRuntime::run_until`] /
+//!   [`FleetRuntime::run_until_idle`]; [`FleetRuntime::take_log`]
+//!   streams the structural events a slice produced.
+//!
+//! The legacy batch [`Fleet`] is a thin façade: submit-all-at-t0 +
+//! `run_until_idle` — kept so batch callers migrate mechanically, and
+//! as the reference the online-vs-batch equivalence property pins the
+//! runtime against (`integration_fleet`).
+//!
+//! Jobs arrive into a FIFO admission queue with backfill: the head
+//! waits for its device group (and the host, if requested — the host is
+//! granted to at most one job at a time), while smaller jobs behind it
+//! may start on leftover devices. Admission fires on *arrival* events
+//! and on every release (completion, cancellation), not just
+//! completions. Each admission runs the full single-job pipeline:
+//!
+//! 1. carve a device group from the pool (healthiest bays first, so a
+//!    repaired bay goes back to the front of the line),
 //! 2. Algorithm 1 tuning at the group's slowest health
 //!    ([`crate::coordinator::tune`]),
 //! 3. health-weighted Eq. 1 balancing
@@ -22,40 +43,44 @@
 //!    packetization budget).
 //!
 //! **Dynamic rebalancing:** a `Degrade` event multiplies one device's
-//! health. The owning job abandons its in-flight step, re-runs
-//! Algorithm 1 at the new slowest health and re-balances its placement
-//! — co-tenant jobs are never re-tuned or rescheduled. Their contention
-//! price is sampled per step from the set of active ring domains, so a
-//! co-tenant's metrics are bit-identical with or without the fault as
-//! long as that set is unchanged at its own step boundaries (the
-//! degraded job slowing down but staying active — the scenario
-//! `integration_fleet` asserts); a fault that shifts a completion
-//! across a co-tenant's step boundary legitimately reprices that step.
+//! health (clamped to at most 1.0, so a repair never models a bay
+//! faster than calibration). The owning job abandons its in-flight
+//! step, re-runs Algorithm 1 at the new slowest health and re-balances
+//! its placement — co-tenant jobs are never re-tuned or rescheduled.
+//! Their contention price is sampled per step from the set of active
+//! ring domains, so a co-tenant's metrics are bit-identical with or
+//! without the fault as long as that set is unchanged at its own step
+//! boundaries; a fault that shifts a completion across a co-tenant's
+//! step boundary legitimately reprices that step.
 //!
-//! Everything is deterministic: same submissions + same fault schedule
-//! → identical reports.
+//! Everything is deterministic: same submissions + same external-event
+//! schedule → identical reports, however the session is sliced into
+//! `run_until` calls.
 //!
 //! **Steady-state fast-forward:** between structural events (an
-//! admission, a completion, a degradation), every running job repeats
-//! bit-identical steps — the compute model is pure and the fluid ring
-//! model is shift-invariant. When staging is off, the coordinator
-//! therefore advances whole windows in closed form (`Fleet::fast_forward`):
-//! it computes the number of steps each job completes strictly before
-//! the window's end, credits their time/images/energy/link totals with
-//! integer arithmetic (exactly what per-step accumulation would have
-//! summed), and re-schedules each job's one in-flight step at its
-//! post-window position. `FleetConfig::fast_forward = false` forces the
-//! per-step reference path; the two are bit-identical (asserted by the
-//! `integration_fleet` equivalence property; legality conditions in
-//! DESIGN.md §Perf).
+//! arrival, an admission, a completion, a cancellation, a health
+//! event), every running job repeats bit-identical steps — the compute
+//! model is pure and the fluid ring model is shift-invariant. When
+//! staging is off, the coordinator therefore advances whole windows in
+//! closed form (`FleetRuntime::fast_forward`): it computes the number
+//! of steps each job completes strictly before the window's end,
+//! credits their time/images/energy/link totals with integer
+//! arithmetic (exactly what per-step accumulation would have summed),
+//! and re-schedules each job's one in-flight step at its post-window
+//! position. A window additionally ends at the next *external* event
+//! (pending arrival/cancel/fault) and at the `run_until` horizon, so
+//! online sessions stay bit-exact however they are driven.
+//! `FleetConfig::fast_forward = false` forces the per-step reference
+//! path; the two are bit-identical (asserted by the `integration_fleet`
+//! equivalence properties; legality conditions in DESIGN.md §Perf).
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::allreduce::ring_time_shared;
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, WorkloadSpec};
 use crate::coordinator::{tune, TuneConfig};
 use crate::csd::CsdConfig;
 use crate::metrics::RunningStat;
@@ -133,28 +158,107 @@ impl Default for FleetConfig {
     }
 }
 
-/// Events driving the fleet's discrete-event loop.
+/// Events driving the runtime's discrete-event loop. `StepDone` is
+/// internal; the rest are *external* (operator-scheduled) events — the
+/// fast-forward window boundaries.
 #[derive(Debug, Clone, Copy)]
 enum FleetEvent {
     /// One synchronous step of `job` (compute + ring sync) completed.
     StepDone { job: JobId },
-    /// Device fault: multiply `device`'s health by `factor`.
+    /// `job` arrives: it enters the admission queue.
+    Arrive { job: JobId },
+    /// Tear `job` down (queued or running).
+    Cancel { job: JobId },
+    /// Device health event: multiply `device`'s health by `factor`
+    /// (`< 1` fault, `> 1` repair; clamped to at most 1.0).
     Degrade { device: usize, factor: f64 },
 }
 
-/// A submitted-but-not-yet-admitted job.
+/// A job whose arrival event has not fired yet.
+struct PendingArrival {
+    spec: ExperimentConfig,
+    at: SimTime,
+    /// Scheduled `Arrive` event id, for cancellation-before-arrival.
+    event: u64,
+}
+
+/// An arrived-but-not-yet-admitted job.
 struct QueuedJob {
     id: JobId,
     spec: ExperimentConfig,
     submitted_at: SimTime,
 }
 
+/// One structural event of a session, for progress streaming
+/// ([`FleetRuntime::take_log`]).
+#[derive(Debug, Clone)]
+pub struct LogEntry {
+    pub at: SimTime,
+    pub event: RuntimeEvent,
+}
+
+/// What happened at a [`LogEntry`]'s instant.
+#[derive(Debug, Clone)]
+pub enum RuntimeEvent {
+    /// The job's arrival fired: it is now in the admission queue.
+    Arrived { job: JobId, network: String, num_csds: usize, include_host: bool },
+    /// The job was admitted onto a device group.
+    Admitted { job: JobId, devices: Vec<usize>, holds_host: bool, bs_csd: usize, bs_host: usize },
+    /// The job trained its full image target and released its group.
+    Completed { job: JobId, images: usize },
+    /// The job was torn down (partial progress in `images`;
+    /// `freed_pages` is its shard-map teardown, zero with the data
+    /// plane off or for never-admitted jobs).
+    Cancelled { job: JobId, images: usize, freed_pages: u64 },
+    /// A device health fault landed (`health` is the new value).
+    Degraded { device: usize, factor: f64, health: f64 },
+    /// A device repair landed (`health` is the new, clamped value).
+    Repaired { device: usize, factor: f64, health: f64 },
+}
+
+impl std::fmt::Display for LogEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // SimTime's Display ignores width flags; pad the rendered form.
+        let at = self.at.to_string();
+        write!(f, "[{at:>12}] ")?;
+        match &self.event {
+            RuntimeEvent::Arrived { job, network, num_csds, include_host } => write!(
+                f,
+                "{job} arrived: {network}, wants {num_csds} CSD(s){}",
+                if *include_host { " + host" } else { "" }
+            ),
+            RuntimeEvent::Admitted { job, devices, holds_host, bs_csd, bs_host } => write!(
+                f,
+                "{job} admitted on {} device(s){} (bs {bs_csd}/{bs_host})",
+                devices.len(),
+                if *holds_host { " + host" } else { "" }
+            ),
+            RuntimeEvent::Completed { job, images } => {
+                write!(f, "{job} completed: {images} images")
+            }
+            RuntimeEvent::Cancelled { job, images, freed_pages } => write!(
+                f,
+                "{job} cancelled: {images} images done, {freed_pages} shard page(s) freed"
+            ),
+            RuntimeEvent::Degraded { device, factor, health } => {
+                write!(f, "device {device} degraded x{factor:.2} -> health {health:.2}")
+            }
+            RuntimeEvent::Repaired { device, factor, health } => {
+                write!(f, "device {device} repaired x{factor:.2} -> health {health:.2}")
+            }
+        }
+    }
+}
+
 /// Fleet-wide summary across all jobs.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
-    /// Per-job reports, in submission (id) order.
+    /// Per-job reports, in submission (id) order — terminal jobs plus
+    /// any still-running ones when the report is taken mid-session
+    /// (queued jobs appear once admitted or cancelled).
     pub jobs: Vec<JobReport>,
-    /// Time the last job finished.
+    /// Time the last structural event landed (last completion, for a
+    /// drained session).
     pub makespan: SimTime,
     pub total_images: usize,
     /// Aggregate fleet throughput over the makespan, img/s.
@@ -176,14 +280,21 @@ pub struct FleetReport {
     pub queue_wait: RunningStat,
     /// Total degradation-driven re-tunes across the fleet.
     pub retunes: usize,
+    /// Jobs that ended in [`JobState::Cancelled`].
+    pub cancelled: usize,
 }
 
-/// The multi-job coordinator.
-pub struct Fleet {
+/// The online multi-job session (see the module docs for the API
+/// shape; [`Fleet`] is the batch façade).
+pub struct FleetRuntime {
     cfg: FleetConfig,
     pool: DevicePool,
     tunnel: Tunnel,
     plane: DataPlane,
+    /// Submitted jobs whose arrival event has not fired (keyed by
+    /// `JobId.0`).
+    arrivals: BTreeMap<u64, PendingArrival>,
+    /// Arrived jobs waiting for admission, FIFO.
     queue: VecDeque<QueuedJob>,
     jobs: BTreeMap<JobId, Job>,
     events: EventQueue<FleetEvent>,
@@ -191,17 +302,21 @@ pub struct Fleet {
     host_held_by: Option<JobId>,
     next_id: u64,
     overhead: EnergyMeter,
-    /// Times of injected-but-not-yet-fired degradations — the
-    /// fast-forward horizon (a fault must never be jumped over).
-    degrades: BinaryHeap<Reverse<SimTime>>,
+    /// Pending *external* events per instant (arrivals, cancels,
+    /// degradations/repairs) — the fast-forward horizon: a window must
+    /// never jump over one.
+    externals: BTreeMap<SimTime, u32>,
+    /// Structural-event log since the last [`FleetRuntime::take_log`].
+    log: Vec<LogEntry>,
 }
 
-impl Fleet {
+impl FleetRuntime {
     pub fn new(cfg: FleetConfig) -> Self {
         Self {
             pool: DevicePool::new(cfg.total_csds, &cfg.csd),
             tunnel: Tunnel::new(cfg.total_csds, cfg.tunnel.clone()),
             plane: DataPlane::new(cfg.image_bytes),
+            arrivals: BTreeMap::new(),
             queue: VecDeque::new(),
             jobs: BTreeMap::new(),
             events: EventQueue::new(),
@@ -209,18 +324,96 @@ impl Fleet {
             host_held_by: None,
             next_id: 0,
             overhead: EnergyMeter::new(),
-            degrades: BinaryHeap::new(),
+            externals: BTreeMap::new(),
+            log: Vec::new(),
             cfg,
         }
     }
 
-    /// Enqueue a job. Demands come from the spec: `num_csds` devices,
-    /// plus the host iff `include_host`.
+    /// The session clock: the instant of the last processed event. The
+    /// clock only moves on events — idle gaps are metered when the next
+    /// event lands, and a `run_until` horizon beyond the last event
+    /// does not stretch the timeline.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// True when no event is pending (the session has drained; more
+    /// submissions may re-start it).
+    pub fn is_idle(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Time of the next pending event, if any — the natural `run_until`
+    /// target for a streaming driver.
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        self.events.peek_time()
+    }
+
+    /// Enqueue a job arriving now. Demands come from the spec:
+    /// `num_csds` devices, plus the host iff `include_host`.
     pub fn submit(&mut self, spec: ExperimentConfig) -> JobId {
+        self.submit_at(self.now, spec)
+            .expect("an arrival at the current instant is never in the past")
+    }
+
+    /// Enqueue a job arriving at simulated time `at` (an external
+    /// event). Errors if `at` is already in the past.
+    pub fn submit_at(&mut self, at: SimTime, spec: ExperimentConfig) -> Result<JobId> {
+        ensure!(
+            at >= self.now,
+            "cannot submit a job arriving at {at}: the session clock is already at {}",
+            self.now
+        );
         let id = JobId(self.next_id);
         self.next_id += 1;
-        self.queue.push_back(QueuedJob { id, spec, submitted_at: self.now });
-        id
+        let event = self.events.schedule(at, FleetEvent::Arrive { job: id });
+        self.external_scheduled(at);
+        self.arrivals.insert(id.0, PendingArrival { spec, at, event });
+        Ok(id)
+    }
+
+    /// Schedule a teardown of `job` at simulated time `at`: a queued
+    /// job is dequeued, a running job abandons its in-flight step,
+    /// releases its device carve (and the host), and its data-plane
+    /// shard pages are trimmed under the DLM lock; either way the job
+    /// ends as [`JobState::Cancelled`] with a partial report. A cancel
+    /// landing after the job already finished is a no-op. Errors if the
+    /// job id was never submitted or `at` is in the past.
+    pub fn cancel(&mut self, job: JobId, at: SimTime) -> Result<()> {
+        ensure!(
+            at >= self.now,
+            "cannot cancel {job} at {at}: the session clock is already at {}",
+            self.now
+        );
+        let known = self.arrivals.contains_key(&job.0)
+            || self.queue.iter().any(|q| q.id == job)
+            || self.jobs.contains_key(&job);
+        ensure!(known, "cancel for unknown {job} (never submitted)");
+        if self.jobs.get(&job).is_some_and(|j| j.state.is_terminal()) {
+            return Ok(()); // already finished: nothing to schedule
+        }
+        self.events.schedule(at, FleetEvent::Cancel { job });
+        self.external_scheduled(at);
+        Ok(())
+    }
+
+    /// Schedule a device fault: at simulated time `at`, multiply
+    /// `device`'s health by `factor` (0.6 = thermal throttle to 60%).
+    /// `factor > 1` expresses a repair (see
+    /// [`FleetRuntime::inject_repair`]); health is clamped to 1.0.
+    pub fn inject_degradation(&mut self, at: SimTime, device: usize, factor: f64) {
+        let at = at.max(self.now);
+        self.events.schedule(at, FleetEvent::Degrade { device, factor });
+        self.external_scheduled(at);
+    }
+
+    /// Schedule a device repair: at `at`, multiply `device`'s health by
+    /// `factor >= 1` (clamped at 1.0 — a bay never models faster than
+    /// calibration). The owning job re-tunes to the restored speed and
+    /// re-balances, exactly like a degradation in the other direction.
+    pub fn inject_repair(&mut self, at: SimTime, device: usize, factor: f64) {
+        self.inject_degradation(at, device, factor.max(1.0));
     }
 
     /// The data plane's ledgers (transfer log, movement totals, DLM
@@ -229,48 +422,84 @@ impl Fleet {
         &self.plane
     }
 
-    /// Schedule a device fault: at simulated time `at`, multiply
-    /// `device`'s health by `factor` (0.6 = thermal throttle to 60%).
-    pub fn inject_degradation(&mut self, at: SimTime, device: usize, factor: f64) {
-        self.events.schedule(at, FleetEvent::Degrade { device, factor });
-        self.degrades.push(Reverse(at));
+    /// The shared device pool (read-only: per-device health, FTL/flash
+    /// stats — e.g. to audit a cancel teardown's trims).
+    pub fn pool(&self) -> &DevicePool {
+        &self.pool
     }
 
-    /// Run every submitted job to completion; returns the fleet report.
-    pub fn run(&mut self) -> Result<FleetReport> {
-        for q in &self.queue {
-            ensure!(
-                q.spec.num_csds <= self.pool.len(),
+    /// Lifecycle state of a submitted job (`None` for unknown ids).
+    pub fn job_state(&self, job: JobId) -> Option<JobState> {
+        if let Some(j) = self.jobs.get(&job) {
+            return Some(j.state);
+        }
+        let queued = self.arrivals.contains_key(&job.0)
+            || self.queue.iter().any(|q| q.id == job);
+        queued.then_some(JobState::Queued)
+    }
+
+    /// Drain the structural-event log accumulated since the last call —
+    /// the per-event progress stream a driver prints between
+    /// `run_until` slices.
+    pub fn take_log(&mut self) -> Vec<LogEntry> {
+        std::mem::take(&mut self.log)
+    }
+
+    /// Replay a [`WorkloadSpec`] into this session: submit its seeded
+    /// arrival trace (job ids are assigned sequentially in submission
+    /// order, so a fresh runtime sees `JobId(0..jobs)`), schedule its
+    /// cancels (by submission index) and its health events. Returns
+    /// the sorted, deduplicated external-event times — the natural
+    /// `run_until` boundaries for a streaming driver. Single
+    /// implementation shared by the CLI, the workload bench and the
+    /// integration tests, so the replay semantics cannot diverge.
+    pub fn load_workload(&mut self, spec: &WorkloadSpec) -> Result<Vec<SimTime>> {
+        let mut boundaries = Vec::new();
+        let mut ids = Vec::new();
+        for (at_secs, job) in spec.arrivals() {
+            let at = SimTime::from_secs_f64(at_secs);
+            ids.push(self.submit_at(at, job)?);
+            boundaries.push(at);
+        }
+        for c in &spec.cancels {
+            let id = *ids
+                .get(c.job)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("cancel references job {} but only {} arrive", c.job, ids.len())
+                })?;
+            let at = SimTime::from_secs_f64(c.at_secs);
+            self.cancel(id, at)?;
+            boundaries.push(at);
+        }
+        for f in &spec.faults {
+            let at = SimTime::from_secs_f64(f.at_secs);
+            self.inject_degradation(at, f.device, f.factor);
+            boundaries.push(at);
+        }
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        Ok(boundaries)
+    }
+
+    /// Process every event up to and including simulated time `t`. The
+    /// clock stops at the last event processed (never beyond the final
+    /// completion), so slicing a session into `run_until` calls — at
+    /// any boundaries — is bit-identical to draining it in one call.
+    pub fn run_until(&mut self, t: SimTime) -> Result<()> {
+        self.pump(Some(t))
+    }
+
+    /// Drive the session until no event is pending. Errors if arrived
+    /// jobs can never be admitted (demand exceeds the pool).
+    pub fn run_until_idle(&mut self) -> Result<()> {
+        self.pump(None)?;
+        if let Some(q) = self.queue.iter().find(|q| q.spec.num_csds > self.pool.len()) {
+            bail!(
                 "{} demands {} CSDs but the pool has {}",
                 q.id,
                 q.spec.num_csds,
                 self.pool.len()
             );
-        }
-        self.try_admit()?;
-        loop {
-            if self.cfg.fast_forward {
-                self.fast_forward()?;
-            }
-            let Some(ev) = self.events.pop() else { break };
-            if let FleetEvent::Degrade { device, factor } = ev.payload {
-                self.degrades.pop();
-                // A fault landing after the last job finished changes
-                // pool health but must not stretch the fleet timeline
-                // (makespan/overhead end with the last job).
-                let idle = self.queue.is_empty()
-                    && self.jobs.values().all(|j| j.state == JobState::Completed);
-                if idle {
-                    self.pool.degrade(device, factor)?;
-                    continue;
-                }
-            }
-            self.advance_overhead(ev.at);
-            self.now = ev.at;
-            match ev.payload {
-                FleetEvent::StepDone { job } => self.on_step_done(job)?,
-                FleetEvent::Degrade { device, factor } => self.on_degrade(device, factor)?,
-            }
         }
         ensure!(
             self.queue.is_empty(),
@@ -278,13 +507,93 @@ impl Fleet {
             self.queue.len()
         );
         ensure!(
-            self.jobs.values().all(|j| j.state == JobState::Completed),
+            self.jobs.values().all(|j| j.state.is_terminal()),
             "internal: event queue drained with jobs still running"
         );
-        Ok(self.report())
+        Ok(())
     }
 
-    fn report(&self) -> FleetReport {
+    /// The core event loop, bounded by `until` (inclusive) when given.
+    fn pump(&mut self, until: Option<SimTime>) -> Result<()> {
+        loop {
+            if self.cfg.fast_forward {
+                self.fast_forward(until)?;
+            }
+            let Some(at) = self.events.peek_time() else { break };
+            if until.is_some_and(|u| at > u) {
+                break;
+            }
+            let ev = self.events.pop().expect("peeked a pending event");
+            if !matches!(ev.payload, FleetEvent::StepDone { .. }) {
+                self.external_fired(ev.at);
+            }
+            // External events landing on an idle chassis mutate state
+            // but must not stretch the fleet timeline (makespan and
+            // overhead end with the last job) — arrivals excepted, they
+            // re-start it.
+            let idle = self.queue.is_empty()
+                && self.jobs.values().all(|j| j.state.is_terminal());
+            match ev.payload {
+                FleetEvent::Degrade { device, factor } if idle => {
+                    ensure!(device < self.pool.len(), "no device {device} in the pool");
+                    let health = self.pool.degrade(device, factor)?;
+                    self.log_fault(ev.at, device, factor, health);
+                    continue;
+                }
+                // A cancel for a job that already finished is a no-op.
+                FleetEvent::Cancel { job }
+                    if self.jobs.get(&job).is_some_and(|j| j.state.is_terminal()) =>
+                {
+                    continue;
+                }
+                _ => {}
+            }
+            self.advance_overhead(ev.at);
+            self.now = ev.at;
+            match ev.payload {
+                FleetEvent::StepDone { job } => self.on_step_done(job)?,
+                FleetEvent::Arrive { job } => self.on_arrive(job)?,
+                FleetEvent::Cancel { job } => self.on_cancel(job)?,
+                FleetEvent::Degrade { device, factor } => self.on_degrade(device, factor)?,
+            }
+        }
+        Ok(())
+    }
+
+    // ---- external-event bookkeeping ----------------------------------
+
+    fn external_scheduled(&mut self, at: SimTime) {
+        *self.externals.entry(at).or_insert(0) += 1;
+    }
+
+    fn external_fired(&mut self, at: SimTime) {
+        if let Some(n) = self.externals.get_mut(&at) {
+            if *n > 1 {
+                *n -= 1;
+                return;
+            }
+        }
+        self.externals.remove(&at);
+    }
+
+    /// Earliest pending external event — the fast-forward horizon.
+    fn next_external(&self) -> Option<SimTime> {
+        self.externals.keys().next().copied()
+    }
+
+    fn log_fault(&mut self, at: SimTime, device: usize, factor: f64, health: f64) {
+        let event = if factor > 1.0 {
+            RuntimeEvent::Repaired { device, factor, health }
+        } else {
+            RuntimeEvent::Degraded { device, factor, health }
+        };
+        self.log.push(LogEntry { at, event });
+    }
+
+    /// Session summary over every job the runtime has materialized
+    /// (terminal or running; see [`FleetReport::jobs`]). Taking it
+    /// mid-session yields a consistent partial view.
+    pub fn report(&self) -> FleetReport {
         let jobs: Vec<JobReport> =
             self.jobs.values().map(|j| j.report(&self.cfg.power)).collect();
         let total_images: usize = jobs.iter().map(|j| j.images).sum();
@@ -309,6 +618,7 @@ impl Fleet {
             lock_wait,
             queue_wait,
             retunes: jobs.iter().map(|j| j.retunes).sum(),
+            cancelled: jobs.iter().filter(|j| j.state == JobState::Cancelled).count(),
             jobs,
         }
     }
@@ -328,6 +638,28 @@ impl Fleet {
         if self.host_held_by.is_none() {
             self.overhead.add_power("host_idle", pw.host_idle_w, dt);
         }
+    }
+
+    /// An arrival fired: the job joins the admission queue. Same-time
+    /// arrivals are admitted in one pass (deferred to the last of the
+    /// instant), so jobs arriving together see the same co-tenant count
+    /// — exactly the batch coordinator's symmetric contention pricing.
+    fn on_arrive(&mut self, id: JobId) -> Result<()> {
+        let a = self.arrivals.remove(&id.0).expect("Arrive event for unknown job");
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Arrived {
+                job: id,
+                network: a.spec.network.clone(),
+                num_csds: a.spec.num_csds,
+                include_host: a.spec.include_host,
+            },
+        });
+        self.queue.push_back(QueuedJob { id, spec: a.spec, submitted_at: self.now });
+        if self.arrivals.values().any(|p| p.at == self.now) {
+            return Ok(()); // a sibling arrival at this instant runs the pass
+        }
+        self.try_admit()
     }
 
     /// FIFO admission with backfill: admit every queued job whose
@@ -398,6 +730,16 @@ impl Fleet {
                 self.pool.preload(d, PRELOADED_PAGES, self.now)?;
             }
         }
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Admitted {
+                job: q.id,
+                devices: devices.clone(),
+                holds_host,
+                bs_csd,
+                bs_host,
+            },
+        });
         let mut job = Job {
             id: q.id,
             net,
@@ -605,29 +947,124 @@ impl Fleet {
             if self.host_held_by == Some(id) {
                 self.host_held_by = None;
             }
+            let images = self.jobs[&id].images_done;
+            self.log.push(LogEntry {
+                at: self.now,
+                event: RuntimeEvent::Completed { job: id, images },
+            });
             self.try_admit()
         } else {
             self.schedule_step(id)
         }
     }
 
+    /// Abandon `id`'s in-flight step (mid-step teardown or re-tune):
+    /// its compute is lost — no images/steps are credited — but the
+    /// power burned so far and the traffic already booked on the device
+    /// and fabric ledgers stay attributed to the job, keeping fleet
+    /// totals equal to the per-job sums across faults and cancels.
+    fn abandon_step(&mut self, id: JobId) {
+        let pw = &self.cfg.power;
+        let now = self.now;
+        let j = self.jobs.get_mut(&id).expect("job exists");
+        let Some(p) = j.pending.take() else { return };
+        let dt = now.saturating_sub(p.start);
+        j.meter.add_power(
+            "newport",
+            j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
+            dt,
+        );
+        if j.holds_host {
+            j.meter.add_power("host", pw.host_active_w, dt);
+        }
+        j.link_bytes += p.link_bytes;
+        j.flash_reads += p.flash_reads;
+        j.staged_host_bytes += p.host_bytes;
+        self.events.cancel(p.event);
+    }
+
+    /// A cancel fired: tear the job down wherever it is in its
+    /// lifecycle (pending arrival, queued, or running).
+    fn on_cancel(&mut self, id: JobId) -> Result<()> {
+        // Not yet arrived: drop the scheduled arrival and record a
+        // zero-progress cancelled job.
+        if let Some(a) = self.arrivals.remove(&id.0) {
+            self.events.cancel(a.event);
+            self.external_fired(a.at);
+            let job = cancelled_stub(id, a.spec, a.at.min(self.now), self.now)?;
+            self.jobs.insert(id, job);
+            self.log.push(LogEntry {
+                at: self.now,
+                event: RuntimeEvent::Cancelled { job: id, images: 0, freed_pages: 0 },
+            });
+            return Ok(());
+        }
+        // Arrived but never admitted: dequeue.
+        if let Some(pos) = self.queue.iter().position(|q| q.id == id) {
+            let q = self.queue.remove(pos).expect("position in bounds");
+            let job = cancelled_stub(id, q.spec, q.submitted_at, self.now)?;
+            self.jobs.insert(id, job);
+            self.log.push(LogEntry {
+                at: self.now,
+                event: RuntimeEvent::Cancelled { job: id, images: 0, freed_pages: 0 },
+            });
+            return Ok(());
+        }
+        let Some(j) = self.jobs.get(&id) else {
+            bail!("internal: Cancel event for unknown {id}")
+        };
+        if j.state.is_terminal() {
+            return Ok(()); // raced with completion: no-op
+        }
+        // Running: abandon the in-flight step, tear down the shard map
+        // under the DLM lock, release the carve.
+        self.abandon_step(id);
+        let freed = if self.cfg.data_plane {
+            let before = self.tunnel.stats();
+            let cost = self.plane.cancel(id, &mut self.pool, &mut self.tunnel, self.now)?;
+            let after = self.tunnel.stats();
+            let j = self.jobs.get_mut(&id).expect("job exists");
+            j.link_bytes += after.bytes - before.bytes;
+            j.lock_wait += cost.lock_wait;
+            cost.pages_written
+        } else {
+            0
+        };
+        let j = self.jobs.get_mut(&id).expect("job exists");
+        j.state = JobState::Cancelled;
+        j.finished_at = self.now;
+        let images = j.images_done;
+        self.pool.release(id);
+        if self.host_held_by == Some(id) {
+            self.host_held_by = None;
+        }
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Cancelled { job: id, images, freed_pages: freed },
+        });
+        // The released carve (and host) may admit queued jobs.
+        self.try_admit()
+    }
+
     /// Advance every running job to just before the next *structural*
-    /// event — the earliest completion or injected degradation — in one
-    /// closed-form jump, instead of scheduling each intermediate step.
+    /// event — the earliest completion, pending external event
+    /// (arrival, cancel, fault) or `until` horizon — in one closed-form
+    /// jump, instead of scheduling each intermediate step.
     ///
     /// Legal because, inside such a window, a job's steps are exact
     /// repeats: compute times are pure functions of (health, net,
     /// batch), the fluid ring model is shift-invariant and stateless
     /// (beyond its byte ledger), and the co-tenant count is frozen.
     /// Each job's last pre-window-end step stays a real event, so
-    /// completions, admissions and degradations still run through the
-    /// ordinary per-step machinery. No-op (exact fallback to per-step)
-    /// when the *legacy* per-step flash staging is on — its FTL/
-    /// timeline state makes steps non-repeating. The data plane is
-    /// fast-forward-safe: its staged-read charge is a window constant
-    /// and every stateful booking (layout, movement, locks) happens at
-    /// structural events, which both executors run identically.
-    fn fast_forward(&mut self) -> Result<()> {
+    /// completions, admissions, cancellations and health events still
+    /// run through the ordinary per-step machinery. No-op (exact
+    /// fallback to per-step) when the *legacy* per-step flash staging
+    /// is on — its FTL/timeline state makes steps non-repeating. The
+    /// data plane is fast-forward-safe: its staged-read charge is a
+    /// window constant and every stateful booking (layout, movement,
+    /// locks, teardown) happens at structural events, which both
+    /// executors run identically.
+    fn fast_forward(&mut self, until: Option<SimTime>) -> Result<()> {
         if self.cfg.stage_io && !self.cfg.data_plane {
             return Ok(());
         }
@@ -640,7 +1077,10 @@ impl Fleet {
             skip: u64,
         }
         let mut windows: Vec<Window> = Vec::new();
-        let mut horizon = self.degrades.peek().map(|Reverse(t)| *t);
+        let mut horizon = self.next_external();
+        if let Some(u) = until {
+            horizon = Some(horizon.map_or(u, |h| h.min(u)));
+        }
         for j in self.jobs.values() {
             if j.state != JobState::Running {
                 continue;
@@ -708,8 +1148,9 @@ impl Fleet {
         Ok(())
     }
 
-    /// Device fault: degrade health; if a job holds the device, abandon
-    /// its in-flight step (its compute is lost — no images/steps are
+    /// Device health event: degrade (or repair) health; if a job holds
+    /// the device and its effective speed changed, abandon its
+    /// in-flight step (its compute is lost — no images/steps are
     /// credited), re-tune at the new slowest health and re-balance.
     /// Co-tenant jobs are not touched. The abandoned step's staged
     /// flash pages and ring traffic were already booked on the device
@@ -717,34 +1158,18 @@ impl Fleet {
     /// the job — keeping fleet totals equal to the per-job sums even
     /// across faults.
     fn on_degrade(&mut self, device: usize, factor: f64) -> Result<()> {
-        self.pool.degrade(device, factor)?;
+        ensure!(device < self.pool.len(), "no device {device} in the pool");
+        let before = self.pool.health(device);
+        let health = self.pool.degrade(device, factor)?;
+        self.log_fault(self.now, device, factor, health);
+        if health == before {
+            return Ok(()); // clamped no-op (e.g. repairing a healthy bay)
+        }
         let Some(id) = self.pool.assigned_job(device) else {
             return Ok(()); // unassigned bay: health change only
         };
-        let cancelled = {
-            let pw = &self.cfg.power;
-            let now = self.now;
-            let j = self.jobs.get_mut(&id).expect("assigned job exists");
-            j.retunes += 1;
-            j.pending.take().map(|p| {
-                let dt = now.saturating_sub(p.start);
-                j.meter.add_power(
-                    "newport",
-                    j.devices.len() as f64 * (pw.newport_idle_w + pw.newport_isp_active_w),
-                    dt,
-                );
-                if j.holds_host {
-                    j.meter.add_power("host", pw.host_active_w, dt);
-                }
-                j.link_bytes += p.link_bytes;
-                j.flash_reads += p.flash_reads;
-                j.staged_host_bytes += p.host_bytes;
-                p.event
-            })
-        };
-        if let Some(ev) = cancelled {
-            self.events.cancel(ev);
-        }
+        self.jobs.get_mut(&id).expect("assigned job exists").retunes += 1;
+        self.abandon_step(id);
         let (devices, spec, holds_host, net) = {
             let j = &self.jobs[&id];
             (j.devices.clone(), j.spec.clone(), j.holds_host, j.net)
@@ -799,6 +1224,128 @@ impl Fleet {
     }
 }
 
+/// A zero-progress [`Job`] record for a job cancelled before it was
+/// ever admitted — so the fleet report still carries one row per
+/// submitted job.
+fn cancelled_stub(
+    id: JobId,
+    spec: ExperimentConfig,
+    submitted_at: SimTime,
+    now: SimTime,
+) -> Result<Job> {
+    let net = NetId::resolve(&spec.network)?;
+    Ok(Job {
+        id,
+        net,
+        state: JobState::Cancelled,
+        devices: Vec::new(),
+        holds_host: false,
+        bs_csd: spec.bs_csd.max(1),
+        bs_host: spec.bs_host.max(1),
+        steps_per_epoch: 0,
+        images_target: 0,
+        images_done: 0,
+        steps_done: 0,
+        retunes: 0,
+        submitted_at,
+        admitted_at: now,
+        finished_at: now,
+        sync_time: SimTime::ZERO,
+        link_bytes: 0,
+        flash_reads: 0,
+        flash_progs: 0,
+        staged_host_bytes: 0,
+        moved_bytes: 0,
+        moved_images: 0,
+        lock_wait: SimTime::ZERO,
+        stage_ready: now,
+        staging: Default::default(),
+        meter: EnergyMeter::new(),
+        pending: None,
+        data_cursor: 0,
+        spec,
+    })
+}
+
+/// The legacy batch coordinator: a thin façade over [`FleetRuntime`]
+/// that submits every job at t = 0, replays the fault schedule as
+/// events and drives the session to idle in one blocking `run()`. The
+/// online-vs-batch equivalence property (`integration_fleet`) pins the
+/// two APIs bit-identical.
+pub struct Fleet {
+    rt: FleetRuntime,
+    specs: Vec<ExperimentConfig>,
+    faults: Vec<(SimTime, usize, f64)>,
+    /// Jobs handed to the runtime so far — keeps predicted ids aligned
+    /// with the runtime's assignment even across repeated `run` calls.
+    submitted: u64,
+}
+
+impl Fleet {
+    pub fn new(cfg: FleetConfig) -> Self {
+        Self {
+            rt: FleetRuntime::new(cfg),
+            specs: Vec::new(),
+            faults: Vec::new(),
+            submitted: 0,
+        }
+    }
+
+    /// Enqueue a job (arrival at t = 0 when `run` starts). Demands come
+    /// from the spec: `num_csds` devices, plus the host iff
+    /// `include_host`.
+    pub fn submit(&mut self, spec: ExperimentConfig) -> JobId {
+        // Ids are assigned by the runtime in submission order at `run`.
+        let id = JobId(self.submitted);
+        self.submitted += 1;
+        self.specs.push(spec);
+        id
+    }
+
+    /// Schedule a device fault: at simulated time `at`, multiply
+    /// `device`'s health by `factor` (0.6 = thermal throttle to 60%;
+    /// `> 1` repairs, clamped at 1.0).
+    pub fn inject_degradation(&mut self, at: SimTime, device: usize, factor: f64) {
+        self.faults.push((at, device, factor));
+    }
+
+    /// Run every submitted job to completion; returns the fleet report.
+    pub fn run(&mut self) -> Result<FleetReport> {
+        for q in &self.specs {
+            ensure!(
+                q.num_csds <= self.rt.pool.len(),
+                "job demands {} CSDs but the pool has {}",
+                q.num_csds,
+                self.rt.pool.len()
+            );
+        }
+        // First run: t = 0. Jobs submitted after a previous `run` keep
+        // the old facade semantics of arriving at the current clock.
+        for spec in self.specs.drain(..) {
+            let now = self.rt.now();
+            self.rt.submit_at(now, spec)?;
+        }
+        for &(at, device, factor) in &self.faults {
+            self.rt.inject_degradation(at, device, factor);
+        }
+        self.faults.clear();
+        self.rt.run_until_idle()?;
+        Ok(self.rt.report())
+    }
+
+    /// The data plane's ledgers — populated only when
+    /// `FleetConfig::data_plane` is on.
+    pub fn data_plane(&self) -> &DataPlane {
+        self.rt.data_plane()
+    }
+
+    /// The underlying session (e.g. to drain the structural-event log
+    /// after a batch run).
+    pub fn runtime(&mut self) -> &mut FleetRuntime {
+        &mut self.rt
+    }
+}
+
 /// Credit `k` completed repeats of the in-flight step `p` to `j` — the
 /// single commit path shared by the per-step executor (`k = 1`) and the
 /// fast-forward executor (`k = steps skipped`). All accumulators are
@@ -849,6 +1396,7 @@ mod tests {
         assert_eq!(r.jobs.len(), 1);
         let j = &r.jobs[0];
         assert_eq!(j.id, id);
+        assert_eq!(j.state, JobState::Completed);
         // Algorithm 1 ran at admission: paper Table I batches.
         assert_eq!(j.bs_csd, 25);
         assert!((j.bs_host as i64 - 315).unsigned_abs() <= 16, "host bs {}", j.bs_host);
@@ -857,6 +1405,7 @@ mod tests {
         assert!(j.images_per_sec > 0.0);
         assert!(j.sync_fraction > 0.0 && j.sync_fraction < 1.0);
         assert_eq!(r.retunes, 0);
+        assert_eq!(r.cancelled, 0);
     }
 
     #[test]
@@ -1022,5 +1571,179 @@ mod tests {
         let r = fleet.run().unwrap();
         assert_eq!(r.retunes, 0);
         assert_eq!(r.jobs[0].retunes, 0);
+    }
+
+    // ---- online session API ------------------------------------------
+
+    #[test]
+    fn submit_at_delays_arrival_and_admission() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        let id = rt.submit_at(SimTime::secs(50), job("squeezenet", 2, false, 3)).unwrap();
+        assert_eq!(rt.job_state(id), Some(JobState::Queued));
+        // Driving to just before the arrival does nothing.
+        rt.run_until(SimTime::secs(49)).unwrap();
+        assert_eq!(rt.now(), SimTime::ZERO, "no event processed yet");
+        assert_eq!(rt.job_state(id), Some(JobState::Queued));
+        rt.run_until(SimTime::secs(50)).unwrap();
+        assert_eq!(rt.now(), SimTime::secs(50));
+        assert_eq!(rt.job_state(id), Some(JobState::Running));
+        rt.run_until_idle().unwrap();
+        assert_eq!(rt.job_state(id), Some(JobState::Completed));
+        let r = rt.report();
+        assert_eq!(r.jobs[0].submitted_at, SimTime::secs(50));
+        assert_eq!(r.jobs[0].admitted_at, SimTime::secs(50));
+        assert_eq!(r.jobs[0].queue_wait, SimTime::ZERO);
+        assert!(r.makespan > SimTime::secs(50));
+        // Submitting into the past is rejected.
+        assert!(rt.submit_at(SimTime::secs(1), job("squeezenet", 1, false, 1)).is_err());
+    }
+
+    #[test]
+    fn cancel_mid_run_releases_devices_and_admits_waiter() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        // A long job hogs the whole pool; B waits behind it.
+        let a = rt.submit(job("mobilenet_v2", 2, true, 10_000));
+        let b = rt.submit(job("squeezenet", 2, false, 3));
+        rt.cancel(a, SimTime::secs(120)).unwrap();
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        assert_eq!(r.cancelled, 1);
+        let find = |id| r.jobs.iter().find(|j| j.id == id).unwrap();
+        let (ja, jb) = (find(a), find(b));
+        assert_eq!(ja.state, JobState::Cancelled);
+        assert_eq!(ja.finished_at, SimTime::secs(120));
+        assert!(ja.steps_done > 0, "partial progress is reported");
+        assert!(ja.images > 0 && ja.images < 10_000 * 25);
+        assert!(ja.energy_j > 0.0, "burned power stays attributed");
+        // B admits the instant A's carve is released.
+        assert_eq!(jb.state, JobState::Completed);
+        assert_eq!(jb.admitted_at, SimTime::secs(120));
+        assert_eq!(jb.steps_done, 3);
+        // The cancelled job's shard pages were all freed (data-plane
+        // ledger and per-device FTL trims agree).
+        let stats = rt.data_plane().stats();
+        assert_eq!(stats.cancels, 1);
+        assert!(stats.freed_pages > 0);
+        assert_eq!(rt.data_plane().resident_pages(a), 0);
+        // A cancel for an already-finished job is a quiet no-op.
+        rt.cancel(b, rt.now()).unwrap();
+        rt.run_until_idle().unwrap();
+        // Unknown ids are rejected.
+        assert!(rt.cancel(JobId(99), rt.now()).is_err());
+    }
+
+    #[test]
+    fn cancel_before_arrival_reports_a_stub() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        let a = rt.submit_at(SimTime::secs(100), job("squeezenet", 2, false, 5)).unwrap();
+        rt.cancel(a, SimTime::secs(10)).unwrap();
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        assert_eq!(r.jobs.len(), 1);
+        assert_eq!(r.jobs[0].state, JobState::Cancelled);
+        assert_eq!(r.jobs[0].images, 0);
+        assert_eq!(r.jobs[0].steps_done, 0);
+        assert_eq!(r.makespan, SimTime::secs(10), "the cancel is the only event");
+        assert_eq!(rt.job_state(a), Some(JobState::Cancelled));
+    }
+
+    #[test]
+    fn repair_restores_speed_and_retunes() {
+        let run = |repair: bool| {
+            let mut rt = FleetRuntime::new(FleetConfig {
+                total_csds: 2,
+                stage_io: false,
+                ..Default::default()
+            });
+            rt.submit(job("mobilenet_v2", 2, true, 60));
+            rt.inject_degradation(SimTime::secs(30), 0, 0.5);
+            if repair {
+                // Over-repair: clamps back to full health.
+                rt.inject_repair(SimTime::secs(60), 0, 4.0);
+            }
+            rt.run_until_idle().unwrap();
+            rt.report()
+        };
+        let repaired = run(true);
+        let throttled = run(false);
+        assert_eq!(repaired.jobs[0].retunes, 2, "fault + repair each re-tune");
+        assert_eq!(throttled.jobs[0].retunes, 1);
+        assert!(
+            repaired.makespan < throttled.makespan,
+            "a repaired group must finish sooner: {} !< {}",
+            repaired.makespan,
+            throttled.makespan
+        );
+        // Repairing an already-healthy bay is a no-op (no re-tune).
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        rt.submit(job("mobilenet_v2", 2, true, 5));
+        rt.inject_repair(SimTime::secs(10), 0, 2.0);
+        rt.run_until_idle().unwrap();
+        assert_eq!(rt.report().jobs[0].retunes, 0);
+    }
+
+    #[test]
+    fn run_until_slicing_is_bit_identical_and_streams_a_log() {
+        let build = || {
+            let mut rt = FleetRuntime::new(FleetConfig {
+                total_csds: 4,
+                stage_io: false,
+                ..Default::default()
+            });
+            rt.submit(job("mobilenet_v2", 2, true, 12));
+            rt.submit_at(SimTime::secs(40), job("squeezenet", 2, false, 8)).unwrap();
+            rt.inject_degradation(SimTime::secs(80), 0, 0.7);
+            rt
+        };
+        // One shot.
+        let mut one = build();
+        one.run_until_idle().unwrap();
+        let r1 = one.report();
+        // Sliced at arbitrary boundaries, streaming the log as we go.
+        let mut sliced = build();
+        let mut log = Vec::new();
+        for secs in [1u64, 40, 41, 80, 200, 1000] {
+            sliced.run_until(SimTime::secs(secs)).unwrap();
+            log.extend(sliced.take_log());
+        }
+        sliced.run_until_idle().unwrap();
+        log.extend(sliced.take_log());
+        let r2 = sliced.report();
+        assert_eq!(r1.makespan, r2.makespan);
+        assert_eq!(r1.total_energy_j.to_bits(), r2.total_energy_j.to_bits());
+        assert_eq!(r1.link_bytes, r2.link_bytes);
+        for (x, y) in r1.jobs.iter().zip(&r2.jobs) {
+            assert_eq!(x.finished_at, y.finished_at);
+            assert_eq!(x.steps_done, y.steps_done);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+        // The log carries the whole story in time order: 2 arrivals,
+        // 2 admissions, 1 fault, 2 completions.
+        assert!(log.windows(2).all(|w| w[0].at <= w[1].at), "log is time-ordered");
+        let count = |f: fn(&RuntimeEvent) -> bool| log.iter().filter(|e| f(&e.event)).count();
+        assert_eq!(count(|e| matches!(e, RuntimeEvent::Arrived { .. })), 2);
+        assert_eq!(count(|e| matches!(e, RuntimeEvent::Admitted { .. })), 2);
+        assert_eq!(count(|e| matches!(e, RuntimeEvent::Degraded { .. })), 1);
+        assert_eq!(count(|e| matches!(e, RuntimeEvent::Completed { .. })), 2);
+        // Entries render as one line each for the CLI stream.
+        for e in &log {
+            assert!(!e.to_string().is_empty());
+        }
     }
 }

@@ -77,6 +77,12 @@ pub struct DataPlaneStats {
     pub moved_bytes: u64,
     /// Public images newly pushed host→CSD (grown host/CSD shards).
     pub host_pushes: u64,
+    /// Jobs torn down mid-run by [`DataPlane::cancel`].
+    pub cancels: u64,
+    /// Flash pages trimmed by cancel teardowns — must equal the
+    /// cancelled jobs' resident page counts (the per-device side of the
+    /// same ledger is `FtlStats::trims`).
+    pub freed_pages: u64,
 }
 
 /// Per-step staged-I/O charge for a job's current window. Measured
@@ -269,6 +275,63 @@ impl DataPlane {
     /// Drop a completed job's map (ledgers and stats persist).
     pub fn complete(&mut self, job: JobId) {
         self.jobs.remove(&job);
+    }
+
+    /// Flash pages currently staged for a job across its group — what a
+    /// cancel teardown must free. Zero for unknown/torn-down jobs.
+    pub fn resident_pages(&self, job: JobId) -> u64 {
+        self.jobs.get(&job).map_or(0, |p| {
+            p.slots.iter().map(|s| s.of.len() as u64).sum::<u64>() * p.ppi as u64
+        })
+    }
+
+    /// Cancel teardown: under the host's EX lock on the job's shard-map
+    /// resource, trim every staged image extent on every group device
+    /// (freeing the pages for GC), commit the empty map as a journal
+    /// version, and drop the job's plane. Trims are metadata-only, so
+    /// the window costs lock traffic but no flash time. Returns the
+    /// window cost; `pages_written` counts the *freed* pages (also
+    /// accumulated in [`DataPlaneStats::freed_pages`]).
+    pub fn cancel(
+        &mut self,
+        job: JobId,
+        pool: &mut DevicePool,
+        tunnel: &mut Tunnel,
+        now: SimTime,
+    ) -> Result<WindowCost> {
+        let Some(mut plane) = self.jobs.remove(&job) else {
+            bail!("{job} was never admitted to the data plane")
+        };
+        let res = plane.res;
+        let granted_at = match self.dlm.request_id(tunnel, NodeId::Host, res, LockMode::Ex, now) {
+            LockReply::Granted { at, .. } => at,
+            LockReply::Queued => bail!(
+                "internal: shard-map resource {:?} contended at cancel",
+                self.dlm.name(res)
+            ),
+        };
+        self.dlm.check_invariants()?;
+        let ppi = plane.ppi;
+        let mut freed = 0u64;
+        for i in 0..plane.devices.len() {
+            let d = plane.devices[i];
+            let slots = std::mem::take(&mut plane.slots[i]);
+            for (_, slot) in slots.of {
+                freed += pool.device_mut(d).trim_run(slot * ppi, ppi)?;
+            }
+        }
+        self.dlm.release_id(tunnel, NodeId::Host, res, granted_at)?;
+        self.dlm.check_invariants()?;
+        self.stats.cancels += 1;
+        self.stats.freed_pages += freed;
+        Ok(WindowCost {
+            ready: granted_at,
+            pages_read: 0,
+            pages_written: freed,
+            bytes_moved: 0,
+            images_moved: 0,
+            lock_wait: granted_at.saturating_sub(now),
+        })
     }
 
     /// Canonical shard-map resource name — interned into a
@@ -863,6 +926,45 @@ mod tests {
         .unwrap_err();
         assert!(err.to_string().contains("privacy violation"), "got: {err}");
         assert!(log.is_empty());
+    }
+
+    #[test]
+    fn cancel_frees_every_resident_page_under_the_lock() {
+        let (mut plane, mut pool, mut tun) = setup(2);
+        let d = dataset(200, vec![16, 16]);
+        let p = placement(&d, 2, 8, 16, true);
+        plane
+            .admit(
+                JobId(0),
+                d,
+                &p,
+                &[0, 1],
+                true,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::ZERO,
+            )
+            .unwrap();
+        let resident = plane.resident_pages(JobId(0));
+        assert!(resident > 0, "admission must stage pages");
+        let v1 = plane.version(JobId(0));
+        let cost = plane.cancel(JobId(0), &mut pool, &mut tun, SimTime::secs(3)).unwrap();
+        // Every staged page is freed, and the two sides of the ledger
+        // agree: the plane's freed_pages equals the devices' FTL trims.
+        assert_eq!(cost.pages_written, resident);
+        assert_eq!(plane.stats().freed_pages, resident);
+        assert_eq!(plane.stats().cancels, 1);
+        let trims: u64 = (0..2).map(|i| pool.device(i).ftl_ref().stats().trims).sum();
+        assert_eq!(trims, resident);
+        assert_eq!(plane.resident_pages(JobId(0)), 0);
+        // The teardown committed a journal version under EX.
+        assert!(plane.version(JobId(0)) > v1);
+        // Double-cancel (or cancelling an unknown job) is an error.
+        assert!(plane.cancel(JobId(0), &mut pool, &mut tun, SimTime::secs(4)).is_err());
     }
 
     #[test]

@@ -18,17 +18,40 @@ impl std::fmt::Display for JobId {
     }
 }
 
-/// Lifecycle of a job inside the fleet.
+/// Lifecycle of a job inside the fleet runtime:
+/// `Queued -> Running -> Completed`, with `Cancelled` reachable from
+/// both non-terminal states via [`super::FleetRuntime::cancel`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
-    /// Waiting in the admission queue for a device group (and the
-    /// host, if requested).
+    /// Submitted (arrival scheduled or already in the admission queue),
+    /// waiting for a device group (and the host, if requested).
     Queued,
     /// Admitted: device group carved, batches tuned, placement
     /// balanced, steps in flight.
     Running,
     /// All target images processed; devices released.
     Completed,
+    /// Torn down mid-run (or dequeued before admission): devices
+    /// released, data-plane shard pages trimmed, report partial.
+    Cancelled,
+}
+
+impl JobState {
+    /// Terminal states release their resources and never run again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Cancelled)
+    }
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "done",
+            JobState::Cancelled => "cancelled",
+        })
+    }
 }
 
 /// One step currently in flight for a job: everything needed to commit
@@ -124,6 +147,10 @@ impl Job {
 #[derive(Debug, Clone)]
 pub struct JobReport {
     pub id: JobId,
+    /// Terminal lifecycle state ([`JobState::Completed`] or
+    /// [`JobState::Cancelled`]; a partial report taken mid-session may
+    /// also show `Queued`/`Running`).
+    pub state: JobState,
     pub network: String,
     pub devices: Vec<usize>,
     pub held_host: bool,
@@ -169,6 +196,7 @@ impl Job {
             + self.flash_progs as f64 * pw.flash_prog_uj * 1e-6;
         JobReport {
             id: self.id,
+            state: self.state,
             network: self.spec.network.clone(),
             devices: self.devices.clone(),
             held_host: self.holds_host,

@@ -16,11 +16,14 @@
 //!   DLM-guarded rebalance movement, per-window staged-read costing,
 //!   and the privacy guard on every cross-node transfer
 //!   (DESIGN.md §Data-Plane).
-//! * [`coordinator`] — the [`Fleet`] itself: FIFO-with-backfill
-//!   admission, per-group Algorithm 1 tuning, concurrent synchronous
-//!   steps on the shared discrete-event loop with per-job
-//!   ring-allreduce domains, and degradation-driven re-tuning that
-//!   never disturbs co-tenants.
+//! * [`coordinator`] — the [`FleetRuntime`] itself: an online session
+//!   (submit/cancel/run_until over arrival, cancellation and
+//!   degradation/repair events) with FIFO-with-backfill admission,
+//!   per-group Algorithm 1 tuning, concurrent synchronous steps on the
+//!   shared discrete-event loop with per-job ring-allreduce domains,
+//!   and degradation-driven re-tuning that never disturbs co-tenants.
+//!   [`Fleet`] is the legacy batch façade (submit-all-at-t0 +
+//!   run-until-idle).
 
 pub mod coordinator;
 pub mod dataplane;
@@ -28,7 +31,7 @@ pub mod group;
 pub mod job;
 pub mod pool;
 
-pub use coordinator::{Fleet, FleetConfig, FleetReport};
+pub use coordinator::{Fleet, FleetConfig, FleetReport, FleetRuntime, LogEntry, RuntimeEvent};
 pub use dataplane::{DataPlane, DataPlaneStats, StepStaging, TransferRecord};
 pub use group::{provision_placement, provision_placement_weighted, JobGroup};
 pub use job::{JobId, JobReport, JobState};

@@ -58,21 +58,35 @@ impl DevicePool {
         self.devices.iter().filter(|d| d.assigned.is_none()).count()
     }
 
-    /// Carve `n` free devices for `job` (lowest indices first, so
-    /// admission is deterministic). Returns `None` — without mutating
-    /// anything — if fewer than `n` are free.
+    /// Carve `n` free devices for `job`, healthiest first (ties break
+    /// to the lowest index, so an all-healthy pool carves exactly the
+    /// lowest indices and admission stays deterministic). A repaired
+    /// bay therefore goes back to the front of the line for the next
+    /// admission. Returns `None` — without mutating anything — if fewer
+    /// than `n` are free. The returned indices are sorted ascending
+    /// (group identity is a set; ring order comes from the indices).
     pub fn carve(&mut self, n: usize, job: JobId) -> Option<Vec<usize>> {
-        let free: Vec<usize> = self
+        let mut free: Vec<usize> = self
             .devices
             .iter()
             .enumerate()
             .filter(|(_, d)| d.assigned.is_none())
             .map(|(i, _)| i)
-            .take(n)
             .collect();
         if free.len() < n {
             return None;
         }
+        // Health is finite and positive (degrade/repair enforce it), so
+        // the bit ordering of the comparison is total.
+        free.sort_by(|&a, &b| {
+            self.devices[b]
+                .health
+                .partial_cmp(&self.devices[a].health)
+                .expect("health is finite")
+                .then(a.cmp(&b))
+        });
+        free.truncate(n);
+        free.sort_unstable();
         for &i in &free {
             self.devices[i].assigned = Some(job);
         }
@@ -92,13 +106,17 @@ impl DevicePool {
         self.devices[device].health
     }
 
-    /// Multiply a device's health by `factor` (thermal throttle, wear).
-    pub fn degrade(&mut self, device: usize, factor: f64) -> Result<()> {
+    /// Multiply a device's health by `factor`. `factor < 1` is a fault
+    /// (thermal throttle, wear); `factor > 1` is a *repair* (throttle
+    /// lifted, module swapped) — health is clamped to 1.0, a bay never
+    /// models faster than its calibrated Newport speed. Returns the new
+    /// health.
+    pub fn degrade(&mut self, device: usize, factor: f64) -> Result<f64> {
         ensure!(device < self.devices.len(), "no device {device} in the pool");
         ensure!(factor > 0.0 && factor.is_finite(), "bad degradation factor {factor}");
         let d = &mut self.devices[device];
-        d.health = (d.health * factor).max(MIN_HEALTH);
-        Ok(())
+        d.health = (d.health * factor).clamp(MIN_HEALTH, 1.0);
+        Ok(d.health)
     }
 
     pub fn assigned_job(&self, device: usize) -> Option<JobId> {
@@ -169,6 +187,34 @@ mod tests {
         assert!(p.health(0) >= MIN_HEALTH);
         assert!(p.degrade(5, 0.5).is_err());
         assert!(p.degrade(1, 0.0).is_err());
+    }
+
+    #[test]
+    fn repair_restores_health_clamped_at_one() {
+        let mut p = DevicePool::new(2, &CsdConfig::default());
+        p.degrade(0, 0.5).unwrap();
+        // Partial repair compounds multiplicatively, like faults.
+        assert!((p.degrade(0, 1.5).unwrap() - 0.75).abs() < 1e-12);
+        // Over-repair clamps at calibrated speed.
+        assert_eq!(p.degrade(0, 10.0).unwrap(), 1.0);
+        // Repairing a healthy bay is a no-op at the clamp.
+        assert_eq!(p.degrade(1, 2.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn carve_prefers_healthiest_devices() {
+        let mut p = DevicePool::new(4, &CsdConfig::default());
+        p.degrade(0, 0.5).unwrap();
+        p.degrade(2, 0.8).unwrap();
+        // Healthiest-first: 1 and 3 (1.0) beat 2 (0.8) beats 0 (0.5);
+        // the result is reported in ascending index order.
+        assert_eq!(p.carve(3, JobId(0)).unwrap(), vec![1, 2, 3]);
+        assert_eq!(p.carve(1, JobId(1)).unwrap(), vec![0]);
+        p.release(JobId(0));
+        // A repaired bay jumps back ahead of a degraded one.
+        p.degrade(3, 0.7).unwrap();
+        p.degrade(2, 2.0).unwrap(); // 0.8 -> 1.0 (clamped repair)
+        assert_eq!(p.carve(2, JobId(2)).unwrap(), vec![1, 2]);
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! Stannis CLI — tune, train and regenerate the paper's tables/figures.
 //!
 //! ```text
-//! stannis tune   [--network mobilenet_v2]           Algorithm 1 (modeled)
-//! stannis train  [--steps N --num-csds K ...]       real-exec training
-//! stannis fleet  [--jobs K --total-csds N ...]      multi-job coordinator
-//! stannis report table1|fig6|fig7|table2            paper artifacts
+//! stannis tune     [--network mobilenet_v2]           Algorithm 1 (modeled)
+//! stannis train    [--steps N --num-csds K ...]       real-exec training
+//! stannis fleet    [--jobs K --total-csds N ...]      batch multi-job coordinator
+//! stannis workload [--jobs K --mean-arrival S ...]    online arrival trace (submit/cancel/repair)
+//! stannis report table1|fig6|fig7|table2              paper artifacts
 //! ```
+//!
+//! Every subcommand rejects unknown options up front
+//! ([`Args::check_known`]), so a typo'd flag (`--per-setp`) errors
+//! instead of being silently ignored.
 
 use anyhow::{bail, Result};
 
-use stannis::config::{ExperimentConfig, FaultSpec, FleetExperimentConfig};
+use stannis::config::{ExperimentConfig, FaultSpec, FleetExperimentConfig, WorkloadSpec};
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
-use stannis::fleet::{Fleet, FleetConfig};
+use stannis::fleet::{Fleet, FleetConfig, FleetReport, FleetRuntime};
 use stannis::metrics::{f, print_table};
 use stannis::perfmodel::PerfModel;
 use stannis::power::PowerConfig;
@@ -26,6 +31,21 @@ const NETS: [(&str, usize, usize); 4] = [
     ("squeezenet", 50, 850),
 ];
 
+/// Options every experiment-shaped command accepts via
+/// [`ExperimentConfig::apply_args`].
+const EXPERIMENT_OPTS: [&str; 10] = [
+    "network",
+    "num-csds",
+    "no-host",
+    "bs-csd",
+    "bs-host",
+    "steps",
+    "seed",
+    "lr",
+    "public-images",
+    "private-per-csd",
+];
+
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
@@ -34,30 +54,40 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env()?;
+    dispatch(&Args::from_env()?)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
-        "tune" => cmd_tune(&args),
-        "train" => cmd_train(&args),
-        "fleet" => cmd_fleet(&args),
-        "report" => match args.positional().get(1).map(String::as_str) {
-            Some("table1") => report_table1(),
-            Some("fig6") => report_fig6(),
-            Some("fig7") => report_fig7(),
-            Some("table2") => report_table2(),
-            Some("all") | None => {
-                report_table1()?;
-                report_fig6()?;
-                report_fig7()?;
-                report_table2()
+        "tune" => cmd_tune(args),
+        "train" => cmd_train(args),
+        "fleet" => cmd_fleet(args),
+        "workload" => cmd_workload(args),
+        "report" => {
+            args.check_known(&[])?;
+            match args.positional().get(1).map(String::as_str) {
+                Some("table1") => report_table1(),
+                Some("fig6") => report_fig6(),
+                Some("fig7") => report_fig7(),
+                Some("table2") => report_table2(),
+                Some("all") | None => {
+                    report_table1()?;
+                    report_fig6()?;
+                    report_fig7()?;
+                    report_table2()
+                }
+                Some(other) => bail!("unknown report {other:?} (table1|fig6|fig7|table2|all)"),
             }
-            Some(other) => bail!("unknown report {other:?} (table1|fig6|fig7|table2|all)"),
-        },
+        }
         "help" | "--help" => {
+            // A bare `stannis --help` parses as the flag "help" (no
+            // positional), which must keep printing usage.
+            args.check_known(&["help"])?;
             print!(
                 "{}",
                 usage(
-                    "stannis <tune|train|fleet|report> [options]",
+                    "stannis <tune|train|fleet|workload|report> [options]",
                     "STANNIS reproduction: in-storage distributed DNN training",
                     &[
                         OptSpec { name: "network", help: "network name", default: Some("mobilenet_v2_s") },
@@ -67,9 +97,13 @@ fn run() -> Result<()> {
                         OptSpec { name: "steps", help: "training steps", default: Some("50") },
                         OptSpec { name: "config", help: "JSON experiment config", default: None },
                         OptSpec { name: "no-host", help: "CSD-only cluster", default: None },
-                        OptSpec { name: "total-csds", help: "fleet: pool size", default: Some("12") },
-                        OptSpec { name: "jobs", help: "fleet: concurrent jobs", default: Some("3") },
-                        OptSpec { name: "degrade", help: "fleet: fault dev:secs:factor", default: None },
+                        OptSpec { name: "total-csds", help: "fleet/workload: pool size", default: Some("12") },
+                        OptSpec { name: "jobs", help: "fleet/workload: job count", default: Some("3") },
+                        OptSpec { name: "degrade", help: "fault dev:secs:factor (repeatable; factor > 1 repairs)", default: None },
+                        OptSpec { name: "cancel", help: "workload: cancel job:secs (repeatable)", default: None },
+                        OptSpec { name: "mean-arrival", help: "workload: mean inter-arrival secs", default: Some("30") },
+                        OptSpec { name: "seed", help: "workload: arrival-process seed", default: Some("7") },
+                        OptSpec { name: "csds-per-job", help: "workload: devices per default-mix job", default: Some("3") },
                         OptSpec { name: "no-stage-io", help: "fleet: skip legacy flash staging", default: None },
                         OptSpec { name: "no-data-plane", help: "fleet: skip the modeled data plane (shard maps, DLM-locked rebalance movement)", default: None },
                         OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
@@ -91,6 +125,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
+    args.check_known(&["network"])?;
     let net = args.get_or("network", "mobilenet_v2");
     let mut model = PerfModel::default();
     let r = tune(&mut model, net, &TuneConfig::default())?;
@@ -110,6 +145,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let mut known = vec!["config"];
+    known.extend(EXPERIMENT_OPTS);
+    args.check_known(&known)?;
     let cfg = experiment_config(args)?;
     println!(
         "bringing up cluster: {} host + {} CSDs, net {}, bs {}/{}",
@@ -144,7 +182,79 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Render the shared per-job fleet table. `online` adds the workload
+/// columns (lifecycle state, arrival, queue wait, completion).
+fn print_job_table(r: &FleetReport, online: bool) {
+    let mut headers = vec![
+        "job", "network", "devices", "bs csd/host", "steps", "imgs", "img/s", "sync", "J/img",
+        "retunes", "moved", "lockw", "wait", "span",
+    ];
+    if online {
+        headers.extend(["state", "arrival", "done"]);
+    }
+    let rows: Vec<Vec<String>> = r
+        .jobs
+        .iter()
+        .map(|j| {
+            let mut row = vec![
+                j.id.to_string(),
+                j.network.clone(),
+                format!("{}{}", j.devices.len(), if j.held_host { "+host" } else { "" }),
+                format!("{}/{}", j.bs_csd, if j.held_host { j.bs_host.to_string() } else { "-".into() }),
+                j.steps_done.to_string(),
+                j.images.to_string(),
+                f(j.images_per_sec, 2),
+                format!("{}%", f(100.0 * j.sync_fraction, 0)),
+                f(j.j_per_image, 2),
+                j.retunes.to_string(),
+                format!("{:.1}M", j.bytes_moved as f64 / 1e6),
+                j.lock_wait.to_string(),
+                j.queue_wait.to_string(),
+                j.elapsed.to_string(),
+            ];
+            if online {
+                row.push(j.state.to_string());
+                row.push(j.submitted_at.to_string());
+                row.push(j.finished_at.to_string());
+            }
+            row
+        })
+        .collect();
+    print_table(
+        if online {
+            "Workload — per-job schedule and outcome"
+        } else {
+            "Fleet — per-job schedule and outcome"
+        },
+        &headers,
+        &rows,
+    );
+}
+
+fn print_fleet_summary(r: &FleetReport) {
+    println!(
+        "\nfleet: makespan {}, {} images ({} img/s aggregate), energy {:.0} J jobs + {:.0} J shared chassis, {} retune(s), {} cancelled, mean queue wait {:.1}s",
+        r.makespan,
+        r.total_images,
+        f(r.aggregate_ips, 2),
+        r.jobs_energy_j,
+        r.overhead_energy_j,
+        r.retunes,
+        r.cancelled,
+        r.queue_wait.mean(),
+    );
+}
+
 fn cmd_fleet(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config",
+        "total-csds",
+        "jobs",
+        "degrade",
+        "no-stage-io",
+        "no-data-plane",
+        "per-step",
+    ])?;
     let mut spec = match args.get("config") {
         Some(path) => FleetExperimentConfig::from_file(path)?,
         None => FleetExperimentConfig::default(),
@@ -165,7 +275,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if args.flag("per-step") {
         spec.fast_forward = false;
     }
-    if let Some(d) = args.get("degrade") {
+    // Repeatable: every --degrade occurrence is a fault (they used to
+    // collapse to the last one).
+    for d in args.get_all("degrade") {
         spec.faults.push(FaultSpec::parse_cli(d)?);
     }
 
@@ -193,52 +305,84 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     let r = fleet.run()?;
 
-    let rows: Vec<Vec<String>> = r
-        .jobs
-        .iter()
-        .map(|j| {
-            vec![
-                j.id.to_string(),
-                j.network.clone(),
-                format!("{}{}", j.devices.len(), if j.held_host { "+host" } else { "" }),
-                format!("{}/{}", j.bs_csd, if j.held_host { j.bs_host.to_string() } else { "-".into() }),
-                j.steps_done.to_string(),
-                j.images.to_string(),
-                f(j.images_per_sec, 2),
-                format!("{}%", f(100.0 * j.sync_fraction, 0)),
-                f(j.j_per_image, 2),
-                j.retunes.to_string(),
-                format!("{:.1}M", j.bytes_moved as f64 / 1e6),
-                j.lock_wait.to_string(),
-                j.queue_wait.to_string(),
-                j.elapsed.to_string(),
-            ]
-        })
-        .collect();
-    print_table(
-        "Fleet — per-job schedule and outcome",
-        &[
-            "job", "network", "devices", "bs csd/host", "steps", "imgs", "img/s", "sync",
-            "J/img", "retunes", "moved", "lockw", "wait", "span",
-        ],
-        &rows,
-    );
-    println!(
-        "\nfleet: makespan {}, {} images ({} img/s aggregate), energy {:.0} J jobs + {:.0} J shared chassis, {} retune(s), mean queue wait {:.1}s",
-        r.makespan,
-        r.total_images,
-        f(r.aggregate_ips, 2),
-        r.jobs_energy_j,
-        r.overhead_energy_j,
-        r.retunes,
-        r.queue_wait.mean(),
-    );
+    print_job_table(&r, false);
+    print_fleet_summary(&r);
     println!(
         "data plane: {:.1} MB moved across {} rebalance window(s), mean shard-map lock wait {:.2}ms, {} host push(es)",
         r.bytes_moved as f64 / 1e6,
         fleet.data_plane().stats().rebalances,
         1e3 * r.lock_wait.mean(),
         fleet.data_plane().stats().host_pushes,
+    );
+    Ok(())
+}
+
+/// Online session: draw the seeded arrival trace, replay cancels and
+/// health events, and stream every structural event as the clock
+/// advances through `run_until` slices.
+fn cmd_workload(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config",
+        "total-csds",
+        "jobs",
+        "mean-arrival",
+        "seed",
+        "csds-per-job",
+        "cancel",
+        "degrade",
+        "no-stage-io",
+        "no-data-plane",
+        "per-step",
+    ])?;
+    let spec = match args.get("config") {
+        Some(path) => WorkloadSpec::from_file(path)?,
+        None => WorkloadSpec::default(),
+    }
+    .apply_args(args)?;
+
+    println!(
+        "workload: {} CSDs, {} arrival(s) (mean gap {}s, seed {}), {} cancel(s), {} fault(s), data_plane={}, fast_forward={}",
+        spec.total_csds,
+        spec.jobs,
+        f(spec.mean_interarrival_secs, 1),
+        spec.seed,
+        spec.cancels.len(),
+        spec.faults.len(),
+        spec.data_plane,
+        spec.fast_forward
+    );
+    let mut rt = FleetRuntime::new(FleetConfig {
+        total_csds: spec.total_csds,
+        stage_io: spec.stage_io,
+        data_plane: spec.data_plane,
+        fast_forward: spec.fast_forward,
+        ..Default::default()
+    });
+    // Drive the session slice by slice, printing each slice's
+    // structural events as they land — the per-event progress stream.
+    for t in rt.load_workload(&spec)? {
+        rt.run_until(t)?;
+        for e in rt.take_log() {
+            println!("{e}");
+        }
+    }
+    rt.run_until_idle()?;
+    for e in rt.take_log() {
+        println!("{e}");
+    }
+
+    let r = rt.report();
+    println!();
+    print_job_table(&r, true);
+    print_fleet_summary(&r);
+    let stats = rt.data_plane().stats();
+    println!(
+        "data plane: {:.1} MB moved across {} rebalance window(s), {} cancel teardown(s) freeing {} page(s), {} host push(es)",
+        r.bytes_moved as f64 / 1e6,
+        stats.rebalances,
+        stats.cancels,
+        stats.freed_pages,
+        stats.host_pushes,
     );
     Ok(())
 }
@@ -339,4 +483,55 @@ fn report_table2() -> Result<()> {
         &rows,
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    fn assert_unknown_option(cmd_line: &str) {
+        let e = dispatch(&args(cmd_line)).unwrap_err();
+        assert!(
+            e.to_string().contains("unknown option"),
+            "{cmd_line:?} must reject the typo'd flag, got: {e:#}"
+        );
+    }
+
+    /// Every subcommand runs `Args::check_known` before doing any work,
+    /// so a typo'd flag errors instead of being silently ignored.
+    #[test]
+    fn every_subcommand_rejects_unknown_options() {
+        assert_unknown_option("tune --netwrok mobilenet_v2");
+        assert_unknown_option("train --per-setp x");
+        assert_unknown_option("fleet --per-setp x");
+        assert_unknown_option("workload --cancle 0:10");
+        assert_unknown_option("report --whoops 1");
+        assert_unknown_option("help --whoops 1");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_too() {
+        // A bare trailing flag (no value) goes down the flags path;
+        // check_known must cover it as well.
+        let e = dispatch(&args("fleet --no-stagio")).unwrap_err();
+        assert!(e.to_string().contains("unknown option"), "got: {e:#}");
+    }
+
+    #[test]
+    fn known_options_pass_the_gate() {
+        // Small end-to-end smoke runs through dispatch (fast shapes).
+        dispatch(&args("--help")).unwrap();
+        dispatch(&args("tune --network squeezenet")).unwrap();
+        dispatch(&args("fleet --jobs 1 --total-csds 2 --no-stage-io --degrade 0:5:0.8"))
+            .unwrap();
+        dispatch(&args(
+            "workload --jobs 2 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
+             --seed 3 --cancel 1:40 --degrade 0:10:0.7 --degrade 0:20:2 --no-stage-io",
+        ))
+        .unwrap();
+    }
 }

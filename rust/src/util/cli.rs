@@ -15,10 +15,13 @@ pub struct OptSpec {
     pub default: Option<&'static str>,
 }
 
-/// Parsed arguments.
+/// Parsed arguments. A repeated `--key value` accumulates every
+/// occurrence in order: [`Args::get`] returns the last one (the usual
+/// override-wins CLI convention), [`Args::get_all`] returns them all
+/// (repeatable options like `--degrade`).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
-    opts: BTreeMap<String, String>,
+    opts: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positional: Vec<String>,
 }
@@ -36,9 +39,9 @@ impl Args {
                     break;
                 }
                 if let Some((k, v)) = body.split_once('=') {
-                    out.opts.insert(k.to_string(), v.to_string());
+                    out.opts.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
-                    out.opts.insert(body.to_string(), it.next().unwrap());
+                    out.opts.entry(body.to_string()).or_default().push(it.next().unwrap());
                 } else {
                     out.flags.push(body.to_string());
                 }
@@ -57,8 +60,30 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last occurrence of `--name value` (override-wins).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(String::as_str)
+        self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// Every occurrence of `--name value`, in argv order (empty slice
+    /// when absent) — for repeatable options like `--degrade`, whose
+    /// occurrences used to silently collapse to the last one.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        match self.opts.get(name) {
+            Some(v) => v.as_slice(),
+            None => &[],
+        }
+    }
+
+    /// Parse every occurrence of `--name value` into `T`, in argv order.
+    pub fn parse_all<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get_all(name)
+            .iter()
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")))
+            .collect()
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -147,6 +172,22 @@ mod tests {
         let b = parse("");
         assert_eq!(b.list_or("models", &["x"]), vec!["x"]);
         assert_eq!(b.get_or("net", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        // Regression: repeated `--key value` used to collapse to one
+        // entry in the map, silently dropping e.g. a second --degrade.
+        let a = parse("--degrade 0:30:0.6 --steps 5 --degrade 1:60:0.8");
+        assert_eq!(a.get_all("degrade"), &["0:30:0.6".to_string(), "1:60:0.8".to_string()]);
+        assert_eq!(a.get("degrade"), Some("1:60:0.8"), "get is last-wins");
+        assert_eq!(a.get_all("missing"), &[] as &[String]);
+        // `--k=v` and `--k v` occurrences interleave in argv order.
+        let b = parse("--seed=1 --seed 2 --seed=3");
+        assert_eq!(b.get_all("seed"), &["1".to_string(), "2".into(), "3".into()]);
+        assert_eq!(b.parse_all::<u64>("seed").unwrap(), vec![1, 2, 3]);
+        assert!(parse("--n 1 --n x").parse_all::<u64>("n").is_err());
+        assert_eq!(parse("").parse_all::<u64>("n").unwrap(), Vec::<u64>::new());
     }
 
     #[test]

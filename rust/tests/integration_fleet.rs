@@ -1,9 +1,10 @@
 //! Fleet coordinator end-to-end: concurrent jobs on one device pool,
 //! per-job tuning/balancing, degradation-driven re-tuning that leaves
-//! co-tenants untouched, and metric conservation (DESIGN.md §5).
+//! co-tenants untouched, metric conservation, and the online session
+//! API's bit-identity to the batch façade (DESIGN.md §5, §Runtime).
 
 use stannis::config::ExperimentConfig;
-use stannis::fleet::{Fleet, FleetConfig, FleetReport};
+use stannis::fleet::{Fleet, FleetConfig, FleetReport, FleetRuntime, JobState};
 use stannis::sim::SimTime;
 
 fn job(network: &str, num_csds: usize, include_host: bool, steps: usize) -> ExperimentConfig {
@@ -349,6 +350,188 @@ fn privacy_invariant_over_randomized_rebalancing_fleets() {
         total_transfers > 0,
         "rebalances must produce cross-node movement somewhere in 100 fleets"
     );
+}
+
+/// Online-vs-batch equivalence (DESIGN.md §Runtime): a [`FleetRuntime`]
+/// session with every job submitted at t = 0 and the fault schedule
+/// replayed as external events — driven through *randomized*
+/// `run_until` slices — is bit-identical to the legacy blocking
+/// `Fleet::run()`: times, step counts, energy, link bytes, movement,
+/// and the physical transfer ledger, under both executors. This is
+/// what makes the session API a redesign rather than a fork: the batch
+/// shape is literally one driving pattern of the runtime.
+#[test]
+fn online_session_is_bit_identical_to_batch_run() {
+    stannis::util::prop::check_n("online-vs-batch equivalence", 12, |rng| {
+        let pool = 2 + rng.usize_below(4); // 2..=5 bays
+        let n_jobs = 1 + rng.usize_below(3); // 1..=3 jobs
+        let nets = ["mobilenet_v2", "squeezenet", "nasnet", "inception_v3"];
+        let specs: Vec<ExperimentConfig> = (0..n_jobs)
+            .map(|_| {
+                let num_csds = rng.usize_below(pool + 1);
+                ExperimentConfig {
+                    network: nets[rng.usize_below(nets.len())].into(),
+                    num_csds,
+                    include_host: num_csds == 0 || rng.bool(0.5),
+                    steps: 1 + rng.usize_below(20),
+                    ..Default::default()
+                }
+            })
+            .collect();
+        let faults: Vec<(u64, usize, f64)> = (0..rng.usize_below(3))
+            .map(|_| {
+                // Mix degradations and repairs (factor > 1).
+                let factor = if rng.bool(0.3) {
+                    1.2 + rng.f64()
+                } else {
+                    0.3 + 0.6 * rng.f64()
+                };
+                (rng.below(150_000_000_000), rng.usize_below(pool), factor)
+            })
+            .collect();
+        // Random run_until boundaries the online session is sliced at —
+        // the fast-forward must stop exactly at every one of them and
+        // still produce the same totals.
+        let mut slices: Vec<u64> =
+            (0..rng.usize_below(5)).map(|_| rng.below(200_000_000_000)).collect();
+        slices.sort_unstable();
+        for ff in [true, false] {
+            let cfg = || FleetConfig {
+                total_csds: pool,
+                stage_io: false,
+                fast_forward: ff,
+                ..Default::default()
+            };
+            // Batch reference.
+            let mut batch = Fleet::new(cfg());
+            for s in &specs {
+                batch.submit(s.clone());
+            }
+            for &(at_ns, device, factor) in &faults {
+                batch.inject_degradation(SimTime::ns(at_ns), device, factor);
+            }
+            let br = batch.run().unwrap();
+            let bt = batch.data_plane().transfers().to_vec();
+            // Online session, sliced.
+            let mut rt = FleetRuntime::new(cfg());
+            for s in &specs {
+                rt.submit_at(SimTime::ZERO, s.clone()).unwrap();
+            }
+            for &(at_ns, device, factor) in &faults {
+                rt.inject_degradation(SimTime::ns(at_ns), device, factor);
+            }
+            for &s in &slices {
+                rt.run_until(SimTime::ns(s)).unwrap();
+            }
+            rt.run_until_idle().unwrap();
+            let or = rt.report();
+            let ot = rt.data_plane().transfers().to_vec();
+            assert_eq!(bt, ot, "transfer ledger must match (ff={ff})");
+            assert_eq!(br.makespan, or.makespan, "makespan must match (ff={ff})");
+            assert_eq!(br.total_images, or.total_images);
+            assert_eq!(br.link_bytes, or.link_bytes);
+            assert_eq!(br.retunes, or.retunes);
+            assert_eq!(br.bytes_moved, or.bytes_moved);
+            assert_eq!(br.total_energy_j.to_bits(), or.total_energy_j.to_bits());
+            assert_eq!(br.overhead_energy_j.to_bits(), or.overhead_energy_j.to_bits());
+            assert_eq!(br.jobs.len(), or.jobs.len());
+            for (x, y) in br.jobs.iter().zip(&or.jobs) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.state, y.state);
+                assert_eq!(x.submitted_at, y.submitted_at);
+                assert_eq!(x.admitted_at, y.admitted_at);
+                assert_eq!(x.finished_at, y.finished_at);
+                assert_eq!(x.steps_done, y.steps_done);
+                assert_eq!(x.images, y.images);
+                assert_eq!(x.link_bytes, y.link_bytes);
+                assert_eq!(x.bytes_moved, y.bytes_moved);
+                assert_eq!(x.lock_wait, y.lock_wait);
+                assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+            }
+        }
+    });
+}
+
+/// A seeded workload trace end-to-end through the online session:
+/// open-loop arrivals, a degrade-then-repair pair on one device, and
+/// mid-run cancellations — with every cancelled job's shard pages
+/// verifiably released (data-plane ledger == per-device FTL trims).
+#[test]
+fn workload_trace_with_cancel_and_repair_releases_shard_pages() {
+    use stannis::config::{CancelSpec, FaultSpec, WeightedJob, WorkloadSpec};
+    let spec = WorkloadSpec {
+        total_csds: 4,
+        stage_io: false,
+        jobs: 2,
+        mean_interarrival_secs: 0.0, // both arrive at t = 0
+        mix: vec![WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: "squeezenet".into(),
+                num_csds: 2,
+                include_host: false,
+                steps: 100_000, // effectively endless: both end by cancel
+                ..Default::default()
+            },
+        }],
+        cancels: vec![
+            CancelSpec { job: 0, at_secs: 50.0 },
+            CancelSpec { job: 1, at_secs: 120.0 },
+        ],
+        faults: vec![
+            FaultSpec { at_secs: 20.0, device: 0, factor: 0.5 },
+            FaultSpec { at_secs: 40.0, device: 0, factor: 3.0 }, // repair, clamps to 1.0
+        ],
+        ..Default::default()
+    };
+    assert!(spec.faults[1].is_repair());
+    let mut rt = FleetRuntime::new(FleetConfig {
+        total_csds: spec.total_csds,
+        stage_io: spec.stage_io,
+        data_plane: spec.data_plane,
+        fast_forward: spec.fast_forward,
+        ..Default::default()
+    });
+    // The single replay path the CLI and bench also use; ids are
+    // assigned sequentially on a fresh runtime.
+    let boundaries = rt.load_workload(&spec).unwrap();
+    assert!(!boundaries.is_empty());
+    let ids = [stannis::fleet::JobId(0), stannis::fleet::JobId(1)];
+    // Drive to just before the first cancel and snapshot the pages the
+    // teardown must free.
+    rt.run_until(SimTime::secs(49)).unwrap();
+    assert_eq!(rt.job_state(ids[0]), Some(JobState::Running));
+    let resident0 = rt.data_plane().resident_pages(ids[0]);
+    assert!(resident0 > 0, "job 0 must have staged shard pages");
+    rt.run_until(SimTime::secs(119)).unwrap();
+    let resident1 = rt.data_plane().resident_pages(ids[1]);
+    assert!(resident1 > 0);
+    rt.run_until_idle().unwrap();
+
+    let r = rt.report();
+    assert_eq!(r.cancelled, 2);
+    let j0 = &r.jobs[0];
+    assert_eq!(j0.state, JobState::Cancelled);
+    assert_eq!(j0.finished_at, SimTime::secs(50));
+    assert!(j0.steps_done > 0, "the cancel must land mid-run");
+    assert_eq!(j0.retunes, 2, "degrade at 20s + repair at 40s");
+    assert_eq!(r.jobs[1].state, JobState::Cancelled);
+    assert_eq!(r.jobs[1].finished_at, SimTime::secs(120));
+    assert!(r.jobs[1].steps_done > j0.steps_done, "job 1 ran 70s longer");
+    assert_eq!(r.makespan, SimTime::secs(120), "the last cancel ends the session");
+
+    // The ledger closes: all resident pages of both jobs were freed,
+    // and the per-device FTL trim counters agree with the plane's
+    // freed-page total.
+    let stats = rt.data_plane().stats();
+    assert_eq!(stats.cancels, 2);
+    assert_eq!(stats.freed_pages, resident0 + resident1);
+    assert_eq!(rt.data_plane().resident_pages(ids[0]), 0);
+    assert_eq!(rt.data_plane().resident_pages(ids[1]), 0);
+    let trims: u64 = (0..spec.total_csds)
+        .map(|d| rt.pool().device(d).ftl_ref().stats().trims)
+        .sum();
+    assert_eq!(trims, stats.freed_pages);
 }
 
 /// The legacy per-step staged-IO executor (`stage_io` with the data
