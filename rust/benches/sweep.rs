@@ -1,0 +1,182 @@
+//! Bench: the streaming runtime at fleet scale — a million-arrival
+//! Poisson trace driven end-to-end through the chunked trace driver
+//! (flat live set, slab slots reused), and the multi-seed sweep
+//! harness at 1/2/4 workers. Before recording anything the bench
+//! asserts (a) streaming totals are bit-identical to the
+//! retained-everything oracle and (b) the merged sweep report is
+//! bit-identical to the sequential (1-worker) run.
+//!
+//! Emits machine-readable numbers to `BENCH_6.json` (section
+//! `"sweep"`).
+//!
+//! Run: `cargo bench --bench sweep`
+
+use std::time::Instant;
+
+use stannis::config::{CancelSpec, ExperimentConfig, WeightedJob, WorkloadSpec};
+use stannis::fleet::{run_sweep, run_trace};
+use stannis::metrics::{f, print_table, record_bench_json_to};
+
+const POOL: usize = 24;
+
+/// Host-free, small-dataset mix: admission stays cheap and the host
+/// never serializes the fleet, so the trace exercises the streaming
+/// machinery rather than one shared bottleneck.
+fn lean_mix() -> Vec<WeightedJob> {
+    vec![
+        WeightedJob {
+            weight: 3.0,
+            job: ExperimentConfig {
+                network: "mobilenet_v2".into(),
+                num_csds: 3,
+                include_host: false,
+                steps: 20,
+                public_images: 384,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+        WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: "squeezenet".into(),
+                num_csds: 2,
+                include_host: false,
+                steps: 15,
+                public_images: 256,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+fn main() {
+    // --- Guard 1: streaming must be bit-identical to retained ------------
+    let guard = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        data_plane: false,
+        jobs: 500,
+        mean_interarrival_secs: 12.0,
+        seed: 17,
+        mix: lean_mix(),
+        cancels: (0..500)
+            .step_by(7)
+            .map(|i| CancelSpec { job: i, at_secs: 6.0 + 12.0 * i as f64 })
+            .collect(),
+        ..Default::default()
+    };
+    let streaming = run_trace(&guard).expect("streaming guard trace");
+    let mut retained_spec = guard.clone();
+    retained_spec.retain_jobs = true;
+    let retained = run_trace(&retained_spec).expect("retained guard trace");
+    assert_eq!(streaming.makespan, retained.makespan, "streaming must not change the timeline");
+    assert_eq!(streaming.total_images, retained.total_images);
+    assert_eq!(streaming.completed, retained.completed);
+    assert_eq!(streaming.cancelled, retained.cancelled);
+    assert_eq!(
+        streaming.jobs_energy_j.to_bits(),
+        retained.jobs_energy_j.to_bits(),
+        "streaming must be energy-bit-identical to the retained oracle"
+    );
+    assert_eq!(streaming.queue_wait, retained.queue_wait);
+    assert_eq!(streaming.peak_live_jobs, retained.peak_live_jobs);
+    assert_eq!(retained.job_slots, guard.jobs, "the oracle materializes every arrival");
+    assert!(
+        streaming.job_slots <= streaming.peak_live_jobs,
+        "streaming slots {} must stay under the live high-water {}",
+        streaming.job_slots,
+        streaming.peak_live_jobs
+    );
+
+    // --- Million-arrival trace --------------------------------------------
+    const TRACE_JOBS: usize = 1_000_000;
+    let trace = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        data_plane: false,
+        jobs: TRACE_JOBS,
+        mean_interarrival_secs: 12.0,
+        seed: 17,
+        mix: lean_mix(),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let s = run_trace(&trace).expect("million-arrival trace");
+    let trace_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(s.completed, TRACE_JOBS, "every arrival must run to completion");
+    // 3-CSD jobs on a 24-bay host-free pool: at most 8 concurrent, at
+    // any trace length — the O(live jobs) claim, asserted, not assumed.
+    assert!(
+        s.peak_live_jobs <= POOL / 2,
+        "peak live jobs {} must be bounded by pool concurrency, not trace length",
+        s.peak_live_jobs
+    );
+    assert!(
+        s.job_slots <= s.peak_live_jobs,
+        "job table grew {} slots for {} arrivals",
+        s.job_slots,
+        TRACE_JOBS
+    );
+    let events_per_sec = s.log_events as f64 / trace_wall.max(1e-9);
+    let hours = s.makespan.as_secs_f64() / 3600.0;
+    let trace_jobs_per_hour = s.completed as f64 / hours.max(1e-12);
+    println!(
+        "1M-arrival trace: {} events in {:.2}s wall ({:.0} events/s), makespan {}, {:.1} jobs/h sustained, peak {} live, {} slot(s)",
+        s.log_events, trace_wall, events_per_sec, s.makespan, trace_jobs_per_hour,
+        s.peak_live_jobs, s.job_slots,
+    );
+
+    // --- Sweep scaling: 1 / 2 / 4 workers ---------------------------------
+    const SWEEP_TRACE_JOBS: usize = 20_000;
+    let base = WorkloadSpec { jobs: SWEEP_TRACE_JOBS, ..trace.clone() };
+    let seeds: Vec<u64> = (0..4).map(|i| base.seed + i).collect();
+    let mut rows = Vec::new();
+    let mut walls = [0.0f64; 3];
+    let mut reference = None;
+    for (i, workers) in [1usize, 2, 4].into_iter().enumerate() {
+        let t0 = Instant::now();
+        let rep = run_sweep(&base, &seeds, workers).expect("sweep");
+        walls[i] = t0.elapsed().as_secs_f64();
+        // --- Guard 2: merged results must not depend on worker count ------
+        match &reference {
+            None => reference = Some(rep.clone()),
+            Some(r) => assert_eq!(
+                r, &rep,
+                "sweep at {workers} workers must be bit-identical to sequential"
+            ),
+        }
+        rows.push(vec![
+            workers.to_string(),
+            rep.traces.len().to_string(),
+            rep.total_jobs.to_string(),
+            f(rep.jobs_per_hour.mean(), 1),
+            f(rep.aggregate_ips.mean(), 1),
+            format!("{:.3} s", walls[i]),
+            f(walls[0] / walls[i].max(1e-9), 2),
+        ]);
+    }
+    print_table(
+        &format!("Sweep scaling — 4 seeded traces x {SWEEP_TRACE_JOBS} arrivals, merged == sequential asserted"),
+        &["workers", "traces", "jobs", "jobs/h", "img/s", "wall", "speedup"],
+        &rows,
+    );
+
+    record_bench_json_to(
+        "BENCH_6.json",
+        "sweep",
+        &[
+            ("trace_jobs", TRACE_JOBS as f64),
+            ("trace_wall_s", trace_wall),
+            ("trace_events_per_sec", events_per_sec),
+            ("trace_jobs_per_hour", trace_jobs_per_hour),
+            ("trace_peak_live_jobs", s.peak_live_jobs as f64),
+            ("trace_job_slots", s.job_slots as f64),
+            ("sweep_wall_1w_s", walls[0]),
+            ("sweep_wall_2w_s", walls[1]),
+            ("sweep_wall_4w_s", walls[2]),
+            ("sweep_speedup_4w", walls[0] / walls[2].max(1e-9)),
+        ],
+    );
+}

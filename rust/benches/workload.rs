@@ -13,19 +13,13 @@
 use std::time::Instant;
 
 use stannis::config::{CancelSpec, WorkloadSpec};
-use stannis::fleet::{FleetConfig, FleetReport, FleetRuntime};
-use stannis::metrics::{f, print_table, record_bench_json_to};
+use stannis::fleet::{run_trace_with, runtime_for, FleetReport, FleetRuntime, RuntimeEvent};
+use stannis::metrics::{f, percentile, print_table, record_bench_json_to};
 
 const POOL: usize = 24;
 
 fn runtime(spec: &WorkloadSpec) -> FleetRuntime {
-    FleetRuntime::new(FleetConfig {
-        total_csds: spec.total_csds,
-        stage_io: spec.stage_io,
-        data_plane: spec.data_plane,
-        fast_forward: spec.fast_forward,
-        ..Default::default()
-    })
+    runtime_for(spec)
 }
 
 /// One-shot run: load the trace, drain to idle. Returns the drained
@@ -48,14 +42,6 @@ fn run_trace_sliced(spec: &WorkloadSpec) -> FleetReport {
     }
     rt.run_until_idle().expect("workload run");
     rt.report()
-}
-
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
-    sorted[idx]
 }
 
 fn main() {
@@ -98,23 +84,30 @@ fn main() {
             seed: 11,
             ..Default::default()
         };
-        let (rt, wall) = run_trace(&spec);
-        let r = rt.report();
+        // Streaming run: per-job waits come off the retired-record
+        // stream — the runtime keeps no terminal jobs.
+        let mut waits: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        let (summary, _rt) = run_trace_with(&spec, |e| {
+            if let RuntimeEvent::Retired { record } = &e.event {
+                waits.push(record.report.queue_wait.as_secs_f64());
+            }
+        })
+        .expect("workload sweep trace");
+        let wall = t0.elapsed().as_secs_f64();
         sweep_wall += wall;
-        let mut waits: Vec<f64> =
-            r.jobs.iter().map(|j| j.queue_wait.as_secs_f64()).collect();
         waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let hours = r.makespan.as_secs_f64() / 3600.0;
-        let jobs_per_hour = r.jobs.len() as f64 / hours.max(1e-12);
+        let hours = summary.makespan.as_secs_f64() / 3600.0;
+        let jobs_per_hour = summary.jobs as f64 / hours.max(1e-12);
         let (p50, p99) = (percentile(&waits, 0.50), percentile(&waits, 0.99));
         rows.push(vec![
             f(mean_gap, 0),
-            r.jobs.len().to_string(),
-            r.makespan.to_string(),
+            summary.jobs.to_string(),
+            summary.makespan.to_string(),
             f(jobs_per_hour, 1),
             f(p50, 1),
             f(p99, 1),
-            f(r.aggregate_ips, 1),
+            f(summary.aggregate_ips, 1),
             format!("{:.3} ms", wall * 1e3),
         ]);
         heavy = Some((jobs_per_hour, p50, p99)); // densest point wins (last)

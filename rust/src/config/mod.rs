@@ -362,6 +362,11 @@ pub struct WorkloadSpec {
     pub data_plane: bool,
     /// Steady-state fast-forward (`--per-step` disables).
     pub fast_forward: bool,
+    /// Keep terminal jobs in the runtime's table (the
+    /// retained-everything oracle; `--retain-jobs`). Default off: jobs
+    /// retire into the streamed log and memory stays O(live jobs) —
+    /// the only mode that survives million-arrival traces.
+    pub retain_jobs: bool,
     /// Seed of the arrival process and mix draws.
     pub seed: u64,
     /// Number of job arrivals to draw.
@@ -387,6 +392,7 @@ impl Default for WorkloadSpec {
             stage_io: true,
             data_plane: true,
             fast_forward: true,
+            retain_jobs: false,
             seed: 7,
             jobs: 8,
             mean_interarrival_secs: 30.0,
@@ -423,6 +429,9 @@ impl WorkloadSpec {
         if let Some(v) = j.get("fast_forward") {
             out.fast_forward = v.as_bool()?;
         }
+        if let Some(v) = j.get("retain_jobs") {
+            out.retain_jobs = v.as_bool()?;
+        }
         if let Some(v) = j.get("seed") {
             out.seed = v.as_u64()?;
         }
@@ -458,7 +467,7 @@ impl WorkloadSpec {
     }
 
     /// Apply CLI overrides (`--total-csds`, `--jobs`, `--mean-arrival`,
-    /// `--seed`, `--csds-per-job`).
+    /// `--seed`, `--csds-per-job`, `--retain-jobs`).
     pub fn apply_args(mut self, args: &Args) -> Result<Self> {
         self.total_csds = args.parse_or("total-csds", self.total_csds)?;
         self.jobs = args.parse_or("jobs", self.jobs)?;
@@ -475,6 +484,9 @@ impl WorkloadSpec {
         if args.flag("per-step") {
             self.fast_forward = false;
         }
+        if args.flag("retain-jobs") {
+            self.retain_jobs = true;
+        }
         for c in args.get_all("cancel") {
             self.cancels.push(CancelSpec::parse_cli(c)?);
         }
@@ -484,17 +496,30 @@ impl WorkloadSpec {
         self.validated()
     }
 
-    fn validated(self) -> Result<Self> {
+    /// Check the spec's invariants: at least one arrival, a finite
+    /// non-negative mean gap, strictly positive finite mix weights,
+    /// and cancel indices inside the trace. `from_file`/`apply_args`
+    /// run this, and so do the trace drivers
+    /// ([`crate::fleet::FleetRuntime::load_workload`],
+    /// [`crate::fleet::sweep::run_trace_with`]) — a hand-built spec
+    /// cannot bypass it.
+    pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.jobs > 0, "a workload needs at least one job arrival");
         anyhow::ensure!(
             self.mean_interarrival_secs >= 0.0 && self.mean_interarrival_secs.is_finite(),
             "mean_interarrival_secs must be a non-negative time, got {}",
             self.mean_interarrival_secs
         );
-        anyhow::ensure!(
-            self.mix.iter().all(|m| m.weight > 0.0 && m.weight.is_finite()),
-            "mix weights must be positive"
-        );
+        for (i, m) in self.mix.iter().enumerate() {
+            anyhow::ensure!(
+                m.weight > 0.0 && m.weight.is_finite(),
+                "mix entry {i} ({:?}) has weight {}: every mix weight must be a \
+                 positive finite number (a zero-weight template can never be drawn \
+                 — delete the entry instead)",
+                m.job.network,
+                m.weight
+            );
+        }
         for c in &self.cancels {
             anyhow::ensure!(
                 c.job < self.jobs,
@@ -503,6 +528,11 @@ impl WorkloadSpec {
                 self.jobs
             );
         }
+        Ok(())
+    }
+
+    fn validated(self) -> Result<Self> {
+        self.validate()?;
         Ok(self)
     }
 
@@ -530,31 +560,40 @@ impl WorkloadSpec {
             .collect()
     }
 
-    /// Draw the arrival trace: `jobs` arrivals of a Poisson process
-    /// (exponential inter-arrival gaps of mean `mean_interarrival_secs`)
-    /// over the weighted mix. Deterministic in `seed` — the same spec
-    /// always yields the same trace, byte for byte.
-    pub fn arrivals(&self) -> Vec<(f64, ExperimentConfig)> {
+    /// Draw the arrival trace lazily: `jobs` arrivals of a Poisson
+    /// process (exponential inter-arrival gaps of mean
+    /// `mean_interarrival_secs`) over the weighted mix, one at a time.
+    /// Deterministic in `seed` — the same spec always yields the same
+    /// trace, byte for byte; the draw sequence (one gap draw, then one
+    /// mix pick, per arrival) is identical to the eager
+    /// [`WorkloadSpec::arrivals`], which is now a collecting wrapper.
+    /// The streaming trace driver ([`crate::fleet::sweep`]) leans on
+    /// this: a million-arrival trace never materializes a Vec.
+    pub fn arrival_iter(&self) -> impl Iterator<Item = (f64, ExperimentConfig)> + '_ {
         let mix = self.effective_mix();
         let total_w: f64 = mix.iter().map(|m| m.weight).sum();
         let mut rng = crate::util::Rng::new(self.seed ^ 0x4A0B_70AD);
         let mut t = 0.0f64;
-        (0..self.jobs)
-            .map(|_| {
-                // Inverse-CDF exponential draw; f64() < 1 keeps ln finite.
-                t += -self.mean_interarrival_secs * (1.0 - rng.f64()).ln();
-                let mut pick = rng.f64() * total_w;
-                let mut job = mix.last().expect("mix is non-empty").job.clone();
-                for m in &mix {
-                    if pick < m.weight {
-                        job = m.job.clone();
-                        break;
-                    }
-                    pick -= m.weight;
+        (0..self.jobs).map(move |_| {
+            // Inverse-CDF exponential draw; f64() < 1 keeps ln finite.
+            t += -self.mean_interarrival_secs * (1.0 - rng.f64()).ln();
+            let mut pick = rng.f64() * total_w;
+            let mut job = mix.last().expect("mix is non-empty").job.clone();
+            for m in &mix {
+                if pick < m.weight {
+                    job = m.job.clone();
+                    break;
                 }
-                (t, job)
-            })
-            .collect()
+                pick -= m.weight;
+            }
+            (t, job)
+        })
+    }
+
+    /// The whole arrival trace at once — small traces and tests; see
+    /// [`WorkloadSpec::arrival_iter`] for the streaming form.
+    pub fn arrivals(&self) -> Vec<(f64, ExperimentConfig)> {
+        self.arrival_iter().collect()
     }
 }
 
@@ -712,6 +751,21 @@ mod tests {
         // A cancel referencing a job that never arrives is rejected.
         std::fs::write(&p, r#"{"jobs": 2, "cancels": [{"job": 5, "at_secs": 1}]}"#).unwrap();
         assert!(WorkloadSpec::from_file(&p).is_err());
+        // A zero-weight mix entry is rejected with the entry named —
+        // the file path runs the same public `validate` as the drivers.
+        std::fs::write(
+            &p,
+            r#"{"jobs": 2, "mix": [{"network": "squeezenet"},
+                                   {"network": "nasnet", "weight": 0.0}]}"#,
+        )
+        .unwrap();
+        let err = WorkloadSpec::from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("mix entry 1"), "must name the entry, got: {err}");
+        assert!(err.contains("weight"), "must explain the rule, got: {err}");
+        // retain_jobs parses from JSON and defaults off (streaming).
+        std::fs::write(&p, r#"{"jobs": 2, "retain_jobs": true}"#).unwrap();
+        assert!(WorkloadSpec::from_file(&p).unwrap().retain_jobs);
+        assert!(!WorkloadSpec::default().retain_jobs, "streaming is the default");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -753,6 +807,26 @@ mod tests {
         assert_eq!(w.faults.len(), 2, "repeated --degrade must not collapse");
         assert!(w.faults[1].is_repair());
         assert!(!w.fast_forward);
+        let args =
+            crate::util::cli::Args::parse(["--retain-jobs"].map(String::from)).unwrap();
+        assert!(WorkloadSpec::default().apply_args(&args).unwrap().retain_jobs);
+    }
+
+    #[test]
+    fn workload_arrival_iter_is_lazy_and_identical_to_collecting() {
+        let spec = WorkloadSpec { jobs: 50, seed: 31, ..Default::default() };
+        let eager = spec.arrivals();
+        let lazy: Vec<_> = spec.arrival_iter().collect();
+        assert_eq!(eager.len(), lazy.len());
+        for (e, l) in eager.iter().zip(&lazy) {
+            assert_eq!(e.0.to_bits(), l.0.to_bits(), "identical RNG draw order, to the bit");
+            assert_eq!(e.1.network, l.1.network);
+        }
+        // Taking a prefix draws only that prefix — the streaming trace
+        // driver depends on never materializing the tail.
+        let prefix: Vec<_> = spec.arrival_iter().take(3).collect();
+        assert_eq!(prefix.len(), 3);
+        assert_eq!(prefix[2].0.to_bits(), eager[2].0.to_bits());
     }
 
     #[test]

@@ -73,6 +73,21 @@
 //! `FleetConfig::fast_forward = false` forces the per-step reference
 //! path; the two are bit-identical (asserted by the `integration_fleet`
 //! equivalence properties; legality conditions in DESIGN.md §Perf).
+//!
+//! **Retirement & streaming:** by default the runtime is *streaming* —
+//! the moment a job turns terminal its final [`JobReport`] is folded
+//! into fleet-level accumulators, a compact
+//! [`RetiredRecord`](super::RetiredRecord) is emitted through
+//! [`FleetRuntime::take_log`], and the `Job` leaves the live table (a
+//! generational slab whose freed slots are reused), so a session's
+//! memory is O(live jobs) — a million-arrival trace runs in the
+//! footprint of its peak concurrency. `FleetConfig::retain_jobs = true`
+//! restores the retained-everything behavior (every job stays in the
+//! table and appears in [`FleetReport::jobs`]); it is the oracle the
+//! streaming-vs-retained equivalence property pins the default against,
+//! and what the batch [`Fleet`] façade uses. Both modes run the same
+//! retirement path — same log stream, same accumulator order, so every
+//! total is bit-identical across modes (DESIGN.md §Runtime).
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, VecDeque};
@@ -91,7 +106,7 @@ use crate::tunnel::{NodeId, Tunnel, TunnelConfig};
 
 use super::dataplane::DataPlane;
 use super::group::provision_placement_weighted;
-use super::job::{Job, JobId, JobReport, JobState, PendingStep};
+use super::job::{Job, JobId, JobReport, JobState, PendingStep, RetiredRecord};
 use super::pool::DevicePool;
 
 /// Logical pages preloaded per device; training reads cycle over them
@@ -117,6 +132,14 @@ pub struct FleetConfig {
     /// per-step costs stay window-constant, so the steady-state
     /// fast-forward remains exact.
     pub data_plane: bool,
+    /// Keep terminal jobs in the live table so [`FleetReport::jobs`]
+    /// enumerates every job ever submitted (the retained-everything
+    /// oracle; what the batch [`Fleet`] façade forces). Default
+    /// `false`: terminal jobs are retired out of the table into
+    /// [`RetiredRecord`]s on the [`FleetRuntime::take_log`] stream and
+    /// their slab slots are reused — memory stays O(live jobs). Both
+    /// modes emit identical logs and bit-identical totals.
+    pub retain_jobs: bool,
     /// Bytes of one staged image on flash.
     pub image_bytes: usize,
     /// Advance steady-state windows analytically instead of scheduling
@@ -148,6 +171,7 @@ impl Default for FleetConfig {
             total_csds: 24,
             stage_io: true,
             data_plane: true,
+            retain_jobs: false,
             image_bytes: 12 * 1024,
             fast_forward: true,
             tune: TuneConfig::default(),
@@ -214,6 +238,13 @@ pub enum RuntimeEvent {
     Degraded { device: usize, factor: f64, health: f64 },
     /// A device repair landed (`health` is the new, clamped value).
     Repaired { device: usize, factor: f64, health: f64 },
+    /// The job turned terminal and its final report was folded into the
+    /// fleet accumulators. Follows the job's `Completed`/`Cancelled`
+    /// entry at the same instant. In the streaming default this record
+    /// is the job's entire surviving history (its slab slot is freed
+    /// for reuse); with `retain_jobs` the job also stays in the table.
+    /// Boxed: a record is ~10x the size of every other variant.
+    Retired { record: Box<RetiredRecord> },
 }
 
 impl std::fmt::Display for LogEntry {
@@ -246,16 +277,150 @@ impl std::fmt::Display for LogEntry {
             RuntimeEvent::Repaired { device, factor, health } => {
                 write!(f, "device {device} repaired x{factor:.2} -> health {health:.2}")
             }
+            RuntimeEvent::Retired { record } => {
+                let r = &record.report;
+                write!(
+                    f,
+                    "{} retired: {}, {} images, {:.2} J/img",
+                    r.id, r.state, r.images, r.j_per_image
+                )
+            }
         }
+    }
+}
+
+/// Generational slab holding the live job table. Ids resolve through
+/// an id-ordered index (iteration order = submission order, which the
+/// fast-forward scan and `report` depend on); freed slots go on a free
+/// list and are reused, so in the streaming default the slot count
+/// tracks *peak concurrency*, not total arrivals. Generations catch a
+/// stale index entry (a bug) in debug builds.
+#[derive(Default)]
+struct JobSlab {
+    slots: Vec<JobSlot>,
+    /// Freed slot indices, LIFO (hottest slot is reused first).
+    free: Vec<u32>,
+    /// JobId -> occupied slot, ordered by id.
+    index: BTreeMap<JobId, SlotRef>,
+}
+
+struct JobSlot {
+    gen: u32,
+    job: Option<Job>,
+}
+
+#[derive(Clone, Copy)]
+struct SlotRef {
+    slot: u32,
+    gen: u32,
+}
+
+impl JobSlab {
+    fn insert(&mut self, job: Job) {
+        let id = job.id;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize].job = Some(job);
+                s
+            }
+            None => {
+                self.slots.push(JobSlot { gen: 0, job: Some(job) });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let gen = self.slots[slot as usize].gen;
+        let prev = self.index.insert(id, SlotRef { slot, gen });
+        debug_assert!(prev.is_none(), "{id} inserted twice");
+    }
+
+    fn get(&self, id: &JobId) -> Option<&Job> {
+        let r = self.index.get(id)?;
+        let s = &self.slots[r.slot as usize];
+        debug_assert_eq!(s.gen, r.gen, "stale slot ref for {id}");
+        s.job.as_ref()
+    }
+
+    fn get_mut(&mut self, id: &JobId) -> Option<&mut Job> {
+        let r = self.index.get(id)?;
+        let s = &mut self.slots[r.slot as usize];
+        debug_assert_eq!(s.gen, r.gen, "stale slot ref for {id}");
+        s.job.as_mut()
+    }
+
+    /// Remove `id`, bumping the slot generation and freeing it for
+    /// reuse.
+    fn remove(&mut self, id: &JobId) -> Option<Job> {
+        let r = self.index.remove(id)?;
+        let s = &mut self.slots[r.slot as usize];
+        debug_assert_eq!(s.gen, r.gen, "stale slot ref for {id}");
+        let job = s.job.take();
+        debug_assert!(job.is_some(), "index pointed at an empty slot");
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(r.slot);
+        job
+    }
+
+    /// Jobs in id (submission) order.
+    fn values(&self) -> impl Iterator<Item = &Job> {
+        self.index.values().map(|r| {
+            self.slots[r.slot as usize].job.as_ref().expect("indexed slot is occupied")
+        })
+    }
+
+    /// Slots ever allocated — the table's memory high-water mark. In
+    /// the streaming default this stays at peak concurrency; with
+    /// `retain_jobs` it grows to the total job count.
+    fn slot_high_water(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Fleet-level accumulators of retired (terminal) jobs, folded in at
+/// retirement — finish order, identical in both modes, so `report`
+/// totals are bit-identical whether or not the jobs are retained.
+#[derive(Default, Clone)]
+struct FleetTotals {
+    images: usize,
+    energy_j: f64,
+    bytes_moved: u64,
+    retunes: usize,
+    completed: usize,
+    cancelled: usize,
+    queue_wait: RunningStat,
+    lock_wait: RunningStat,
+}
+
+impl FleetTotals {
+    fn absorb(&mut self, r: &JobReport) {
+        self.images += r.images;
+        self.energy_j += r.energy_j;
+        self.bytes_moved += r.bytes_moved;
+        self.retunes += r.retunes;
+        match r.state {
+            JobState::Completed => self.completed += 1,
+            JobState::Cancelled => self.cancelled += 1,
+            JobState::Queued | JobState::Running => {
+                unreachable!("absorbed a non-terminal report")
+            }
+        }
+        self.queue_wait.add(r.queue_wait.as_secs_f64());
+        self.lock_wait.add(r.lock_wait.as_secs_f64());
+    }
+
+    fn retired(&self) -> usize {
+        self.completed + self.cancelled
     }
 }
 
 /// Fleet-wide summary across all jobs.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
-    /// Per-job reports, in submission (id) order — terminal jobs plus
-    /// any still-running ones when the report is taken mid-session
-    /// (queued jobs appear once admitted or cancelled).
+    /// Per-job reports of the jobs still in the live table, in
+    /// submission (id) order. With `FleetConfig::retain_jobs` that is
+    /// every job ever materialized; in the streaming default it is only
+    /// the still-running ones — terminal jobs' reports streamed out as
+    /// [`RetiredRecord`]s via [`FleetRuntime::take_log`] (queued jobs
+    /// appear once admitted or cancelled, in both modes).
     pub jobs: Vec<JobReport>,
     /// Time the last structural event landed (last completion, for a
     /// drained session).
@@ -282,6 +447,14 @@ pub struct FleetReport {
     pub retunes: usize,
     /// Jobs that ended in [`JobState::Cancelled`].
     pub cancelled: usize,
+    /// Jobs that reached a terminal state (completed + cancelled) —
+    /// counted at retirement, so it is exact in both modes even though
+    /// the streaming default no longer holds the jobs themselves.
+    pub retired: usize,
+    /// High-water mark of concurrently *running* (admitted,
+    /// non-terminal) jobs — identical across streaming/retained modes,
+    /// and the bound the streaming table's slot count stays under.
+    pub peak_live_jobs: usize,
 }
 
 /// The online multi-job session (see the module docs for the API
@@ -296,7 +469,16 @@ pub struct FleetRuntime {
     arrivals: BTreeMap<u64, PendingArrival>,
     /// Arrived jobs waiting for admission, FIFO.
     queue: VecDeque<QueuedJob>,
-    jobs: BTreeMap<JobId, Job>,
+    /// The live job table. Streaming default: running jobs only
+    /// (terminal jobs retire out and their slots are reused); with
+    /// `retain_jobs`: every job ever materialized.
+    jobs: JobSlab,
+    /// Accumulated totals of retired jobs (see [`FleetTotals`]).
+    totals: FleetTotals,
+    /// Currently-running (admitted, non-terminal) jobs and the session
+    /// high-water mark of that count.
+    live_jobs: usize,
+    peak_live_jobs: usize,
     events: EventQueue<FleetEvent>,
     now: SimTime,
     host_held_by: Option<JobId>,
@@ -318,7 +500,10 @@ impl FleetRuntime {
             plane: DataPlane::new(cfg.image_bytes),
             arrivals: BTreeMap::new(),
             queue: VecDeque::new(),
-            jobs: BTreeMap::new(),
+            jobs: JobSlab::default(),
+            totals: FleetTotals::default(),
+            live_jobs: 0,
+            peak_live_jobs: 0,
             events: EventQueue::new(),
             now: SimTime::ZERO,
             host_held_by: None,
@@ -378,24 +563,41 @@ impl FleetRuntime {
     /// releases its device carve (and the host), and its data-plane
     /// shard pages are trimmed under the DLM lock; either way the job
     /// ends as [`JobState::Cancelled`] with a partial report. A cancel
-    /// landing after the job already finished is a no-op. Errors if the
-    /// job id was never submitted or `at` is in the past.
+    /// landing after the job already finished is a no-op — whether the
+    /// job is still in the table or was already retired out of it.
+    /// Errors if the job id was never submitted or `at` is in the past.
     pub fn cancel(&mut self, job: JobId, at: SimTime) -> Result<()> {
         ensure!(
             at >= self.now,
             "cannot cancel {job} at {at}: the session clock is already at {}",
             self.now
         );
-        let known = self.arrivals.contains_key(&job.0)
-            || self.queue.iter().any(|q| q.id == job)
-            || self.jobs.contains_key(&job);
-        ensure!(known, "cancel for unknown {job} (never submitted)");
-        if self.jobs.get(&job).is_some_and(|j| j.state.is_terminal()) {
-            return Ok(()); // already finished: nothing to schedule
+        // Ids are assigned sequentially, so anything below the cursor
+        // was submitted — even if the job has since retired out of the
+        // table (streaming default).
+        ensure!(job.0 < self.next_id, "cancel for unknown {job} (never submitted)");
+        if self.job_settled(job) {
+            return Ok(()); // already finished (possibly retired): nothing to schedule
         }
         self.events.schedule(at, FleetEvent::Cancel { job });
         self.external_scheduled(at);
         Ok(())
+    }
+
+    /// True once a *submitted* job has reached a terminal state —
+    /// whether its record is still in the table (`retain_jobs`) or was
+    /// already retired out of it (streaming default). Callers must have
+    /// checked `job.0 < self.next_id`.
+    fn job_settled(&self, job: JobId) -> bool {
+        debug_assert!(job.0 < self.next_id, "settled-check for a never-submitted id");
+        match self.jobs.get(&job) {
+            Some(j) => j.state.is_terminal(),
+            // Not in the table: either retired (settled) or still on
+            // its way in (pending arrival / admission queue).
+            None => {
+                !self.arrivals.contains_key(&job.0) && !self.queue.iter().any(|q| q.id == job)
+            }
+        }
     }
 
     /// Schedule a device fault: at simulated time `at`, multiply
@@ -428,7 +630,11 @@ impl FleetRuntime {
         &self.pool
     }
 
-    /// Lifecycle state of a submitted job (`None` for unknown ids).
+    /// Lifecycle state of a submitted job still tracked by the session:
+    /// `None` for unknown ids — and, in the streaming default, for jobs
+    /// already retired out of the table (their terminal state lives in
+    /// the [`RetiredRecord`] the log streamed; with
+    /// `FleetConfig::retain_jobs` terminal jobs keep answering here).
     pub fn job_state(&self, job: JobId) -> Option<JobState> {
         if let Some(j) = self.jobs.get(&job) {
             return Some(j.state);
@@ -436,6 +642,32 @@ impl FleetRuntime {
         let queued = self.arrivals.contains_key(&job.0)
             || self.queue.iter().any(|q| q.id == job);
         queued.then_some(JobState::Queued)
+    }
+
+    /// Currently-running (admitted, non-terminal) jobs.
+    pub fn live_jobs(&self) -> usize {
+        self.live_jobs
+    }
+
+    /// Session high-water mark of [`FleetRuntime::live_jobs`] —
+    /// identical across streaming/retained modes.
+    pub fn peak_live_jobs(&self) -> usize {
+        self.peak_live_jobs
+    }
+
+    /// Job-table slots ever allocated (the table's memory high-water
+    /// mark). Streaming default: bounded by peak concurrency — retired
+    /// slots are reused. With `retain_jobs`: grows to the total number
+    /// of jobs materialized. The live-set regression test pins the
+    /// contrast.
+    pub fn job_slots(&self) -> usize {
+        self.jobs.slot_high_water()
+    }
+
+    /// Jobs that reached a terminal state (completed + cancelled),
+    /// counted at retirement.
+    pub fn retired_jobs(&self) -> usize {
+        self.totals.retired()
     }
 
     /// Drain the structural-event log accumulated since the last call —
@@ -454,6 +686,7 @@ impl FleetRuntime {
     /// implementation shared by the CLI, the workload bench and the
     /// integration tests, so the replay semantics cannot diverge.
     pub fn load_workload(&mut self, spec: &WorkloadSpec) -> Result<Vec<SimTime>> {
+        spec.validate()?;
         let mut boundaries = Vec::new();
         let mut ids = Vec::new();
         for (at_secs, job) in spec.arrivals() {
@@ -540,10 +773,10 @@ impl FleetRuntime {
                     self.log_fault(ev.at, device, factor, health);
                     continue;
                 }
-                // A cancel for a job that already finished is a no-op.
-                FleetEvent::Cancel { job }
-                    if self.jobs.get(&job).is_some_and(|j| j.state.is_terminal()) =>
-                {
+                // A cancel for a job that already finished (still in
+                // the table or retired out of it) is a no-op — it must
+                // not stretch the timeline.
+                FleetEvent::Cancel { job } if self.job_settled(job) => {
                     continue;
                 }
                 _ => {}
@@ -590,21 +823,35 @@ impl FleetRuntime {
         self.log.push(LogEntry { at, event });
     }
 
-    /// Session summary over every job the runtime has materialized
-    /// (terminal or running; see [`FleetReport::jobs`]). Taking it
-    /// mid-session yields a consistent partial view.
+    /// Session summary (see [`FleetReport::jobs`] for what the per-job
+    /// list holds in each mode). Totals are the retired-job
+    /// accumulators plus the partial contributions of still-live jobs —
+    /// the *same* accumulation order in both modes (terminal jobs in
+    /// finish order, then live jobs in id order), so every f64 total is
+    /// bit-identical whether or not terminal jobs were retained. Taking
+    /// it mid-session yields a consistent partial view.
     pub fn report(&self) -> FleetReport {
         let jobs: Vec<JobReport> =
             self.jobs.values().map(|j| j.report(&self.cfg.power)).collect();
-        let total_images: usize = jobs.iter().map(|j| j.images).sum();
-        let jobs_energy_j: f64 = jobs.iter().map(|j| j.energy_j).sum();
-        let overhead_energy_j = self.overhead.total_joules();
-        let mut queue_wait = RunningStat::new();
-        let mut lock_wait = RunningStat::new();
+        let t = &self.totals;
+        let mut total_images = t.images;
+        let mut jobs_energy_j = t.energy_j;
+        let mut bytes_moved = t.bytes_moved;
+        let mut retunes = t.retunes;
+        let mut queue_wait = t.queue_wait.clone();
+        let mut lock_wait = t.lock_wait.clone();
         for j in &jobs {
+            if j.state.is_terminal() {
+                continue; // retained mode: already absorbed at retirement
+            }
+            total_images += j.images;
+            jobs_energy_j += j.energy_j;
+            bytes_moved += j.bytes_moved;
+            retunes += j.retunes;
             queue_wait.add(j.queue_wait.as_secs_f64());
             lock_wait.add(j.lock_wait.as_secs_f64());
         }
+        let overhead_energy_j = self.overhead.total_joules();
         let secs = self.now.as_secs_f64();
         FleetReport {
             makespan: self.now,
@@ -614,12 +861,36 @@ impl FleetRuntime {
             overhead_energy_j,
             total_energy_j: jobs_energy_j + overhead_energy_j,
             link_bytes: self.tunnel.stats().bytes,
-            bytes_moved: jobs.iter().map(|j| j.bytes_moved).sum(),
+            bytes_moved,
             lock_wait,
             queue_wait,
-            retunes: jobs.iter().map(|j| j.retunes).sum(),
-            cancelled: jobs.iter().filter(|j| j.state == JobState::Cancelled).count(),
+            retunes,
+            cancelled: t.cancelled,
+            retired: t.retired(),
+            peak_live_jobs: self.peak_live_jobs,
             jobs,
+        }
+    }
+
+    /// Terminal accounting, shared by every path that ends a job: fold
+    /// the final report into the fleet totals, stream a
+    /// [`RetiredRecord`] through the log, and — unless `retain_jobs` —
+    /// drop the `Job`, freeing its slab slot for reuse. Running in both
+    /// modes keeps the log sequence and every accumulator bit-identical
+    /// across them; the only difference is whether the job outlives
+    /// this call in the table.
+    fn retire(&mut self, job: Job) {
+        debug_assert!(job.state.is_terminal(), "retiring a non-terminal job");
+        let report = job.report(&self.cfg.power);
+        self.totals.absorb(&report);
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Retired {
+                record: Box::new(RetiredRecord { retired_at: self.now, report }),
+            },
+        });
+        if self.cfg.retain_jobs {
+            self.jobs.insert(job);
         }
     }
 
@@ -799,7 +1070,9 @@ impl FleetRuntime {
             job.stage_ready = cost.ready;
             job.staging = self.plane.staging(id).clone();
         }
-        self.jobs.insert(id, job);
+        self.jobs.insert(job);
+        self.live_jobs += 1;
+        self.peak_live_jobs = self.peak_live_jobs.max(self.live_jobs);
         Ok(id)
     }
 
@@ -827,7 +1100,7 @@ impl FleetRuntime {
     /// are exact repeats and the fast-forward stays bit-identical.
     fn schedule_step(&mut self, id: JobId) -> Result<()> {
         let (devices, holds_host, bs_csd, bs_host, net, data_cursor, images, stage_ready) = {
-            let j = &self.jobs[&id];
+            let j = self.jobs.get(&id).expect("job exists");
             (
                 j.devices.clone(),
                 j.holds_host,
@@ -947,11 +1220,13 @@ impl FleetRuntime {
             if self.host_held_by == Some(id) {
                 self.host_held_by = None;
             }
-            let images = self.jobs[&id].images_done;
+            let job = self.jobs.remove(&id).expect("StepDone for unknown job");
+            self.live_jobs -= 1;
             self.log.push(LogEntry {
                 at: self.now,
-                event: RuntimeEvent::Completed { job: id, images },
+                event: RuntimeEvent::Completed { job: id, images: job.images_done },
             });
+            self.retire(job);
             self.try_admit()
         } else {
             self.schedule_step(id)
@@ -987,31 +1262,38 @@ impl FleetRuntime {
     /// lifecycle (pending arrival, queued, or running).
     fn on_cancel(&mut self, id: JobId) -> Result<()> {
         // Not yet arrived: drop the scheduled arrival and record a
-        // zero-progress cancelled job.
+        // zero-progress cancelled job. The stub retires immediately —
+        // it was never admitted, so there is nothing to release.
         if let Some(a) = self.arrivals.remove(&id.0) {
             self.events.cancel(a.event);
             self.external_fired(a.at);
             let job = cancelled_stub(id, a.spec, a.at.min(self.now), self.now)?;
-            self.jobs.insert(id, job);
             self.log.push(LogEntry {
                 at: self.now,
                 event: RuntimeEvent::Cancelled { job: id, images: 0, freed_pages: 0 },
             });
+            self.retire(job);
             return Ok(());
         }
         // Arrived but never admitted: dequeue.
         if let Some(pos) = self.queue.iter().position(|q| q.id == id) {
             let q = self.queue.remove(pos).expect("position in bounds");
             let job = cancelled_stub(id, q.spec, q.submitted_at, self.now)?;
-            self.jobs.insert(id, job);
             self.log.push(LogEntry {
                 at: self.now,
                 event: RuntimeEvent::Cancelled { job: id, images: 0, freed_pages: 0 },
             });
+            self.retire(job);
             return Ok(());
         }
         let Some(j) = self.jobs.get(&id) else {
-            bail!("internal: Cancel event for unknown {id}")
+            // Already retired out of the table (streaming default):
+            // the cancel landed after the job's natural completion —
+            // a no-op, same as the terminal-in-table race below.
+            // `cancel` validated the id at schedule time, so a truly
+            // unknown id here is an internal error.
+            ensure!(id.0 < self.next_id, "internal: Cancel event for unknown {id}");
+            return Ok(());
         };
         if j.state.is_terminal() {
             return Ok(()); // raced with completion: no-op
@@ -1033,15 +1315,21 @@ impl FleetRuntime {
         let j = self.jobs.get_mut(&id).expect("job exists");
         j.state = JobState::Cancelled;
         j.finished_at = self.now;
-        let images = j.images_done;
         self.pool.release(id);
         if self.host_held_by == Some(id) {
             self.host_held_by = None;
         }
+        let job = self.jobs.remove(&id).expect("job exists");
+        self.live_jobs -= 1;
         self.log.push(LogEntry {
             at: self.now,
-            event: RuntimeEvent::Cancelled { job: id, images, freed_pages: freed },
+            event: RuntimeEvent::Cancelled {
+                job: id,
+                images: job.images_done,
+                freed_pages: freed,
+            },
         });
+        self.retire(job);
         // The released carve (and host) may admit queued jobs.
         self.try_admit()
     }
@@ -1118,7 +1406,8 @@ impl FleetRuntime {
         // the reference path.
         windows.sort_by_key(|w| {
             let start = w.end + w.period * w.skip - w.period;
-            let pending = self.jobs[&w.id].pending.as_ref().expect("scanned above");
+            let j = self.jobs.get(&w.id).expect("job exists");
+            let pending = j.pending.as_ref().expect("scanned above");
             (start, Reverse(w.period), self.events.seq_of(pending.event))
         });
         let pw = &self.cfg.power;
@@ -1171,7 +1460,7 @@ impl FleetRuntime {
         self.jobs.get_mut(&id).expect("assigned job exists").retunes += 1;
         self.abandon_step(id);
         let (devices, spec, holds_host, net) = {
-            let j = &self.jobs[&id];
+            let j = self.jobs.get(&id).expect("assigned job exists");
             (j.devices.clone(), j.spec.clone(), j.holds_host, j.net)
         };
         let group_health = self.pool.group_health(&devices);
@@ -1282,7 +1571,10 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    pub fn new(cfg: FleetConfig) -> Self {
+    pub fn new(mut cfg: FleetConfig) -> Self {
+        // The batch façade's contract is a report enumerating every
+        // submitted job — it IS the retained-everything oracle.
+        cfg.retain_jobs = true;
         Self {
             rt: FleetRuntime::new(cfg),
             specs: Vec::new(),
@@ -1580,6 +1872,7 @@ mod tests {
         let mut rt = FleetRuntime::new(FleetConfig {
             total_csds: 2,
             stage_io: false,
+            retain_jobs: true,
             ..Default::default()
         });
         let id = rt.submit_at(SimTime::secs(50), job("squeezenet", 2, false, 3)).unwrap();
@@ -1607,6 +1900,7 @@ mod tests {
         let mut rt = FleetRuntime::new(FleetConfig {
             total_csds: 2,
             stage_io: false,
+            retain_jobs: true,
             ..Default::default()
         });
         // A long job hogs the whole pool; B waits behind it.
@@ -1645,6 +1939,7 @@ mod tests {
         let mut rt = FleetRuntime::new(FleetConfig {
             total_csds: 2,
             stage_io: false,
+            retain_jobs: true,
             ..Default::default()
         });
         let a = rt.submit_at(SimTime::secs(100), job("squeezenet", 2, false, 5)).unwrap();
@@ -1665,6 +1960,7 @@ mod tests {
             let mut rt = FleetRuntime::new(FleetConfig {
                 total_csds: 2,
                 stage_io: false,
+                retain_jobs: true,
                 ..Default::default()
             });
             rt.submit(job("mobilenet_v2", 2, true, 60));
@@ -1690,6 +1986,7 @@ mod tests {
         let mut rt = FleetRuntime::new(FleetConfig {
             total_csds: 2,
             stage_io: false,
+            retain_jobs: true,
             ..Default::default()
         });
         rt.submit(job("mobilenet_v2", 2, true, 5));
@@ -1704,6 +2001,7 @@ mod tests {
             let mut rt = FleetRuntime::new(FleetConfig {
                 total_csds: 4,
                 stage_io: false,
+                retain_jobs: true,
                 ..Default::default()
             });
             rt.submit(job("mobilenet_v2", 2, true, 12));
@@ -1741,9 +2039,90 @@ mod tests {
         assert_eq!(count(|e| matches!(e, RuntimeEvent::Admitted { .. })), 2);
         assert_eq!(count(|e| matches!(e, RuntimeEvent::Degraded { .. })), 1);
         assert_eq!(count(|e| matches!(e, RuntimeEvent::Completed { .. })), 2);
+        // Every terminal job also streamed its compact final record —
+        // in retained mode too (the log is mode-invariant).
+        assert_eq!(count(|e| matches!(e, RuntimeEvent::Retired { .. })), 2);
         // Entries render as one line each for the CLI stream.
         for e in &log {
             assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn streaming_default_retires_jobs_and_reuses_slots() {
+        // Default config: terminal jobs leave the table; their final
+        // reports arrive as Retired records on the log, and the second
+        // job reuses the first one's slab slot.
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        let a = rt.submit(job("squeezenet", 2, false, 3));
+        let b = rt.submit_at(SimTime::secs(10_000), job("squeezenet", 2, false, 3)).unwrap();
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        assert!(r.jobs.is_empty(), "streaming mode holds no terminal jobs");
+        assert_eq!(r.retired, 2);
+        assert_eq!(rt.retired_jobs(), 2);
+        assert_eq!(rt.live_jobs(), 0);
+        assert_eq!(r.peak_live_jobs, 1, "the jobs never overlapped");
+        assert_eq!(rt.job_slots(), 1, "job1 must reuse job0's freed slot");
+        assert!(r.total_images > 0, "totals survive retirement");
+        assert!(r.jobs_energy_j > 0.0);
+        assert_eq!(r.queue_wait.count(), 2);
+        // States are no longer queryable once retired...
+        assert_eq!(rt.job_state(a), None);
+        assert_eq!(rt.job_state(b), None);
+        // ...because the history lives in the log.
+        let log = rt.take_log();
+        let records: Vec<_> = log
+            .iter()
+            .filter_map(|e| match &e.event {
+                RuntimeEvent::Retired { record } => Some(record),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].report.id, a);
+        assert_eq!(records[0].report.state, JobState::Completed);
+        assert_eq!(records[1].report.id, b);
+        assert_eq!(records[0].retired_at, records[0].report.finished_at);
+        // The accumulators match the streamed records exactly.
+        let sum: f64 = records.iter().map(|rec| rec.report.energy_j).sum();
+        assert_eq!(sum.to_bits(), r.jobs_energy_j.to_bits());
+    }
+
+    #[test]
+    fn cancel_after_natural_completion_is_a_noop_even_when_retired() {
+        // A cancel scheduled while the job runs but firing after its
+        // completion must be a no-op in BOTH modes — in the streaming
+        // default the job is not even in the table anymore.
+        for retain in [false, true] {
+            let mut rt = FleetRuntime::new(FleetConfig {
+                total_csds: 2,
+                stage_io: false,
+                retain_jobs: retain,
+                ..Default::default()
+            });
+            let a = rt.submit(job("squeezenet", 2, false, 2));
+            // Far beyond the job's natural completion.
+            rt.cancel(a, SimTime::secs(1_000_000)).unwrap();
+            rt.run_until_idle().unwrap();
+            let r = rt.report();
+            assert_eq!(r.retired, 1, "retain={retain}");
+            assert_eq!(r.cancelled, 0, "the late cancel must not re-kill the job");
+            assert!(
+                r.makespan < SimTime::secs(1_000_000),
+                "a settled cancel must not stretch the timeline (retain={retain})"
+            );
+            // Scheduling ANOTHER cancel for the retired id is a quiet
+            // no-op too (not an unknown-id error, not a double-release).
+            rt.cancel(a, rt.now()).unwrap();
+            rt.run_until_idle().unwrap();
+            assert_eq!(rt.report().cancelled, 0);
+            // Truly unknown ids still error.
+            assert!(rt.cancel(JobId(99), rt.now()).is_err());
         }
     }
 }

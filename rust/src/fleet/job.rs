@@ -144,7 +144,11 @@ impl Job {
 }
 
 /// Public per-job summary in the fleet report.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is exact (f64 fields compare bitwise-equal values) —
+/// the streaming-vs-retained equivalence property asserts the retired
+/// record stream reproduces the oracle's reports to the bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobReport {
     pub id: JobId,
     /// Terminal lifecycle state ([`JobState::Completed`] or
@@ -180,6 +184,23 @@ pub struct JobReport {
     pub lock_wait: SimTime,
     /// How many times a device degradation forced a re-tune/re-balance.
     pub retunes: usize,
+}
+
+/// Compact terminal record of a retired job: exactly the final
+/// [`JobReport`] and the instant it left the live table — nothing
+/// else survives retirement (the `Job`'s energy meter, staging plan,
+/// spec and placement die with the slab slot). In the streaming
+/// runtime (DESIGN.md §Runtime, "Retirement & streaming") the
+/// `take_log` stream of these records IS the per-job history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetiredRecord {
+    /// Instant the job was retired (== the report's `finished_at`).
+    pub retired_at: SimTime,
+    /// Final per-job report, bit-identical to what the retained
+    /// oracle computes for the same job at session end: `Job::report`
+    /// is a pure function of the job's state, and terminal jobs are
+    /// never mutated again.
+    pub report: JobReport,
 }
 
 impl Job {

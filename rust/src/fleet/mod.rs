@@ -23,16 +23,28 @@
 //!   shared discrete-event loop with per-job ring-allreduce domains,
 //!   and degradation-driven re-tuning that never disturbs co-tenants.
 //!   [`Fleet`] is the legacy batch façade (submit-all-at-t0 +
-//!   run-until-idle).
+//!   run-until-idle). By default the runtime is *streaming*: terminal
+//!   jobs retire into compact [`RetiredRecord`]s on the `take_log`
+//!   stream and their slab slots are reused, so memory is O(live
+//!   jobs); `FleetConfig::retain_jobs` restores the keep-everything
+//!   oracle (DESIGN.md §Runtime, "Retirement & streaming").
+//! * [`sweep`] — the chunked million-arrival trace driver
+//!   ([`run_trace`]) and the sharded multi-seed sweep harness
+//!   ([`run_sweep`]): independent seeded traces across `std::thread`
+//!   workers, merged deterministically — per-seed results are
+//!   bit-identical at any worker count (DESIGN.md §Runtime, "Sweep
+//!   harness").
 
 pub mod coordinator;
 pub mod dataplane;
 pub mod group;
 pub mod job;
 pub mod pool;
+pub mod sweep;
 
 pub use coordinator::{Fleet, FleetConfig, FleetReport, FleetRuntime, LogEntry, RuntimeEvent};
 pub use dataplane::{DataPlane, DataPlaneStats, StepStaging, TransferRecord};
 pub use group::{provision_placement, provision_placement_weighted, JobGroup};
-pub use job::{JobId, JobReport, JobState};
+pub use job::{JobId, JobReport, JobState, RetiredRecord};
 pub use pool::{DevicePool, FleetDevice};
+pub use sweep::{run_sweep, run_trace, run_trace_with, runtime_for, SweepReport, TraceSummary};

@@ -1,0 +1,355 @@
+//! Million-arrival trace driving and multi-seed sweeps
+//! (DESIGN.md §Runtime, "Sweep harness").
+//!
+//! [`FleetRuntime::load_workload`] materializes a whole trace up
+//! front — every arrival submitted, every external event resident —
+//! which is fine for hundreds of jobs and hopeless for millions.
+//! [`run_trace_with`] is the streaming alternative: it walks
+//! [`WorkloadSpec::arrival_iter`] in chunks, keeps only a few thousand
+//! not-yet-due externals inside the runtime, and drains
+//! [`FleetRuntime::take_log`] between chunks, so a million-arrival
+//! Poisson trace runs in O(live jobs + chunk) memory end to end.
+//!
+//! [`run_sweep`] shards *independent* seeded traces over plain
+//! `std::thread` workers (zero new dependencies). Each trace is
+//! single-threaded and deterministic in its seed; shards are assigned
+//! round-robin by seed index and folded back in seed order, so the
+//! merged [`SweepReport`] is bit-identical at any worker count — the
+//! property the sweep determinism test pins down.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::WorkloadSpec;
+use crate::metrics::RunningStat;
+use crate::sim::SimTime;
+
+use super::coordinator::{FleetConfig, FleetRuntime, LogEntry};
+
+/// Arrivals submitted per driver chunk. Bounds how many pending
+/// externals the runtime holds at once; large enough that chunk
+/// bookkeeping is noise against step simulation.
+const CHUNK: usize = 4096;
+
+/// Build the runtime a [`WorkloadSpec`] asks for: the spec's pool
+/// size, staging/data-plane/executor toggles and retention mode over
+/// otherwise-default fleet knobs. Single mapping shared by the CLI,
+/// the benches and the trace drivers.
+pub fn runtime_for(spec: &WorkloadSpec) -> FleetRuntime {
+    FleetRuntime::new(FleetConfig {
+        total_csds: spec.total_csds,
+        stage_io: spec.stage_io,
+        data_plane: spec.data_plane,
+        fast_forward: spec.fast_forward,
+        retain_jobs: spec.retain_jobs,
+        ..FleetConfig::default()
+    })
+}
+
+/// Per-trace summary: the fleet totals that survive a streaming run
+/// (no per-job list — that streamed out as retired records).
+///
+/// `PartialEq` is exact — f64 fields compare bitwise-equal values —
+/// because the sweep determinism property asserts summaries are
+/// *identical* across worker counts, not merely close.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSummary {
+    /// Seed the trace was drawn from.
+    pub seed: u64,
+    /// Arrivals the spec submitted.
+    pub jobs: usize,
+    /// Jobs that ran to natural completion.
+    pub completed: usize,
+    /// Jobs torn down by the cancel schedule.
+    pub cancelled: usize,
+    pub total_images: usize,
+    pub makespan: SimTime,
+    pub aggregate_ips: f64,
+    pub jobs_energy_j: f64,
+    pub total_energy_j: f64,
+    /// Queue-wait statistics across the trace's jobs (seconds).
+    pub queue_wait: RunningStat,
+    /// Shard-map DLM wait statistics across the trace's jobs (seconds).
+    pub lock_wait: RunningStat,
+    /// High-water mark of concurrently running jobs — the bound the
+    /// streaming job table's slot count stays under.
+    pub peak_live_jobs: usize,
+    /// Slots the job table actually grew (streaming: ≤ concurrency
+    /// high-water; retained oracle: every job ever materialized).
+    pub job_slots: usize,
+    /// Structural log entries the run streamed.
+    pub log_events: usize,
+}
+
+/// Drive one seeded trace in chunks, handing every structural
+/// [`LogEntry`] to `on_log` as it streams out. Returns the summary
+/// plus the drained runtime (for callers that want post-run state —
+/// the pool, the data plane, a final `report()`).
+///
+/// Semantics match [`FleetRuntime::load_workload`] + run-to-idle: the
+/// same arrivals (identical RNG draw order via `arrival_iter`), the
+/// same cancel and fault schedules, the same event outcomes. The only
+/// caveat is exact event-*time* ties between externals scheduled in
+/// different chunks and already-pending internal events, which can pop
+/// in a different order than the all-upfront replay; the seeded traces
+/// draw continuous times, where such ties do not occur.
+pub fn run_trace_with(
+    spec: &WorkloadSpec,
+    mut on_log: impl FnMut(&LogEntry),
+) -> Result<(TraceSummary, FleetRuntime)> {
+    spec.validate()?;
+    let mut rt = runtime_for(spec);
+    let mut log_events = 0usize;
+
+    // Health events are operator-scheduled and few: schedule up front.
+    for f in &spec.faults {
+        rt.inject_degradation(SimTime::from_secs_f64(f.at_secs), f.device, f.factor);
+    }
+    // Cancels keyed by submission index, scheduled the moment their job
+    // is submitted. `validate` pinned every index below `spec.jobs`.
+    let mut cancels: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    for c in &spec.cancels {
+        cancels.entry(c.job).or_default().push(c.at_secs);
+    }
+
+    let mut arrivals = spec.arrival_iter();
+    let mut next = arrivals.next();
+    let mut next_i = 0usize; // submission index of `next`
+    while next.is_some() {
+        for _ in 0..CHUNK {
+            let Some((at_secs, job)) = next.take() else { break };
+            let id = rt.submit_at(SimTime::from_secs_f64(at_secs), job)?;
+            if let Some(times) = cancels.get(&next_i) {
+                for &c in times {
+                    rt.cancel(id, SimTime::from_secs_f64(c))?;
+                }
+            }
+            next_i += 1;
+            next = arrivals.next();
+        }
+        // Drain up to the earliest instant a not-yet-submitted external
+        // could land: the next arrival, or the earliest cancel aimed at
+        // an unsubmitted index (cancel times are not monotone in
+        // submission index). The inclusive horizon is safe — `submit_at`
+        // and `cancel` both accept `at == now`. No horizon left means
+        // every external is in; drain to idle.
+        let mut horizon = next.as_ref().map(|(t, _)| *t);
+        for times in cancels.range(next_i..).map(|(_, v)| v) {
+            for &t in times {
+                horizon = Some(horizon.map_or(t, |h: f64| h.min(t)));
+            }
+        }
+        match horizon {
+            Some(h) => rt.run_until(SimTime::from_secs_f64(h))?,
+            None => rt.run_until_idle()?,
+        }
+        for e in rt.take_log() {
+            log_events += 1;
+            on_log(&e);
+        }
+    }
+
+    let r = rt.report();
+    debug_assert_eq!(r.retired, spec.jobs, "trace drained with unretired jobs");
+    let summary = TraceSummary {
+        seed: spec.seed,
+        jobs: spec.jobs,
+        completed: r.retired - r.cancelled,
+        cancelled: r.cancelled,
+        total_images: r.total_images,
+        makespan: r.makespan,
+        aggregate_ips: r.aggregate_ips,
+        jobs_energy_j: r.jobs_energy_j,
+        total_energy_j: r.total_energy_j,
+        queue_wait: r.queue_wait,
+        lock_wait: r.lock_wait,
+        peak_live_jobs: r.peak_live_jobs,
+        job_slots: rt.job_slots(),
+        log_events,
+    };
+    Ok((summary, rt))
+}
+
+/// [`run_trace_with`] with the log discarded — the sweep workers'
+/// inner loop.
+pub fn run_trace(spec: &WorkloadSpec) -> Result<TraceSummary> {
+    run_trace_with(spec, |_| {}).map(|(summary, _)| summary)
+}
+
+/// Merged result of a multi-seed sweep: per-trace summaries in seed
+/// order plus cross-trace aggregates folded with
+/// [`RunningStat::merge`]. `PartialEq` is exact, like
+/// [`TraceSummary`]'s — the worker-count invariance property compares
+/// whole reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    /// One summary per requested seed, in the seeds' given order
+    /// regardless of which worker ran which trace.
+    pub traces: Vec<TraceSummary>,
+    /// Per-job queue waits merged across every trace (seconds).
+    pub queue_wait: RunningStat,
+    /// Per-job DLM lock waits merged across every trace (seconds).
+    pub lock_wait: RunningStat,
+    /// Per-trace completed-jobs-per-hour samples.
+    pub jobs_per_hour: RunningStat,
+    /// Per-trace aggregate throughput samples (img/s).
+    pub aggregate_ips: RunningStat,
+    pub total_images: usize,
+    pub total_jobs: usize,
+    pub cancelled: usize,
+    /// Max concurrently running jobs over any single trace.
+    pub peak_live_jobs: usize,
+}
+
+/// Run `base` once per seed, sharded over `workers` OS threads
+/// (clamped to `1..=seeds.len()`), and fold the results.
+///
+/// Worker-count invariance by construction: each trace is
+/// single-threaded and deterministic in its seed; worker `w` takes
+/// seed indices `w, w + workers, ...` and posts results tagged with
+/// their index; the fold consumes the slots in index order. Nothing
+/// about scheduling, completion order or thread count can reach the
+/// folded numbers.
+pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<SweepReport> {
+    anyhow::ensure!(!seeds.is_empty(), "a sweep needs at least one seed");
+    base.validate()?;
+    let workers = workers.clamp(1, seeds.len());
+    let mut slots: Vec<Option<Result<TraceSummary>>> = Vec::new();
+    slots.resize_with(seeds.len(), || None);
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for w in 0..workers {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                for i in (w..seeds.len()).step_by(workers) {
+                    let mut spec = base.clone();
+                    spec.seed = seeds[i];
+                    if tx.send((i, run_trace(&spec))).is_err() {
+                        return; // collector gone; nothing left to report to
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for (i, res) in rx {
+            slots[i] = Some(res);
+        }
+    });
+
+    let mut traces = Vec::with_capacity(seeds.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        let summary = slot
+            .expect("every shard index was posted exactly once")
+            .with_context(|| format!("sweep trace for seed {}", seeds[i]))?;
+        traces.push(summary);
+    }
+
+    let mut queue_wait = RunningStat::new();
+    let mut lock_wait = RunningStat::new();
+    let mut jobs_per_hour = RunningStat::new();
+    let mut aggregate_ips = RunningStat::new();
+    let mut total_images = 0usize;
+    let mut total_jobs = 0usize;
+    let mut cancelled = 0usize;
+    let mut peak_live_jobs = 0usize;
+    for t in &traces {
+        queue_wait.merge(&t.queue_wait);
+        lock_wait.merge(&t.lock_wait);
+        let hours = t.makespan.as_secs_f64() / 3600.0;
+        jobs_per_hour.add(if hours > 0.0 { t.completed as f64 / hours } else { 0.0 });
+        aggregate_ips.add(t.aggregate_ips);
+        total_images += t.total_images;
+        total_jobs += t.jobs;
+        cancelled += t.cancelled;
+        peak_live_jobs = peak_live_jobs.max(t.peak_live_jobs);
+    }
+    Ok(SweepReport {
+        traces,
+        queue_wait,
+        lock_wait,
+        jobs_per_hour,
+        aggregate_ips,
+        total_images,
+        total_jobs,
+        cancelled,
+        peak_live_jobs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CancelSpec, ExperimentConfig, WeightedJob};
+
+    fn small_spec() -> WorkloadSpec {
+        WorkloadSpec {
+            total_csds: 6,
+            stage_io: false,
+            data_plane: true,
+            fast_forward: true,
+            retain_jobs: false,
+            seed: 11,
+            jobs: 10,
+            mean_interarrival_secs: 8.0,
+            mix: vec![WeightedJob {
+                weight: 1.0,
+                job: ExperimentConfig {
+                    num_csds: 2,
+                    include_host: false,
+                    steps: 6,
+                    public_images: 256,
+                    private_per_csd: 64,
+                    ..Default::default()
+                },
+            }],
+            csds_per_job: 2,
+            cancels: vec![CancelSpec { job: 3, at_secs: 2.5 }],
+            faults: vec![],
+        }
+    }
+
+    #[test]
+    fn chunked_trace_matches_the_upfront_replay() {
+        let spec = small_spec();
+        let (summary, rt) = run_trace_with(&spec, |_| {}).expect("trace runs");
+
+        let mut oracle = runtime_for(&spec);
+        oracle.load_workload(&spec).expect("replay loads");
+        oracle.run_until_idle().expect("replay drains");
+        let want = oracle.report();
+        let got = rt.report();
+
+        assert_eq!(summary.jobs, 10);
+        assert_eq!(summary.completed + summary.cancelled, 10);
+        assert_eq!(summary.cancelled, want.cancelled);
+        assert_eq!(summary.total_images, want.total_images);
+        assert_eq!(summary.makespan, want.makespan);
+        // Exact f64 equality: same events in the same order.
+        assert_eq!(summary.jobs_energy_j, want.jobs_energy_j);
+        assert_eq!(summary.total_energy_j, want.total_energy_j);
+        assert_eq!(summary.queue_wait, want.queue_wait);
+        assert_eq!(got.link_bytes, want.link_bytes);
+        assert_eq!(summary.log_events, oracle.take_log().len());
+    }
+
+    #[test]
+    fn sweep_is_invariant_to_worker_count() {
+        let base = small_spec();
+        let seeds = [3u64, 7, 19, 23, 41];
+        let one = run_sweep(&base, &seeds, 1).expect("1 worker");
+        let two = run_sweep(&base, &seeds, 2).expect("2 workers");
+        let many = run_sweep(&base, &seeds, 64).expect("clamped workers");
+        assert_eq!(one, two);
+        assert_eq!(one, many);
+        assert_eq!(one.traces.len(), seeds.len());
+        assert_eq!(one.total_jobs, seeds.len() * base.jobs);
+        assert_eq!(one.queue_wait.count(), one.total_jobs);
+    }
+
+    #[test]
+    fn sweep_rejects_an_empty_seed_list() {
+        let err = run_sweep(&small_spec(), &[], 4).unwrap_err();
+        assert!(err.to_string().contains("at least one seed"), "{err}");
+    }
+}

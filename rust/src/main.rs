@@ -5,6 +5,7 @@
 //! stannis train    [--steps N --num-csds K ...]       real-exec training
 //! stannis fleet    [--jobs K --total-csds N ...]      batch multi-job coordinator
 //! stannis workload [--jobs K --mean-arrival S ...]    online arrival trace (submit/cancel/repair)
+//! stannis sweep    [--seeds N --workers W ...]        sharded multi-seed workload sweep
 //! stannis report table1|fig6|fig7|table2              paper artifacts
 //! ```
 //!
@@ -16,7 +17,9 @@ use anyhow::{bail, Result};
 
 use stannis::config::{ExperimentConfig, FaultSpec, FleetExperimentConfig, WorkloadSpec};
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
-use stannis::fleet::{Fleet, FleetConfig, FleetReport, FleetRuntime};
+use stannis::fleet::{
+    run_sweep, run_trace_with, Fleet, FleetConfig, FleetReport, JobReport, RuntimeEvent,
+};
 use stannis::metrics::{f, print_table};
 use stannis::perfmodel::PerfModel;
 use stannis::power::PowerConfig;
@@ -64,6 +67,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "fleet" => cmd_fleet(args),
         "workload" => cmd_workload(args),
+        "sweep" => cmd_sweep(args),
         "report" => {
             args.check_known(&[])?;
             match args.positional().get(1).map(String::as_str) {
@@ -87,7 +91,7 @@ fn dispatch(args: &Args) -> Result<()> {
             print!(
                 "{}",
                 usage(
-                    "stannis <tune|train|fleet|workload|report> [options]",
+                    "stannis <tune|train|fleet|workload|sweep|report> [options]",
                     "STANNIS reproduction: in-storage distributed DNN training",
                     &[
                         OptSpec { name: "network", help: "network name", default: Some("mobilenet_v2_s") },
@@ -107,6 +111,9 @@ fn dispatch(args: &Args) -> Result<()> {
                         OptSpec { name: "no-stage-io", help: "fleet: skip legacy flash staging", default: None },
                         OptSpec { name: "no-data-plane", help: "fleet: skip the modeled data plane (shard maps, DLM-locked rebalance movement)", default: None },
                         OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
+                        OptSpec { name: "retain-jobs", help: "workload/sweep: keep terminal jobs in the table (retained oracle; default streams them out as retired records)", default: None },
+                        OptSpec { name: "seeds", help: "sweep: number of seeded traces (seed, seed+1, ...)", default: Some("4") },
+                        OptSpec { name: "workers", help: "sweep: worker threads (results are identical at any count)", default: Some("4") },
                     ],
                 )
             );
@@ -183,8 +190,11 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// Render the shared per-job fleet table. `online` adds the workload
-/// columns (lifecycle state, arrival, queue wait, completion).
-fn print_job_table(r: &FleetReport, online: bool) {
+/// columns (lifecycle state, arrival, queue wait, completion). Takes
+/// the reports directly: the batch fleet passes its retained
+/// [`FleetReport::jobs`], the streaming workload passes the retired
+/// records it collected off the log.
+fn print_job_table(jobs: &[JobReport], online: bool) {
     let mut headers = vec![
         "job", "network", "devices", "bs csd/host", "steps", "imgs", "img/s", "sync", "J/img",
         "retunes", "moved", "lockw", "wait", "span",
@@ -192,8 +202,7 @@ fn print_job_table(r: &FleetReport, online: bool) {
     if online {
         headers.extend(["state", "arrival", "done"]);
     }
-    let rows: Vec<Vec<String>> = r
-        .jobs
+    let rows: Vec<Vec<String>> = jobs
         .iter()
         .map(|j| {
             let mut row = vec![
@@ -305,7 +314,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     let r = fleet.run()?;
 
-    print_job_table(&r, false);
+    print_job_table(&r.jobs, false);
     print_fleet_summary(&r);
     println!(
         "data plane: {:.1} MB moved across {} rebalance window(s), mean shard-map lock wait {:.2}ms, {} host push(es)",
@@ -317,31 +326,44 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Online session: draw the seeded arrival trace, replay cancels and
-/// health events, and stream every structural event as the clock
-/// advances through `run_until` slices.
-fn cmd_workload(args: &Args) -> Result<()> {
-    args.check_known(&[
-        "config",
-        "total-csds",
-        "jobs",
-        "mean-arrival",
-        "seed",
-        "csds-per-job",
-        "cancel",
-        "degrade",
-        "no-stage-io",
-        "no-data-plane",
-        "per-step",
-    ])?;
-    let spec = match args.get("config") {
+/// Workload flags shared by `workload` and `sweep` (both drive the
+/// streaming trace runner over a [`WorkloadSpec`]).
+const WORKLOAD_OPTS: [&str; 12] = [
+    "config",
+    "total-csds",
+    "jobs",
+    "mean-arrival",
+    "seed",
+    "csds-per-job",
+    "cancel",
+    "degrade",
+    "no-stage-io",
+    "no-data-plane",
+    "per-step",
+    "retain-jobs",
+];
+
+fn workload_spec(args: &Args) -> Result<WorkloadSpec> {
+    // `apply_args` folds in every override, including the repeatable
+    // --cancel / --degrade schedules.
+    match args.get("config") {
         Some(path) => WorkloadSpec::from_file(path)?,
         None => WorkloadSpec::default(),
     }
-    .apply_args(args)?;
+    .apply_args(args)
+}
+
+/// Online session: draw the seeded arrival trace, replay cancels and
+/// health events, and stream every structural event as the clock
+/// advances through the chunked trace driver. Terminal jobs retire
+/// into the event stream; the per-job table is rebuilt from those
+/// retired records (suppressed for huge traces unless `--retain-jobs`).
+fn cmd_workload(args: &Args) -> Result<()> {
+    args.check_known(&WORKLOAD_OPTS)?;
+    let spec = workload_spec(args)?;
 
     println!(
-        "workload: {} CSDs, {} arrival(s) (mean gap {}s, seed {}), {} cancel(s), {} fault(s), data_plane={}, fast_forward={}",
+        "workload: {} CSDs, {} arrival(s) (mean gap {}s, seed {}), {} cancel(s), {} fault(s), data_plane={}, fast_forward={}, retain_jobs={}",
         spec.total_csds,
         spec.jobs,
         f(spec.mean_interarrival_secs, 1),
@@ -349,32 +371,40 @@ fn cmd_workload(args: &Args) -> Result<()> {
         spec.cancels.len(),
         spec.faults.len(),
         spec.data_plane,
-        spec.fast_forward
+        spec.fast_forward,
+        spec.retain_jobs,
     );
-    let mut rt = FleetRuntime::new(FleetConfig {
-        total_csds: spec.total_csds,
-        stage_io: spec.stage_io,
-        data_plane: spec.data_plane,
-        fast_forward: spec.fast_forward,
-        ..Default::default()
-    });
-    // Drive the session slice by slice, printing each slice's
-    // structural events as they land — the per-event progress stream.
-    for t in rt.load_workload(&spec)? {
-        rt.run_until(t)?;
-        for e in rt.take_log() {
-            println!("{e}");
-        }
-    }
-    rt.run_until_idle()?;
-    for e in rt.take_log() {
+    // Per-job tables stop being readable (and affordable) at fleet
+    // scale; keep collecting retired reports only for small traces or
+    // on explicit request.
+    let collect_jobs = spec.retain_jobs || spec.jobs <= 64;
+    let mut finished: Vec<JobReport> = Vec::new();
+    let (summary, rt) = run_trace_with(&spec, |e| {
         println!("{e}");
-    }
+        if collect_jobs {
+            if let RuntimeEvent::Retired { record } = &e.event {
+                finished.push(record.report.clone());
+            }
+        }
+    })?;
 
     let r = rt.report();
     println!();
-    print_job_table(&r, true);
+    if collect_jobs {
+        // Retirement order is finish order; present in submission order.
+        finished.sort_by_key(|j| j.id);
+        print_job_table(&finished, true);
+    } else {
+        println!(
+            "(per-job table suppressed for {} jobs; rerun with --retain-jobs to force)",
+            spec.jobs
+        );
+    }
     print_fleet_summary(&r);
+    println!(
+        "runtime: {} job(s) retired, peak {} live, {} job-table slot(s), {} log event(s)",
+        r.retired, summary.peak_live_jobs, summary.job_slots, summary.log_events,
+    );
     let stats = rt.data_plane().stats();
     println!(
         "data plane: {:.1} MB moved across {} rebalance window(s), {} cancel teardown(s) freeing {} page(s), {} host push(es)",
@@ -383,6 +413,73 @@ fn cmd_workload(args: &Args) -> Result<()> {
         stats.cancels,
         stats.freed_pages,
         stats.host_pushes,
+    );
+    Ok(())
+}
+
+/// Sharded multi-seed sweep: run the base workload once per seed
+/// (`seed, seed+1, ...`) across worker threads and merge the per-trace
+/// aggregates. The merged numbers are bit-identical at any
+/// `--workers` value — parallelism is free to vary by machine.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut known = vec!["seeds", "workers"];
+    known.extend(WORKLOAD_OPTS);
+    args.check_known(&known)?;
+    let base = workload_spec(args)?;
+    let n_seeds: u64 = args.parse_or("seeds", 4u64)?;
+    anyhow::ensure!(n_seeds > 0, "--seeds must be at least 1");
+    let workers: usize = args.parse_or("workers", 4usize)?;
+    let seeds: Vec<u64> = (0..n_seeds).map(|i| base.seed.wrapping_add(i)).collect();
+
+    println!(
+        "sweep: {} trace(s) x {} arrival(s) (base seed {}, mean gap {}s) over {} worker(s), {} CSDs",
+        seeds.len(),
+        base.jobs,
+        base.seed,
+        f(base.mean_interarrival_secs, 1),
+        workers.clamp(1, seeds.len()),
+        base.total_csds,
+    );
+    let rep = run_sweep(&base, &seeds, workers)?;
+
+    let rows: Vec<Vec<String>> = rep
+        .traces
+        .iter()
+        .map(|t| {
+            let hours = t.makespan.as_secs_f64() / 3600.0;
+            vec![
+                t.seed.to_string(),
+                t.jobs.to_string(),
+                t.completed.to_string(),
+                t.cancelled.to_string(),
+                t.total_images.to_string(),
+                f(t.aggregate_ips, 2),
+                f(if hours > 0.0 { t.completed as f64 / hours } else { 0.0 }, 1),
+                t.peak_live_jobs.to_string(),
+                t.job_slots.to_string(),
+                t.makespan.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        "Sweep — per-seed traces",
+        &[
+            "seed", "jobs", "done", "cancelled", "imgs", "img/s", "jobs/h", "peak live",
+            "slots", "makespan",
+        ],
+        &rows,
+    );
+    println!(
+        "\nsweep: {} job(s) ({} cancelled) across {} trace(s), {} images; mean {:.1} jobs/h, mean {:.2} img/s; queue wait mean {:.1}s max {:.1}s; peak {} live job(s)",
+        rep.total_jobs,
+        rep.cancelled,
+        rep.traces.len(),
+        rep.total_images,
+        rep.jobs_per_hour.mean(),
+        rep.aggregate_ips.mean(),
+        rep.queue_wait.mean(),
+        rep.queue_wait.max(),
+        rep.peak_live_jobs,
     );
     Ok(())
 }
@@ -509,6 +606,7 @@ mod tests {
         assert_unknown_option("train --per-setp x");
         assert_unknown_option("fleet --per-setp x");
         assert_unknown_option("workload --cancle 0:10");
+        assert_unknown_option("sweep --workrs 2");
         assert_unknown_option("report --whoops 1");
         assert_unknown_option("help --whoops 1");
     }
@@ -531,6 +629,11 @@ mod tests {
         dispatch(&args(
             "workload --jobs 2 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
              --seed 3 --cancel 1:40 --degrade 0:10:0.7 --degrade 0:20:2 --no-stage-io",
+        ))
+        .unwrap();
+        dispatch(&args(
+            "sweep --seeds 2 --workers 2 --jobs 2 --total-csds 2 --csds-per-job 1 \
+             --mean-arrival 5 --seed 3 --no-stage-io --retain-jobs",
         ))
         .unwrap();
     }

@@ -3,7 +3,11 @@
 //! sample buffer (DESIGN.md §4).
 
 /// Running count/sum/min/max/mean over a stream of f64 samples.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` compares the raw accumulators (exact f64 equality) —
+/// the sweep-determinism property tests assert merged stats are
+/// *bit-identical* across worker counts, not merely close.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunningStat {
     n: usize,
     sum: f64,
@@ -71,6 +75,17 @@ impl RunningStat {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample slice (the
+/// bench-report convention: index = round(p * (n-1))). Empty -> 0.0.
+/// Shared by the workload and sweep bench targets.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +131,27 @@ mod tests {
         assert!((a.mean() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(empty.count(), 3);
         assert_eq!(empty.min(), -2.0);
+    }
+
+    #[test]
+    fn equality_is_exact_on_the_accumulators() {
+        let mut a = RunningStat::new();
+        let mut b = RunningStat::new();
+        for v in [0.1, 0.2, 0.3] {
+            a.add(v);
+            b.add(v);
+        }
+        assert_eq!(a, b);
+        b.add(0.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0); // round(0.5*3)=2
+        assert_eq!(percentile(&xs, 1.0), 4.0);
     }
 }

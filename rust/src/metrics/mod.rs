@@ -6,7 +6,7 @@
 pub mod agg;
 pub mod bench;
 
-pub use agg::RunningStat;
+pub use agg::{percentile, RunningStat};
 pub use bench::{bench, record_bench_json, record_bench_json_to, BenchResult};
 
 /// Print a fixed-width table (paper-style rows).

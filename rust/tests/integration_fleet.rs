@@ -400,6 +400,10 @@ fn online_session_is_bit_identical_to_batch_run() {
                 total_csds: pool,
                 stage_io: false,
                 fast_forward: ff,
+                // The per-job comparison below needs the online
+                // session to keep its terminal jobs (the batch façade
+                // always retains; the runtime default streams them out).
+                retain_jobs: true,
                 ..Default::default()
             };
             // Batch reference.
@@ -490,6 +494,8 @@ fn workload_trace_with_cancel_and_repair_releases_shard_pages() {
         stage_io: spec.stage_io,
         data_plane: spec.data_plane,
         fast_forward: spec.fast_forward,
+        // This test inspects r.jobs[..] after the session drains.
+        retain_jobs: true,
         ..Default::default()
     });
     // The single replay path the CLI and bench also use; ids are

@@ -1,0 +1,437 @@
+//! Streaming-runtime and sweep-harness system tests (DESIGN.md
+//! §Runtime, "Retirement & streaming" / "Sweep harness"):
+//!
+//! * The streaming default (terminal jobs retired out of the table,
+//!   slots reused) is *bit-identical* to the retained-everything
+//!   oracle — same log sequence, same retired records, same totals,
+//!   same physical transfer ledger — under both executors.
+//! * The chunked trace driver ([`run_trace_with`]) reproduces the
+//!   all-upfront [`load_workload`] replay exactly.
+//! * Multi-seed sweeps are invariant to worker count and seed order.
+//! * The live-set high-water mark is bounded by concurrency, not by
+//!   trace length — the property that makes million-arrival traces
+//!   O(live jobs) in memory.
+//!
+//! [`load_workload`]: stannis::fleet::FleetRuntime::load_workload
+
+use stannis::config::{CancelSpec, ExperimentConfig, FaultSpec, WeightedJob, WorkloadSpec};
+use stannis::fleet::{
+    run_sweep, run_trace, run_trace_with, runtime_for, FleetConfig, FleetReport, FleetRuntime,
+    JobReport, RuntimeEvent, TransferRecord,
+};
+use stannis::sim::SimTime;
+
+/// Everything one session run leaves behind, for cross-mode diffing.
+struct RunOutcome {
+    /// Debug-rendered log entries, in emission order (Debug output
+    /// round-trips f64s, so equal strings mean equal bits).
+    log: Vec<String>,
+    /// Final reports carried by `Retired` records, in retirement order.
+    retired: Vec<JobReport>,
+    report: FleetReport,
+    transfers: Vec<TransferRecord>,
+    job_slots: usize,
+}
+
+/// The streaming default must be indistinguishable from the retained
+/// oracle in everything except table residency: identical log
+/// sequences (including the retired records, field for field),
+/// identical retired-report streams, bit-identical totals and the
+/// same physical transfer ledger — across random arrival/cancel/fault
+/// schedules, random `run_until` slicing, and both executors.
+#[test]
+fn streaming_is_bit_identical_to_the_retained_oracle() {
+    stannis::util::prop::check_n("streaming-vs-retained equivalence", 10, |rng| {
+        let pool = 2 + rng.usize_below(4); // 2..=5 bays
+        let n_jobs = 1 + rng.usize_below(3); // 1..=3 jobs
+        let nets = ["mobilenet_v2", "squeezenet", "nasnet", "inception_v3"];
+        let arrivals: Vec<(SimTime, ExperimentConfig)> = (0..n_jobs)
+            .map(|_| {
+                let num_csds = rng.usize_below(pool + 1);
+                let spec = ExperimentConfig {
+                    network: nets[rng.usize_below(nets.len())].into(),
+                    num_csds,
+                    include_host: num_csds == 0 || rng.bool(0.5),
+                    steps: 1 + rng.usize_below(20),
+                    ..Default::default()
+                };
+                (SimTime::ns(rng.below(60_000_000_000)), spec)
+            })
+            .collect();
+        // Cancels aimed anywhere in the lifecycle: before arrival,
+        // mid-run, or long after natural completion (a settled no-op —
+        // in streaming mode the job is not even in the table anymore).
+        let cancels: Vec<(usize, SimTime)> = (0..rng.usize_below(3))
+            .map(|_| {
+                let at = if rng.bool(0.3) {
+                    SimTime::secs(500_000) // far beyond any completion
+                } else {
+                    SimTime::ns(rng.below(150_000_000_000))
+                };
+                (rng.usize_below(n_jobs), at)
+            })
+            .collect();
+        let faults: Vec<(SimTime, usize, f64)> = (0..rng.usize_below(3))
+            .map(|_| {
+                let factor =
+                    if rng.bool(0.3) { 1.2 + rng.f64() } else { 0.3 + 0.6 * rng.f64() };
+                (SimTime::ns(rng.below(120_000_000_000)), rng.usize_below(pool), factor)
+            })
+            .collect();
+        let mut slices: Vec<u64> =
+            (0..rng.usize_below(4)).map(|_| rng.below(200_000_000_000)).collect();
+        slices.sort_unstable();
+
+        for ff in [true, false] {
+            let run = |retain: bool| -> RunOutcome {
+                let mut rt = FleetRuntime::new(FleetConfig {
+                    total_csds: pool,
+                    stage_io: false,
+                    fast_forward: ff,
+                    retain_jobs: retain,
+                    ..Default::default()
+                });
+                let mut ids = Vec::new();
+                for (at, s) in &arrivals {
+                    ids.push(rt.submit_at(*at, s.clone()).unwrap());
+                }
+                for &(job_i, at) in &cancels {
+                    rt.cancel(ids[job_i], at).unwrap();
+                }
+                for &(at, dev, factor) in &faults {
+                    rt.inject_degradation(at, dev, factor);
+                }
+                // Random slicing, draining the log as a streaming
+                // driver would — the concatenation must be invariant.
+                let mut log = Vec::new();
+                let mut retired = Vec::new();
+                let mut drain = |rt: &mut FleetRuntime| {
+                    for e in rt.take_log() {
+                        if let RuntimeEvent::Retired { record } = &e.event {
+                            retired.push(record.report.clone());
+                        }
+                        log.push(format!("{:?} {:?}", e.at, e.event));
+                    }
+                };
+                for &s in &slices {
+                    rt.run_until(SimTime::ns(s)).unwrap();
+                    drain(&mut rt);
+                }
+                rt.run_until_idle().unwrap();
+                drain(&mut rt);
+                RunOutcome {
+                    log,
+                    retired,
+                    report: rt.report(),
+                    transfers: rt.data_plane().transfers().to_vec(),
+                    job_slots: rt.job_slots(),
+                }
+            };
+            let stream = run(false);
+            let oracle = run(true);
+
+            assert_eq!(stream.log, oracle.log, "log sequence must be mode-invariant (ff={ff})");
+            assert_eq!(stream.retired, oracle.retired, "retired records must match (ff={ff})");
+            assert_eq!(stream.transfers, oracle.transfers, "transfer ledger (ff={ff})");
+
+            // The oracle's end-of-session per-job reports ARE the
+            // retired records: `Job::report` is pure and terminal jobs
+            // are never touched again.
+            let (sr, or) = (&stream.report, &oracle.report);
+            assert!(sr.jobs.is_empty(), "streaming table must be empty after drain (ff={ff})");
+            assert_eq!(or.jobs.len(), or.retired, "oracle retains every retired job");
+            for j in &or.jobs {
+                let rec = oracle
+                    .retired
+                    .iter()
+                    .find(|r| r.id == j.id)
+                    .expect("every retained job has a retired record");
+                assert_eq!(rec, j, "retired record vs end-of-session report for {}", j.id);
+            }
+
+            assert_eq!(sr.makespan, or.makespan);
+            assert_eq!(sr.total_images, or.total_images);
+            assert_eq!(sr.link_bytes, or.link_bytes);
+            assert_eq!(sr.bytes_moved, or.bytes_moved);
+            assert_eq!(sr.retunes, or.retunes);
+            assert_eq!(sr.cancelled, or.cancelled);
+            assert_eq!(sr.retired, or.retired);
+            assert_eq!(sr.peak_live_jobs, or.peak_live_jobs);
+            assert_eq!(sr.jobs_energy_j.to_bits(), or.jobs_energy_j.to_bits());
+            assert_eq!(sr.total_energy_j.to_bits(), or.total_energy_j.to_bits());
+            assert_eq!(sr.overhead_energy_j.to_bits(), or.overhead_energy_j.to_bits());
+            assert_eq!(sr.queue_wait, or.queue_wait, "exact RunningStat equality (ff={ff})");
+            assert_eq!(sr.lock_wait, or.lock_wait);
+
+            // Residency is the one allowed difference.
+            assert!(
+                stream.job_slots <= oracle.job_slots,
+                "streaming may never use more slots ({} vs {})",
+                stream.job_slots,
+                oracle.job_slots
+            );
+            assert!(
+                stream.job_slots <= sr.peak_live_jobs,
+                "streaming slots ({}) bounded by the concurrency high-water ({})",
+                stream.job_slots,
+                sr.peak_live_jobs
+            );
+        }
+    });
+}
+
+fn trace_mix(steps: usize) -> Vec<WeightedJob> {
+    vec![
+        WeightedJob {
+            weight: 3.0,
+            job: ExperimentConfig {
+                network: "mobilenet_v2".into(),
+                num_csds: 2,
+                include_host: false,
+                steps,
+                public_images: 256,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+        WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: "squeezenet".into(),
+                num_csds: 1,
+                include_host: false,
+                steps,
+                public_images: 256,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+/// The chunked streaming driver replays a [`WorkloadSpec`] exactly
+/// like the all-upfront `load_workload` path: same log, same totals,
+/// to the bit — across random traces with cancels (including
+/// post-completion ones) and degradation/repair pairs, under both
+/// executors.
+#[test]
+fn chunked_driver_matches_the_upfront_replay() {
+    stannis::util::prop::check_n("chunked-vs-upfront replay", 8, |rng| {
+        for ff in [true, false] {
+            let jobs = 3 + rng.usize_below(8);
+            let cancels: Vec<CancelSpec> = (0..rng.usize_below(4))
+                .map(|_| CancelSpec {
+                    job: rng.usize_below(jobs),
+                    at_secs: if rng.bool(0.25) {
+                        1e6 // long after the trace drains: settled no-op
+                    } else {
+                        rng.f64() * 300.0
+                    },
+                })
+                .collect();
+            let faults: Vec<FaultSpec> = (0..rng.usize_below(3))
+                .map(|_| FaultSpec {
+                    at_secs: rng.f64() * 200.0,
+                    device: rng.usize_below(5),
+                    factor: if rng.bool(0.4) { 1.5 } else { 0.3 + 0.6 * rng.f64() },
+                })
+                .collect();
+            let spec = WorkloadSpec {
+                total_csds: 5,
+                stage_io: false,
+                fast_forward: ff,
+                seed: rng.below(1 << 32),
+                jobs,
+                mean_interarrival_secs: 5.0 + rng.f64() * 30.0,
+                mix: trace_mix(4 + rng.usize_below(6)),
+                cancels,
+                faults,
+                ..Default::default()
+            };
+
+            let mut chunked_log = Vec::new();
+            let (summary, rt) = run_trace_with(&spec, |e| {
+                chunked_log.push(format!("{:?} {:?}", e.at, e.event));
+            })
+            .expect("chunked trace");
+
+            let mut oracle = runtime_for(&spec);
+            oracle.load_workload(&spec).expect("upfront replay");
+            oracle.run_until_idle().expect("oracle drains");
+            let oracle_log: Vec<String> =
+                oracle.take_log().iter().map(|e| format!("{:?} {:?}", e.at, e.event)).collect();
+
+            assert_eq!(chunked_log, oracle_log, "driver log must match the replay");
+            let (cr, or) = (rt.report(), oracle.report());
+            assert_eq!(cr.makespan, or.makespan);
+            assert_eq!(cr.total_images, or.total_images);
+            assert_eq!(cr.link_bytes, or.link_bytes);
+            assert_eq!(cr.cancelled, or.cancelled);
+            assert_eq!(cr.retired, or.retired);
+            assert_eq!(cr.peak_live_jobs, or.peak_live_jobs);
+            assert_eq!(cr.total_energy_j.to_bits(), or.total_energy_j.to_bits());
+            assert_eq!(cr.queue_wait, or.queue_wait);
+            assert_eq!(summary.jobs, jobs);
+            assert_eq!(summary.completed + summary.cancelled, jobs);
+        }
+    });
+}
+
+/// Sweep determinism: the merged report is identical — every f64 to
+/// the bit — whether the seeded traces run on 1, 2 or N workers, and
+/// per-trace results do not depend on seed (shard) order.
+#[test]
+fn sweep_is_invariant_to_worker_count_and_shard_order() {
+    stannis::util::prop::check_n("sweep worker invariance", 4, |rng| {
+        let base = WorkloadSpec {
+            total_csds: 5,
+            stage_io: false,
+            seed: rng.below(1 << 32),
+            jobs: 4 + rng.usize_below(6),
+            mean_interarrival_secs: 4.0 + rng.f64() * 20.0,
+            mix: trace_mix(5),
+            cancels: vec![CancelSpec { job: 1, at_secs: rng.f64() * 120.0 }],
+            ..Default::default()
+        };
+        let n_seeds = 2 + rng.usize_below(4);
+        let seeds: Vec<u64> = (0..n_seeds).map(|_| rng.below(1 << 20)).collect();
+
+        let one = run_sweep(&base, &seeds, 1).expect("1 worker");
+        let two = run_sweep(&base, &seeds, 2).expect("2 workers");
+        let n = run_sweep(&base, &seeds, n_seeds).expect("N workers");
+        let over = run_sweep(&base, &seeds, 5 * n_seeds).expect("over-provisioned workers");
+        assert_eq!(one, two, "1 vs 2 workers");
+        assert_eq!(one, n, "1 vs N workers");
+        assert_eq!(one, over, "worker count clamps");
+
+        // Shard order: reversing the seed list permutes the traces but
+        // cannot change any per-seed result.
+        let mut rev_seeds = seeds.clone();
+        rev_seeds.reverse();
+        let rev = run_sweep(&base, &rev_seeds, 2).expect("reversed seeds");
+        assert_eq!(rev.total_jobs, one.total_jobs);
+        assert_eq!(rev.total_images, one.total_images);
+        assert_eq!(rev.cancelled, one.cancelled);
+        assert_eq!(rev.peak_live_jobs, one.peak_live_jobs);
+        for t in &one.traces {
+            let r = rev
+                .traces
+                .iter()
+                .find(|r| r.seed == t.seed)
+                .expect("every seed appears once in the reversed sweep");
+            assert_eq!(r, t, "per-seed summary must not depend on shard order");
+        }
+    });
+}
+
+/// The regression the tentpole exists for: on a cancel/complete-heavy
+/// trace the live set — and therefore the streaming job table — stays
+/// bounded by the admission concurrency limit, while the retained
+/// oracle's table grows with every arrival. Slots are reused: hundreds
+/// of jobs pass through a table that never exceeds a handful of slots.
+#[test]
+fn live_set_high_water_is_bounded_by_concurrency_not_trace_length() {
+    const JOBS: usize = 600;
+    // Pool of 4, 2 CSDs per job, no host: at most 2 jobs run at once.
+    const MAX_CONCURRENT: usize = 2;
+    let spec = WorkloadSpec {
+        total_csds: 4,
+        stage_io: false,
+        seed: 29,
+        jobs: JOBS,
+        mean_interarrival_secs: 3.0,
+        mix: vec![WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: "mobilenet_v2".into(),
+                num_csds: 2,
+                include_host: false,
+                steps: 5,
+                public_images: 128,
+                private_per_csd: 32,
+                ..Default::default()
+            },
+        }],
+        // Every third job is torn down early — heavy slot churn.
+        cancels: (0..JOBS)
+            .step_by(3)
+            .map(|i| CancelSpec { job: i, at_secs: 1.0 + 3.0 * i as f64 })
+            .collect(),
+        ..Default::default()
+    };
+
+    let summary = run_trace(&spec).expect("streaming trace");
+    assert_eq!(summary.completed + summary.cancelled, JOBS);
+    assert!(summary.cancelled >= JOBS / 6, "the cancel schedule must actually fire");
+    assert!(
+        summary.peak_live_jobs <= MAX_CONCURRENT,
+        "peak live jobs {} must be bounded by concurrency {}",
+        summary.peak_live_jobs,
+        MAX_CONCURRENT
+    );
+    assert!(
+        summary.job_slots <= MAX_CONCURRENT,
+        "streaming table grew {} slots for {} arrivals — slots are not being reused",
+        summary.job_slots,
+        JOBS
+    );
+
+    // The retained oracle on the same trace materializes every arrival.
+    let mut oracle_spec = spec.clone();
+    oracle_spec.retain_jobs = true;
+    let oracle = run_trace(&oracle_spec).expect("retained trace");
+    assert_eq!(oracle.job_slots, JOBS, "the oracle keeps every job ever submitted");
+    assert_eq!(oracle.peak_live_jobs, summary.peak_live_jobs);
+    assert_eq!(oracle.total_images, summary.total_images);
+    assert_eq!(oracle.jobs_energy_j.to_bits(), summary.jobs_energy_j.to_bits());
+}
+
+/// Satellite edge cases on the [`WorkloadSpec`] path: a cancel landing
+/// after natural completion is a no-op (no panic, no double release,
+/// no timeline stretch), and a zero-weight mix entry fails validation
+/// with an error naming the offending entry.
+#[test]
+fn workload_spec_edge_cases() {
+    // Cancel far beyond the last completion: the job has retired and
+    // left the table; the event must settle as a no-op.
+    let mut spec = WorkloadSpec {
+        total_csds: 4,
+        stage_io: false,
+        seed: 5,
+        jobs: 3,
+        mean_interarrival_secs: 2.0,
+        mix: trace_mix(4),
+        cancels: vec![
+            CancelSpec { job: 0, at_secs: 9.0e5 },
+            CancelSpec { job: 0, at_secs: 9.5e5 }, // second no-op on the same job
+        ],
+        ..Default::default()
+    };
+    let summary = run_trace(&spec).expect("late cancels are no-ops");
+    assert_eq!(summary.cancelled, 0, "post-completion cancels must not cancel anything");
+    assert_eq!(summary.completed, 3);
+    assert!(
+        summary.makespan < SimTime::secs(800_000),
+        "a settled cancel must not stretch the timeline to its firing instant"
+    );
+
+    // Cancel referencing a job index beyond the trace fails up front.
+    spec.cancels = vec![CancelSpec { job: 7, at_secs: 1.0 }];
+    let err = run_trace(&spec).unwrap_err().to_string();
+    assert!(err.contains("cancel references job 7"), "got: {err}");
+
+    // Zero-weight mix entry: rejected with the entry named.
+    spec.cancels.clear();
+    spec.mix[1].weight = 0.0;
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("mix entry 1"), "must name the offending entry, got: {err}");
+    assert!(err.contains("weight"), "must explain the weight rule, got: {err}");
+    let err = run_trace(&spec).unwrap_err().to_string();
+    assert!(err.contains("mix entry 1"), "the trace driver must validate too, got: {err}");
+
+    // Negative and non-finite weights fall under the same rule.
+    spec.mix[1].weight = -2.0;
+    assert!(spec.validate().is_err());
+    spec.mix[1].weight = f64::NAN;
+    assert!(spec.validate().is_err());
+}
