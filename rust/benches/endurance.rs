@@ -1,0 +1,191 @@
+//! Bench: the endurance & failure pipeline at fleet scale
+//! (DESIGN.md §Endurance).
+//!
+//! Three sections, guarded then measured:
+//!
+//! 1. **Off-identity guard** — a trace whose P/E limit can never fire
+//!    (`pe_limit = u32::MAX`) must be bit-identical to the
+//!    endurance-off default. Asserted before anything is recorded.
+//! 2. **Rolling replacement** — a long data-plane trace on a pool of
+//!    deliberately small-geometry devices with a tiny P/E budget:
+//!    blocks retire, devices wear out, jobs drain and resubmit, fresh
+//!    modules roll in. Measures WAF, device lifetime and sustained
+//!    throughput under churn.
+//! 3. **Million-arrival overhead** — the BENCH_6-shaped million-job
+//!    streaming trace rerun with a finite (but unreached) P/E limit,
+//!    so the per-event end-of-life scan is priced on the same workload
+//!    the baseline bench prices.
+//!
+//! Emits machine-readable numbers to `BENCH_7.json` (section
+//! `"endurance"`).
+//!
+//! Run: `cargo bench --bench endurance`
+
+use std::time::Instant;
+
+use stannis::config::{EnduranceSpec, ExperimentConfig, WeightedJob, WorkloadSpec};
+use stannis::fleet::{run_trace, FleetConfig, FleetRuntime};
+use stannis::metrics::{f, print_table, record_bench_json_to};
+
+const POOL: usize = 24;
+
+/// Host-free, small-dataset mix (same shape as the sweep bench): the
+/// trace exercises admission/staging churn, not one shared bottleneck.
+fn lean_mix() -> Vec<WeightedJob> {
+    vec![
+        WeightedJob {
+            weight: 3.0,
+            job: ExperimentConfig {
+                network: "mobilenet_v2".into(),
+                num_csds: 3,
+                include_host: false,
+                steps: 20,
+                public_images: 384,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+        WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: "squeezenet".into(),
+                num_csds: 2,
+                include_host: false,
+                steps: 15,
+                public_images: 256,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+fn main() {
+    // --- Guard: an unreachable limit must be invisible, to the bit -------
+    let base = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        jobs: 300,
+        mean_interarrival_secs: 12.0,
+        seed: 23,
+        mix: lean_mix(),
+        ..Default::default()
+    };
+    let mut armed = base.clone();
+    armed.endurance =
+        EnduranceSpec { pe_limit: u32::MAX, read_retries: 0, ..Default::default() };
+    let off = run_trace(&base).expect("endurance-off guard trace");
+    let on = run_trace(&armed).expect("unreachable-limit guard trace");
+    assert_eq!(
+        off, on,
+        "an unreachable pe_limit must leave the trace bit-identical to endurance off"
+    );
+    assert_eq!(on.drained, 0);
+    assert_eq!(on.devices_replaced, 0);
+
+    // --- Rolling replacement under a tiny P/E budget ----------------------
+    //
+    // Small-geometry devices (1024 blocks instead of 16384) so a few
+    // thousand data-plane admissions rewrite each device several times
+    // over; pe_limit 2 retires a block on its third erase. The raised
+    // GC low-water mark gives every device multiple admissions' worth
+    // of headroom between "worn out" (drain-and-replace fires at the
+    // next event boundary) and actual write exhaustion.
+    const WEAR_JOBS: usize = 10_000;
+    let mut cfg = FleetConfig { total_csds: POOL, stage_io: false, ..Default::default() };
+    cfg.csd.ftl.flash.blocks_per_die = 16;
+    cfg.csd.ftl.gc_low_water = 64;
+    cfg.csd.ftl.gc_high_water = 96;
+    cfg.csd.ftl.pe_limit = 2;
+    cfg.csd.ftl.read_retries = 4;
+    let spec = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        jobs: WEAR_JOBS,
+        mean_interarrival_secs: 12.0,
+        seed: 23,
+        mix: lean_mix(),
+        ..Default::default()
+    };
+    let mut rt = FleetRuntime::new(cfg);
+    rt.load_workload(&spec).expect("wear trace loads");
+    let t0 = Instant::now();
+    rt.run_until_idle().expect("wear trace drains to idle");
+    let wear_wall = t0.elapsed().as_secs_f64();
+    let r = rt.report();
+    // Drain conservation: every drain retires one (cancelled) victim
+    // and submits exactly one successor, so terminal jobs = arrivals +
+    // drains, and with no user cancels every original job completes.
+    assert_eq!(r.retired, WEAR_JOBS + r.drained, "drain must conserve jobs");
+    assert_eq!(r.cancelled, r.drained, "only drains cancel in this trace");
+    if r.devices_replaced == 0 {
+        println!("warning: no device reached end of life — wear metrics are degenerate");
+    }
+    let hours = r.makespan.as_secs_f64() / 3600.0;
+    let device_lifetime_h = if r.devices_replaced > 0 {
+        hours * POOL as f64 / r.devices_replaced as f64
+    } else {
+        0.0
+    };
+    let jobs_per_hour = (r.retired - r.cancelled) as f64 / hours.max(1e-12);
+    print_table(
+        &format!("Endurance — {WEAR_JOBS} arrivals, pe_limit 2, rolling replacement"),
+        &["drained", "replaced", "retired blks", "erases", "retry recov", "waf", "jobs/h", "wall"],
+        &[vec![
+            r.drained.to_string(),
+            r.devices_replaced.to_string(),
+            r.wear.retired_blocks.to_string(),
+            r.wear.erases.to_string(),
+            r.wear.retry_recoveries.to_string(),
+            f(r.wear.waf, 2),
+            f(jobs_per_hour, 1),
+            format!("{wear_wall:.2} s"),
+        ]],
+    );
+
+    // --- Million-arrival trace with a finite, unreached limit -------------
+    const TRACE_JOBS: usize = 1_000_000;
+    let trace = WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        data_plane: false,
+        jobs: TRACE_JOBS,
+        mean_interarrival_secs: 12.0,
+        seed: 17,
+        mix: lean_mix(),
+        endurance: EnduranceSpec { pe_limit: 1000, read_retries: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let s = run_trace(&trace).expect("million-arrival endurance trace");
+    let trace_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        s.completed, TRACE_JOBS,
+        "every arrival must complete — a finite pe_limit alone must not drop jobs"
+    );
+    let events_per_sec = s.log_events as f64 / trace_wall.max(1e-9);
+    println!(
+        "1M-arrival endurance-armed trace: {} events in {:.2}s wall ({:.0} events/s), {} drained, {} replaced",
+        s.log_events, trace_wall, events_per_sec, s.drained, s.devices_replaced,
+    );
+
+    record_bench_json_to(
+        "BENCH_7.json",
+        "endurance",
+        &[
+            ("wear_jobs", WEAR_JOBS as f64),
+            ("wear_wall_s", wear_wall),
+            ("wear_jobs_per_hour", jobs_per_hour),
+            ("drained_jobs", r.drained as f64),
+            ("devices_replaced", r.devices_replaced as f64),
+            ("retired_blocks", r.wear.retired_blocks as f64),
+            ("erases", r.wear.erases as f64),
+            ("retry_recoveries", r.wear.retry_recoveries as f64),
+            ("waf", r.wear.waf),
+            ("device_lifetime_h", device_lifetime_h),
+            ("trace_jobs", TRACE_JOBS as f64),
+            ("trace_wall_s", trace_wall),
+            ("trace_events_per_sec", events_per_sec),
+        ],
+    );
+}

@@ -347,6 +347,47 @@ pub struct WeightedJob {
     pub job: ExperimentConfig,
 }
 
+/// Endurance and failure-pipeline knobs (DESIGN.md §Endurance),
+/// applied to every device in the pool. The default is *off* in every
+/// dimension — with `pe_limit == 0` and `read_retries == 0` the flash
+/// model is bit-identical to the pre-endurance simulator (no retry
+/// draws touch the ECC RNG stream, no block ever retires, no device
+/// reaches end of life).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnduranceSpec {
+    /// Program/erase cycles a block survives before its next erase
+    /// fails and the block retires to the bad-block list. `0` =
+    /// unlimited (endurance modeling off).
+    pub pe_limit: u32,
+    /// Depth of the read-retry ladder tried on an uncorrectable page
+    /// read before the error surfaces. `0` = fail immediately.
+    pub read_retries: u32,
+    /// Extra latency per rung of the retry ladder, in microseconds.
+    pub retry_step_us: f64,
+}
+
+impl Default for EnduranceSpec {
+    fn default() -> Self {
+        Self { pe_limit: 0, read_retries: 0, retry_step_us: 100.0 }
+    }
+}
+
+impl EnduranceSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut out = Self::default();
+        if let Some(v) = j.get("pe_limit") {
+            out.pe_limit = v.as_u64()? as u32;
+        }
+        if let Some(v) = j.get("read_retries") {
+            out.read_retries = v.as_u64()? as u32;
+        }
+        if let Some(v) = j.get("retry_step_us") {
+            out.retry_step_us = v.as_f64()?;
+        }
+        Ok(out)
+    }
+}
+
 /// An *online* multi-job experiment for the fleet runtime
 /// (DESIGN.md §Runtime): a seeded arrival process over a weighted job
 /// mix, plus cancel and degrade/repair schedules — the open-loop
@@ -383,6 +424,9 @@ pub struct WorkloadSpec {
     pub cancels: Vec<CancelSpec>,
     /// Health events: `factor < 1` degrades, `> 1` repairs.
     pub faults: Vec<FaultSpec>,
+    /// Flash endurance knobs (retry ladder, block retirement, device
+    /// end-of-life). Default off in every dimension.
+    pub endurance: EnduranceSpec,
 }
 
 impl Default for WorkloadSpec {
@@ -400,6 +444,7 @@ impl Default for WorkloadSpec {
             csds_per_job: 3,
             cancels: Vec::new(),
             faults: Vec::new(),
+            endurance: EnduranceSpec::default(),
         }
     }
 }
@@ -463,11 +508,15 @@ impl WorkloadSpec {
                 out.faults.push(FaultSpec::from_json(f)?);
             }
         }
+        if let Some(v) = j.get("endurance") {
+            out.endurance = EnduranceSpec::from_json(v)?;
+        }
         out.validated()
     }
 
     /// Apply CLI overrides (`--total-csds`, `--jobs`, `--mean-arrival`,
-    /// `--seed`, `--csds-per-job`, `--retain-jobs`).
+    /// `--seed`, `--csds-per-job`, `--retain-jobs`, `--pe-limit`,
+    /// `--read-retries`).
     pub fn apply_args(mut self, args: &Args) -> Result<Self> {
         self.total_csds = args.parse_or("total-csds", self.total_csds)?;
         self.jobs = args.parse_or("jobs", self.jobs)?;
@@ -475,6 +524,9 @@ impl WorkloadSpec {
             args.parse_or("mean-arrival", self.mean_interarrival_secs)?;
         self.seed = args.parse_or("seed", self.seed)?;
         self.csds_per_job = args.parse_or("csds-per-job", self.csds_per_job)?;
+        self.endurance.pe_limit = args.parse_or("pe-limit", self.endurance.pe_limit)?;
+        self.endurance.read_retries =
+            args.parse_or("read-retries", self.endurance.read_retries)?;
         if args.flag("no-stage-io") {
             self.stage_io = false;
         }
@@ -498,8 +550,9 @@ impl WorkloadSpec {
 
     /// Check the spec's invariants: at least one arrival, a finite
     /// non-negative mean gap, strictly positive finite mix weights,
-    /// and cancel indices inside the trace. `from_file`/`apply_args`
-    /// run this, and so do the trace drivers
+    /// cancel indices inside the trace, fault devices inside the pool,
+    /// and sane endurance knobs. `from_file`/`apply_args` run this,
+    /// and so do the trace drivers
     /// ([`crate::fleet::FleetRuntime::load_workload`],
     /// [`crate::fleet::sweep::run_trace_with`]) — a hand-built spec
     /// cannot bypass it.
@@ -520,14 +573,29 @@ impl WorkloadSpec {
                 m.weight
             );
         }
-        for c in &self.cancels {
+        for (i, c) in self.cancels.iter().enumerate() {
             anyhow::ensure!(
                 c.job < self.jobs,
-                "cancel references job {} but only {} arrive",
+                "cancel entry {i} references job {} but only {} arrive",
                 c.job,
                 self.jobs
             );
         }
+        for (i, f) in self.faults.iter().enumerate() {
+            anyhow::ensure!(
+                f.device < self.total_csds,
+                "fault entry {i} (at {}s) targets device {} but the pool has only \
+                 {} device(s)",
+                f.at_secs,
+                f.device,
+                self.total_csds
+            );
+        }
+        anyhow::ensure!(
+            self.endurance.retry_step_us >= 0.0 && self.endurance.retry_step_us.is_finite(),
+            "endurance retry_step_us must be a non-negative time, got {}",
+            self.endurance.retry_step_us
+        );
         Ok(())
     }
 

@@ -47,12 +47,26 @@ pub enum EccOutcome {
     Uncorrectable,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EccStats {
     pub pages: u64,
     pub corrected_pages: u64,
     pub corrected_bits: u64,
     pub uncorrectable: u64,
+    /// Read-retry ladder rungs taken after a failed first decode (the
+    /// FTL's recovery path; zero whenever retries are configured off).
+    pub retries: u64,
+}
+
+impl EccStats {
+    /// Element-wise sum — fleet reports aggregate device decoders.
+    pub fn merge(&mut self, other: EccStats) {
+        self.pages += other.pages;
+        self.corrected_pages += other.corrected_pages;
+        self.corrected_bits += other.corrected_bits;
+        self.uncorrectable += other.uncorrectable;
+        self.retries += other.retries;
+    }
 }
 
 /// The decoder. Deterministic given its RNG seed.
@@ -120,6 +134,16 @@ impl Ecc {
             (EccOutcome::Clean, SimTime::ZERO)
         }
     }
+
+    /// One rung of the FTL's read-retry ladder: a retry shifts the read
+    /// voltage, so the decode is a fresh experiment drawn from the
+    /// *same* seeded stream as first decodes — with the ladder
+    /// configured off this is never called and the draw sequence is
+    /// untouched (the endurance-off bit-identity contract).
+    pub fn retry_page(&mut self, page_bytes: usize, pe_cycles: u32) -> (EccOutcome, SimTime) {
+        self.stats.retries += 1;
+        self.decode_page(page_bytes, pe_cycles)
+    }
 }
 
 #[cfg(test)]
@@ -185,5 +209,28 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.decode_page(16384, 100).0, b.decode_page(16384, 100).0);
         }
+    }
+
+    #[test]
+    fn retries_draw_from_the_same_stream_and_are_counted() {
+        // A retry consumes exactly the draws a first decode would, so
+        // decode-retry-decode on one decoder equals three straight
+        // decodes on a twin — the ladder inserts rungs, never forks the
+        // stream.
+        let mut a = Ecc::new(EccConfig::default(), 11);
+        let mut b = Ecc::new(EccConfig::default(), 11);
+        let r1 = a.decode_page(16384, 500).0;
+        let r2 = a.retry_page(16384, 500).0;
+        let r3 = a.decode_page(16384, 500).0;
+        assert_eq!(r1, b.decode_page(16384, 500).0);
+        assert_eq!(r2, b.decode_page(16384, 500).0);
+        assert_eq!(r3, b.decode_page(16384, 500).0);
+        assert_eq!(a.stats().retries, 1);
+        assert_eq!(b.stats().retries, 0);
+        let mut sum = EccStats::default();
+        sum.merge(a.stats());
+        sum.merge(b.stats());
+        assert_eq!(sum.pages, 6);
+        assert_eq!(sum.retries, 1);
     }
 }

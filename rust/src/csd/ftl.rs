@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 
 use crate::sim::SimTime;
 
-use super::ecc::{Ecc, EccConfig, EccOutcome};
+use super::ecc::{Ecc, EccConfig, EccOutcome, EccStats};
 use super::flash::{FlashArray, FlashConfig, PhysAddr};
 
 #[derive(Debug, Clone)]
@@ -37,6 +37,17 @@ pub struct FtlConfig {
     pub gc_low_water: usize,
     /// GC stops once the pool recovers to this count.
     pub gc_high_water: usize,
+    /// Per-block P/E endurance budget: a block at this cycle count
+    /// fails its next erase and retires into the bad-block list.
+    /// `0` = unlimited (endurance modeling off, the default).
+    pub pe_limit: u32,
+    /// Read-retry ladder depth on an uncorrectable page (`0` = off:
+    /// the first failed decode is final, exactly the legacy behavior).
+    pub read_retries: u32,
+    /// Added latency per retry rung; rung `r` costs `r * retry_step`
+    /// on top of its decode latency (voltage-shift sweeps get slower
+    /// as they go deeper).
+    pub retry_step: SimTime,
 }
 
 impl Default for FtlConfig {
@@ -47,7 +58,98 @@ impl Default for FtlConfig {
             overprovision: 0.125,
             gc_low_water: 8,
             gc_high_water: 16,
+            pe_limit: 0,
+            read_retries: 0,
+            retry_step: SimTime::us(100),
         }
+    }
+}
+
+/// Typed read-path failure: the recovery code above the FTL matches on
+/// these variants instead of message strings. `Display` reproduces the
+/// legacy messages byte-for-byte, so the bulk-vs-per-page string
+/// equality property and existing `.contains(...)` assertions hold
+/// unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadError {
+    /// Single-page lpn outside the logical space.
+    LpnOutOfRange { lpn: u32 },
+    /// Run bounds outside the logical space.
+    RunOutOfRange { lpn0: u32, end: u64, logical_pages: usize },
+    /// Never written, or trimmed since.
+    Unwritten { lpn: u32 },
+    /// ECC gave up after the first decode plus every configured retry
+    /// rung; `block`/`pe`/`retries` carry the context the endurance
+    /// pipeline escalates with.
+    Uncorrectable { lpn: u32, block: u32, pe: u32, retries: u32 },
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ReadError::LpnOutOfRange { lpn } => write!(f, "lpn {lpn} out of range"),
+            ReadError::RunOutOfRange { lpn0, end, logical_pages } => write!(
+                f,
+                "lpn run {lpn0}..{end} out of range (logical pages {logical_pages})"
+            ),
+            ReadError::Unwritten { lpn } => write!(f, "lpn {lpn} never written"),
+            ReadError::Uncorrectable { lpn, pe, .. } => {
+                write!(f, "uncorrectable ECC error reading lpn {lpn} (pe={pe})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Typed end-of-life condition: block retirement has shrunk the free
+/// pool below what GC needs to keep allocating. The fleet layer
+/// downcasts to this to trigger drain → replace → re-carve instead of
+/// treating the device error as fatal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceWornOut {
+    pub free_blocks: usize,
+    pub retired_blocks: usize,
+    pub gc_low_water: usize,
+}
+
+impl std::fmt::Display for DeviceWornOut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "device worn out: {} free blocks left (GC headroom {}) after {} retired",
+            self.free_blocks, self.gc_low_water, self.retired_blocks
+        )
+    }
+}
+
+impl std::error::Error for DeviceWornOut {}
+
+/// Endurance & wear counters surfaced to the fleet reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WearReport {
+    /// Block erases performed by GC.
+    pub erases: u64,
+    /// Blocks retired into the bad-block list (capacity lost).
+    pub retired_blocks: u64,
+    /// Blocks that needed at least one read-retry recovery.
+    pub suspect_blocks: u64,
+    /// Pages recovered (and relocated) by the read-retry ladder.
+    pub retry_recoveries: u64,
+    /// Write amplification factor.
+    pub waf: f64,
+}
+
+impl WearReport {
+    /// Element-wise merge (waf is re-derived by callers that need the
+    /// fleet-level ratio; here it keeps the max as a worst-device
+    /// indicator).
+    pub fn merge(&mut self, other: WearReport) {
+        self.erases += other.erases;
+        self.retired_blocks += other.retired_blocks;
+        self.suspect_blocks += other.suspect_blocks;
+        self.retry_recoveries += other.retry_recoveries;
+        self.waf = self.waf.max(other.waf);
     }
 }
 
@@ -59,11 +161,14 @@ struct BlockInfo {
     /// next page index to program (append-only within a block)
     write_ptr: u32,
     pe_cycles: u32,
+    /// Read-retry recoveries charged to this block (bad-block
+    /// management watches repeat offenders).
+    suspect: u32,
 }
 
 impl BlockInfo {
     fn new(pages: usize) -> Self {
-        Self { valid: vec![false; pages], valid_count: 0, write_ptr: 0, pe_cycles: 0 }
+        Self { valid: vec![false; pages], valid_count: 0, write_ptr: 0, pe_cycles: 0, suspect: 0 }
     }
 
     fn is_full(&self, pages: usize) -> bool {
@@ -192,7 +297,28 @@ pub struct Ftl {
     victim_index: BTreeSet<(u64, Reverse<u32>)>,
     /// Each block's current key in `victim_index` (for O(log) removal).
     in_index: Vec<Option<u64>>,
+    /// Blocks retired after an endurance-limit erase failure: out of
+    /// the free pool and the victim index forever; capacity shrinks.
+    bad_blocks: BTreeSet<u32>,
+    /// Pages the read-retry ladder recovered (and relocated).
+    retry_recoveries: u64,
     stats: FtlStats,
+}
+
+/// Run the read-retry ladder after a failed first decode: up to
+/// `read_retries` re-decodes from the same RNG stream, rung `r`
+/// costing `r * retry_step` plus its decode latency. Free function so
+/// the bulk-read closure (which destructures `Ftl`) can call it too.
+fn retry_ladder(ecc: &mut Ecc, cfg: &FtlConfig, pe: u32) -> (EccOutcome, SimTime, u32) {
+    let mut extra = SimTime::ZERO;
+    for rung in 1..=cfg.read_retries {
+        let (out, lat) = ecc.retry_page(cfg.flash.page_bytes, pe);
+        extra += cfg.retry_step * rung as u64 + lat;
+        if out != EccOutcome::Uncorrectable {
+            return (out, extra, rung);
+        }
+    }
+    (EccOutcome::Uncorrectable, extra, cfg.read_retries)
 }
 
 /// Cost-benefit score with wear bias — the single expression both the
@@ -245,6 +371,8 @@ impl Ftl {
             next_channel: 0,
             victim_index: BTreeSet::new(),
             in_index: vec![None; total_blocks],
+            bad_blocks: BTreeSet::new(),
+            retry_recoveries: 0,
             stats: FtlStats::default(),
             cfg,
             flash,
@@ -278,6 +406,37 @@ impl Ftl {
 
     pub fn min_pe_cycles(&self) -> u32 {
         self.blocks.iter().map(|b| b.pe_cycles).min().unwrap_or(0)
+    }
+
+    /// Decoder counters (corrected pages/bits, uncorrectables, retries).
+    pub fn ecc_stats(&self) -> EccStats {
+        self.ecc.stats()
+    }
+
+    /// Endurance & wear counters for the fleet reports.
+    pub fn wear(&self) -> WearReport {
+        WearReport {
+            erases: self.flash.stats().erases,
+            retired_blocks: self.bad_blocks.len() as u64,
+            suspect_blocks: self.blocks.iter().filter(|b| b.suspect > 0).count() as u64,
+            retry_recoveries: self.retry_recoveries,
+            waf: self.stats.waf(),
+        }
+    }
+
+    pub fn retired_block_count(&self) -> usize {
+        self.bad_blocks.len()
+    }
+
+    /// True once block retirement has eaten into GC headroom: the
+    /// device still serves reads but can no longer sustain writes —
+    /// the fleet's cue to drain and replace. Checked *between*
+    /// operations (every write path ends with `maybe_gc`, so a healthy
+    /// device always rests at or above the low-water mark).
+    pub fn worn_out(&self) -> bool {
+        self.cfg.pe_limit > 0
+            && !self.bad_blocks.is_empty()
+            && self.free.len() < self.cfg.gc_low_water
     }
 
     // ---- address helpers ---------------------------------------------
@@ -353,6 +512,17 @@ impl Ftl {
             return Ok(self.block_addr(b, page));
         }
         let _ = now;
+        // Distinguish "the workload genuinely outran over-provisioning"
+        // (legacy message, unchanged) from "retirement shrank capacity
+        // under the workload" (typed: the fleet drains and replaces).
+        if !self.bad_blocks.is_empty() {
+            return Err(DeviceWornOut {
+                free_blocks: self.free.len(),
+                retired_blocks: self.bad_blocks.len(),
+                gc_low_water: self.cfg.gc_low_water,
+            }
+            .into());
+        }
         bail!("flash out of space: no free blocks (GC failed to reclaim)")
     }
 
@@ -487,18 +657,50 @@ impl Ftl {
     // ---- read path ------------------------------------------------------
 
     /// Read logical page `lpn`: translate, schedule flash read, decode.
+    /// A failed decode runs the read-retry ladder (if configured); a
+    /// recovered page is relocated off its suspect block before the
+    /// result returns.
     pub fn read(&mut self, lpn: u32, now: SimTime) -> Result<ReadResult> {
-        anyhow::ensure!((lpn as usize) < self.l2p.len(), "lpn {lpn} out of range");
-        let addr = self.l2p[lpn as usize]
-            .ok_or_else(|| anyhow::anyhow!("lpn {lpn} never written"))?;
+        if lpn as usize >= self.l2p.len() {
+            return Err(ReadError::LpnOutOfRange { lpn }.into());
+        }
+        let addr = self.l2p[lpn as usize].ok_or(ReadError::Unwritten { lpn })?;
         let flash_done = self.flash.read_page(addr, now);
-        let pe = self.blocks[self.block_id_of(addr) as usize].pe_cycles;
-        let (ecc, ecc_lat) = self.ecc.decode_page(self.cfg.flash.page_bytes, pe);
+        let bid = self.block_id_of(addr);
+        let pe = self.blocks[bid as usize].pe_cycles;
+        let (mut ecc, mut ecc_lat) = self.ecc.decode_page(self.cfg.flash.page_bytes, pe);
         self.stats.reads += 1;
+        if ecc == EccOutcome::Uncorrectable && self.cfg.read_retries > 0 {
+            let (out, extra, _) = retry_ladder(&mut self.ecc, &self.cfg, pe);
+            ecc = out;
+            ecc_lat += extra;
+            if out != EccOutcome::Uncorrectable {
+                self.recover_page(lpn, now)?;
+            }
+        }
         if ecc == EccOutcome::Uncorrectable {
-            bail!("uncorrectable ECC error reading lpn {lpn} (pe={pe})");
+            return Err(ReadError::Uncorrectable {
+                lpn,
+                block: bid,
+                pe,
+                retries: self.cfg.read_retries,
+            }
+            .into());
         }
         Ok(ReadResult { tag: self.tags[lpn as usize], done: flash_done + ecc_lat, ecc })
+    }
+
+    /// A page the retry ladder pulled back from the brink: bump the
+    /// block's suspect count and relocate the page to a fresh block
+    /// (counted as background write amplification, like a GC move).
+    fn recover_page(&mut self, lpn: u32, now: SimTime) -> Result<()> {
+        let addr = self.l2p[lpn as usize].expect("recovered page is mapped");
+        let bid = self.block_id_of(addr) as usize;
+        self.blocks[bid].suspect += 1;
+        self.retry_recoveries += 1;
+        let tag = self.tags[lpn as usize];
+        self.write_inner(lpn, tag, now, true)?;
+        self.maybe_gc(now)
     }
 
     /// Bulk read of `len` consecutive logical pages starting at `lpn0`.
@@ -530,17 +732,16 @@ impl Ftl {
         mut per_page: impl FnMut(u32, SimTime),
     ) -> Result<SimTime> {
         let end = lpn0 as u64 + len as u64;
-        anyhow::ensure!(
-            end <= self.l2p.len() as u64,
-            "lpn run {lpn0}..{end} out of range (logical pages {})",
-            self.l2p.len()
-        );
+        if end > self.l2p.len() as u64 {
+            return Err(ReadError::RunOutOfRange { lpn0, end, logical_pages: self.l2p.len() }
+                .into());
+        }
         let mut done = now;
         let mut i = 0u32;
+        let mut recovered: Vec<u32> = Vec::new();
         while i < len {
             let lpn = lpn0 + i;
-            let addr = self.l2p[lpn as usize]
-                .ok_or_else(|| anyhow::anyhow!("lpn {lpn} never written"))?;
+            let addr = self.l2p[lpn as usize].ok_or(ReadError::Unwritten { lpn })?;
             // Extend over physically consecutive pages of the same
             // block: exactly these coalesce into one die booking (plus
             // stretch-segmented bus bookings) without reordering any
@@ -559,16 +760,25 @@ impl Ftl {
                     _ => break,
                 }
             }
-            let pe = self.blocks[self.block_id_of(addr) as usize].pe_cycles;
+            let bid = self.block_id_of(addr);
+            let pe = self.blocks[bid as usize].pe_cycles;
             let page_bytes = self.cfg.flash.page_bytes;
-            let Ftl { flash, ecc, stats, .. } = &mut *self;
+            let Ftl { flash, ecc, stats, cfg, .. } = &mut *self;
             let mut bad = None;
             flash.read_run_with(addr, k, now, |j, flash_done| {
                 if bad.is_some() {
                     return; // fatal ECC error: the run aborts below
                 }
-                let (out, ecc_lat) = ecc.decode_page(page_bytes, pe);
+                let (mut out, mut ecc_lat) = ecc.decode_page(page_bytes, pe);
                 stats.reads += 1;
+                if out == EccOutcome::Uncorrectable && cfg.read_retries > 0 {
+                    let (o2, extra, _) = retry_ladder(ecc, cfg, pe);
+                    out = o2;
+                    ecc_lat += extra;
+                    if o2 != EccOutcome::Uncorrectable {
+                        recovered.push(lpn + j);
+                    }
+                }
                 if out == EccOutcome::Uncorrectable {
                     bad = Some(lpn + j);
                     return;
@@ -577,8 +787,20 @@ impl Ftl {
                 done = done.max(page_done);
                 per_page(i + j, page_done);
             });
+            // Relocate recovered pages at stretch granularity — safe
+            // here (nothing else holds flash state), and the page keeps
+            // serving its old location until this point.
+            for l in recovered.drain(..) {
+                self.recover_page(l, now)?;
+            }
             if let Some(l) = bad {
-                bail!("uncorrectable ECC error reading lpn {l} (pe={pe})");
+                return Err(ReadError::Uncorrectable {
+                    lpn: l,
+                    block: bid,
+                    pe,
+                    retries: self.cfg.read_retries,
+                }
+                .into());
             }
             i += k;
         }
@@ -676,8 +898,22 @@ impl Ftl {
                 self.write_inner(lpn, tag, now, true)?;
             }
         }
-        // Erase and return to the pool.
+        // Erase and return to the pool — unless the block has consumed
+        // its endurance budget: then the erase fails and the block
+        // retires into the bad-block list instead (valid pages were
+        // already relocated above, so no data is stranded). Capacity
+        // shrinks; the block never re-enters the free pool or the
+        // victim index.
         let addr = self.block_addr(victim, 0);
+        if self.cfg.pe_limit > 0 && self.blocks[victim as usize].pe_cycles >= self.cfg.pe_limit {
+            let info = &mut self.blocks[victim as usize];
+            info.valid.iter_mut().for_each(|v| *v = false);
+            info.valid_count = 0;
+            info.write_ptr = 0;
+            self.bad_blocks.insert(victim);
+            self.reindex(victim); // write_ptr == 0: drops out for good
+            return Ok(());
+        }
         self.flash.erase_block(addr, now);
         let info = &mut self.blocks[victim as usize];
         info.valid.iter_mut().for_each(|v| *v = false);
@@ -735,6 +971,53 @@ impl Ftl {
         anyhow::ensure!(
             self.victim_index.len() == self.in_index.iter().flatten().count(),
             "victim index has orphan entries"
+        );
+        // Bad-block retirement invariants: a retired block is out of
+        // every allocation structure forever, holds no data, and really
+        // did exhaust its endurance budget. Capacity accounting is
+        // conserved: free, retired and in-use blocks partition the
+        // array.
+        let mut in_use = 0usize;
+        for (bid, info) in self.blocks.iter().enumerate() {
+            let bid = bid as u32;
+            let retired = self.bad_blocks.contains(&bid);
+            let free = self.free.contains(bid);
+            anyhow::ensure!(
+                !(retired && free),
+                "retired block {bid} re-entered the free pool"
+            );
+            if retired {
+                anyhow::ensure!(
+                    self.in_index[bid as usize].is_none(),
+                    "retired block {bid} still indexed for GC"
+                );
+                anyhow::ensure!(
+                    !self.active.iter().any(|a| *a == Some(bid)),
+                    "retired block {bid} is an active write frontier"
+                );
+                anyhow::ensure!(
+                    info.valid_count == 0 && info.write_ptr == 0,
+                    "retired block {bid} still holds data"
+                );
+                if self.cfg.pe_limit > 0 {
+                    anyhow::ensure!(
+                        info.pe_cycles >= self.cfg.pe_limit,
+                        "block {bid} retired below the P/E limit ({} < {})",
+                        info.pe_cycles,
+                        self.cfg.pe_limit
+                    );
+                }
+            } else if !free {
+                in_use += 1;
+            }
+        }
+        anyhow::ensure!(
+            self.free.len() + self.bad_blocks.len() + in_use == self.blocks.len(),
+            "block accounting leak: {} free + {} retired + {} in use != {} total",
+            self.free.len(),
+            self.bad_blocks.len(),
+            in_use,
+            self.blocks.len()
         );
         Ok(())
     }
@@ -1053,6 +1336,152 @@ mod tests {
             assert_eq!(fingerprint(&bulk), fingerprint(&refr));
             assert_eq!(bulk.flash_stats(), refr.flash_stats());
         });
+    }
+
+    // ---- endurance & failure pipeline --------------------------------
+
+    #[test]
+    fn typed_read_errors_carry_context() {
+        let mut ftl = small_ftl();
+        let n = ftl.logical_pages() as u32;
+        let e = ftl.read(n, SimTime::ZERO).unwrap_err();
+        assert_eq!(e.downcast_ref::<ReadError>(), Some(&ReadError::LpnOutOfRange { lpn: n }));
+        assert_eq!(e.to_string(), format!("lpn {n} out of range"));
+        let e = ftl.read(3, SimTime::ZERO).unwrap_err();
+        assert_eq!(e.downcast_ref::<ReadError>(), Some(&ReadError::Unwritten { lpn: 3 }));
+        assert_eq!(e.to_string(), "lpn 3 never written");
+        let e = ftl.read_run(n - 1, 2, SimTime::ZERO).unwrap_err();
+        assert!(matches!(e.downcast_ref::<ReadError>(), Some(ReadError::RunOutOfRange { .. })));
+        assert_eq!(
+            e.to_string(),
+            format!("lpn run {}..{} out of range (logical pages {n})", n - 1, n as u64 + 1)
+        );
+    }
+
+    /// A brutal ECC config (t=1) makes most first decodes fail; the
+    /// retry ladder must recover a good fraction, relocating each
+    /// recovered page off its (now suspect) block, and surface the
+    /// rest as typed `Uncorrectable` errors carrying block/pe context.
+    #[test]
+    fn retry_ladder_recovers_and_relocates() {
+        let cfg = FtlConfig {
+            flash: FlashConfig {
+                channels: 2,
+                dies_per_channel: 2,
+                blocks_per_die: 8,
+                pages_per_block: 8,
+                page_bytes: 4096,
+                ..Default::default()
+            },
+            ecc: EccConfig { t: 1, rber_fresh: 2e-4, ..Default::default() },
+            gc_low_water: 3,
+            gc_high_water: 5,
+            overprovision: 0.25,
+            read_retries: 4,
+            ..Default::default()
+        };
+        let mut ftl = Ftl::new(cfg, 42);
+        for lpn in 0..16u32 {
+            ftl.write(lpn, lpn as u64, SimTime::ZERO).unwrap();
+        }
+        let (mut recovered_reads, mut failed_reads) = (0u32, 0u32);
+        for round in 0..20 {
+            for lpn in 0..16u32 {
+                let before = ftl.wear().retry_recoveries;
+                match ftl.read(lpn, SimTime::us(round)) {
+                    Ok(r) => {
+                        assert_eq!(r.tag, lpn as u64, "recovery must preserve data");
+                        if ftl.wear().retry_recoveries > before {
+                            recovered_reads += 1;
+                        }
+                    }
+                    Err(e) => {
+                        let re = e.downcast_ref::<ReadError>().expect("typed read error");
+                        match re {
+                            ReadError::Uncorrectable { lpn: l, retries, .. } => {
+                                assert_eq!(*l, lpn);
+                                assert_eq!(*retries, 4);
+                            }
+                            other => panic!("unexpected read error {other:?}"),
+                        }
+                        failed_reads += 1;
+                    }
+                }
+            }
+            ftl.check_invariants().unwrap();
+        }
+        assert!(recovered_reads > 0, "ladder never recovered a page");
+        assert!(failed_reads > 0, "ladder never exhausted (test too easy)");
+        let w = ftl.wear();
+        assert_eq!(w.retry_recoveries as u32, recovered_reads);
+        assert!(w.suspect_blocks > 0, "recoveries must mark blocks suspect");
+        assert!(ftl.ecc_stats().retries > 0, "retries must be counted");
+        // Bulk reads run the same ladder: totals keep moving.
+        let before = ftl.ecc_stats().retries;
+        for _ in 0..10 {
+            let _ = ftl.read_run(0, 16, SimTime::ZERO);
+        }
+        assert!(ftl.ecc_stats().retries > before);
+        ftl.check_invariants().unwrap();
+    }
+
+    /// With a finite P/E budget, GC erases start failing: blocks retire
+    /// into the bad-block list (never re-entering the free pool — the
+    /// extended `check_invariants` audits that every round), capacity
+    /// shrinks, and the device finally reports a typed `DeviceWornOut`
+    /// instead of the generic out-of-space error. Reads keep working.
+    #[test]
+    fn endurance_limit_retires_blocks_until_worn_out() {
+        let cfg = FtlConfig { pe_limit: 2, ..Default::default() };
+        let mut ftl = Ftl::new(
+            FtlConfig {
+                flash: FlashConfig {
+                    channels: 2,
+                    dies_per_channel: 2,
+                    blocks_per_die: 8,
+                    pages_per_block: 8,
+                    page_bytes: 4096,
+                    ..Default::default()
+                },
+                gc_low_water: 3,
+                gc_high_water: 5,
+                overprovision: 0.25,
+                ..cfg
+            },
+            42,
+        );
+        let n = ftl.logical_pages() as u32;
+        let mut worn = None;
+        'outer: for round in 0..10_000u64 {
+            for lpn in 0..n {
+                match ftl.write(lpn, round, SimTime::ZERO) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        worn = Some(e);
+                        break 'outer;
+                    }
+                }
+            }
+            ftl.check_invariants().unwrap();
+        }
+        let e = worn.expect("a 2-cycle P/E budget must wear the device out");
+        let w = e.downcast_ref::<DeviceWornOut>().expect("typed DeviceWornOut");
+        assert!(w.retired_blocks > 0);
+        assert!(ftl.worn_out(), "worn_out() must agree with the error");
+        let wear = ftl.wear();
+        assert_eq!(wear.retired_blocks as usize, ftl.retired_block_count());
+        assert!(wear.retired_blocks > 0 && wear.erases > 0);
+        ftl.check_invariants().unwrap();
+        // The device still serves reads for everything that stayed
+        // mapped — EOL is a write-path condition.
+        let mapped: Vec<u32> =
+            (0..n).filter(|&l| ftl.l2p[l as usize].is_some()).take(8).collect();
+        assert!(!mapped.is_empty());
+        for lpn in mapped {
+            ftl.read(lpn, SimTime::ZERO).unwrap();
+        }
+        // A default (pe_limit = 0) FTL never wears out.
+        assert!(!small_ftl().worn_out());
     }
 
     /// Property: across skewed overwrite workloads, the incremental

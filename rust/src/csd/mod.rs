@@ -16,8 +16,8 @@ pub mod isp;
 pub mod nvme;
 
 pub use device::{CsdConfig, CsdIoStats, NewportCsd};
-pub use ecc::{Ecc, EccConfig, EccOutcome};
+pub use ecc::{Ecc, EccConfig, EccOutcome, EccStats};
 pub use flash::{FlashArray, FlashConfig, FlashStats, PhysAddr};
-pub use ftl::{Ftl, FtlConfig, FtlStats};
+pub use ftl::{DeviceWornOut, Ftl, FtlConfig, FtlStats, ReadError, WearReport};
 pub use isp::{IspConfig, IspEngine};
 pub use nvme::{NvmeConfig, NvmeLink};

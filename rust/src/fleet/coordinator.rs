@@ -97,7 +97,7 @@ use anyhow::{bail, ensure, Result};
 use crate::allreduce::ring_time_shared;
 use crate::config::{ExperimentConfig, WorkloadSpec};
 use crate::coordinator::{tune, TuneConfig};
-use crate::csd::CsdConfig;
+use crate::csd::{CsdConfig, EccStats, WearReport};
 use crate::metrics::RunningStat;
 use crate::perfmodel::{Device, NetId, PerfModel};
 use crate::power::{EnergyMeter, PowerConfig};
@@ -245,6 +245,20 @@ pub enum RuntimeEvent {
     /// for reuse); with `retain_jobs` the job also stays in the table.
     /// Boxed: a record is ~10x the size of every other variant.
     Retired { record: Box<RetiredRecord> },
+    /// A device's FTL hit end-of-life (free blocks under GC headroom
+    /// after block retirements). If a job held the bay it was drained
+    /// (cancel-style teardown, `freed_pages` of shard map trimmed) and
+    /// its remaining steps resubmitted as `successor`.
+    WornOut {
+        device: usize,
+        job: Option<JobId>,
+        successor: Option<JobId>,
+        freed_pages: u64,
+    },
+    /// A worn-out bay was swapped for a factory-fresh module (rolling
+    /// replacement); `generation` counts this bay's incarnations and
+    /// the wear counters summarize the module being retired.
+    Replaced { device: usize, generation: u32, retired_blocks: u64, erases: u64 },
 }
 
 impl std::fmt::Display for LogEntry {
@@ -285,6 +299,19 @@ impl std::fmt::Display for LogEntry {
                     r.id, r.state, r.images, r.j_per_image
                 )
             }
+            RuntimeEvent::WornOut { device, job, successor, freed_pages } => {
+                match (job, successor) {
+                    (Some(j), Some(s)) => write!(
+                        f,
+                        "device {device} worn out: {j} drained ({freed_pages} shard page(s) freed), resubmitted as {s}"
+                    ),
+                    _ => write!(f, "device {device} worn out (idle bay)"),
+                }
+            }
+            RuntimeEvent::Replaced { device, generation, retired_blocks, erases } => write!(
+                f,
+                "device {device} replaced (incarnation {generation}): retired module had {retired_blocks} bad block(s), {erases} erase(s)"
+            ),
         }
     }
 }
@@ -386,6 +413,9 @@ struct FleetTotals {
     retunes: usize,
     completed: usize,
     cancelled: usize,
+    /// Jobs torn down by a device end-of-life drain (a subset of
+    /// `cancelled`; their remaining steps were resubmitted).
+    drained: usize,
     queue_wait: RunningStat,
     lock_wait: RunningStat,
 }
@@ -396,6 +426,9 @@ impl FleetTotals {
         self.energy_j += r.energy_j;
         self.bytes_moved += r.bytes_moved;
         self.retunes += r.retunes;
+        if r.drained {
+            self.drained += 1;
+        }
         match r.state {
             JobState::Completed => self.completed += 1,
             JobState::Cancelled => self.cancelled += 1,
@@ -455,6 +488,18 @@ pub struct FleetReport {
     /// non-terminal) jobs — identical across streaming/retained modes,
     /// and the bound the streaming table's slot count stays under.
     pub peak_live_jobs: usize,
+    /// Jobs torn down by a device end-of-life drain (a subset of
+    /// `cancelled`; their remaining steps resubmitted as successors).
+    /// Zero whenever endurance is off.
+    pub drained: usize,
+    /// Device modules swapped at end-of-life (rolling replacement).
+    pub devices_replaced: usize,
+    /// Fleet-wide flash wear: the live devices plus the accumulated
+    /// history of every replaced module, so erase/retirement/WAF
+    /// ledgers stay conserved across swaps.
+    pub wear: WearReport,
+    /// Fleet-wide ECC decoder counters, same scope as `wear`.
+    pub ecc: EccStats,
 }
 
 /// The online multi-job session (see the module docs for the API
@@ -490,6 +535,13 @@ pub struct FleetRuntime {
     externals: BTreeMap<SimTime, u32>,
     /// Structural-event log since the last [`FleetRuntime::take_log`].
     log: Vec<LogEntry>,
+    /// Wear history of modules retired by end-of-life replacement
+    /// (folded in at swap time; live wear is read off the pool).
+    retired_wear: WearReport,
+    /// Decoder history of those modules, same scope.
+    retired_ecc: EccStats,
+    /// Modules swapped at end-of-life.
+    devices_replaced: usize,
 }
 
 impl FleetRuntime {
@@ -511,6 +563,9 @@ impl FleetRuntime {
             overhead: EnergyMeter::new(),
             externals: BTreeMap::new(),
             log: Vec::new(),
+            retired_wear: WearReport::default(),
+            retired_ecc: EccStats::default(),
+            devices_replaced: 0,
             cfg,
         }
     }
@@ -789,6 +844,11 @@ impl FleetRuntime {
                 FleetEvent::Cancel { job } => self.on_cancel(job)?,
                 FleetEvent::Degrade { device, factor } => self.on_degrade(device, factor)?,
             }
+            // Every path that wears flash (admission layout, rebalance
+            // movement, legacy per-step staging, retry relocations) runs
+            // inside an event handler, so end-of-life is only reachable
+            // here — a safe point where no step booking is in flight.
+            self.process_eol()?;
         }
         Ok(())
     }
@@ -853,6 +913,9 @@ impl FleetRuntime {
         }
         let overhead_energy_j = self.overhead.total_joules();
         let secs = self.now.as_secs_f64();
+        let (mut wear, mut ecc) = self.pool.wear_totals();
+        wear.merge(self.retired_wear);
+        ecc.merge(self.retired_ecc);
         FleetReport {
             makespan: self.now,
             total_images,
@@ -868,6 +931,10 @@ impl FleetRuntime {
             cancelled: t.cancelled,
             retired: t.retired(),
             peak_live_jobs: self.peak_live_jobs,
+            drained: t.drained,
+            devices_replaced: self.devices_replaced,
+            wear,
+            ecc,
             jobs,
         }
     }
@@ -1038,6 +1105,7 @@ impl FleetRuntime {
             stage_ready: self.now,
             staging: Default::default(),
             meter: EnergyMeter::new(),
+            drained: false,
             pending: None,
             data_cursor: 0,
             spec: q.spec,
@@ -1511,6 +1579,114 @@ impl FleetRuntime {
         }
         self.schedule_step(id)
     }
+
+    /// Scan for worn-out bays and run the end-of-life pipeline on each
+    /// (ascending device order, so the sequence is deterministic):
+    /// drain the assigned job — cancel-style teardown, remaining steps
+    /// resubmitted as a successor arriving at this instant — then swap
+    /// the bay for a factory-fresh module and fold the retired module's
+    /// wear/ECC history into the fleet accumulators. Runs after every
+    /// event; O(1) (and unreachable) with endurance off, because
+    /// `pe_limit == 0` means no block ever retires.
+    fn process_eol(&mut self) -> Result<()> {
+        if self.cfg.csd.ftl.pe_limit == 0 {
+            return Ok(());
+        }
+        let worn = self.pool.worn_devices();
+        if worn.is_empty() {
+            return Ok(());
+        }
+        for device in worn {
+            // A drain earlier in this pass released the whole group but
+            // cannot un-wear a device, so no re-check is needed — each
+            // listed bay is still worn and gets replaced exactly once.
+            if let Some(id) = self.pool.assigned_job(device) {
+                self.drain_job(id, device)?;
+            } else {
+                self.log.push(LogEntry {
+                    at: self.now,
+                    event: RuntimeEvent::WornOut {
+                        device,
+                        job: None,
+                        successor: None,
+                        freed_pages: 0,
+                    },
+                });
+            }
+            let (wear, ecc) = self.pool.replace(device, &self.cfg.csd)?;
+            self.retired_wear.merge(wear);
+            self.retired_ecc.merge(ecc);
+            self.devices_replaced += 1;
+            self.log.push(LogEntry {
+                at: self.now,
+                event: RuntimeEvent::Replaced {
+                    device,
+                    generation: self.pool.generation(device),
+                    retired_blocks: wear.retired_blocks,
+                    erases: wear.erases,
+                },
+            });
+        }
+        // The freed carve (and the fresh bay) may admit queued jobs;
+        // the resubmitted successors join the queue via their Arrive
+        // events at this same instant and are admitted FIFO — the
+        // retry/backoff when the pool is momentarily full.
+        self.try_admit()
+    }
+
+    /// Tear `id` down because `device` (one of its bays) wore out:
+    /// exactly the running-cancel teardown — abandon the in-flight
+    /// step, trim the shard map under the DLM lock, release the carve —
+    /// but marked `drained` and followed by resubmitting the job's
+    /// remaining steps as a fresh arrival at the current instant.
+    /// Returns the successor's id.
+    fn drain_job(&mut self, id: JobId, device: usize) -> Result<JobId> {
+        self.abandon_step(id);
+        let freed = if self.cfg.data_plane {
+            let before = self.tunnel.stats();
+            let cost = self.plane.cancel(id, &mut self.pool, &mut self.tunnel, self.now)?;
+            let after = self.tunnel.stats();
+            let j = self.jobs.get_mut(&id).expect("drained job exists");
+            j.link_bytes += after.bytes - before.bytes;
+            j.lock_wait += cost.lock_wait;
+            cost.pages_written
+        } else {
+            0
+        };
+        let successor_spec = {
+            let j = self.jobs.get_mut(&id).expect("drained job exists");
+            j.state = JobState::Cancelled;
+            j.drained = true;
+            j.finished_at = self.now;
+            // Whole completed steps survive in the drained job's report;
+            // the successor re-runs the remainder (at least one step —
+            // re-tuning at its own admission may change images/step, so
+            // step count is the resumption currency, like a checkpoint
+            // interval).
+            let steps_left = j.spec.steps.max(1).saturating_sub(j.steps_done).max(1);
+            let mut spec = j.spec.clone();
+            spec.steps = steps_left;
+            spec
+        };
+        self.pool.release(id);
+        if self.host_held_by == Some(id) {
+            self.host_held_by = None;
+        }
+        let job = self.jobs.remove(&id).expect("drained job exists");
+        self.live_jobs -= 1;
+        let successor = self.submit_at(self.now, successor_spec)?;
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::WornOut {
+                device,
+                job: Some(id),
+                successor: Some(successor),
+                freed_pages: freed,
+            },
+        });
+        self.retire(job);
+        Ok(successor)
+    }
 }
 
 /// A zero-progress [`Job`] record for a job cancelled before it was
@@ -1550,6 +1726,7 @@ fn cancelled_stub(
         stage_ready: now,
         staging: Default::default(),
         meter: EnergyMeter::new(),
+        drained: false,
         pending: None,
         data_cursor: 0,
         spec,
@@ -2091,6 +2268,93 @@ mod tests {
         // The accumulators match the streamed records exactly.
         let sum: f64 = records.iter().map(|rec| rec.report.energy_j).sum();
         assert_eq!(sum.to_bits(), r.jobs_energy_j.to_bits());
+    }
+
+    #[test]
+    fn worn_device_drains_job_and_rolls_in_a_replacement() {
+        use crate::csd::flash::FlashConfig;
+        use crate::csd::ftl::FtlConfig;
+        // Tiny endurance-limited flash so a few overwrite rounds reach
+        // end-of-life; no staging, so the job itself never touches the
+        // FTL — the test wears bay 0 directly and lets the pump react.
+        // Per-step execution: the drain must land at the first step
+        // boundary after the wear-out, not at a fast-forwarded
+        // completion (no event handler runs in between otherwise).
+        let mut cfg = FleetConfig {
+            total_csds: 3,
+            stage_io: false,
+            data_plane: false,
+            fast_forward: false,
+            retain_jobs: true,
+            ..Default::default()
+        };
+        cfg.csd.ftl = FtlConfig {
+            flash: FlashConfig {
+                channels: 1,
+                dies_per_channel: 1,
+                blocks_per_die: 8,
+                pages_per_block: 8,
+                page_bytes: 4096,
+                ..Default::default()
+            },
+            overprovision: 0.5,
+            gc_low_water: 2,
+            gc_high_water: 3,
+            pe_limit: 1,
+            ..Default::default()
+        };
+        let mut rt = FleetRuntime::new(cfg);
+        let a = rt.submit(job("squeezenet", 2, false, 5000));
+        rt.run_until(SimTime::secs(30)).unwrap();
+        assert_eq!(rt.job_state(a), Some(JobState::Running));
+        // Wear bay 0 (held by the job) to end-of-life.
+        'wear: for _ in 0..1000 {
+            for lpn in 0..8u32 {
+                if rt.pool.device_mut(0).write_page(lpn, lpn as u64, rt.now).is_err() {
+                    break 'wear;
+                }
+            }
+            if rt.pool.device(0).ftl_ref().worn_out() {
+                break;
+            }
+        }
+        assert!(rt.pool.device(0).ftl_ref().worn_out(), "bay 0 never wore out");
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        // The victim was drained (cancelled + marked), its successor
+        // re-ran the remaining steps to completion, and the whole
+        // workload's step budget is conserved across the drain.
+        assert_eq!(r.drained, 1);
+        assert_eq!(r.cancelled, 1, "a drain counts as a cancel");
+        assert_eq!(r.devices_replaced, 1);
+        let find = |id: JobId| r.jobs.iter().find(|j| j.id == id).unwrap();
+        let victim = find(a);
+        assert_eq!(victim.state, JobState::Cancelled);
+        assert!(victim.drained);
+        assert!(victim.steps_done > 0 && victim.steps_done < 5000);
+        let successor = find(JobId(1));
+        assert_eq!(successor.state, JobState::Completed);
+        assert!(!successor.drained);
+        assert_eq!(victim.steps_done + successor.steps_done, 5000);
+        // The replaced module's wear history survives in fleet totals.
+        assert!(r.wear.retired_blocks > 0);
+        assert_eq!(rt.pool.device(0).ftl_ref().retired_block_count(), 0, "fresh module");
+        assert_eq!(rt.pool.generation(0), 1);
+        // The log tells the story: worn-out (with drain + successor),
+        // then the replacement.
+        let log = rt.take_log();
+        assert!(log.iter().any(|e| matches!(
+            e.event,
+            RuntimeEvent::WornOut { device: 0, job: Some(j), successor: Some(s), .. }
+                if j == a && s == JobId(1)
+        )));
+        assert!(log.iter().any(|e| matches!(
+            e.event,
+            RuntimeEvent::Replaced { device: 0, generation: 1, .. }
+        )));
+        for e in &log {
+            assert!(!e.to_string().is_empty());
+        }
     }
 
     #[test]

@@ -130,6 +130,10 @@ pub(crate) struct Job {
     /// per-step hot path takes it by `mem::take` rather than cloning.
     pub staging: StepStaging,
     pub meter: EnergyMeter,
+    /// Set when the job was torn down by a device end-of-life drain
+    /// (rather than a user cancel); its remaining steps were resubmitted
+    /// as a successor job. Always false with endurance off.
+    pub drained: bool,
     pub pending: Option<PendingStep>,
     /// Rolling offset into the preloaded flash pages (mirrors the
     /// single-job scheduler's data cursor).
@@ -184,6 +188,10 @@ pub struct JobReport {
     pub lock_wait: SimTime,
     /// How many times a device degradation forced a re-tune/re-balance.
     pub retunes: usize,
+    /// True when this (cancelled) job was drained off a worn-out device
+    /// and its remaining steps resubmitted as a successor job. Always
+    /// false with endurance off.
+    pub drained: bool,
 }
 
 /// Compact terminal record of a retired job: exactly the final
@@ -240,6 +248,7 @@ impl Job {
             images_moved: self.moved_images,
             lock_wait: self.lock_wait,
             retunes: self.retunes,
+            drained: self.drained,
         }
     }
 }

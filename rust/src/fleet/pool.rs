@@ -9,7 +9,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::csd::{CsdConfig, NewportCsd};
+use crate::csd::{CsdConfig, EccStats, NewportCsd, WearReport};
 use crate::sim::SimTime;
 
 use super::job::JobId;
@@ -25,6 +25,9 @@ pub struct FleetDevice {
     pub health: f64,
     /// The job currently holding this device, if any.
     pub assigned: Option<JobId>,
+    /// How many times this bay's module has been swapped for a fresh
+    /// one (device end-of-life replacements; seeds each incarnation).
+    pub generation: u32,
     preloaded: bool,
 }
 
@@ -40,10 +43,64 @@ impl DevicePool {
                 csd: NewportCsd::new(i, cfg.clone(), 0xF1EE7 + i as u64),
                 health: 1.0,
                 assigned: None,
+                generation: 0,
                 preloaded: false,
             })
             .collect();
         Self { devices }
+    }
+
+    /// Swap a worn-out bay for a factory-fresh module (the rolling
+    /// replacement of the endurance pipeline): new deterministic seed
+    /// per incarnation, full health, nothing preloaded. The bay must be
+    /// idle — the runtime drains its job first. Returns the retired
+    /// module's wear and decoder counters so fleet ledgers stay
+    /// conserved across the swap.
+    pub fn replace(&mut self, device: usize, cfg: &CsdConfig) -> Result<(WearReport, EccStats)> {
+        ensure!(device < self.devices.len(), "no device {device} in the pool");
+        if let Some(job) = self.devices[device].assigned {
+            anyhow::bail!("cannot replace device {device}: {job} still holds it");
+        }
+        let generation = self.devices[device].generation + 1;
+        // Distinct from every first-incarnation seed (0xF1EE7 + i) and
+        // from every other (bay, generation) pair.
+        let seed =
+            0xF1EE7 + device as u64 + 0x9E37_79B9u64.wrapping_mul(generation as u64);
+        let old = std::mem::replace(
+            &mut self.devices[device],
+            FleetDevice {
+                csd: NewportCsd::new(device, cfg.clone(), seed),
+                health: 1.0,
+                assigned: None,
+                generation,
+                preloaded: false,
+            },
+        );
+        Ok((old.csd.ftl_ref().wear(), old.csd.ftl_ref().ecc_stats()))
+    }
+
+    /// Bays whose FTL reports end-of-life (ascending index) — the
+    /// runtime's cue to drain and replace.
+    pub fn worn_devices(&self) -> Vec<usize> {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.csd.ftl_ref().worn_out())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Aggregate wear + decoder counters across the *live* devices
+    /// (history of replaced modules is accumulated by the runtime at
+    /// swap time, from [`DevicePool::replace`]'s return value).
+    pub fn wear_totals(&self) -> (WearReport, EccStats) {
+        let mut w = WearReport::default();
+        let mut e = EccStats::default();
+        for d in &self.devices {
+            w.merge(d.csd.ftl_ref().wear());
+            e.merge(d.csd.ftl_ref().ecc_stats());
+        }
+        (w, e)
     }
 
     pub fn len(&self) -> usize {
@@ -58,13 +115,15 @@ impl DevicePool {
         self.devices.iter().filter(|d| d.assigned.is_none()).count()
     }
 
-    /// Carve `n` free devices for `job`, healthiest first (ties break
-    /// to the lowest index, so an all-healthy pool carves exactly the
-    /// lowest indices and admission stays deterministic). A repaired
-    /// bay therefore goes back to the front of the line for the next
-    /// admission. Returns `None` — without mutating anything — if fewer
-    /// than `n` are free. The returned indices are sorted ascending
-    /// (group identity is a set; ring order comes from the indices).
+    /// Carve `n` free devices for `job`, healthiest first; at equal
+    /// health the least-worn bay (fewest retired blocks) wins, and ties
+    /// still break to the lowest index — so an all-fresh pool carves
+    /// exactly the lowest indices and admission stays bit-identical to
+    /// the pre-endurance behavior. A repaired bay therefore goes back
+    /// to the front of the line for the next admission. Returns `None`
+    /// — without mutating anything — if fewer than `n` are free. The
+    /// returned indices are sorted ascending (group identity is a set;
+    /// ring order comes from the indices).
     pub fn carve(&mut self, n: usize, job: JobId) -> Option<Vec<usize>> {
         let mut free: Vec<usize> = self
             .devices
@@ -77,12 +136,18 @@ impl DevicePool {
             return None;
         }
         // Health is finite and positive (degrade/repair enforce it), so
-        // the bit ordering of the comparison is total.
+        // the bit ordering of the comparison is total. Retired-block
+        // counts stay zero with endurance off, keeping the legacy order.
         free.sort_by(|&a, &b| {
             self.devices[b]
                 .health
                 .partial_cmp(&self.devices[a].health)
                 .expect("health is finite")
+                .then_with(|| {
+                    let wa = self.devices[a].csd.ftl_ref().retired_block_count();
+                    let wb = self.devices[b].csd.ftl_ref().retired_block_count();
+                    wa.cmp(&wb)
+                })
                 .then(a.cmp(&b))
         });
         free.truncate(n);
@@ -104,6 +169,12 @@ impl DevicePool {
 
     pub fn health(&self, device: usize) -> f64 {
         self.devices[device].health
+    }
+
+    /// How many times this bay's module has been swapped at end-of-life
+    /// (0 = the original module).
+    pub fn generation(&self, device: usize) -> u32 {
+        self.devices[device].generation
     }
 
     /// Multiply a device's health by `factor`. `factor < 1` is a fault
@@ -215,6 +286,82 @@ mod tests {
         p.degrade(3, 0.7).unwrap();
         p.degrade(2, 2.0).unwrap(); // 0.8 -> 1.0 (clamped repair)
         assert_eq!(p.carve(2, JobId(2)).unwrap(), vec![1, 2]);
+    }
+
+    /// Tiny geometry with a one-cycle P/E limit so a few overwrite
+    /// rounds retire blocks (fast wear for the placement tests).
+    fn endurance_cfg() -> CsdConfig {
+        use crate::csd::flash::FlashConfig;
+        use crate::csd::ftl::FtlConfig;
+        CsdConfig {
+            ftl: FtlConfig {
+                flash: FlashConfig {
+                    channels: 1,
+                    dies_per_channel: 1,
+                    blocks_per_die: 8,
+                    pages_per_block: 8,
+                    page_bytes: 4096,
+                    ..Default::default()
+                },
+                overprovision: 0.5,
+                gc_low_water: 2,
+                gc_high_water: 3,
+                pe_limit: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Overwrite a bay's first pages until GC retires at least one
+    /// block (or the device goes fully worn-out, which implies it).
+    fn wear_bay(p: &mut DevicePool, device: usize) {
+        'rounds: for _ in 0..1000 {
+            for lpn in 0..8u32 {
+                if p.device_mut(device).write_page(lpn, lpn as u64, SimTime::ZERO).is_err() {
+                    break 'rounds;
+                }
+            }
+            if p.device(device).ftl_ref().retired_block_count() > 0 {
+                break;
+            }
+        }
+        assert!(p.device(device).ftl_ref().retired_block_count() > 0, "bay {device} never retired a block");
+    }
+
+    #[test]
+    fn carve_breaks_health_ties_toward_least_worn() {
+        let mut p = DevicePool::new(3, &endurance_cfg());
+        wear_bay(&mut p, 0);
+        // Equal health everywhere: the worn bay loses the tie-break.
+        assert_eq!(p.carve(2, JobId(0)).unwrap(), vec![1, 2]);
+        p.release(JobId(0));
+        // Health still dominates wear: a degraded fresh bay ranks below
+        // a worn healthy one.
+        p.degrade(1, 0.5).unwrap();
+        assert_eq!(p.carve(2, JobId(1)).unwrap(), vec![0, 2]);
+    }
+
+    #[test]
+    fn replace_swaps_in_a_fresh_module_and_returns_its_history() {
+        let mut p = DevicePool::new(2, &endurance_cfg());
+        wear_bay(&mut p, 0);
+        p.degrade(0, 0.3).unwrap();
+        let carved = p.carve(1, JobId(3)).unwrap();
+        assert_eq!(carved, vec![1], "healthiest bay first");
+        // An assigned bay cannot be swapped out from under its job.
+        assert!(p.replace(1, &endurance_cfg()).is_err());
+        assert!(p.replace(9, &endurance_cfg()).is_err());
+        let (wear, ecc) = p.replace(0, &endurance_cfg()).unwrap();
+        assert!(wear.retired_blocks > 0, "history must carry the old module's wear");
+        assert!(ecc.pages > 0);
+        // Fresh module: full health, no wear, next generation seed.
+        assert_eq!(p.health(0), 1.0);
+        assert_eq!(p.device(0).ftl_ref().retired_block_count(), 0);
+        assert_eq!(p.devices[0].generation, 1);
+        assert!(!p.devices[0].preloaded);
+        let (live, _) = p.wear_totals();
+        assert_eq!(live.retired_blocks, 0, "live totals reset; history returned to caller");
     }
 
     #[test]

@@ -33,18 +33,22 @@ use super::coordinator::{FleetConfig, FleetRuntime, LogEntry};
 const CHUNK: usize = 4096;
 
 /// Build the runtime a [`WorkloadSpec`] asks for: the spec's pool
-/// size, staging/data-plane/executor toggles and retention mode over
-/// otherwise-default fleet knobs. Single mapping shared by the CLI,
-/// the benches and the trace drivers.
+/// size, staging/data-plane/executor toggles, retention mode and
+/// endurance knobs over otherwise-default fleet knobs. Single mapping
+/// shared by the CLI, the benches and the trace drivers.
 pub fn runtime_for(spec: &WorkloadSpec) -> FleetRuntime {
-    FleetRuntime::new(FleetConfig {
+    let mut cfg = FleetConfig {
         total_csds: spec.total_csds,
         stage_io: spec.stage_io,
         data_plane: spec.data_plane,
         fast_forward: spec.fast_forward,
         retain_jobs: spec.retain_jobs,
         ..FleetConfig::default()
-    })
+    };
+    cfg.csd.ftl.pe_limit = spec.endurance.pe_limit;
+    cfg.csd.ftl.read_retries = spec.endurance.read_retries;
+    cfg.csd.ftl.retry_step = SimTime::from_secs_f64(spec.endurance.retry_step_us * 1e-6);
+    FleetRuntime::new(cfg)
 }
 
 /// Per-trace summary: the fleet totals that survive a streaming run
@@ -80,6 +84,14 @@ pub struct TraceSummary {
     pub job_slots: usize,
     /// Structural log entries the run streamed.
     pub log_events: usize,
+    /// Jobs drained off worn-out devices (each resubmitted a successor
+    /// that is counted on top of `jobs`). Zero with endurance off.
+    pub drained: usize,
+    /// Device modules swapped at end-of-life across the trace.
+    pub devices_replaced: usize,
+    /// Fleet-wide write amplification at trace end (live devices plus
+    /// replaced-module history; 0 when nothing was written).
+    pub waf: f64,
 }
 
 /// Drive one seeded trace in chunks, handing every structural
@@ -151,7 +163,9 @@ pub fn run_trace_with(
     }
 
     let r = rt.report();
-    debug_assert_eq!(r.retired, spec.jobs, "trace drained with unretired jobs");
+    // Endurance drains resubmit successors, so retirements can exceed
+    // the spec's arrival count — never fall short of it.
+    debug_assert!(r.retired >= spec.jobs, "trace drained with unretired jobs");
     let summary = TraceSummary {
         seed: spec.seed,
         jobs: spec.jobs,
@@ -167,6 +181,9 @@ pub fn run_trace_with(
         peak_live_jobs: r.peak_live_jobs,
         job_slots: rt.job_slots(),
         log_events,
+        drained: r.drained,
+        devices_replaced: r.devices_replaced,
+        waf: r.wear.waf,
     };
     Ok((summary, rt))
 }
@@ -198,6 +215,10 @@ pub struct SweepReport {
     pub total_images: usize,
     pub total_jobs: usize,
     pub cancelled: usize,
+    /// Jobs drained off worn-out devices, summed across traces.
+    pub drained: usize,
+    /// Device modules swapped at end-of-life, summed across traces.
+    pub devices_replaced: usize,
     /// Max concurrently running jobs over any single trace.
     pub peak_live_jobs: usize,
 }
@@ -252,6 +273,8 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
     let mut total_images = 0usize;
     let mut total_jobs = 0usize;
     let mut cancelled = 0usize;
+    let mut drained = 0usize;
+    let mut devices_replaced = 0usize;
     let mut peak_live_jobs = 0usize;
     for t in &traces {
         queue_wait.merge(&t.queue_wait);
@@ -262,6 +285,8 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
         total_images += t.total_images;
         total_jobs += t.jobs;
         cancelled += t.cancelled;
+        drained += t.drained;
+        devices_replaced += t.devices_replaced;
         peak_live_jobs = peak_live_jobs.max(t.peak_live_jobs);
     }
     Ok(SweepReport {
@@ -273,6 +298,8 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
         total_images,
         total_jobs,
         cancelled,
+        drained,
+        devices_replaced,
         peak_live_jobs,
     })
 }
@@ -306,6 +333,7 @@ mod tests {
             csds_per_job: 2,
             cancels: vec![CancelSpec { job: 3, at_secs: 2.5 }],
             faults: vec![],
+            endurance: Default::default(),
         }
     }
 

@@ -112,6 +112,8 @@ fn dispatch(args: &Args) -> Result<()> {
                         OptSpec { name: "no-data-plane", help: "fleet: skip the modeled data plane (shard maps, DLM-locked rebalance movement)", default: None },
                         OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
                         OptSpec { name: "retain-jobs", help: "workload/sweep: keep terminal jobs in the table (retained oracle; default streams them out as retired records)", default: None },
+                        OptSpec { name: "pe-limit", help: "workload/sweep: block P/E endurance limit (0 = unlimited; worn devices drain and roll replacements)", default: Some("0") },
+                        OptSpec { name: "read-retries", help: "workload/sweep: read-retry ladder depth on uncorrectable reads", default: Some("0") },
                         OptSpec { name: "seeds", help: "sweep: number of seeded traces (seed, seed+1, ...)", default: Some("4") },
                         OptSpec { name: "workers", help: "sweep: worker threads (results are identical at any count)", default: Some("4") },
                     ],
@@ -252,6 +254,19 @@ fn print_fleet_summary(r: &FleetReport) {
         r.cancelled,
         r.queue_wait.mean(),
     );
+    println!(
+        "flash: {} page decode(s) ({} corrected, {} uncorrectable, {} retry rung(s)), {} erase(s), {} block(s) retired ({} suspect), WAF {:.2}; {} job(s) drained, {} device(s) replaced",
+        r.ecc.pages,
+        r.ecc.corrected_pages,
+        r.ecc.uncorrectable,
+        r.ecc.retries,
+        r.wear.erases,
+        r.wear.retired_blocks,
+        r.wear.suspect_blocks,
+        r.wear.waf,
+        r.drained,
+        r.devices_replaced,
+    );
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
@@ -328,7 +343,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 
 /// Workload flags shared by `workload` and `sweep` (both drive the
 /// streaming trace runner over a [`WorkloadSpec`]).
-const WORKLOAD_OPTS: [&str; 12] = [
+const WORKLOAD_OPTS: [&str; 14] = [
     "config",
     "total-csds",
     "jobs",
@@ -341,6 +356,8 @@ const WORKLOAD_OPTS: [&str; 12] = [
     "no-data-plane",
     "per-step",
     "retain-jobs",
+    "pe-limit",
+    "read-retries",
 ];
 
 fn workload_spec(args: &Args) -> Result<WorkloadSpec> {
@@ -455,6 +472,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 t.total_images.to_string(),
                 f(t.aggregate_ips, 2),
                 f(if hours > 0.0 { t.completed as f64 / hours } else { 0.0 }, 1),
+                t.drained.to_string(),
+                t.devices_replaced.to_string(),
+                f(t.waf, 2),
                 t.peak_live_jobs.to_string(),
                 t.job_slots.to_string(),
                 t.makespan.to_string(),
@@ -464,15 +484,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     print_table(
         "Sweep — per-seed traces",
         &[
-            "seed", "jobs", "done", "cancelled", "imgs", "img/s", "jobs/h", "peak live",
-            "slots", "makespan",
+            "seed", "jobs", "done", "cancelled", "imgs", "img/s", "jobs/h", "drained",
+            "replaced", "waf", "peak live", "slots", "makespan",
         ],
         &rows,
     );
     println!(
-        "\nsweep: {} job(s) ({} cancelled) across {} trace(s), {} images; mean {:.1} jobs/h, mean {:.2} img/s; queue wait mean {:.1}s max {:.1}s; peak {} live job(s)",
+        "\nsweep: {} job(s) ({} cancelled, {} drained) across {} trace(s), {} images; mean {:.1} jobs/h, mean {:.2} img/s; queue wait mean {:.1}s max {:.1}s; peak {} live job(s); {} device(s) replaced",
         rep.total_jobs,
         rep.cancelled,
+        rep.drained,
         rep.traces.len(),
         rep.total_images,
         rep.jobs_per_hour.mean(),
@@ -480,6 +501,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         rep.queue_wait.mean(),
         rep.queue_wait.max(),
         rep.peak_live_jobs,
+        rep.devices_replaced,
     );
     Ok(())
 }
@@ -628,12 +650,13 @@ mod tests {
             .unwrap();
         dispatch(&args(
             "workload --jobs 2 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
-             --seed 3 --cancel 1:40 --degrade 0:10:0.7 --degrade 0:20:2 --no-stage-io",
+             --seed 3 --cancel 1:40 --degrade 0:10:0.7 --degrade 0:20:2 --no-stage-io \
+             --read-retries 2",
         ))
         .unwrap();
         dispatch(&args(
             "sweep --seeds 2 --workers 2 --jobs 2 --total-csds 2 --csds-per-job 1 \
-             --mean-arrival 5 --seed 3 --no-stage-io --retain-jobs",
+             --mean-arrival 5 --seed 3 --no-stage-io --retain-jobs --pe-limit 100000",
         ))
         .unwrap();
     }

@@ -14,7 +14,9 @@
 //!
 //! [`load_workload`]: stannis::fleet::FleetRuntime::load_workload
 
-use stannis::config::{CancelSpec, ExperimentConfig, FaultSpec, WeightedJob, WorkloadSpec};
+use stannis::config::{
+    CancelSpec, EnduranceSpec, ExperimentConfig, FaultSpec, WeightedJob, WorkloadSpec,
+};
 use stannis::fleet::{
     run_sweep, run_trace, run_trace_with, runtime_for, FleetConfig, FleetReport, FleetRuntime,
     JobReport, RuntimeEvent, TransferRecord,
@@ -418,7 +420,8 @@ fn workload_spec_edge_cases() {
     // Cancel referencing a job index beyond the trace fails up front.
     spec.cancels = vec![CancelSpec { job: 7, at_secs: 1.0 }];
     let err = run_trace(&spec).unwrap_err().to_string();
-    assert!(err.contains("cancel references job 7"), "got: {err}");
+    assert!(err.contains("references job 7"), "got: {err}");
+    assert!(err.contains("cancel entry 0"), "must name the entry, got: {err}");
 
     // Zero-weight mix entry: rejected with the entry named.
     spec.cancels.clear();
@@ -434,4 +437,68 @@ fn workload_spec_edge_cases() {
     assert!(spec.validate().is_err());
     spec.mix[1].weight = f64::NAN;
     assert!(spec.validate().is_err());
+}
+
+/// Endurance knobs that cannot fire must be invisible (DESIGN.md
+/// §Endurance, determinism contract): a pool whose blocks never reach
+/// their P/E limit (`pe_limit = u32::MAX`) and whose retry ladder is
+/// never climbed produces the *bit-identical* trace — same log, same
+/// totals, same wear-independent summary — as the endurance-off
+/// default, across random arrival/cancel/fault schedules and both
+/// executors. This pins the EOL pipeline's hot-path cost to zero
+/// observable effect until a block actually retires.
+#[test]
+fn unreachable_endurance_limits_are_bit_identical_to_endurance_off() {
+    stannis::util::prop::check_n("endurance-off bit identity", 6, |rng| {
+        for ff in [true, false] {
+            let jobs = 2 + rng.usize_below(6);
+            let base = WorkloadSpec {
+                total_csds: 4,
+                stage_io: false,
+                fast_forward: ff,
+                seed: rng.below(1 << 32),
+                jobs,
+                mean_interarrival_secs: 4.0 + rng.f64() * 20.0,
+                mix: trace_mix(3 + rng.usize_below(5)),
+                cancels: (0..rng.usize_below(2))
+                    .map(|_| CancelSpec { job: rng.usize_below(jobs), at_secs: rng.f64() * 200.0 })
+                    .collect(),
+                faults: (0..rng.usize_below(2))
+                    .map(|_| FaultSpec {
+                        at_secs: rng.f64() * 150.0,
+                        device: rng.usize_below(4),
+                        factor: 0.4 + 0.5 * rng.f64(),
+                    })
+                    .collect(),
+                ..Default::default()
+            };
+            let mut armed = base.clone();
+            armed.endurance = EnduranceSpec {
+                pe_limit: u32::MAX,
+                read_retries: 0,
+                retry_step_us: 100.0,
+            };
+
+            let mut off_log = Vec::new();
+            let (off, off_rt) = run_trace_with(&base, |e| {
+                off_log.push(format!("{:?} {:?}", e.at, e.event));
+            })
+            .expect("endurance-off trace");
+            let mut on_log = Vec::new();
+            let (on, on_rt) = run_trace_with(&armed, |e| {
+                on_log.push(format!("{:?} {:?}", e.at, e.event));
+            })
+            .expect("unreachable-limit trace");
+
+            assert_eq!(off_log, on_log, "log streams must match to the bit");
+            assert_eq!(off, on, "trace summaries must match to the bit");
+            let (a, b) = (off_rt.report(), on_rt.report());
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+            assert_eq!(a.wear, b.wear, "wear counters are observational, not behavioral");
+            assert_eq!(a.ecc, b.ecc);
+            assert_eq!(b.drained, 0, "nothing can drain below an unreachable limit");
+            assert_eq!(b.devices_replaced, 0);
+        }
+    });
 }
