@@ -15,6 +15,10 @@
 //!
 //! Run: `cargo run --release --example e2e_train [-- --steps 300]`
 
+// Example binaries report real wall-clock; the crate-wide clippy gate
+// on time sources is lifted here like in the benches.
+#![allow(clippy::disallowed_methods)]
+
 use std::io::Write;
 
 use stannis::config::ExperimentConfig;

@@ -8,6 +8,10 @@
 //!
 //! Run: `cargo bench --bench dataplane`
 
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use stannis::config::ExperimentConfig;

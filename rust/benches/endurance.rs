@@ -21,6 +21,10 @@
 //!
 //! Run: `cargo bench --bench endurance`
 
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use stannis::config::{EnduranceSpec, ExperimentConfig, WeightedJob, WorkloadSpec};

@@ -5,6 +5,10 @@
 //!
 //! Run: `cargo bench --bench fig7`
 
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
 use stannis::metrics::{f, print_table, record_bench_json};
 use stannis::perfmodel::{calib_for, PerfModel};

@@ -10,6 +10,10 @@
 //!
 //! Run: `cargo bench --bench simcore`
 
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};

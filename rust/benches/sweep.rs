@@ -11,6 +11,10 @@
 //!
 //! Run: `cargo bench --bench sweep`
 
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use stannis::config::{CancelSpec, ExperimentConfig, WeightedJob, WorkloadSpec};

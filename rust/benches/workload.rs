@@ -10,6 +10,10 @@
 //!
 //! Run: `cargo bench --bench workload`
 
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use stannis::config::{CancelSpec, WorkloadSpec};

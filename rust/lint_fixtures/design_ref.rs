@@ -1,0 +1,9 @@
+//! Fixture for the `design-ref` rule: one reference that resolves to a
+//! real heading (clean) and one that does not (flagged).
+//! This file is never compiled — `stannis lint` reads it as text.
+
+/// Shard deal follows DESIGN.md §2.
+pub fn resolves() {}
+
+/// Allegedly specified by DESIGN.md §No-Such-Section.
+pub fn dangles() {}

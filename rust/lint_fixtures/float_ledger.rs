@@ -1,0 +1,24 @@
+//! Fixture for the `float-ledger` rule: a ledger struct whose impl has
+//! one untagged float accumulation (flagged), an integer accumulation
+//! (never flagged), and tagged float lines (suppressed).
+//! This file is never compiled — `stannis lint` reads it as text.
+
+pub struct FleetTotals {
+    pub images: u64,
+    pub energy_j: f64,
+}
+
+impl FleetTotals {
+    pub fn absorb(&mut self, other: &FleetTotals) {
+        self.images += other.images;
+        self.energy_j += other.energy_j;
+    }
+
+    pub fn absorb_tagged(&mut self, other: &FleetTotals) {
+        self.images += other.images;
+        // lint: allow(float-ledger) — display-only joules, never compared bitwise
+        self.energy_j += other.energy_j;
+        // lint: allow(float-ledger) — display-only rate for the footer
+        let _rate = other.images as f64;
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture for the `hash-iter` rule: one untagged default-hasher use
+//! (flagged) and one tagged keyed-lookup-only use (suppressed).
+//! This file is never compiled — `stannis lint` reads it as text.
+
+use std::collections::HashMap;
+
+pub fn suppressed_lookup_table() -> u32 {
+    // lint: allow(hash-iter) — keyed lookup only, never iterated
+    let m: HashMap<u32, u32> = HashMap::new();
+    m.get(&1).copied().unwrap_or(0)
+}

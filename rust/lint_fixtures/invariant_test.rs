@@ -1,0 +1,40 @@
+//! Fixture for the `invariant-test` rule: `Covered` has a test naming
+//! it next to an invariant call (clean); `Orphan` has none (flagged).
+//! This file is never compiled — `stannis lint` reads it as text.
+
+pub struct Covered {
+    count: u64,
+}
+
+impl Covered {
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.count < u64::MAX {
+            Ok(())
+        } else {
+            Err("count overflow".into())
+        }
+    }
+}
+
+pub struct Orphan {
+    count: u64,
+}
+
+impl Orphan {
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.count < u64::MAX {
+            Ok(())
+        } else {
+            Err("count overflow".into())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn covered_invariants_hold() {
+        let c = super::Covered { count: 1 };
+        c.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture for the `wallclock` rule: one untagged wall-clock read
+//! (flagged) and one tagged read (suppressed).
+//! This file is never compiled — `stannis lint` reads it as text.
+
+pub fn flagged() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn suppressed() -> u64 {
+    let t0 = std::time::Instant::now(); // lint: allow(wallclock) — times the process, not the sim
+    t0.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,158 @@
+//! Runtime audit + fingerprint framework (DESIGN.md §Static-Analysis).
+//!
+//! Every stateful subsystem of the simulator grew its own
+//! `check_invariants` over the PRs (FTL mapping coherence, DLM lock
+//! exclusion, data-plane slot accounting, event-queue slab bookkeeping,
+//! job-table slab indexing). [`Auditable`] unifies them behind one
+//! trait so `FleetRuntime::full_audit()` can sweep the whole runtime —
+//! after *every pumped event* when `FleetConfig::audit` / `--audit` is
+//! armed, and always inside the property harness.
+//!
+//! [`Auditable::fingerprint`] folds the component's *observable* state
+//! into a deterministic [`Fnv64`] hash. Bit-identity contracts (fast
+//! forward == per step, slicing invariance, streaming == retained,
+//! audit on == audit off) compare fingerprints per event instead of
+//! final reports, so a divergence bisects to the first divergent event.
+//! Implementations must hash only replay-deterministic state in a
+//! deterministic order: sort anything that lives in a heap, hash floats
+//! via their IEEE bit patterns, never hash addresses or capacities.
+
+use crate::Result;
+
+/// A component that can verify its internal invariants and fold its
+/// observable state into a fingerprint. Implemented by the `Ftl`, the
+/// `Dlm`, the `DevicePool`, the `DataPlane`, the `EventQueue` slab and
+/// the runtime's `JobSlab`; `FleetRuntime::full_audit()` sweeps all of
+/// them.
+pub trait Auditable {
+    /// Short stable component name, used to prefix audit failures.
+    fn component(&self) -> &'static str;
+
+    /// Check every internal invariant; `Err` means corrupted state.
+    /// Must be read-only — an audited run must stay bit-identical to an
+    /// unaudited one.
+    fn audit(&self) -> Result<()>;
+
+    /// Fold the component's observable state into `h`. Deterministic:
+    /// the same logical state always hashes identically, regardless of
+    /// how it was reached.
+    fn fingerprint(&self, h: &mut Fnv64);
+}
+
+/// FNV-1a, 64-bit: the crate's one deterministic hasher. Chosen for
+/// the audit path because it is trivially portable (no per-process
+/// keys, unlike `DefaultHasher`), byte-order explicit, and fast enough
+/// to run after every event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Self { state: Self::OFFSET }
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= u64::from(b);
+            self.state = self.state.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_u64(u64::from(v));
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write_bytes(&[u8::from(v)]);
+    }
+
+    /// Length-prefixed, so `("ab", "c")` and `("a", "bc")` differ.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write_bytes(s.as_bytes());
+    }
+
+    /// Hash a float by its exact IEEE-754 bit pattern — fingerprints
+    /// witness *bit* identity, not approximate equality.
+    pub fn write_f64_bits(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Fingerprint one component in isolation (fresh hasher).
+pub fn fingerprint_of(c: &dyn Auditable) -> u64 {
+    let mut h = Fnv64::new();
+    c.fingerprint(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Canonical FNV-1a/64 test vectors.
+        assert_eq!(Fnv64::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv64::new();
+        h.write_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv64::new();
+        h.write_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn length_prefix_disambiguates_strings() {
+        let mut a = Fnv64::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn float_bits_distinguish_negative_zero() {
+        let mut a = Fnv64::new();
+        a.write_f64_bits(0.0);
+        let mut b = Fnv64::new();
+        b.write_f64_bits(-0.0);
+        assert_ne!(a.finish(), b.finish(), "bit identity, not numeric equality");
+    }
+
+    #[test]
+    fn order_matters() {
+        let mut a = Fnv64::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv64::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -1,0 +1,739 @@
+//! `stannis lint` — the determinism source pass (DESIGN.md §Static-Analysis).
+//!
+//! Every bit-identity contract in this repo (fast-forward == per-step,
+//! slicing invariance, streaming == retained, endurance-off identity,
+//! audit-on == audit-off) has static preconditions: no iteration over
+//! default-hasher collections, no wall-clock reads in simulated paths,
+//! no float accumulation in the integer-exact ledgers. This module is a
+//! zero-dependency, hand-rolled scanner over `rust/src/**.rs` that
+//! enforces those preconditions as hard CI failures, in the same
+//! no-external-crates style as `util::json`.
+//!
+//! Rules (each a [`Rule`] impl, each with a fixture under
+//! `rust/lint_fixtures/`):
+//!
+//! - `hash-iter`: no default-hasher map/set types outside an explicit
+//!   allow tag — their iteration order is per-process random.
+//! - `wallclock`: no wall-clock time sources outside `metrics/bench.rs`
+//!   (benches and examples are not scanned; they are the sanctioned
+//!   timing layer).
+//! - `float-ledger`: no float casts or float `+=` accumulation inside
+//!   the ledger types (`FleetTotals`-shaped reports) without a tag.
+//! - `design-ref`: every `DESIGN.md` section reference in the source
+//!   must resolve to a real heading, so docs cannot rot silently.
+//! - `invariant-test`: every public `check_invariants` must be
+//!   exercised by at least one test that names its type.
+//!
+//! Allowlist grammar: `// lint: allow(rule-name)` on the offending line
+//! itself, or in the contiguous run of comment/attribute lines directly
+//! above it. Tags should carry a justification after the closing paren.
+//!
+//! The scanner needles are assembled at runtime from string fragments
+//! so this file never contains the contiguous patterns it hunts — the
+//! linter lints itself as part of the tree.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::Result;
+
+/// One finding, pointing at a 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A source file split into lines, addressed by its path relative to
+/// the scanned root.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<String>,
+}
+
+/// The unit the rules run over: the scanned files, the set of valid
+/// design-doc heading tokens, and a reference corpus of test/bench
+/// sources (searched by `invariant-test`, never scanned for
+/// violations).
+#[derive(Debug, Clone)]
+pub struct SourceTree {
+    pub files: Vec<SourceFile>,
+    pub design_headings: BTreeSet<String>,
+    pub test_corpus: Vec<SourceFile>,
+}
+
+impl SourceTree {
+    /// Load every `.rs` under `src_dir` (sorted, recursive), the
+    /// heading tokens of `design` (if given), and every `.rs` under
+    /// each existing `corpus_dirs` entry as reference-only corpus.
+    pub fn load(src_dir: &Path, design: Option<&Path>, corpus_dirs: &[PathBuf]) -> Result<SourceTree> {
+        let mut files = Vec::new();
+        walk_rs(src_dir, src_dir, &mut files)?;
+        let design_headings = match design {
+            Some(p) if p.is_file() => parse_design_headings(p)?,
+            _ => BTreeSet::new(),
+        };
+        let mut test_corpus = Vec::new();
+        for dir in corpus_dirs {
+            if dir.is_dir() {
+                walk_rs(dir, dir, &mut test_corpus)?;
+            }
+        }
+        Ok(SourceTree { files, design_headings, test_corpus })
+    }
+}
+
+/// A single lint rule: a stable slug plus a pass over the tree.
+pub trait Rule {
+    fn name(&self) -> &'static str;
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Diagnostic>);
+}
+
+/// The full rule set, in reporting order.
+pub fn rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(HashIter),
+        Box::new(Wallclock),
+        Box::new(FloatLedger),
+        Box::new(DesignRef),
+        Box::new(InvariantTest),
+    ]
+}
+
+/// Run every rule over an already-loaded tree; diagnostics come back
+/// sorted by (file, line, rule) so output order is deterministic.
+pub fn lint_tree(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for rule in rules() {
+        rule.check(tree, &mut out);
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+/// Lint the shipped tree rooted at `repo_root`: scans `rust/src`,
+/// resolves headings against `DESIGN.md`, and reads `rust/tests` +
+/// `rust/benches` as the test corpus.
+pub fn run(repo_root: &Path) -> Result<Vec<Diagnostic>> {
+    let tree = SourceTree::load(
+        &repo_root.join("rust/src"),
+        Some(&repo_root.join("DESIGN.md")),
+        &[repo_root.join("rust/tests"), repo_root.join("rust/benches")],
+    )?;
+    Ok(lint_tree(&tree))
+}
+
+/// Walk up from `start` to the first directory that looks like the
+/// repo root (has `rust/src` and `DESIGN.md`).
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(dir) = cur {
+        if dir.join("rust/src").is_dir() && dir.join("DESIGN.md").is_file() {
+            return Some(dir);
+        }
+        cur = dir.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// shared scanning helpers
+
+/// Assemble a needle from fragments at runtime, so the source of this
+/// module never contains the contiguous pattern it scans for.
+fn needle(parts: &[&str]) -> String {
+    parts.concat()
+}
+
+/// True when the diagnostic at `idx` is suppressed by an allow tag:
+/// `lint: allow(<rule>)` on the line itself or inside the contiguous
+/// block of comment/attribute lines directly above it.
+fn allowed(f: &SourceFile, idx: usize, rule: &str) -> bool {
+    let tag = format!("lint: allow({rule})");
+    if f.lines[idx].contains(&tag) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = f.lines[i].trim_start();
+        if t.starts_with("//") {
+            if t.contains(&tag) {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("#![") {
+            continue;
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+fn diag(rule: &'static str, f: &SourceFile, idx: usize, message: String) -> Diagnostic {
+    Diagnostic { rule, file: f.rel.clone(), line: idx + 1, message }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_ref_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')
+}
+
+fn read_dir_sorted(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut entries = Vec::new();
+    for e in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    Ok(entries)
+}
+
+fn walk_rs(dir: &Path, base: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    for path in read_dir_sorted(dir)? {
+        if path.is_dir() {
+            walk_rs(&path, base, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let rel = path
+                .strip_prefix(base)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile { rel, lines: text.lines().map(String::from).collect() });
+        }
+    }
+    Ok(())
+}
+
+fn parse_design_headings(path: &Path) -> Result<BTreeSet<String>> {
+    let text =
+        fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut out = BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("## §") {
+            let token: String = rest.chars().take_while(|&c| is_ref_char(c)).collect();
+            let token = token.trim_end_matches('.');
+            if !token.is_empty() {
+                out.insert(token.to_string());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Brace-tracked extent of an item starting at `start` (exclusive end
+/// line index). A braceless item (`struct X;`) ends at its semicolon.
+fn region_end(f: &SourceFile, start: usize) -> usize {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for i in start..f.lines.len() {
+        for c in f.lines[i].chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return i + 1;
+        }
+        if !opened && f.lines[i].trim_end().ends_with(';') {
+            return i + 1;
+        }
+    }
+    f.lines.len()
+}
+
+/// True when `prefix`+`name` occurs in `line` followed by a non-ident
+/// character (word-boundary match on the type name).
+fn has_marker(line: &str, prefix: &str, name: &str) -> bool {
+    let pat = format!("{prefix}{name}");
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(&pat) {
+        let end = start + pos + pat.len();
+        let boundary = !matches!(line[end..].chars().next(), Some(c) if is_ident_char(c));
+        if boundary {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// rule: hash-iter
+
+/// Default-hasher collections randomize iteration order per process;
+/// one stray iteration in a report path breaks replay stability.
+struct HashIter;
+
+impl Rule for HashIter {
+    fn name(&self) -> &'static str {
+        "hash-iter"
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Diagnostic>) {
+        let needles = [needle(&["Hash", "Map"]), needle(&["Hash", "Set"])];
+        for f in &tree.files {
+            for (i, line) in f.lines.iter().enumerate() {
+                for n in &needles {
+                    if line.contains(n.as_str()) {
+                        if !allowed(f, i, self.name()) {
+                            out.push(diag(
+                                self.name(),
+                                f,
+                                i,
+                                format!(
+                                    "default-hasher `{n}` — use the BTree equivalent, or tag \
+                                     `// lint: allow({})` with a keyed-lookup-only justification",
+                                    self.name()
+                                ),
+                            ));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: wallclock
+
+/// Wall-clock reads make two runs of the same trace observably differ;
+/// simulated paths must use `SimTime` only. `metrics/bench.rs` is the
+/// one sanctioned in-crate timing helper.
+struct Wallclock;
+
+impl Rule for Wallclock {
+    fn name(&self) -> &'static str {
+        "wallclock"
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Diagnostic>) {
+        let needles = [
+            needle(&["Instant", "::"]),
+            needle(&["System", "Time::"]),
+            needle(&["std::", "time"]),
+        ];
+        for f in &tree.files {
+            if f.rel.ends_with("metrics/bench.rs") {
+                continue;
+            }
+            for (i, line) in f.lines.iter().enumerate() {
+                for n in &needles {
+                    if line.contains(n.as_str()) {
+                        if !allowed(f, i, self.name()) {
+                            out.push(diag(
+                                self.name(),
+                                f,
+                                i,
+                                format!(
+                                    "wall-clock source `{n}` outside the bench layer — \
+                                     simulated paths use SimTime; tag `// lint: allow({})` \
+                                     if timing the process itself is the point",
+                                    self.name()
+                                ),
+                            ));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: float-ledger
+
+/// The report ledgers are integer-exact by design: merging per-job
+/// results must be associative and replay-stable, so float casts and
+/// float `+=` inside a ledger struct/impl need an explicit tag naming
+/// why the value is display-only.
+struct FloatLedger;
+
+impl FloatLedger {
+    fn ledger_names() -> Vec<String> {
+        vec![
+            needle(&["Fleet", "Totals"]),
+            needle(&["Wear", "Report"]),
+            needle(&["Ecc", "Stats"]),
+        ]
+    }
+
+    /// Regions of `f` belonging to ledger types: `(range, is_struct)`.
+    fn regions(f: &SourceFile, names: &[String]) -> Vec<(Range<usize>, bool)> {
+        let mut out = Vec::new();
+        for (i, line) in f.lines.iter().enumerate() {
+            for n in names {
+                let is_struct = has_marker(line, "struct ", n);
+                let is_impl =
+                    has_marker(line, "impl ", n) || has_marker(line, "for ", n);
+                if is_struct || is_impl {
+                    out.push((i..region_end(f, i), is_struct));
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Rule for FloatLedger {
+    fn name(&self) -> &'static str {
+        "float-ledger"
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Diagnostic>) {
+        let names = Self::ledger_names();
+        let cast = needle(&["as ", "f64"]);
+        let secs = needle(&["as_secs_", "f64"]);
+        let field_marker = needle(&[": ", "f64"]);
+        for f in &tree.files {
+            let regions = Self::regions(f, &names);
+            // Pass 1: collect the f64 field names declared by ledger structs.
+            let mut fields: Vec<String> = Vec::new();
+            for (range, is_struct) in &regions {
+                if !is_struct {
+                    continue;
+                }
+                for idx in range.clone() {
+                    if let Some(name) = f64_field(&f.lines[idx], &field_marker) {
+                        fields.push(name);
+                    }
+                }
+            }
+            // Pass 2: flag float casts and float accumulation in any
+            // ledger region.
+            for (range, _) in &regions {
+                for idx in range.clone() {
+                    let line = &f.lines[idx];
+                    let hit = line.contains(secs.as_str())
+                        || line.contains(cast.as_str())
+                        || (line.contains("+=")
+                            && fields.iter().any(|fd| line.contains(fd.as_str())));
+                    if hit && !allowed(f, idx, self.name()) {
+                        out.push(diag(
+                            self.name(),
+                            f,
+                            idx,
+                            format!(
+                                "float accumulation inside a ledger region — ledgers are \
+                                 integer-exact; tag `// lint: allow({})` with a \
+                                 display-only justification",
+                                self.name()
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// If `line` declares an f64 field (`name: f64`), return the name.
+fn f64_field(line: &str, marker: &str) -> Option<String> {
+    let pos = line.find(marker)?;
+    let left = &line[..pos];
+    let rev: String =
+        left.chars().rev().take_while(|&c| is_ident_char(c)).collect();
+    let name: String = rev.chars().rev().collect();
+    if name.is_empty() { None } else { Some(name) }
+}
+
+// ---------------------------------------------------------------------------
+// rule: design-ref
+
+/// Section references in doc comments must resolve to a real heading
+/// in DESIGN.md, so the design doc and the code cannot drift apart
+/// silently.
+struct DesignRef;
+
+impl Rule for DesignRef {
+    fn name(&self) -> &'static str {
+        "design-ref"
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Diagnostic>) {
+        let n = needle(&["DESIGN.md", " §"]);
+        for f in &tree.files {
+            for (i, line) in f.lines.iter().enumerate() {
+                let mut start = 0;
+                while let Some(pos) = line[start..].find(n.as_str()) {
+                    let after = start + pos + n.len();
+                    let token: String =
+                        line[after..].chars().take_while(|&c| is_ref_char(c)).collect();
+                    let token = token.trim_end_matches('.').to_string();
+                    let resolved =
+                        !token.is_empty() && tree.design_headings.contains(&token);
+                    if !resolved && !allowed(f, i, self.name()) {
+                        let what = if token.is_empty() {
+                            "dangling design reference (no section token)".to_string()
+                        } else {
+                            format!("design reference §{token} matches no DESIGN.md heading")
+                        };
+                        out.push(diag(self.name(), f, i, what));
+                    }
+                    start = after;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: invariant-test
+
+/// An invariant checker nobody calls is dead armor: every public
+/// `check_invariants` must be exercised by at least one test region
+/// (in-file `#[cfg(test)]` tail, or the tests/benches corpus) that
+/// names the implementing type.
+struct InvariantTest;
+
+impl Rule for InvariantTest {
+    fn name(&self) -> &'static str {
+        "invariant-test"
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Diagnostic>) {
+        let def = needle(&["pub fn ", "check_", "invariants"]);
+        let call = needle(&["check_", "invariants"]);
+        let mut regions: Vec<String> = Vec::new();
+        for f in &tree.files {
+            if let Some(pos) = f.lines.iter().position(|l| l.contains("#[cfg(test)]")) {
+                regions.push(f.lines[pos..].join("\n"));
+            }
+        }
+        for f in &tree.test_corpus {
+            regions.push(f.lines.join("\n"));
+        }
+        for f in &tree.files {
+            for (i, line) in f.lines.iter().enumerate() {
+                if !line.contains(def.as_str()) || allowed(f, i, self.name()) {
+                    continue;
+                }
+                let Some(ty) = enclosing_impl_type(f, i) else {
+                    out.push(diag(
+                        self.name(),
+                        f,
+                        i,
+                        format!("`{def}` outside any impl block"),
+                    ));
+                    continue;
+                };
+                let covered = regions
+                    .iter()
+                    .any(|r| r.contains(call.as_str()) && r.contains(ty.as_str()));
+                if !covered {
+                    out.push(diag(
+                        self.name(),
+                        f,
+                        i,
+                        format!(
+                            "`{def}` on {ty} is not exercised by any test that names {ty}"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The self type of the nearest enclosing `impl` above `def_idx`.
+fn enclosing_impl_type(f: &SourceFile, def_idx: usize) -> Option<String> {
+    for i in (0..def_idx).rev() {
+        let t = f.lines[i].trim_start();
+        if let Some(rest) = t.strip_prefix("impl") {
+            if rest.starts_with('<') || rest.starts_with(' ') {
+                if let Some(ty) = impl_self_type(rest) {
+                    return Some(ty);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Parse the self type out of the text following `impl`:
+/// `" Ftl {"`, `"<E> EventQueue<E> {"`, `" Auditable for Ftl {"`.
+fn impl_self_type(rest: &str) -> Option<String> {
+    let mut s = rest;
+    if let Some(stripped) = s.strip_prefix('<') {
+        let mut depth = 1usize;
+        let mut end = stripped.len();
+        for (i, c) in stripped.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        s = &stripped[end..];
+    }
+    if let Some(pos) = s.find(" for ") {
+        s = &s[pos + 5..];
+    }
+    let s = s.trim_start();
+    let name: String = s.chars().take_while(|&c| is_ident_char(c)).collect();
+    if name.is_empty() { None } else { Some(name) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn fixture_tree() -> SourceTree {
+        SourceTree::load(
+            &repo_root().join("rust/lint_fixtures"),
+            Some(&repo_root().join("DESIGN.md")),
+            &[],
+        )
+        .unwrap()
+    }
+
+    fn fixture_diags(rule: &str) -> Vec<Diagnostic> {
+        lint_tree(&fixture_tree())
+            .into_iter()
+            .filter(|d| d.rule == rule)
+            .collect()
+    }
+
+    #[test]
+    fn hash_iter_fires_once_and_respects_the_allow_tag() {
+        let d = fixture_diags("hash-iter");
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].file, "hash_iter.rs");
+    }
+
+    #[test]
+    fn wallclock_fires_once_and_respects_the_allow_tag() {
+        let d = fixture_diags("wallclock");
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].file, "wallclock.rs");
+    }
+
+    #[test]
+    fn float_ledger_fires_once_and_respects_the_allow_tag() {
+        let d = fixture_diags("float-ledger");
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].file, "float_ledger.rs");
+    }
+
+    #[test]
+    fn design_ref_fires_on_unknown_heading_only() {
+        let d = fixture_diags("design-ref");
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].file, "design_ref.rs");
+        assert!(d[0].message.contains("No-Such-Section"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn invariant_test_fires_on_the_untested_type_only() {
+        let d = fixture_diags("invariant-test");
+        assert_eq!(d.len(), 1, "{d:#?}");
+        assert_eq!(d[0].file, "invariant_test.rs");
+        assert!(d[0].message.contains("Orphan"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn every_rule_fires_somewhere_on_the_fixture_tree() {
+        let diags = lint_tree(&fixture_tree());
+        for r in rules() {
+            assert!(
+                diags.iter().any(|d| d.rule == r.name()),
+                "rule {} silent on its fixture",
+                r.name()
+            );
+        }
+    }
+
+    #[test]
+    fn shipped_tree_is_clean() {
+        let diags = run(&repo_root()).unwrap();
+        assert!(
+            diags.is_empty(),
+            "shipped tree has lint diagnostics:\n{}",
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    #[test]
+    fn diagnostics_are_sorted_and_display_cleanly() {
+        let diags = lint_tree(&fixture_tree());
+        let keys: Vec<_> =
+            diags.iter().map(|d| (d.file.clone(), d.line, d.rule)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        for d in &diags {
+            let s = d.to_string();
+            assert!(s.contains(&format!("[{}]", d.rule)), "{s}");
+        }
+    }
+
+    #[test]
+    fn impl_self_type_parses_the_shapes_we_use() {
+        assert_eq!(impl_self_type(" Ftl {").as_deref(), Some("Ftl"));
+        assert_eq!(impl_self_type("<E> EventQueue<E> {").as_deref(), Some("EventQueue"));
+        assert_eq!(impl_self_type(" Auditable for DevicePool {").as_deref(), Some("DevicePool"));
+        assert_eq!(
+            impl_self_type("<E> Auditable for EventQueue<E> {").as_deref(),
+            Some("EventQueue")
+        );
+    }
+
+    #[test]
+    fn allow_tag_reaches_through_attribute_lines() {
+        let f = SourceFile {
+            rel: "x.rs".into(),
+            lines: vec![
+                "// lint: allow(demo) — justified".into(),
+                "#[allow(dead_code)]".into(),
+                "let x = 1;".into(),
+            ],
+        };
+        assert!(allowed(&f, 2, "demo"));
+        assert!(!allowed(&f, 2, "other"));
+    }
+
+    #[test]
+    fn find_repo_root_walks_up_from_src() {
+        let start = repo_root().join("rust/src/analysis");
+        assert_eq!(find_repo_root(&start), Some(repo_root()));
+    }
+}

@@ -1,0 +1,17 @@
+//! Correctness-analysis subsystem (DESIGN.md §Static-Analysis).
+//!
+//! Two halves guard the repo's determinism contracts:
+//!
+//! - [`lint`] — the `stannis lint` source pass: a zero-dependency
+//!   scanner enforcing the *static* preconditions of bit-identity
+//!   (no default-hasher iteration, no wall-clock reads in simulated
+//!   paths, integer-exact ledgers, resolvable design references,
+//!   tested invariant checkers).
+//! - [`audit`] — the runtime half: the [`audit::Auditable`] trait
+//!   unifies every subsystem's `check_invariants` behind
+//!   `FleetRuntime::full_audit()`, and [`audit::Fnv64`] fingerprints
+//!   observable state so bit-identity failures bisect to the first
+//!   divergent event.
+
+pub mod audit;
+pub mod lint;

@@ -427,6 +427,11 @@ pub struct WorkloadSpec {
     /// Flash endurance knobs (retry ladder, block retirement, device
     /// end-of-life). Default off in every dimension.
     pub endurance: EnduranceSpec,
+    /// Run the runtime's full invariant audit after every event
+    /// (`--audit`; DESIGN.md §Static-Analysis). Read-only — results
+    /// are bit-identical either way — but O(state) per event, so off
+    /// by default.
+    pub audit: bool,
 }
 
 impl Default for WorkloadSpec {
@@ -445,6 +450,7 @@ impl Default for WorkloadSpec {
             cancels: Vec::new(),
             faults: Vec::new(),
             endurance: EnduranceSpec::default(),
+            audit: false,
         }
     }
 }
@@ -511,12 +517,15 @@ impl WorkloadSpec {
         if let Some(v) = j.get("endurance") {
             out.endurance = EnduranceSpec::from_json(v)?;
         }
+        if let Some(v) = j.get("audit") {
+            out.audit = v.as_bool()?;
+        }
         out.validated()
     }
 
     /// Apply CLI overrides (`--total-csds`, `--jobs`, `--mean-arrival`,
     /// `--seed`, `--csds-per-job`, `--retain-jobs`, `--pe-limit`,
-    /// `--read-retries`).
+    /// `--read-retries`, `--audit`).
     pub fn apply_args(mut self, args: &Args) -> Result<Self> {
         self.total_csds = args.parse_or("total-csds", self.total_csds)?;
         self.jobs = args.parse_or("jobs", self.jobs)?;
@@ -538,6 +547,9 @@ impl WorkloadSpec {
         }
         if args.flag("retain-jobs") {
             self.retain_jobs = true;
+        }
+        if args.flag("audit") {
+            self.audit = true;
         }
         for c in args.get_all("cancel") {
             self.cancels.push(CancelSpec::parse_cli(c)?);

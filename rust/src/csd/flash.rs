@@ -195,8 +195,11 @@ impl FlashArray {
             } else {
                 (count - i).min(1 + (gap.as_ns() / drain) as u32)
             };
+            // Promoted from debug-only: the coalescing math is only
+            // bit-identical to the per-page loop if every stretch lands
+            // exactly where FIFO would put it. Cheap u64 compare.
             let (start, _) = self.buses.schedule_on(bus, arrive, xfer * stretch as u64);
-            debug_assert_eq!(start, arrive.max(bus_free));
+            assert_eq!(start, arrive.max(bus_free), "read stretch broke FIFO booking");
             for j in 0..stretch {
                 done = start + xfer * (j as u64 + 1);
                 per_page(i + j, done);
@@ -252,8 +255,9 @@ impl FlashArray {
             } else {
                 (count - i).min(1 + (gap.as_ns() / drain) as u32)
             };
+            // Promoted from debug-only, mirroring read_run_with.
             let (start, _) = self.dies.schedule_on(die, arrive, t_prog * stretch as u64);
-            debug_assert_eq!(start, arrive.max(die_free));
+            assert_eq!(start, arrive.max(die_free), "program stretch broke FIFO booking");
             for j in 0..stretch {
                 done = start + t_prog * (j as u64 + 1);
                 per_page(i + j, done);
@@ -282,6 +286,27 @@ impl FlashArray {
     /// Mean die utilization over [0, horizon].
     pub fn die_utilization(&self, horizon: SimTime) -> f64 {
         self.dies.utilization(horizon)
+    }
+
+    /// Verify the booking ledger: every page op accounts exactly one
+    /// page of traffic on every path (single-page, run-coalesced, and
+    /// retry reads all increment pages and bytes together), so the
+    /// byte counters are always page-count multiples.
+    pub fn check_invariants(&self) -> crate::Result<()> {
+        let page = self.cfg.page_bytes as u64;
+        anyhow::ensure!(
+            self.stats.bytes_read == self.stats.reads * page,
+            "flash bytes_read {} != reads {} * page_bytes {page}",
+            self.stats.bytes_read,
+            self.stats.reads
+        );
+        anyhow::ensure!(
+            self.stats.bytes_written == self.stats.programs * page,
+            "flash bytes_written {} != programs {} * page_bytes {page}",
+            self.stats.bytes_written,
+            self.stats.programs
+        );
+        Ok(())
     }
 
     /// Aggregate sequential-read bandwidth estimate: time to stream
@@ -353,6 +378,25 @@ mod tests {
         let t_single = arr2.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
         assert_eq!(t_parallel, t_single);
         assert_eq!(arr.stats().reads, channels as u64);
+    }
+
+    #[test]
+    fn audit_byte_conservation_on_every_op_path() {
+        // FlashArray::check_invariants ties the byte counters to the
+        // page counters on single-page, coalesced-run and erase paths.
+        let mut arr = FlashArray::new(FlashConfig::default());
+        arr.check_invariants().unwrap();
+        arr.read_page(addr(0, 0, 0, 0), SimTime::ZERO);
+        arr.program_page(addr(0, 0, 0, 1), SimTime::ZERO);
+        arr.check_invariants().unwrap();
+        arr.read_run(addr(1, 0, 0, 0), 8, SimTime::ZERO);
+        arr.program_run(addr(2, 0, 0, 0), 8, SimTime::ZERO);
+        arr.erase_block(addr(0, 0, 0, 0), SimTime::ZERO);
+        arr.check_invariants().unwrap();
+        let s = arr.stats();
+        assert_eq!(s.reads, 9);
+        assert_eq!(s.programs, 9);
+        assert_eq!(s.erases, 1);
     }
 
     /// Property: run bookings are bit-identical to the per-page loop —

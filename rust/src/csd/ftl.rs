@@ -240,6 +240,35 @@ impl FreeBlocks {
             .map(|(_, ch)| ch)?;
         self.pop_channel(ch)
     }
+
+    /// Structural coherence, reached via `Ftl::check_invariants` (the
+    /// audit path — this promotes the double-free `debug_assert!` in
+    /// [`FreeBlocks::push`] into release-mode `--audit` runs): the
+    /// queues, the membership bitmap and the length counter must all
+    /// describe the same duplicate-free set, with every insertion seq
+    /// already issued.
+    fn check_invariants(&self) -> Result<()> {
+        let queued: usize = self.per_channel.iter().map(|q| q.len()).sum();
+        anyhow::ensure!(queued == self.len, "free len {} != queued {queued}", self.len);
+        let mut seen = vec![false; self.member.len()];
+        for q in &self.per_channel {
+            for &(seq, block) in q {
+                anyhow::ensure!(
+                    seq < self.next_seq,
+                    "free-list seq {seq} >= next_seq {}",
+                    self.next_seq
+                );
+                let b = block as usize;
+                anyhow::ensure!(b < self.member.len(), "free block {block} out of range");
+                anyhow::ensure!(!seen[b], "block {block} on the free list twice");
+                seen[b] = true;
+                anyhow::ensure!(self.member[b], "queued block {block} not in the bitmap");
+            }
+        }
+        let members = self.member.iter().filter(|&&m| m).count();
+        anyhow::ensure!(members == self.len, "membership bitmap {members} != len {}", self.len);
+        Ok(())
+    }
 }
 
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -1019,7 +1048,93 @@ impl Ftl {
             in_use,
             self.blocks.len()
         );
+        // Free-list structural coherence (the release-mode promotion of
+        // the double-free debug assertion), channel locality of every
+        // queued block, and the flash array's byte ledger.
+        self.free.check_invariants()?;
+        for (ch, q) in self.free.per_channel.iter().enumerate() {
+            for &(_, block) in q {
+                anyhow::ensure!(
+                    self.block_addr(block, 0).channel as usize == ch,
+                    "block {block} queued on channel {ch} but lives on channel {}",
+                    self.block_addr(block, 0).channel
+                );
+            }
+        }
+        self.flash.check_invariants()?;
         Ok(())
+    }
+}
+
+impl crate::analysis::audit::Auditable for Ftl {
+    fn component(&self) -> &'static str {
+        "ftl"
+    }
+
+    fn audit(&self) -> crate::Result<()> {
+        self.check_invariants()
+    }
+
+    /// Hash the device's observable translation state: the live
+    /// mapping (with tags), per-block bookkeeping, the free/bad pools,
+    /// the write frontiers and every counter ledger. Iteration orders
+    /// are all structural (vec index, BTreeSet, per-channel FIFO), so
+    /// the fingerprint is replay-deterministic.
+    fn fingerprint(&self, h: &mut crate::analysis::audit::Fnv64) {
+        let mapped = self.l2p.iter().filter(|e| e.is_some()).count();
+        h.write_usize(mapped);
+        for (lpn, entry) in self.l2p.iter().enumerate() {
+            if let Some(addr) = entry {
+                h.write_usize(lpn);
+                h.write_u64(addr.channel as u64);
+                h.write_u64(addr.die as u64);
+                h.write_u32(addr.block);
+                h.write_u32(addr.page);
+                h.write_u64(self.tags[lpn]);
+            }
+        }
+        for b in &self.blocks {
+            h.write_u32(b.write_ptr);
+            h.write_u32(b.valid_count);
+            h.write_u32(b.pe_cycles);
+            h.write_u32(b.suspect);
+        }
+        h.write_usize(self.bad_blocks.len());
+        for &b in &self.bad_blocks {
+            h.write_u32(b);
+        }
+        for q in &self.free.per_channel {
+            h.write_usize(q.len());
+            for &(seq, block) in q {
+                h.write_u64(seq);
+                h.write_u32(block);
+            }
+        }
+        for a in &self.active {
+            match a {
+                None => h.write_u64(0),
+                Some(b) => h.write_u64(u64::from(*b) + 1),
+            }
+        }
+        h.write_usize(self.next_channel);
+        h.write_u64(self.stats.host_writes);
+        h.write_u64(self.stats.gc_writes);
+        h.write_u64(self.stats.gc_runs);
+        h.write_u64(self.stats.reads);
+        h.write_u64(self.stats.trims);
+        h.write_u64(self.retry_recoveries);
+        let e = self.ecc.stats();
+        h.write_u64(e.pages);
+        h.write_u64(e.corrected_pages);
+        h.write_u64(e.corrected_bits);
+        h.write_u64(e.uncorrectable);
+        h.write_u64(e.retries);
+        let f = self.flash.stats();
+        h.write_u64(f.reads);
+        h.write_u64(f.programs);
+        h.write_u64(f.erases);
+        h.write_u64(f.bytes_read);
+        h.write_u64(f.bytes_written);
     }
 }
 
@@ -1160,7 +1275,7 @@ mod tests {
         prop::check("FTL preserves latest write under random workload", |rng| {
             let mut ftl = small_ftl();
             let n = ftl.logical_pages() as u32;
-            let mut shadow = std::collections::HashMap::new();
+            let mut shadow = std::collections::BTreeMap::new();
             for i in 0..600u64 {
                 let lpn = rng.below(n as u64) as u32;
                 ftl.write(lpn, i, SimTime::ZERO).unwrap();

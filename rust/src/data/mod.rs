@@ -314,7 +314,7 @@ mod tests {
     fn shard_cycles_through_all_ids() {
         let d = dataset();
         let mut s = Shard::new(&d, None, (0..10).collect(), 3).unwrap();
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for id in s.next_ids(10).unwrap() {
             seen.insert(id);
         }

@@ -92,9 +92,10 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, VecDeque};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::allreduce::ring_time_shared;
+use crate::analysis::audit::{Auditable, Fnv64};
 use crate::config::{ExperimentConfig, WorkloadSpec};
 use crate::coordinator::{tune, TuneConfig};
 use crate::csd::{CsdConfig, EccStats, WearReport};
@@ -149,6 +150,17 @@ pub struct FleetConfig {
     /// fast-forward-safe). `false` is the per-step reference path for
     /// equivalence checks and benches.
     pub fast_forward: bool,
+    /// Run [`FleetRuntime::full_audit`] after every processed event
+    /// (DESIGN.md §Static-Analysis): every registered
+    /// [`Auditable`](crate::analysis::audit::Auditable) component —
+    /// event queue, device pool (FTL/flash/free-list per bay), data
+    /// plane (incl. the DLM), job slab — re-checks its invariants,
+    /// plus the cross-component ledgers. Purely read-only, so results
+    /// are bit-identical with the audit off; it only converts a latent
+    /// corruption into an error at the first event exhibiting it. Off
+    /// by default (it is O(state) per event); the property harness and
+    /// `--audit` turn it on.
+    pub audit: bool,
     pub tune: TuneConfig,
     pub power: PowerConfig,
     pub tunnel: TunnelConfig,
@@ -174,6 +186,7 @@ impl Default for FleetConfig {
             retain_jobs: false,
             image_bytes: 12 * 1024,
             fast_forward: true,
+            audit: false,
             tune: TuneConfig::default(),
             power: PowerConfig::default(),
             tunnel: TunnelConfig::default(),
@@ -400,6 +413,109 @@ impl JobSlab {
     fn slot_high_water(&self) -> usize {
         self.slots.len()
     }
+
+    /// Release-mode promotion of the slab's `debug_assert!`s: every
+    /// slot is either indexed (occupied, matching generation and id)
+    /// or on the free list (vacant), exactly once.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut owner = vec![None::<JobId>; self.slots.len()];
+        for (id, r) in &self.index {
+            let slot = r.slot as usize;
+            ensure!(slot < self.slots.len(), "{id} indexed to slot {slot} out of range");
+            ensure!(
+                self.slots[slot].gen == r.gen,
+                "{id} holds a stale ref to slot {slot}: gen {} vs slot gen {}",
+                r.gen,
+                self.slots[slot].gen
+            );
+            let job = self.slots[slot]
+                .job
+                .as_ref()
+                .with_context(|| format!("{id} indexed to vacant slot {slot}"))?;
+            ensure!(job.id == *id, "slot {slot} holds {} but is indexed as {id}", job.id);
+            ensure!(
+                owner[slot].replace(*id).is_none(),
+                "slot {slot} indexed twice (second owner {id})"
+            );
+        }
+        let mut freed = vec![false; self.slots.len()];
+        for &s in &self.free {
+            let slot = s as usize;
+            ensure!(slot < self.slots.len(), "free list names slot {slot} out of range");
+            ensure!(
+                self.slots[slot].job.is_none(),
+                "free list names occupied slot {slot}"
+            );
+            ensure!(!freed[slot], "slot {slot} on the free list twice");
+            ensure!(owner[slot].is_none(), "slot {slot} both indexed and free");
+            freed[slot] = true;
+        }
+        ensure!(
+            self.index.len() + self.free.len() == self.slots.len(),
+            "slab leak: {} indexed + {} free != {} slots",
+            self.index.len(),
+            self.free.len(),
+            self.slots.len()
+        );
+        Ok(())
+    }
+}
+
+impl Auditable for JobSlab {
+    fn component(&self) -> &'static str {
+        "job-slab"
+    }
+
+    fn audit(&self) -> Result<()> {
+        self.check_invariants()
+    }
+
+    /// Digest of the live table: slab shape plus each job's observable
+    /// progress ledgers, in id (submission) order.
+    fn fingerprint(&self, h: &mut Fnv64) {
+        h.write_usize(self.slots.len());
+        h.write_usize(self.free.len());
+        h.write_usize(self.index.len());
+        for (id, r) in &self.index {
+            h.write_u64(id.0);
+            h.write_u32(r.slot);
+            h.write_u32(r.gen);
+            let j = self.slots[r.slot as usize].job.as_ref().expect("indexed slot occupied");
+            h.write_u32(match j.state {
+                JobState::Queued => 0,
+                JobState::Running => 1,
+                JobState::Completed => 2,
+                JobState::Cancelled => 3,
+            });
+            h.write_usize(j.devices.len());
+            for &d in &j.devices {
+                h.write_usize(d);
+            }
+            h.write_bool(j.holds_host);
+            h.write_usize(j.bs_csd);
+            h.write_usize(j.bs_host);
+            h.write_usize(j.steps_per_epoch);
+            h.write_usize(j.images_target);
+            h.write_usize(j.images_done);
+            h.write_usize(j.steps_done);
+            h.write_usize(j.retunes);
+            h.write_u64(j.submitted_at.as_ns());
+            h.write_u64(j.admitted_at.as_ns());
+            h.write_u64(j.finished_at.as_ns());
+            h.write_u64(j.sync_time.as_ns());
+            h.write_u64(j.link_bytes);
+            h.write_u64(j.flash_reads);
+            h.write_u64(j.flash_progs);
+            h.write_u64(j.staged_host_bytes);
+            h.write_u64(j.moved_bytes);
+            h.write_u64(j.moved_images);
+            h.write_u64(j.lock_wait.as_ns());
+            h.write_u64(j.stage_ready.as_ns());
+            h.write_bool(j.drained);
+            h.write_bool(j.pending.is_some());
+            h.write_u32(j.data_cursor);
+        }
+    }
 }
 
 /// Fleet-level accumulators of retired (terminal) jobs, folded in at
@@ -423,6 +539,10 @@ struct FleetTotals {
 impl FleetTotals {
     fn absorb(&mut self, r: &JobReport) {
         self.images += r.images;
+        // lint: allow(float-ledger) — the fleet energy total is an f64
+        // by contract; bit-identity holds because retirement order is
+        // identical across modes (module docs), not because the sum is
+        // integer.
         self.energy_j += r.energy_j;
         self.bytes_moved += r.bytes_moved;
         self.retunes += r.retunes;
@@ -436,12 +556,34 @@ impl FleetTotals {
                 unreachable!("absorbed a non-terminal report")
             }
         }
+        // lint: allow(float-ledger) — wait *statistics* are seconds by
+        // design; the underlying SimTime ledgers stay integer ns.
         self.queue_wait.add(r.queue_wait.as_secs_f64());
+        // lint: allow(float-ledger) — same contract as queue_wait.
         self.lock_wait.add(r.lock_wait.as_secs_f64());
     }
 
     fn retired(&self) -> usize {
         self.completed + self.cancelled
+    }
+
+    /// Fold the accumulators into a session fingerprint. Float totals
+    /// enter as raw IEEE bits — any accumulation-order divergence
+    /// between two runs shows up here verbatim.
+    fn fingerprint(&self, h: &mut Fnv64) {
+        h.write_usize(self.images);
+        h.write_f64_bits(self.energy_j);
+        h.write_u64(self.bytes_moved);
+        h.write_usize(self.retunes);
+        h.write_usize(self.completed);
+        h.write_usize(self.cancelled);
+        h.write_usize(self.drained);
+        for stat in [&self.queue_wait, &self.lock_wait] {
+            h.write_usize(stat.count());
+            h.write_f64_bits(stat.sum());
+            h.write_f64_bits(stat.min());
+            h.write_f64_bits(stat.max());
+        }
     }
 }
 
@@ -849,6 +991,12 @@ impl FleetRuntime {
             // inside an event handler, so end-of-life is only reachable
             // here — a safe point where no step booking is in flight.
             self.process_eol()?;
+            // The guard: with `audit` on, every component re-proves its
+            // invariants after every event — read-only, so the session
+            // stays bit-identical to an unaudited one.
+            if self.cfg.audit {
+                self.full_audit()?;
+            }
         }
         Ok(())
     }
@@ -881,6 +1029,101 @@ impl FleetRuntime {
             RuntimeEvent::Degraded { device, factor, health }
         };
         self.log.push(LogEntry { at, event });
+    }
+
+    /// Every [`Auditable`] component registered with the runtime, in
+    /// fingerprint order. Single source for [`FleetRuntime::full_audit`]
+    /// and [`FleetRuntime::fingerprint`], so the audited surface and
+    /// the fingerprinted surface can never drift apart.
+    fn auditables(&self) -> [&dyn Auditable; 4] {
+        [&self.events, &self.pool, &self.plane, &self.jobs]
+    }
+
+    /// Re-check every registered component's invariants plus the
+    /// runtime's own cross-component ledgers (DESIGN.md
+    /// §Static-Analysis). Read-only: running it (or not) never changes
+    /// a result bit. With [`FleetConfig::audit`] it runs after every
+    /// processed event, so a latent corruption errors out at the first
+    /// event that exhibits it — and a bit-identity failure bisects to
+    /// the first divergent event via [`FleetRuntime::fingerprint`].
+    pub fn full_audit(&self) -> Result<()> {
+        for c in self.auditables() {
+            c.audit().with_context(|| {
+                format!("full audit: component '{}' failed at {}", c.component(), self.now)
+            })?;
+        }
+        // Cross-component: the live counter matches the table.
+        let live = self.jobs.values().filter(|j| !j.state.is_terminal()).count();
+        ensure!(
+            live == self.live_jobs,
+            "live-job counter {} but the table holds {live} non-terminal job(s)",
+            self.live_jobs
+        );
+        ensure!(
+            self.peak_live_jobs >= self.live_jobs,
+            "peak_live_jobs {} below live_jobs {}",
+            self.peak_live_jobs,
+            self.live_jobs
+        );
+        // The host grant names a live job that actually holds it.
+        if let Some(id) = self.host_held_by {
+            let j = self
+                .jobs
+                .get(&id)
+                .with_context(|| format!("host held by {id}, which is not in the table"))?;
+            ensure!(j.holds_host, "host held by {id} but the job does not record it");
+            ensure!(!j.state.is_terminal(), "host held by terminal {id}");
+        }
+        // Id monotonicity: nothing tracked was assigned past the cursor.
+        for id in self.arrivals.keys() {
+            ensure!(*id < self.next_id, "pending arrival job{id} >= id cursor {}", self.next_id);
+        }
+        for q in &self.queue {
+            ensure!(q.id.0 < self.next_id, "queued {} >= id cursor {}", q.id, self.next_id);
+        }
+        Ok(())
+    }
+
+    /// Deterministic FNV-1a digest of the session's observable state:
+    /// the clock, the admission pipeline, the retired-job accumulators
+    /// and every registered component ([`FleetRuntime::auditables`]).
+    /// Two equivalent executions (fast-forward vs per-step, streaming
+    /// vs retained at matched visibility, audit on vs off, any
+    /// `run_until` slicing at the same instant) must produce the same
+    /// value — compare per event to bisect a bit-identity failure to
+    /// the first divergent event. The drained [`FleetRuntime::take_log`]
+    /// stream is deliberately excluded: it is a consumable, not state.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.now.as_ns());
+        h.write_u64(self.next_id);
+        h.write_usize(self.live_jobs);
+        h.write_usize(self.peak_live_jobs);
+        h.write_usize(self.devices_replaced);
+        h.write_bool(self.host_held_by.is_some());
+        if let Some(id) = self.host_held_by {
+            h.write_u64(id.0);
+        }
+        h.write_usize(self.arrivals.len());
+        for (id, a) in &self.arrivals {
+            h.write_u64(*id);
+            h.write_u64(a.at.as_ns());
+        }
+        h.write_usize(self.queue.len());
+        for q in &self.queue {
+            h.write_u64(q.id.0);
+            h.write_u64(q.submitted_at.as_ns());
+        }
+        self.totals.fingerprint(&mut h);
+        h.write_u64(self.retired_wear.erases);
+        h.write_u64(self.retired_wear.retired_blocks);
+        h.write_u64(self.retired_ecc.pages);
+        h.write_u64(self.retired_ecc.uncorrectable);
+        for c in self.auditables() {
+            h.write_str(c.component());
+            c.fingerprint(&mut h);
+        }
+        h.finish()
     }
 
     /// Session summary (see [`FleetReport::jobs`] for what the per-job
@@ -2388,5 +2631,118 @@ mod tests {
             // Truly unknown ids still error.
             assert!(rt.cancel(JobId(99), rt.now()).is_err());
         }
+    }
+
+    #[test]
+    fn job_slab_reuses_slots_and_audits_clean() {
+        let mk = |i: u64| {
+            cancelled_stub(
+                JobId(i),
+                job("mobilenet_v2", 0, false, 1),
+                SimTime::ZERO,
+                SimTime::ZERO,
+            )
+            .unwrap()
+        };
+        let mut slab = JobSlab::default();
+        slab.check_invariants().unwrap();
+        for i in 0..4 {
+            slab.insert(mk(i));
+        }
+        slab.check_invariants().unwrap();
+        assert!(slab.remove(&JobId(1)).is_some());
+        assert!(slab.remove(&JobId(2)).is_some());
+        slab.check_invariants().unwrap();
+        // Freed slots are reused LIFO — the table never grows past
+        // peak occupancy — and a reused slot's bumped generation keeps
+        // the audit clean.
+        slab.insert(mk(4));
+        slab.check_invariants().unwrap();
+        assert_eq!(slab.slot_high_water(), 4);
+        let fp = |s: &JobSlab| {
+            let mut h = Fnv64::new();
+            s.fingerprint(&mut h);
+            h.finish()
+        };
+        let before = fp(&slab);
+        assert!(slab.remove(&JobId(4)).is_some());
+        slab.check_invariants().unwrap();
+        assert_ne!(before, fp(&slab), "the live set is part of the digest");
+        assert_eq!(slab.component(), "job-slab");
+    }
+
+    #[test]
+    fn full_audit_detects_a_corrupted_ledger() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 2,
+            stage_io: false,
+            ..Default::default()
+        });
+        rt.submit(job("squeezenet", 2, false, 2));
+        rt.run_until_idle().unwrap();
+        rt.full_audit().unwrap();
+        // The audit is not a rubber stamp: corrupt one cross-component
+        // ledger and the next full_audit must say which one.
+        rt.live_jobs += 1;
+        let err = rt.full_audit().unwrap_err().to_string();
+        assert!(err.contains("live-job counter"), "unexpected audit error: {err}");
+    }
+
+    /// The determinism guard must be invisible: a session with `audit`
+    /// on (every component re-proving its invariants after every
+    /// event) is bit-identical — log stream, report, energy bits,
+    /// state fingerprint — to the same session with it off, across
+    /// both executors and randomized `run_until` slicings. The
+    /// fingerprint is also slicing-invariant, so a violation bisects
+    /// to the first divergent event.
+    #[test]
+    fn property_audit_on_is_bit_identical_to_audit_off() {
+        crate::util::prop::check_n("audit on == audit off", 6, |rng| {
+            let fast_forward = rng.bool(0.5);
+            let mut cuts: Vec<u64> = (0..rng.usize_below(4)).map(|_| rng.below(600)).collect();
+            cuts.sort_unstable();
+            let run = |audit: bool, sliced: bool| {
+                let mut rt = FleetRuntime::new(FleetConfig {
+                    total_csds: 4,
+                    stage_io: false,
+                    fast_forward,
+                    audit,
+                    ..Default::default()
+                });
+                rt.submit(job("mobilenet_v2", 2, true, 6));
+                rt.submit(job("squeezenet", 2, false, 4));
+                let c = rt.submit(job("squeezenet", 1, false, 3));
+                rt.inject_degradation(SimTime::secs(40), 0, 0.7);
+                rt.cancel(c, SimTime::secs(5)).unwrap();
+                let mut logs: Vec<String> = Vec::new();
+                if sliced {
+                    for &s in &cuts {
+                        rt.run_until(SimTime::secs(s)).unwrap();
+                        logs.extend(rt.take_log().iter().map(|e| e.to_string()));
+                        // The harness audits even when the config does
+                        // not — full_audit is read-only either way.
+                        rt.full_audit().unwrap();
+                    }
+                }
+                rt.run_until_idle().unwrap();
+                logs.extend(rt.take_log().iter().map(|e| e.to_string()));
+                rt.full_audit().unwrap();
+                (logs, rt.report(), rt.fingerprint())
+            };
+            let (la, ra, fa) = run(true, true);
+            let (lb, rb, fb) = run(false, true);
+            let (_, _, fc) = run(false, false);
+            assert_eq!(la, lb, "log streams must be identical");
+            assert_eq!(fa, fb, "state fingerprints must be identical");
+            assert_eq!(fb, fc, "the fingerprint must be slicing-invariant");
+            assert_eq!(ra.makespan, rb.makespan);
+            assert_eq!(ra.total_images, rb.total_images);
+            assert_eq!(ra.total_energy_j.to_bits(), rb.total_energy_j.to_bits());
+            assert_eq!(ra.jobs_energy_j.to_bits(), rb.jobs_energy_j.to_bits());
+            assert_eq!(ra.link_bytes, rb.link_bytes);
+            assert_eq!(ra.bytes_moved, rb.bytes_moved);
+            assert_eq!(ra.retired, rb.retired);
+            assert_eq!(ra.peak_live_jobs, rb.peak_live_jobs);
+        });
     }
 }

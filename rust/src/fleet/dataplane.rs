@@ -43,6 +43,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use anyhow::{bail, ensure, Result};
 
+use crate::analysis::audit::{Auditable, Fnv64};
 use crate::coordinator::Placement;
 use crate::csd::NewportCsd;
 use crate::data::{Dataset, ImageId, Visibility};
@@ -789,6 +790,202 @@ impl DataPlane {
         plane.staging = staging;
         Ok(())
     }
+
+    /// Audit the plane: per-job slot-allocator and shard-map
+    /// consistency, the privacy guarantee over the whole transfer
+    /// ledger, transfer/stat conservation, and the DLM's own
+    /// invariants (DESIGN.md §Static-Analysis).
+    pub fn check_invariants(&self) -> Result<()> {
+        for (job, p) in &self.jobs {
+            ensure!(
+                p.slots.len() == p.devices.len() && p.shards.len() == p.devices.len(),
+                "{job}: {} slot allocator(s) / {} shard(s) for {} device(s)",
+                p.slots.len(),
+                p.shards.len(),
+                p.devices.len()
+            );
+            for (i, s) in p.slots.iter().enumerate() {
+                let mut used = BTreeSet::new();
+                for (&id, &slot) in &s.of {
+                    ensure!(
+                        slot < s.next,
+                        "{job}: image {id} on device {i} holds slot {slot} >= cursor {}",
+                        s.next
+                    );
+                    ensure!(used.insert(slot), "{job}: slot {slot} double-booked on device {i}");
+                    ensure!(
+                        !s.free.contains(&slot),
+                        "{job}: slot {slot} on device {i} both allocated and free"
+                    );
+                }
+                for &slot in &s.free {
+                    ensure!(
+                        slot < s.next,
+                        "{job}: free slot {slot} on device {i} >= cursor {}",
+                        s.next
+                    );
+                }
+                ensure!(
+                    s.of.len() + s.free.len() == s.next as usize,
+                    "{job}: device {i} slot leak ({} allocated + {} free != {} carved)",
+                    s.of.len(),
+                    s.free.len(),
+                    s.next
+                );
+            }
+            for (&id, &home) in &p.public_home {
+                ensure!(home < p.slots.len(), "{job}: image {id} homed on group index {home}");
+                ensure!(
+                    p.slots[home].of.contains_key(&id),
+                    "{job}: public_home says image {id} is staged on device {home}, \
+                     but it holds no slot there"
+                );
+                ensure!(
+                    matches!(p.dataset.visibility(id)?, Visibility::Public),
+                    "{job}: private image {id} in the public home map"
+                );
+            }
+            for (i, shard) in p.shards.iter().enumerate() {
+                for &id in shard {
+                    ensure!(
+                        p.slots[i].of.contains_key(&id),
+                        "{job}: shard image {id} not resident on its device {i}"
+                    );
+                    if let Visibility::Private { csd } = p.dataset.visibility(id)? {
+                        ensure!(
+                            csd == i,
+                            "{job}: private image {id} of csd{csd} sharded on device {i}"
+                        );
+                    }
+                }
+            }
+            let committed = self.dlm.version_id(p.res);
+            ensure!(
+                p.version == committed,
+                "{job}: group observed journal version {} but the DLM committed {committed}",
+                p.version
+            );
+        }
+        // The §III privacy invariant re-proved over the whole ledger
+        // (for jobs whose dataset is still installed), plus transfer /
+        // stat conservation — every movement funnels through
+        // `record_transfer`, so these totals must tie out exactly.
+        let mut ledger_bytes = 0u64;
+        for rec in &self.transfers {
+            ensure!(rec.from != rec.to, "self-transfer of image {} in the ledger", rec.image);
+            if let Some(p) = self.jobs.get(&rec.job) {
+                ensure!(
+                    matches!(p.dataset.visibility(rec.image)?, Visibility::Public),
+                    "privacy violation in the ledger: private image {} crossed {} -> {}",
+                    rec.image,
+                    rec.from,
+                    rec.to
+                );
+            }
+            ledger_bytes += rec.bytes;
+        }
+        ensure!(
+            ledger_bytes == self.stats.moved_bytes,
+            "transfer ledger carries {ledger_bytes} B but stats book {} B moved",
+            self.stats.moved_bytes
+        );
+        ensure!(
+            self.transfers.len() as u64 == self.stats.moved_images + self.stats.host_pushes,
+            "{} transfer record(s) vs {} relocation(s) + {} host push(es)",
+            self.transfers.len(),
+            self.stats.moved_images,
+            self.stats.host_pushes
+        );
+        self.dlm.check_invariants()
+    }
+}
+
+fn hash_node(h: &mut Fnv64, n: NodeId) {
+    match n {
+        NodeId::Host => h.write_u32(0),
+        NodeId::Csd(i) => {
+            h.write_u32(1);
+            h.write_usize(i);
+        }
+    }
+}
+
+impl Auditable for DataPlane {
+    fn component(&self) -> &'static str {
+        "data-plane"
+    }
+
+    fn audit(&self) -> Result<()> {
+        self.check_invariants()
+    }
+
+    /// Digest of every installed shard map (slots, homes, shards,
+    /// staging plan, journal version), the transfer ledger, the stats
+    /// block and the DLM.
+    fn fingerprint(&self, h: &mut Fnv64) {
+        h.write_usize(self.image_bytes);
+        h.write_usize(self.jobs.len());
+        for (job, p) in &self.jobs {
+            h.write_u64(job.0);
+            h.write_usize(p.devices.len());
+            for &d in &p.devices {
+                h.write_usize(d);
+            }
+            h.write_u32(p.ppi);
+            h.write_u64(p.version);
+            for s in &p.slots {
+                h.write_usize(s.of.len());
+                for (&id, &slot) in &s.of {
+                    h.write_usize(id);
+                    h.write_u32(slot);
+                }
+                h.write_usize(s.free.len());
+                for &f in &s.free {
+                    h.write_u32(f);
+                }
+                h.write_u32(s.next);
+            }
+            h.write_usize(p.public_home.len());
+            for (&id, &home) in &p.public_home {
+                h.write_usize(id);
+                h.write_usize(home);
+            }
+            for shard in &p.shards {
+                h.write_usize(shard.len());
+                for &id in shard {
+                    h.write_usize(id);
+                }
+            }
+            h.write_usize(p.host_shard.len());
+            for &id in &p.host_shard {
+                h.write_usize(id);
+            }
+            h.write_usize(p.staging.stage.len());
+            for &t in &p.staging.stage {
+                h.write_u64(t.as_ns());
+            }
+            h.write_u64(p.staging.host_stage.as_ns());
+            h.write_u64(p.staging.flash_reads);
+            h.write_u64(p.staging.host_bytes);
+        }
+        h.write_usize(self.transfers.len());
+        for r in &self.transfers {
+            h.write_u64(r.job.0);
+            h.write_usize(r.image);
+            hash_node(h, r.from);
+            hash_node(h, r.to);
+            h.write_u64(r.bytes);
+        }
+        let s = &self.stats;
+        h.write_u64(s.layout_pages);
+        h.write_u64(s.rebalances);
+        h.write_u64(s.moved_images);
+        h.write_u64(s.moved_bytes);
+        h.write_u64(s.host_pushes);
+        h.write_u64(s.cancels);
+        h.write_u64(s.freed_pages);
+        self.dlm.fingerprint(h);
+    }
 }
 
 #[cfg(test)]
@@ -855,6 +1052,62 @@ mod tests {
         // host is the lock master).
         assert_eq!(plane.version(JobId(0)), 1);
         assert_eq!(tun.stats().bytes, 0);
+    }
+
+    #[test]
+    fn audit_holds_and_fingerprint_moves_across_every_window_kind() {
+        use crate::analysis::audit::fingerprint_of;
+        let (mut plane, mut pool, mut tun) = setup(2);
+        let d = dataset(400, vec![4, 4]);
+        plane.check_invariants().unwrap();
+        let fp_empty = fingerprint_of(&plane);
+
+        let before = placement(&d, 2, 8, 16, false);
+        plane
+            .admit(
+                JobId(0),
+                d.clone(),
+                &before,
+                &[0, 1],
+                false,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::ZERO,
+            )
+            .unwrap();
+        plane.check_invariants().unwrap();
+        let fp_admitted = fingerprint_of(&plane);
+        assert_ne!(fp_empty, fp_admitted, "an installed shard map must move the digest");
+
+        let after = crate::coordinator::balance_weighted(&d, 2, 8, 16, false, &[0.5, 1.0]).unwrap();
+        plane
+            .rebalance(
+                JobId(0),
+                &after,
+                false,
+                8,
+                16,
+                1 << 20,
+                32 * 1024,
+                &mut pool,
+                &mut tun,
+                SimTime::secs(10),
+            )
+            .unwrap();
+        plane.check_invariants().unwrap();
+        let fp_rebalanced = fingerprint_of(&plane);
+        assert_ne!(fp_admitted, fp_rebalanced, "moved shards must move the digest");
+
+        plane.cancel(JobId(0), &mut pool, &mut tun, SimTime::secs(20)).unwrap();
+        plane.check_invariants().unwrap();
+        // The ledger and stats survive the teardown, so the digest does
+        // not return to the empty-plane value.
+        assert_ne!(fingerprint_of(&plane), fp_empty);
+        assert_eq!(plane.component(), "data-plane");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! `PerfModel::newport_scale` models for a whole cluster — here it is
 //! tracked per device so one sick drive only slows its own job.
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
+use crate::analysis::audit::{Auditable, Fnv64};
 use crate::csd::{CsdConfig, EccStats, NewportCsd, WearReport};
 use crate::sim::SimTime;
 
@@ -224,6 +225,48 @@ impl DevicePool {
         d.preloaded = true;
         Ok(())
     }
+
+    /// Verify every bay: health inside the modeled band, and each
+    /// module's FTL internally coherent (the audit path).
+    pub fn check_invariants(&self) -> Result<()> {
+        for (i, d) in self.devices.iter().enumerate() {
+            ensure!(
+                d.health.is_finite() && (MIN_HEALTH..=1.0).contains(&d.health),
+                "device {i}: health {} outside [{MIN_HEALTH}, 1.0]",
+                d.health
+            );
+            d.csd
+                .ftl_ref()
+                .check_invariants()
+                .with_context(|| format!("device {i} (generation {}) ftl", d.generation))?;
+        }
+        Ok(())
+    }
+}
+
+impl Auditable for DevicePool {
+    fn component(&self) -> &'static str {
+        "device-pool"
+    }
+
+    fn audit(&self) -> crate::Result<()> {
+        self.check_invariants()
+    }
+
+    fn fingerprint(&self, h: &mut Fnv64) {
+        h.write_usize(self.devices.len());
+        for (i, d) in self.devices.iter().enumerate() {
+            h.write_usize(i);
+            h.write_u32(d.generation);
+            h.write_f64_bits(d.health);
+            h.write_bool(d.preloaded);
+            match d.assigned {
+                None => h.write_u64(0),
+                Some(j) => h.write_u64(j.0.wrapping_add(1)),
+            }
+            d.csd.ftl_ref().fingerprint(h);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +405,26 @@ mod tests {
         assert!(!p.devices[0].preloaded);
         let (live, _) = p.wear_totals();
         assert_eq!(live.retired_blocks, 0, "live totals reset; history returned to caller");
+    }
+
+    #[test]
+    fn audit_and_fingerprint_track_pool_state() {
+        use crate::analysis::audit::fingerprint_of;
+        let mut p = DevicePool::new(3, &CsdConfig::default());
+        // DevicePool::check_invariants holds on a fresh pool and after
+        // every mutation below; the fingerprint moves with the state.
+        p.check_invariants().unwrap();
+        let fresh = fingerprint_of(&p);
+        assert_eq!(fresh, fingerprint_of(&p), "fingerprint is a pure function");
+        p.degrade(1, 0.5).unwrap();
+        p.check_invariants().unwrap();
+        let degraded = fingerprint_of(&p);
+        assert_ne!(fresh, degraded, "health change must move the fingerprint");
+        p.carve(1, JobId(7)).unwrap();
+        p.check_invariants().unwrap();
+        assert_ne!(degraded, fingerprint_of(&p), "assignment must move the fingerprint");
+        p.preload(0, 4, SimTime::ZERO).unwrap();
+        p.check_invariants().unwrap();
     }
 
     #[test]

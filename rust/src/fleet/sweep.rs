@@ -43,6 +43,7 @@ pub fn runtime_for(spec: &WorkloadSpec) -> FleetRuntime {
         data_plane: spec.data_plane,
         fast_forward: spec.fast_forward,
         retain_jobs: spec.retain_jobs,
+        audit: spec.audit,
         ..FleetConfig::default()
     };
     cfg.csd.ftl.pe_limit = spec.endurance.pe_limit;
@@ -92,6 +93,11 @@ pub struct TraceSummary {
     /// Fleet-wide write amplification at trace end (live devices plus
     /// replaced-module history; 0 when nothing was written).
     pub waf: f64,
+    /// [`FleetRuntime::fingerprint`] of the drained session — the
+    /// one-u64 identity of the trace's end state. Part of the summary
+    /// so the sweep worker-count invariance property pins state
+    /// identity, not just the reported totals.
+    pub fingerprint: u64,
 }
 
 /// Drive one seeded trace in chunks, handing every structural
@@ -184,6 +190,7 @@ pub fn run_trace_with(
         drained: r.drained,
         devices_replaced: r.devices_replaced,
         waf: r.wear.waf,
+        fingerprint: rt.fingerprint(),
     };
     Ok((summary, rt))
 }
@@ -334,6 +341,7 @@ mod tests {
             cancels: vec![CancelSpec { job: 3, at_secs: 2.5 }],
             faults: vec![],
             endurance: Default::default(),
+            audit: false,
         }
     }
 
@@ -373,6 +381,29 @@ mod tests {
         assert_eq!(one.traces.len(), seeds.len());
         assert_eq!(one.total_jobs, seeds.len() * base.jobs);
         assert_eq!(one.queue_wait.count(), one.total_jobs);
+    }
+
+    #[test]
+    fn trace_fingerprint_is_invariant_to_audit_and_matches_the_replay() {
+        // The end-state fingerprint is one u64 — the cheapest possible
+        // cross-run identity check. It must agree between the chunked
+        // driver and the all-upfront replay, and between audited and
+        // unaudited runs of the same spec.
+        let spec = small_spec();
+        let (_, rt) = run_trace_with(&spec, |_| {}).expect("trace runs");
+
+        let mut audited = spec.clone();
+        audited.audit = true;
+        let (_, rt_audited) = run_trace_with(&audited, |_| {}).expect("audited trace runs");
+
+        let mut oracle = runtime_for(&spec);
+        oracle.load_workload(&spec).expect("replay loads");
+        oracle.run_until_idle().expect("replay drains");
+        oracle.take_log();
+        oracle.full_audit().expect("the drained replay audits clean");
+
+        assert_eq!(rt.fingerprint(), oracle.fingerprint());
+        assert_eq!(rt.fingerprint(), rt_audited.fingerprint());
     }
 
     #[test]

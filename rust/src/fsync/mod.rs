@@ -268,9 +268,29 @@ impl Dlm {
         Ok(granted)
     }
 
-    /// Invariant: at most one EX holder, EX never coexists with PR,
-    /// and no node holds the same resource twice.
+    /// Invariant: the intern tables agree (`names`, `by_name` and
+    /// `states` describe the same resources), at most one EX holder,
+    /// EX never coexists with PR, and no node holds the same resource
+    /// twice.
     pub fn check_invariants(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.names.len() == self.states.len(),
+            "names {} != states {}",
+            self.names.len(),
+            self.states.len()
+        );
+        anyhow::ensure!(
+            self.by_name.len() == self.names.len(),
+            "by_name {} != names {}",
+            self.by_name.len(),
+            self.names.len()
+        );
+        for (name, &idx) in &self.by_name {
+            anyhow::ensure!(
+                self.names.get(idx as usize) == Some(name),
+                "by_name[{name:?}] = {idx} does not round-trip"
+            );
+        }
         for (i, state) in self.states.iter().enumerate() {
             let res = &self.names[i];
             let ex = state.holders.iter().filter(|(_, m)| *m == LockMode::Ex).count();
@@ -291,6 +311,51 @@ impl Dlm {
             }
         }
         Ok(())
+    }
+}
+
+fn hash_party(h: &mut crate::analysis::audit::Fnv64, node: NodeId, mode: LockMode) {
+    match node {
+        NodeId::Host => h.write_u64(0),
+        NodeId::Csd(i) => {
+            h.write_u64(1);
+            h.write_usize(i);
+        }
+    }
+    h.write_u64(match mode {
+        LockMode::Pr => 0,
+        LockMode::Ex => 1,
+    });
+}
+
+impl crate::analysis::audit::Auditable for Dlm {
+    fn component(&self) -> &'static str {
+        "dlm"
+    }
+
+    fn audit(&self) -> crate::Result<()> {
+        self.check_invariants()
+    }
+
+    fn fingerprint(&self, h: &mut crate::analysis::audit::Fnv64) {
+        h.write_usize(self.names.len());
+        for (name, state) in self.names.iter().zip(&self.states) {
+            h.write_str(name);
+            h.write_u64(state.version);
+            h.write_usize(state.holders.len());
+            for &(node, mode) in &state.holders {
+                hash_party(h, node, mode);
+            }
+            h.write_usize(state.queue.len());
+            for &(node, mode) in &state.queue {
+                hash_party(h, node, mode);
+            }
+        }
+        h.write_u64(self.stats.requests);
+        h.write_u64(self.stats.grants);
+        h.write_u64(self.stats.queued);
+        h.write_u64(self.stats.releases);
+        h.write_usize(self.msg_bytes);
     }
 }
 

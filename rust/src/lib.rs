@@ -24,6 +24,7 @@
 //! table/figure to a module and bench (§7).
 
 pub mod allreduce;
+pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -39,6 +40,7 @@ pub mod runtime;
 pub mod sim;
 pub mod tunnel;
 pub mod util;
+pub mod xla;
 
 /// Crate-wide result type (PJRT, I/O and logic errors all flow as anyhow).
 pub type Result<T> = anyhow::Result<T>;

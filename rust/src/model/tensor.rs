@@ -1,5 +1,6 @@
 //! A minimal dense f32 tensor — the host-side mirror of one PJRT buffer.
 
+use crate::xla;
 use crate::Result;
 
 /// Dense row-major f32 tensor.

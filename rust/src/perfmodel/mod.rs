@@ -20,6 +20,9 @@
 //! [`NetId::resolve`] (DESIGN.md §Perf).
 
 use std::cell::RefCell;
+// The memo is a keyed cache, never iterated, so hasher order cannot
+// leak into any result. lint: allow(hash-iter)
+#[allow(clippy::disallowed_types)]
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
@@ -168,6 +171,8 @@ pub struct PerfModel {
     pub newport_scale: f64,
     /// Memoized step times for the Algorithm-1 tuning sweep, which
     /// revisits the same (device, net, batch) probes many times.
+    /// Lookup-only (never iterated). lint: allow(hash-iter)
+    #[allow(clippy::disallowed_types)]
     memo: RefCell<HashMap<StepTimeKey, SimTime>>,
 }
 
@@ -180,6 +185,7 @@ impl Default for PerfModel {
 impl PerfModel {
     /// A model with per-device speed multipliers (1.0 = calibrated).
     pub fn with_scales(host_scale: f64, newport_scale: f64) -> Self {
+        // lint: allow(hash-iter)
         Self { host_scale, newport_scale, memo: RefCell::new(HashMap::new()) }
     }
 

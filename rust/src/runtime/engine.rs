@@ -5,10 +5,13 @@
 //! → `HloModuleProto::from_text_file` → `XlaComputation` → compile on a
 //! shared `PjRtClient::cpu()` → `execute` with `Literal` args.
 
+#[allow(clippy::disallowed_types)]
+// lint: allow(hash-iter) — compile cache is keyed lookup only, never iterated
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::model::{ParamStore, Tensor};
+use crate::xla;
 use crate::Result;
 
 use super::manifest::{Manifest, NetworkManifest};
@@ -36,6 +39,8 @@ pub struct EvalOutput {
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
+    #[allow(clippy::disallowed_types)]
+    // lint: allow(hash-iter) — keyed lookup only, never iterated
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
@@ -44,7 +49,10 @@ impl Engine {
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+        #[allow(clippy::disallowed_types)]
+        // lint: allow(hash-iter) — keyed lookup only, never iterated
+        let cache = Mutex::new(HashMap::new());
+        Ok(Self { client, manifest, cache })
     }
 
     pub fn manifest(&self) -> &Manifest {

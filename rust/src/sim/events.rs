@@ -11,6 +11,10 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use anyhow::ensure;
+
+use crate::analysis::audit::{Auditable, Fnv64};
+
 use super::SimTime;
 
 /// An event scheduled for a point in simulated time, carrying a typed
@@ -212,6 +216,100 @@ impl<E> EventQueue<E> {
             .collect();
         self.tombstones = 0;
     }
+
+    /// Verify the slab/heap bookkeeping wholesale (the audit path):
+    /// counters match the slab, the free list is exact, every live heap
+    /// key routes to a matching occupied slot, the heap top is live,
+    /// and tombstones respect the compaction bound.
+    pub fn check_invariants(&self) -> crate::Result<()> {
+        let occupied = self.slots.iter().filter(|s| s.payload.is_some()).count();
+        ensure!(occupied == self.live, "live {} != occupied slots {}", self.live, occupied);
+        ensure!(
+            self.heap.len() == self.live + self.tombstones,
+            "heap len {} != live {} + tombstones {}",
+            self.heap.len(),
+            self.live,
+            self.tombstones
+        );
+        ensure!(
+            self.free.len() + self.live == self.slots.len(),
+            "free {} + live {} != slots {}",
+            self.free.len(),
+            self.live,
+            self.slots.len()
+        );
+        let mut on_free = vec![false; self.slots.len()];
+        for &slot in &self.free {
+            let s = self
+                .slots
+                .get(slot as usize)
+                .ok_or_else(|| anyhow::anyhow!("free-list slot {slot} out of range"))?;
+            ensure!(s.payload.is_none(), "free-list slot {slot} still holds a payload");
+            ensure!(!on_free[slot as usize], "slot {slot} on the free list twice");
+            on_free[slot as usize] = true;
+        }
+        let mut heap_live = 0usize;
+        for Reverse((_, seq, slot, stamp)) in self.heap.iter() {
+            let s = self
+                .slots
+                .get(*slot as usize)
+                .ok_or_else(|| anyhow::anyhow!("heap slot {slot} out of range"))?;
+            if s.stamp == *stamp && s.payload.is_some() {
+                ensure!(s.seq == *seq, "heap seq {seq} != slot seq {} (slot {slot})", s.seq);
+                heap_live += 1;
+            }
+        }
+        ensure!(heap_live == self.live, "live heap keys {} != live {}", heap_live, self.live);
+        if let Some(Reverse((_, _, slot, stamp))) = self.heap.peek() {
+            let s = &self.slots[*slot as usize];
+            ensure!(s.stamp == *stamp && s.payload.is_some(), "heap top is a tombstone");
+        }
+        for s in &self.slots {
+            if s.payload.is_some() {
+                ensure!(s.seq < self.next_seq, "slot seq {} >= next_seq {}", s.seq, self.next_seq);
+            }
+        }
+        ensure!(
+            self.tombstones <= COMPACT_FLOOR || self.tombstones * 2 <= self.heap.len(),
+            "tombstones {} exceed the compaction bound (heap {})",
+            self.tombstones,
+            self.heap.len()
+        );
+        Ok(())
+    }
+}
+
+impl<E> Auditable for EventQueue<E> {
+    fn component(&self) -> &'static str {
+        "event-queue"
+    }
+
+    fn audit(&self) -> crate::Result<()> {
+        self.check_invariants()
+    }
+
+    /// Hash the *live schedule* — the sorted `(time, seq)` set plus the
+    /// sequence counter. The heap's internal arrangement and tombstones
+    /// are history artifacts, not observable state, so they are
+    /// deliberately excluded; payloads are opaque (`E` is unbounded)
+    /// but `(time, seq)` uniquely identifies each pending event.
+    fn fingerprint(&self, h: &mut Fnv64) {
+        let mut live: Vec<(u64, u64)> = self
+            .heap
+            .iter()
+            .filter_map(|Reverse((at, seq, slot, stamp))| {
+                let s = &self.slots[*slot as usize];
+                (s.stamp == *stamp && s.payload.is_some()).then_some((at.as_ns(), *seq))
+            })
+            .collect();
+        live.sort_unstable();
+        h.write_usize(live.len());
+        for (at, seq) in live {
+            h.write_u64(at);
+            h.write_u64(seq);
+        }
+        h.write_u64(self.next_seq);
+    }
 }
 
 /// Borrowing iterator over events up to (and including) a deadline —
@@ -364,6 +462,70 @@ mod tests {
                 last = (e.at, e.seq);
             }
         });
+    }
+
+    #[test]
+    fn property_audit_holds_under_random_interleavings() {
+        // EventQueue::check_invariants must hold after every mutation,
+        // and the fingerprint must be a pure function of the live set.
+        crate::util::prop::check("EventQueue audit under schedule/cancel/pop", |rng| {
+            let mut q: EventQueue<u64> = EventQueue::new();
+            let mut twin: EventQueue<u64> = EventQueue::new();
+            let mut ids = Vec::new();
+            for step in 0..200u64 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let at = SimTime::ns(rng.below(50));
+                        ids.push(q.schedule(at, step));
+                        twin.schedule(at, step);
+                    }
+                    2 => {
+                        if !ids.is_empty() {
+                            let i = rng.usize_below(ids.len());
+                            let id = ids.swap_remove(i);
+                            let a = q.cancel(id);
+                            let b = twin.cancel(id);
+                            assert_eq!(a, b);
+                        }
+                    }
+                    _ => {
+                        let a = q.pop().map(|e| (e.at, e.seq, e.payload));
+                        let b = twin.pop().map(|e| (e.at, e.seq, e.payload));
+                        assert_eq!(a, b);
+                    }
+                }
+                q.check_invariants().unwrap();
+                q.audit().unwrap();
+                assert_eq!(
+                    crate::analysis::audit::fingerprint_of(&q),
+                    crate::analysis::audit::fingerprint_of(&twin),
+                    "same op history must fingerprint identically"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_live_set_only() {
+        let mut a: EventQueue<&str> = EventQueue::new();
+        let mut b: EventQueue<&str> = EventQueue::new();
+        a.schedule(SimTime::ms(1), "x");
+        let dead = a.schedule(SimTime::ms(2), "y");
+        assert!(a.cancel(dead));
+        b.schedule(SimTime::ms(1), "x");
+        b.schedule(SimTime::ms(2), "y");
+        // Different live sets -> different fingerprints.
+        assert_ne!(
+            crate::analysis::audit::fingerprint_of(&a),
+            crate::analysis::audit::fingerprint_of(&b)
+        );
+        b.pop();
+        // Still different: b holds ("2ms", seq 1), a holds ("1ms", seq 0).
+        assert_ne!(
+            crate::analysis::audit::fingerprint_of(&a),
+            crate::analysis::audit::fingerprint_of(&b)
+        );
+        assert_eq!(a.component(), "event-queue");
     }
 
     #[test]
