@@ -1,0 +1,181 @@
+//! Bench: crash faults, checkpoint/restore and the tunnel retry
+//! ladder at fleet scale (DESIGN.md §Crash-Recovery).
+//!
+//! Three sections, guarded then measured:
+//!
+//! 1. **Off-identity guard** — a trace whose checkpoint interval can
+//!    never be reached and whose link-fault probability is effectively
+//!    zero must be bit-identical to the all-defaults-off run. Asserted
+//!    before anything is recorded.
+//! 2. **Checkpoint interval vs goodput** — the same crash schedule
+//!    replayed under a sweep of checkpoint cadences: tight intervals
+//!    pay steady-state checkpoint I/O to lose almost nothing per
+//!    crash; loose intervals run lean and redo big tails. Measures
+//!    lost steps, checkpoint bytes and completed-jobs-per-hour per
+//!    interval.
+//! 3. **Retry-ladder overhead** — the crash-free trace with a lossy
+//!    tunnel (5% per-attempt failure, 9-rung ladder): every loss
+//!    retries with exponential backoff and none escalates, pricing the
+//!    ladder's makespan stretch against the faultless baseline.
+//!
+//! Emits machine-readable numbers to `BENCH_8.json` (section
+//! `"crash"`).
+//!
+//! Run: `cargo bench --bench crash`
+
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Instant;
+
+use stannis::config::{
+    CheckpointSpec, CrashSpec, ExperimentConfig, LinkFaultSpec, WeightedJob, WorkloadSpec,
+};
+use stannis::fleet::run_trace;
+use stannis::metrics::{f, print_table, record_bench_json_to};
+
+const POOL: usize = 24;
+const JOBS: usize = 400;
+
+/// Host-free, small-dataset mix (same shape as the endurance bench):
+/// the trace exercises admission churn and ring traffic, not one
+/// shared bottleneck.
+fn lean_mix() -> Vec<WeightedJob> {
+    vec![
+        WeightedJob {
+            weight: 3.0,
+            job: ExperimentConfig {
+                network: "mobilenet_v2".into(),
+                num_csds: 3,
+                include_host: false,
+                steps: 20,
+                public_images: 384,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+        WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: "squeezenet".into(),
+                num_csds: 2,
+                include_host: false,
+                steps: 15,
+                public_images: 256,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        },
+    ]
+}
+
+fn base_spec() -> WorkloadSpec {
+    WorkloadSpec {
+        total_csds: POOL,
+        stage_io: false,
+        jobs: JOBS,
+        mean_interarrival_secs: 12.0,
+        seed: 23,
+        mix: lean_mix(),
+        ..Default::default()
+    }
+}
+
+/// A dozen bay crashes spread across the trace's arrival window.
+fn crash_schedule() -> Vec<CrashSpec> {
+    (0..12)
+        .map(|i| CrashSpec { device: (i * 5) % POOL, at_secs: 200.0 + 350.0 * i as f64 })
+        .collect()
+}
+
+fn main() {
+    // --- Guard: unreachable knobs must be invisible, to the bit -----------
+    let base = base_spec();
+    let mut armed = base.clone();
+    armed.checkpoint = CheckpointSpec { interval_steps: 1 << 40, host_copy: true };
+    armed.link_fault = LinkFaultSpec { fail_prob: 1e-300, ..Default::default() };
+    let off = run_trace(&base).expect("crash-pipeline-off guard trace");
+    let on = run_trace(&armed).expect("unreachable-knobs guard trace");
+    assert_eq!(
+        off, on,
+        "unreachable checkpoint/link-fault knobs must leave the trace \
+         bit-identical to the crash pipeline off"
+    );
+    assert_eq!(on.crashed, 0);
+    assert_eq!(on.lost_steps, 0);
+    assert_eq!(on.checkpoint_bytes, 0);
+    assert_eq!(on.link_retries, 0);
+    assert_eq!(on.devices_replaced, 0);
+
+    // --- Checkpoint interval vs goodput under a fixed crash schedule ------
+    let intervals: &[u64] = &[0, 2, 5, 10, 25];
+    let mut rows = Vec::new();
+    let mut recorded: Vec<(String, f64)> = Vec::new();
+    for &interval in intervals {
+        let mut spec = base_spec();
+        spec.crashes = crash_schedule();
+        spec.checkpoint = CheckpointSpec { interval_steps: interval, host_copy: false };
+        let t0 = Instant::now();
+        let s = run_trace(&spec).expect("crash-schedule trace");
+        let wall = t0.elapsed().as_secs_f64();
+        // Crash conservation at trace scale: every crash retires one
+        // cancelled victim and submits one successor, so every original
+        // arrival still completes.
+        assert_eq!(s.completed, JOBS, "interval {interval}: arrivals must all complete");
+        assert_eq!(s.cancelled, s.crashed, "interval {interval}: only crashes cancel here");
+        assert_eq!(s.devices_replaced, 12, "every scheduled crash swaps one module");
+        let hours = s.makespan.as_secs_f64() / 3600.0;
+        let jobs_per_hour = s.completed as f64 / hours.max(1e-12);
+        let ckpt_mb = s.checkpoint_bytes as f64 / 1e6;
+        rows.push(vec![
+            if interval == 0 { "off".into() } else { interval.to_string() },
+            s.crashed.to_string(),
+            s.lost_steps.to_string(),
+            f(ckpt_mb, 1),
+            f(hours, 2),
+            f(jobs_per_hour, 1),
+            format!("{wall:.2} s"),
+        ]);
+        let tag = if interval == 0 { "off".to_string() } else { interval.to_string() };
+        recorded.push((format!("ck_{tag}_crashed"), s.crashed as f64));
+        recorded.push((format!("ck_{tag}_lost_steps"), s.lost_steps as f64));
+        recorded.push((format!("ck_{tag}_checkpoint_mb"), ckpt_mb));
+        recorded.push((format!("ck_{tag}_makespan_h"), hours));
+        recorded.push((format!("ck_{tag}_jobs_per_hour"), jobs_per_hour));
+    }
+    print_table(
+        &format!("Checkpoint interval vs goodput — {JOBS} arrivals, 12 scheduled crashes"),
+        &["interval", "crashed", "lost steps", "ckpt MB", "makespan h", "jobs/h", "wall"],
+        &rows,
+    );
+
+    // --- Retry-ladder overhead on a lossy (but never fatal) tunnel --------
+    let mut lossy = base_spec();
+    lossy.link_fault =
+        LinkFaultSpec { fail_prob: 0.05, max_retries: 8, ..Default::default() };
+    let t0 = Instant::now();
+    let faultless = run_trace(&base).expect("faultless baseline trace");
+    let base_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let retried = run_trace(&lossy).expect("lossy-tunnel trace");
+    let lossy_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(retried.crashed, 0, "a 9-rung ladder must never exhaust at 5% loss");
+    assert!(retried.link_retries > 0, "a 5% loss rate must exercise the ladder");
+    assert_eq!(retried.completed, JOBS);
+    let stretch =
+        retried.makespan.as_secs_f64() / faultless.makespan.as_secs_f64().max(1e-12);
+    println!(
+        "retry ladder: {} retries, makespan x{:.4} vs faultless ({:.2}s vs {:.2}s wall)",
+        retried.link_retries, stretch, lossy_wall, base_wall,
+    );
+
+    let mut pairs: Vec<(&str, f64)> = vec![
+        ("jobs", JOBS as f64),
+        ("scheduled_crashes", 12.0),
+        ("retry_link_retries", retried.link_retries as f64),
+        ("retry_makespan_stretch", stretch),
+    ];
+    pairs.extend(recorded.iter().map(|(k, v)| (k.as_str(), *v)));
+    record_bench_json_to("BENCH_8.json", "crash", &pairs);
+}

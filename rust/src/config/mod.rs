@@ -244,6 +244,144 @@ impl CancelSpec {
     }
 }
 
+/// A scheduled abrupt bay failure (DESIGN.md §Crash-Recovery): at
+/// `at_secs` of simulated time `device` dies mid-flight. Unlike a
+/// [`FaultSpec`] degrade (which throttles and re-tunes) or end-of-life
+/// wear-out (which drains gracefully), a crash loses the in-flight
+/// step, force-releases the bay's DLM locks, swaps the bay, and
+/// resumes the tenant from its last checkpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct CrashSpec {
+    pub device: usize,
+    pub at_secs: f64,
+}
+
+impl CrashSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Self { device: j.field("device")?.as_usize()?, at_secs: j.field("at_secs")?.as_f64()? }
+            .validated()
+    }
+
+    /// Parse the CLI form `device:at_secs` (e.g. `3:45.5`).
+    pub fn parse_cli(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 2,
+            "crash spec {s:?} must be device:at_secs (e.g. 3:45.5)"
+        );
+        Self {
+            device: parts[0].parse().with_context(|| format!("device in {s:?}"))?,
+            at_secs: parts[1].parse().with_context(|| format!("at_secs in {s:?}"))?,
+        }
+        .validated()
+    }
+
+    fn validated(self) -> Result<Self> {
+        anyhow::ensure!(
+            self.at_secs >= 0.0 && self.at_secs.is_finite(),
+            "crash at_secs must be a non-negative time, got {}",
+            self.at_secs
+        );
+        Ok(self)
+    }
+}
+
+/// Checkpointing knobs (DESIGN.md §Crash-Recovery). Default *off*
+/// (`interval_steps == 0`): no checkpoint I/O is scheduled, no
+/// fast-forward window boundary is added, and the runtime is
+/// bit-identical to the pre-checkpoint simulator. With a nonzero
+/// interval every job writes its model state through the data plane's
+/// extent path every `interval_steps` steps; a crashed tenant resumes
+/// from the last completed checkpoint instead of step 0.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CheckpointSpec {
+    /// Steps between checkpoints. `0` = checkpointing off.
+    pub interval_steps: u64,
+    /// Also copy each checkpoint to the host over the tunnel (survives
+    /// loss of the whole group, costs tunnel bandwidth).
+    pub host_copy: bool,
+}
+
+impl CheckpointSpec {
+    pub fn armed(&self) -> bool {
+        self.interval_steps > 0
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut out = Self::default();
+        if let Some(v) = j.get("interval_steps") {
+            out.interval_steps = v.as_u64()?;
+        }
+        if let Some(v) = j.get("host_copy") {
+            out.host_copy = v.as_bool()?;
+        }
+        Ok(out)
+    }
+}
+
+/// Seeded transient tunnel-link failures (DESIGN.md §Crash-Recovery).
+/// Default *off* (`fail_prob == 0.0`): the tunnel never consults the
+/// ladder, no RNG is seeded, and send timings are bit-identical to the
+/// fault-free simulator. Armed, each hop over a link draws from that
+/// link's private RNG; a failed draw retries after exponentially
+/// growing backoff, and exhausting `max_retries` rungs escalates to a
+/// crash of the bay behind the link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFaultSpec {
+    /// Per-attempt failure probability in [0, 1). `0` = off.
+    pub fail_prob: f64,
+    /// Rungs of the retry ladder before escalating to a crash.
+    pub max_retries: u32,
+    /// Backoff before rung `r` retries: `backoff_base_us * 2^r`.
+    pub backoff_base_us: f64,
+    /// Seed of the per-link RNG forks.
+    pub seed: u64,
+}
+
+impl Default for LinkFaultSpec {
+    fn default() -> Self {
+        Self { fail_prob: 0.0, max_retries: 4, backoff_base_us: 50.0, seed: 0x11AB }
+    }
+}
+
+impl LinkFaultSpec {
+    pub fn armed(&self) -> bool {
+        self.fail_prob > 0.0
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut out = Self::default();
+        if let Some(v) = j.get("fail_prob") {
+            out.fail_prob = v.as_f64()?;
+        }
+        if let Some(v) = j.get("max_retries") {
+            out.max_retries = v.as_u64()? as u32;
+        }
+        if let Some(v) = j.get("backoff_base_us") {
+            out.backoff_base_us = v.as_f64()?;
+        }
+        if let Some(v) = j.get("seed") {
+            out.seed = v.as_u64()?;
+        }
+        Ok(out)
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.fail_prob),
+            "link fail_prob must sit in [0, 1), got {} (at 1.0 every message \
+             exhausts the ladder and the whole chassis crash-loops)",
+            self.fail_prob
+        );
+        anyhow::ensure!(
+            self.backoff_base_us >= 0.0 && self.backoff_base_us.is_finite(),
+            "link backoff_base_us must be a non-negative time, got {}",
+            self.backoff_base_us
+        );
+        Ok(())
+    }
+}
+
 /// Multi-job experiment spec for the fleet coordinator: a shared
 /// device pool plus many per-job [`ExperimentConfig`]s and an optional
 /// fault schedule.
@@ -264,6 +402,12 @@ pub struct FleetExperimentConfig {
     pub fast_forward: bool,
     pub jobs: Vec<ExperimentConfig>,
     pub faults: Vec<FaultSpec>,
+    /// Scheduled abrupt bay failures (DESIGN.md §Crash-Recovery).
+    pub crashes: Vec<CrashSpec>,
+    /// Checkpointing knobs; default off.
+    pub checkpoint: CheckpointSpec,
+    /// Transient tunnel-link failures; default off.
+    pub link_fault: LinkFaultSpec,
 }
 
 impl Default for FleetExperimentConfig {
@@ -275,6 +419,9 @@ impl Default for FleetExperimentConfig {
             fast_forward: true,
             jobs: Vec::new(),
             faults: Vec::new(),
+            crashes: Vec::new(),
+            checkpoint: CheckpointSpec::default(),
+            link_fault: LinkFaultSpec::default(),
         }
     }
 }
@@ -309,6 +456,18 @@ impl FleetExperimentConfig {
             for f in v.as_arr()? {
                 out.faults.push(FaultSpec::from_json(f)?);
             }
+        }
+        if let Some(v) = j.get("crashes") {
+            for c in v.as_arr()? {
+                out.crashes.push(CrashSpec::from_json(c)?);
+            }
+        }
+        if let Some(v) = j.get("checkpoint") {
+            out.checkpoint = CheckpointSpec::from_json(v)?;
+        }
+        if let Some(v) = j.get("link_fault") {
+            out.link_fault = LinkFaultSpec::from_json(v)?;
+            out.link_fault.validate()?;
         }
         Ok(out)
     }
@@ -427,6 +586,15 @@ pub struct WorkloadSpec {
     /// Flash endurance knobs (retry ladder, block retirement, device
     /// end-of-life). Default off in every dimension.
     pub endurance: EnduranceSpec,
+    /// Scheduled abrupt bay failures (`--crash device:at_secs`,
+    /// repeatable; DESIGN.md §Crash-Recovery).
+    pub crashes: Vec<CrashSpec>,
+    /// Checkpointing knobs (`--checkpoint-steps`,
+    /// `--checkpoint-host-copy`). Default off.
+    pub checkpoint: CheckpointSpec,
+    /// Transient tunnel-link failures (`--link-fail-prob`,
+    /// `--link-retries`, `--link-backoff-us`). Default off.
+    pub link_fault: LinkFaultSpec,
     /// Run the runtime's full invariant audit after every event
     /// (`--audit`; DESIGN.md §Static-Analysis). Read-only — results
     /// are bit-identical either way — but O(state) per event, so off
@@ -450,6 +618,9 @@ impl Default for WorkloadSpec {
             cancels: Vec::new(),
             faults: Vec::new(),
             endurance: EnduranceSpec::default(),
+            crashes: Vec::new(),
+            checkpoint: CheckpointSpec::default(),
+            link_fault: LinkFaultSpec::default(),
             audit: false,
         }
     }
@@ -517,6 +688,17 @@ impl WorkloadSpec {
         if let Some(v) = j.get("endurance") {
             out.endurance = EnduranceSpec::from_json(v)?;
         }
+        if let Some(v) = j.get("crashes") {
+            for c in v.as_arr()? {
+                out.crashes.push(CrashSpec::from_json(c)?);
+            }
+        }
+        if let Some(v) = j.get("checkpoint") {
+            out.checkpoint = CheckpointSpec::from_json(v)?;
+        }
+        if let Some(v) = j.get("link_fault") {
+            out.link_fault = LinkFaultSpec::from_json(v)?;
+        }
         if let Some(v) = j.get("audit") {
             out.audit = v.as_bool()?;
         }
@@ -525,7 +707,9 @@ impl WorkloadSpec {
 
     /// Apply CLI overrides (`--total-csds`, `--jobs`, `--mean-arrival`,
     /// `--seed`, `--csds-per-job`, `--retain-jobs`, `--pe-limit`,
-    /// `--read-retries`, `--audit`).
+    /// `--read-retries`, `--crash`, `--checkpoint-steps`,
+    /// `--checkpoint-host-copy`, `--link-fail-prob`, `--link-retries`,
+    /// `--link-backoff-us`, `--audit`).
     pub fn apply_args(mut self, args: &Args) -> Result<Self> {
         self.total_csds = args.parse_or("total-csds", self.total_csds)?;
         self.jobs = args.parse_or("jobs", self.jobs)?;
@@ -557,13 +741,27 @@ impl WorkloadSpec {
         for d in args.get_all("degrade") {
             self.faults.push(FaultSpec::parse_cli(d)?);
         }
+        for c in args.get_all("crash") {
+            self.crashes.push(CrashSpec::parse_cli(c)?);
+        }
+        self.checkpoint.interval_steps =
+            args.parse_or("checkpoint-steps", self.checkpoint.interval_steps)?;
+        if args.flag("checkpoint-host-copy") {
+            self.checkpoint.host_copy = true;
+        }
+        self.link_fault.fail_prob =
+            args.parse_or("link-fail-prob", self.link_fault.fail_prob)?;
+        self.link_fault.max_retries =
+            args.parse_or("link-retries", self.link_fault.max_retries)?;
+        self.link_fault.backoff_base_us =
+            args.parse_or("link-backoff-us", self.link_fault.backoff_base_us)?;
         self.validated()
     }
 
     /// Check the spec's invariants: at least one arrival, a finite
     /// non-negative mean gap, strictly positive finite mix weights,
-    /// cancel indices inside the trace, fault devices inside the pool,
-    /// and sane endurance knobs. `from_file`/`apply_args` run this,
+    /// cancel indices inside the trace, fault and crash devices inside
+    /// the pool, and sane endurance/link-fault knobs. `from_file`/`apply_args` run this,
     /// and so do the trace drivers
     /// ([`crate::fleet::FleetRuntime::load_workload`],
     /// [`crate::fleet::sweep::run_trace_with`]) — a hand-built spec
@@ -608,6 +806,17 @@ impl WorkloadSpec {
             "endurance retry_step_us must be a non-negative time, got {}",
             self.endurance.retry_step_us
         );
+        for (i, c) in self.crashes.iter().enumerate() {
+            anyhow::ensure!(
+                c.device < self.total_csds,
+                "crash entry {i} (at {}s) targets device {} but the pool has only \
+                 {} device(s)",
+                c.at_secs,
+                c.device,
+                self.total_csds
+            );
+        }
+        self.link_fault.validate()?;
         Ok(())
     }
 
@@ -846,6 +1055,82 @@ mod tests {
         std::fs::write(&p, r#"{"jobs": 2, "retain_jobs": true}"#).unwrap();
         assert!(WorkloadSpec::from_file(&p).unwrap().retain_jobs);
         assert!(!WorkloadSpec::default().retain_jobs, "streaming is the default");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_cli_form_parses() {
+        let c = CrashSpec::parse_cli("3:45.5").unwrap();
+        assert_eq!(c.device, 3);
+        assert!((c.at_secs - 45.5).abs() < 1e-12);
+        assert!(CrashSpec::parse_cli("3").is_err());
+        assert!(CrashSpec::parse_cli("3:x").is_err());
+        assert!(CrashSpec::parse_cli("3:-5").is_err());
+        assert!(CrashSpec::parse_cli("3:30:0.6").is_err(), "fault form is not a crash");
+    }
+
+    #[test]
+    fn crash_pipeline_knobs_default_off_and_parse() {
+        // Every knob of the crash pipeline defaults off: a spec that
+        // never mentions them is the pre-crash-pipeline spec.
+        let d = WorkloadSpec::default();
+        assert!(d.crashes.is_empty());
+        assert!(!d.checkpoint.armed());
+        assert!(!d.link_fault.armed());
+        assert_eq!(d.checkpoint, CheckpointSpec::default());
+        assert_eq!(d.link_fault, LinkFaultSpec::default());
+
+        let dir = std::env::temp_dir().join(format!("stannis_crash_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("workload.json");
+        std::fs::write(
+            &p,
+            r#"{
+                "total_csds": 8,
+                "jobs": 4,
+                "crashes": [{"device": 2, "at_secs": 60.0}],
+                "checkpoint": {"interval_steps": 5, "host_copy": true},
+                "link_fault": {"fail_prob": 0.01, "max_retries": 6,
+                               "backoff_base_us": 25.0, "seed": 99}
+            }"#,
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_file(&p).unwrap();
+        assert_eq!(w.crashes.len(), 1);
+        assert_eq!(w.crashes[0].device, 2);
+        assert!((w.crashes[0].at_secs - 60.0).abs() < 1e-12);
+        assert_eq!(w.checkpoint.interval_steps, 5);
+        assert!(w.checkpoint.host_copy && w.checkpoint.armed());
+        assert!(w.link_fault.armed());
+        assert_eq!(w.link_fault.max_retries, 6);
+        assert_eq!(w.link_fault.seed, 99);
+        // A crash outside the pool is rejected with the entry named.
+        std::fs::write(
+            &p,
+            r#"{"total_csds": 4, "jobs": 2, "crashes": [{"device": 9, "at_secs": 1}]}"#,
+        )
+        .unwrap();
+        let err = WorkloadSpec::from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("crash entry 0"), "must name the entry, got: {err}");
+        // fail_prob == 1.0 is rejected (every message would crash-loop).
+        std::fs::write(&p, r#"{"jobs": 2, "link_fault": {"fail_prob": 1.0}}"#).unwrap();
+        assert!(WorkloadSpec::from_file(&p).is_err());
+        // CLI overrides: repeated --crash plus checkpoint/link knobs.
+        let args = crate::util::cli::Args::parse(
+            [
+                "--crash", "0:10", "--crash", "1:20", "--checkpoint-steps", "8",
+                "--checkpoint-host-copy", "--link-fail-prob", "0.05",
+                "--link-retries", "3", "--link-backoff-us", "10",
+            ]
+            .map(String::from),
+        )
+        .unwrap();
+        let w = WorkloadSpec::default().apply_args(&args).unwrap();
+        assert_eq!(w.crashes.len(), 2, "repeated --crash must not collapse");
+        assert_eq!(w.checkpoint.interval_steps, 8);
+        assert!(w.checkpoint.host_copy);
+        assert!((w.link_fault.fail_prob - 0.05).abs() < 1e-12);
+        assert_eq!(w.link_fault.max_retries, 3);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -96,7 +96,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::allreduce::ring_time_shared;
 use crate::analysis::audit::{Auditable, Fnv64};
-use crate::config::{ExperimentConfig, WorkloadSpec};
+use crate::config::{CheckpointSpec, ExperimentConfig, LinkFaultSpec, WorkloadSpec};
 use crate::coordinator::{tune, TuneConfig};
 use crate::csd::{CsdConfig, EccStats, WearReport};
 use crate::metrics::RunningStat;
@@ -161,6 +161,18 @@ pub struct FleetConfig {
     /// by default (it is O(state) per event); the property harness and
     /// `--audit` turn it on.
     pub audit: bool,
+    /// Periodic model-state checkpointing (DESIGN.md §Crash-Recovery):
+    /// every `interval_steps` completed steps a job writes its model
+    /// state as flash extents on every group device (plus an optional
+    /// tunnel copy to the host), and a later crash resumes the job
+    /// from the last checkpoint instead of step 0. Defaults off
+    /// (`interval_steps == 0`) — bit-identical to the pre-checkpoint
+    /// runtime.
+    pub checkpoint: CheckpointSpec,
+    /// Seeded transient tunnel-link failures with a bounded
+    /// retry/backoff ladder; a link that exhausts its ladder escalates
+    /// to a bay crash. Defaults off (`fail_prob == 0.0`).
+    pub link_fault: LinkFaultSpec,
     pub tune: TuneConfig,
     pub power: PowerConfig,
     pub tunnel: TunnelConfig,
@@ -187,6 +199,8 @@ impl Default for FleetConfig {
             image_bytes: 12 * 1024,
             fast_forward: true,
             audit: false,
+            checkpoint: CheckpointSpec::default(),
+            link_fault: LinkFaultSpec::default(),
             tune: TuneConfig::default(),
             power: PowerConfig::default(),
             tunnel: TunnelConfig::default(),
@@ -209,6 +223,10 @@ enum FleetEvent {
     /// Device health event: multiply `device`'s health by `factor`
     /// (`< 1` fault, `> 1` repair; clamped to at most 1.0).
     Degrade { device: usize, factor: f64 },
+    /// `device` dies abruptly (operator schedule or link-fault ladder
+    /// exhaustion): in-flight step lost, DLM locks force-released,
+    /// module swapped, tenant resumed from its last checkpoint.
+    Crash { device: usize },
 }
 
 /// A job whose arrival event has not fired yet.
@@ -272,6 +290,22 @@ pub enum RuntimeEvent {
     /// replacement); `generation` counts this bay's incarnations and
     /// the wear counters summarize the module being retired.
     Replaced { device: usize, generation: u32, retired_blocks: u64, erases: u64 },
+    /// A bay died abruptly (scheduled crash or a tunnel link that
+    /// exhausted its retry ladder) — the *ungraceful* sibling of
+    /// `WornOut` (DESIGN.md §Crash-Recovery). If a job held the bay,
+    /// its in-flight step burned, its DLM locks were force-released,
+    /// and the steps past its last checkpoint (`lost_steps`) were
+    /// resubmitted with the rest as `successor`.
+    Crashed {
+        device: usize,
+        job: Option<JobId>,
+        successor: Option<JobId>,
+        lost_steps: usize,
+        freed_pages: u64,
+    },
+    /// The job wrote a periodic model-state checkpoint (`bytes` of
+    /// flash extents across its group, plus the optional host copy).
+    Checkpointed { job: JobId, steps: usize, bytes: u64 },
 }
 
 impl std::fmt::Display for LogEntry {
@@ -325,6 +359,18 @@ impl std::fmt::Display for LogEntry {
                 f,
                 "device {device} replaced (incarnation {generation}): retired module had {retired_blocks} bad block(s), {erases} erase(s)"
             ),
+            RuntimeEvent::Crashed { device, job, successor, lost_steps, freed_pages } => {
+                match (job, successor) {
+                    (Some(j), Some(s)) => write!(
+                        f,
+                        "device {device} crashed: {j} lost {lost_steps} step(s) ({freed_pages} shard page(s) freed), resumed as {s}"
+                    ),
+                    _ => write!(f, "device {device} crashed (idle bay)"),
+                }
+            }
+            RuntimeEvent::Checkpointed { job, steps, bytes } => {
+                write!(f, "{job} checkpointed at step {steps}: {bytes} B")
+            }
         }
     }
 }
@@ -512,6 +558,10 @@ impl Auditable for JobSlab {
             h.write_u64(j.lock_wait.as_ns());
             h.write_u64(j.stage_ready.as_ns());
             h.write_bool(j.drained);
+            h.write_bool(j.crashed);
+            h.write_usize(j.ckpt_steps);
+            h.write_u64(j.ckpt_bytes);
+            h.write_usize(j.lost_steps);
             h.write_bool(j.pending.is_some());
             h.write_u32(j.data_cursor);
         }
@@ -532,6 +582,14 @@ struct FleetTotals {
     /// Jobs torn down by a device end-of-life drain (a subset of
     /// `cancelled`; their remaining steps were resubmitted).
     drained: usize,
+    /// Jobs killed by an abrupt bay crash (also a subset of
+    /// `cancelled`; each resumed as a successor from its checkpoint).
+    crashed: usize,
+    /// Completed-but-uncheckpointed steps those crashes lost (redone
+    /// by the successors).
+    lost_steps: usize,
+    /// Bytes of model-state checkpoints written across all jobs.
+    checkpoint_bytes: u64,
     queue_wait: RunningStat,
     lock_wait: RunningStat,
 }
@@ -549,6 +607,11 @@ impl FleetTotals {
         if r.drained {
             self.drained += 1;
         }
+        if r.crashed {
+            self.crashed += 1;
+        }
+        self.lost_steps += r.lost_steps;
+        self.checkpoint_bytes += r.checkpoint_bytes;
         match r.state {
             JobState::Completed => self.completed += 1,
             JobState::Cancelled => self.cancelled += 1,
@@ -578,6 +641,9 @@ impl FleetTotals {
         h.write_usize(self.completed);
         h.write_usize(self.cancelled);
         h.write_usize(self.drained);
+        h.write_usize(self.crashed);
+        h.write_usize(self.lost_steps);
+        h.write_u64(self.checkpoint_bytes);
         for stat in [&self.queue_wait, &self.lock_wait] {
             h.write_usize(stat.count());
             h.write_f64_bits(stat.sum());
@@ -634,6 +700,19 @@ pub struct FleetReport {
     /// `cancelled`; their remaining steps resubmitted as successors).
     /// Zero whenever endurance is off.
     pub drained: usize,
+    /// Jobs killed by an abrupt bay crash (also a subset of
+    /// `cancelled`; each resumed from its last checkpoint as a
+    /// successor). Zero with the crash pipeline off.
+    pub crashed: usize,
+    /// Completed-but-uncheckpointed steps those crashes lost — work
+    /// the successors redid.
+    pub lost_steps: usize,
+    /// Bytes of periodic model-state checkpoints written (flash
+    /// extents plus optional tunnel host copies).
+    pub checkpoint_bytes: u64,
+    /// Tunnel sends that hit the transient-fault retry ladder (each
+    /// retry backed off and retransmitted; zero with link faults off).
+    pub link_retries: u64,
     /// Device modules swapped at end-of-life (rolling replacement).
     pub devices_replaced: usize,
     /// Fleet-wide flash wear: the live devices plus the accumulated
@@ -688,9 +767,11 @@ pub struct FleetRuntime {
 
 impl FleetRuntime {
     pub fn new(cfg: FleetConfig) -> Self {
+        let mut tunnel = Tunnel::new(cfg.total_csds, cfg.tunnel.clone());
+        tunnel.arm_link_faults(cfg.link_fault);
         Self {
             pool: DevicePool::new(cfg.total_csds, &cfg.csd),
-            tunnel: Tunnel::new(cfg.total_csds, cfg.tunnel.clone()),
+            tunnel,
             plane: DataPlane::new(cfg.image_bytes),
             arrivals: BTreeMap::new(),
             queue: VecDeque::new(),
@@ -815,6 +896,17 @@ impl FleetRuntime {
         self.inject_degradation(at, device, factor.max(1.0));
     }
 
+    /// Schedule an abrupt bay crash at simulated time `at` (DESIGN.md
+    /// §Crash-Recovery): the tenant job's in-flight step is lost, the
+    /// dead node's DLM locks are force-released, the module is swapped
+    /// for a fresh one, and the job resumes from its last checkpoint
+    /// (no checkpoint ⇒ from step 0) with the lost steps ledgered.
+    pub fn inject_crash(&mut self, at: SimTime, device: usize) {
+        let at = at.max(self.now);
+        self.events.schedule(at, FleetEvent::Crash { device });
+        self.external_scheduled(at);
+    }
+
     /// The data plane's ledgers (transfer log, movement totals, DLM
     /// stats) — populated only when `FleetConfig::data_plane` is on.
     pub fn data_plane(&self) -> &DataPlane {
@@ -906,6 +998,11 @@ impl FleetRuntime {
             self.inject_degradation(at, f.device, f.factor);
             boundaries.push(at);
         }
+        for c in &spec.crashes {
+            let at = SimTime::from_secs_f64(c.at_secs);
+            self.inject_crash(at, c.device);
+            boundaries.push(at);
+        }
         boundaries.sort_unstable();
         boundaries.dedup();
         Ok(boundaries)
@@ -970,6 +1067,13 @@ impl FleetRuntime {
                     self.log_fault(ev.at, device, factor, health);
                     continue;
                 }
+                // A crash on an idle chassis swaps the module (state
+                // mutation, logged at the crash instant) without
+                // stretching the timeline.
+                FleetEvent::Crash { device } if idle => {
+                    self.crash_idle_bay(ev.at, device)?;
+                    continue;
+                }
                 // A cancel for a job that already finished (still in
                 // the table or retired out of it) is a no-op — it must
                 // not stretch the timeline.
@@ -985,7 +1089,13 @@ impl FleetRuntime {
                 FleetEvent::Arrive { job } => self.on_arrive(job)?,
                 FleetEvent::Cancel { job } => self.on_cancel(job)?,
                 FleetEvent::Degrade { device, factor } => self.on_degrade(device, factor)?,
+                FleetEvent::Crash { device } => self.on_crash(device)?,
             }
+            // A tunnel link that exhausted its retry ladder during this
+            // event's traffic escalates to a bay crash at the same
+            // instant (the final attempt went through, so nothing
+            // deadlocks — the bay just doesn't survive it).
+            self.process_link_faults()?;
             // Every path that wears flash (admission layout, rebalance
             // movement, legacy per-step staging, retry relocations) runs
             // inside an event handler, so end-of-life is only reachable
@@ -1141,6 +1251,7 @@ impl FleetRuntime {
         let mut jobs_energy_j = t.energy_j;
         let mut bytes_moved = t.bytes_moved;
         let mut retunes = t.retunes;
+        let mut checkpoint_bytes = t.checkpoint_bytes;
         let mut queue_wait = t.queue_wait.clone();
         let mut lock_wait = t.lock_wait.clone();
         for j in &jobs {
@@ -1151,6 +1262,7 @@ impl FleetRuntime {
             jobs_energy_j += j.energy_j;
             bytes_moved += j.bytes_moved;
             retunes += j.retunes;
+            checkpoint_bytes += j.checkpoint_bytes;
             queue_wait.add(j.queue_wait.as_secs_f64());
             lock_wait.add(j.lock_wait.as_secs_f64());
         }
@@ -1175,6 +1287,10 @@ impl FleetRuntime {
             retired: t.retired(),
             peak_live_jobs: self.peak_live_jobs,
             drained: t.drained,
+            crashed: t.crashed,
+            lost_steps: t.lost_steps,
+            checkpoint_bytes,
+            link_retries: self.tunnel.stats().retries,
             devices_replaced: self.devices_replaced,
             wear,
             ecc,
@@ -1349,6 +1465,10 @@ impl FleetRuntime {
             staging: Default::default(),
             meter: EnergyMeter::new(),
             drained: false,
+            crashed: false,
+            ckpt_steps: 0,
+            ckpt_bytes: 0,
+            lost_steps: 0,
             pending: None,
             data_cursor: 0,
             spec: q.spec,
@@ -1540,6 +1660,7 @@ impl FleetRuntime {
             self.retire(job);
             self.try_admit()
         } else {
+            self.maybe_checkpoint(id)?;
             self.schedule_step(id)
         }
     }
@@ -1667,6 +1788,14 @@ impl FleetRuntime {
         if self.cfg.stage_io && !self.cfg.data_plane {
             return Ok(());
         }
+        // Transient link faults draw one RNG value per tunnel hop, so
+        // sends are stateful and steps stop being exact repeats — the
+        // closed-form jump would book a different draw sequence than
+        // the per-step path. Armed faults fall back to the reference
+        // executor; off, this branch never taken.
+        if self.tunnel.link_faults_armed() {
+            return Ok(());
+        }
         // Scan phase: per running job, the in-flight step's period and
         // the projected completion time at one step per period.
         struct Window {
@@ -1697,12 +1826,23 @@ impl FleetRuntime {
         let Some(w_end) = horizon else { return Ok(()) };
         // Steps that END strictly before the window end are skippable;
         // the step ending at (or beyond) it remains in-flight.
+        let ck_interval = self.cfg.checkpoint.interval_steps;
         for w in &mut windows {
             if w.end < w_end {
                 // Ends at end, end+period, ...: how many land before
                 // w_end — i.e. ceil(span / period).
                 let span = w_end - w.end;
                 w.skip = span.as_ns().div_ceil(w.period.as_ns());
+            }
+            if ck_interval > 0 {
+                // Checkpoint steps must stay real events — the
+                // checkpoint I/O runs in `on_step_done`, which skipped
+                // steps never reach. The in-flight step is number
+                // `steps_done + 1`, so at most the steps up to (but not
+                // including) the next checkpoint multiple may be
+                // committed in closed form.
+                let done = self.jobs.get(&w.id).expect("job exists").steps_done as u64;
+                w.skip = w.skip.min(ck_interval - 1 - done % ck_interval);
             }
         }
         windows.retain(|w| w.skip > 0);
@@ -1930,6 +2070,201 @@ impl FleetRuntime {
         self.retire(job);
         Ok(successor)
     }
+
+    /// Periodic model-state checkpoint (DESIGN.md §Crash-Recovery),
+    /// run after each completed non-final step: when the step count
+    /// hits a multiple of `interval_steps`, the job writes its model
+    /// state as whole flash extents on every group device through the
+    /// data plane (real modeled I/O, charged on the device timelines),
+    /// optionally copies one replica to the host over the tunnel, and
+    /// records the covered step count as its resumption point. The
+    /// next step starts no earlier than the checkpoint completes.
+    /// No-op with checkpointing off; with the data plane off there is
+    /// no extent path to write through, so the checkpoint degrades to
+    /// the host copy (if requested) plus the resumption-point marker.
+    fn maybe_checkpoint(&mut self, id: JobId) -> Result<()> {
+        let ck = self.cfg.checkpoint;
+        if !ck.armed() {
+            return Ok(());
+        }
+        let (steps_done, param_bytes, first_dev) = {
+            let j = self.jobs.get(&id).expect("job exists");
+            (j.steps_done, j.net.sync_bytes() as u64, j.devices.first().copied())
+        };
+        if steps_done as u64 % ck.interval_steps != 0 {
+            return Ok(());
+        }
+        let (mut done, mut bytes, mut pages) = (self.now, 0u64, 0u64);
+        if self.cfg.data_plane {
+            let (flash_done, p, b) =
+                self.plane.checkpoint(id, param_bytes, &mut self.pool, self.now)?;
+            done = flash_done;
+            pages = p;
+            bytes = b;
+        }
+        let mut host_bytes = 0u64;
+        if ck.host_copy {
+            if let Some(d) = first_dev {
+                done = self.tunnel.send(NodeId::Csd(d), NodeId::Host, param_bytes as usize, done);
+                host_bytes = param_bytes;
+                bytes += param_bytes;
+            }
+        }
+        let j = self.jobs.get_mut(&id).expect("job exists");
+        j.ckpt_steps = steps_done;
+        j.ckpt_bytes += bytes;
+        j.flash_progs += pages;
+        j.link_bytes += host_bytes;
+        j.stage_ready = j.stage_ready.max(done);
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Checkpointed { job: id, steps: steps_done, bytes },
+        });
+        Ok(())
+    }
+
+    /// Drain the tunnel's exhausted-retry-ladder queue: each entry is a
+    /// link whose last rung failed during the event just dispatched,
+    /// and escalates to a crash of the corresponding bay at the current
+    /// instant. The teardown traffic of one crash may itself exhaust
+    /// further ladders; the loop drains those too (escalation order).
+    /// Terminates because a freshly swapped bay carries no assigned
+    /// job, so repeated crashes of the same link eventually stop
+    /// generating traffic. O(1) with link faults off.
+    fn process_link_faults(&mut self) -> Result<()> {
+        while let Some(device) = self.tunnel.take_exhausted_link() {
+            self.on_crash(device)?;
+        }
+        Ok(())
+    }
+
+    /// A crash landed on an idle chassis: swap the module and fold its
+    /// history in (state mutation, logged at the crash instant) without
+    /// advancing the clock — the fleet timeline must not stretch.
+    fn crash_idle_bay(&mut self, at: SimTime, device: usize) -> Result<()> {
+        ensure!(device < self.pool.len(), "no device {device} in the pool");
+        self.log.push(LogEntry {
+            at,
+            event: RuntimeEvent::Crashed {
+                device,
+                job: None,
+                successor: None,
+                lost_steps: 0,
+                freed_pages: 0,
+            },
+        });
+        let (wear, ecc) = self.pool.replace(device, &self.cfg.csd)?;
+        self.retired_wear.merge(wear);
+        self.retired_ecc.merge(ecc);
+        self.devices_replaced += 1;
+        self.log.push(LogEntry {
+            at,
+            event: RuntimeEvent::Replaced {
+                device,
+                generation: self.pool.generation(device),
+                retired_blocks: wear.retired_blocks,
+                erases: wear.erases,
+            },
+        });
+        Ok(())
+    }
+
+    /// A bay died abruptly (scheduled `--crash` fault or link-fault
+    /// escalation). Unlike the graceful end-of-life drain, nothing on
+    /// the module survives: the tenant's in-flight step is lost, any
+    /// DLM locks the dead node held are force-released, and the tenant
+    /// resumes from its last checkpoint (step 0 without one) rather
+    /// than from its completed-step count. The bay itself is swapped
+    /// for a factory-fresh module exactly like the EOL path.
+    fn on_crash(&mut self, device: usize) -> Result<()> {
+        ensure!(device < self.pool.len(), "no device {device} in the pool");
+        if let Some(id) = self.pool.assigned_job(device) {
+            self.crash_job(id, device)?;
+        } else {
+            self.log.push(LogEntry {
+                at: self.now,
+                event: RuntimeEvent::Crashed {
+                    device,
+                    job: None,
+                    successor: None,
+                    lost_steps: 0,
+                    freed_pages: 0,
+                },
+            });
+        }
+        let (wear, ecc) = self.pool.replace(device, &self.cfg.csd)?;
+        self.retired_wear.merge(wear);
+        self.retired_ecc.merge(ecc);
+        self.devices_replaced += 1;
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Replaced {
+                device,
+                generation: self.pool.generation(device),
+                retired_blocks: wear.retired_blocks,
+                erases: wear.erases,
+            },
+        });
+        self.try_admit()
+    }
+
+    /// Tear `id` down because `device` (one of its bays) crashed:
+    /// cancel-style teardown — abandon the in-flight step, force-release
+    /// the dead node's DLM state (journal-version bump), trim the shard
+    /// map — then resubmit from the last checkpoint. Steps past the
+    /// checkpoint were done but their state died with the module; they
+    /// are ledgered as `lost_steps` and the successor redoes them.
+    fn crash_job(&mut self, id: JobId, device: usize) -> Result<JobId> {
+        self.abandon_step(id);
+        let freed = if self.cfg.data_plane {
+            let before = self.tunnel.stats();
+            self.plane.force_release(&mut self.tunnel, NodeId::Csd(device), self.now);
+            let cost = self.plane.cancel(id, &mut self.pool, &mut self.tunnel, self.now)?;
+            let after = self.tunnel.stats();
+            let j = self.jobs.get_mut(&id).expect("crashed job exists");
+            j.link_bytes += after.bytes - before.bytes;
+            j.lock_wait += cost.lock_wait;
+            cost.pages_written
+        } else {
+            0
+        };
+        let (successor_spec, lost) = {
+            let j = self.jobs.get_mut(&id).expect("crashed job exists");
+            j.state = JobState::Cancelled;
+            j.crashed = true;
+            j.finished_at = self.now;
+            // Resume from the checkpointed prefix: completed steps past
+            // it are lost (redone by the successor), and with no
+            // checkpoint the successor restarts from step 0. At least
+            // one step always remains — the crash interrupted a running
+            // job, so its final step had not committed.
+            let ckpt = j.ckpt_steps.min(j.steps_done);
+            j.lost_steps = j.steps_done - ckpt;
+            let steps_left = j.spec.steps.max(1).saturating_sub(ckpt).max(1);
+            let mut spec = j.spec.clone();
+            spec.steps = steps_left;
+            (spec, j.lost_steps)
+        };
+        self.pool.release(id);
+        if self.host_held_by == Some(id) {
+            self.host_held_by = None;
+        }
+        let job = self.jobs.remove(&id).expect("crashed job exists");
+        self.live_jobs -= 1;
+        let successor = self.submit_at(self.now, successor_spec)?;
+        self.log.push(LogEntry {
+            at: self.now,
+            event: RuntimeEvent::Crashed {
+                device,
+                job: Some(id),
+                successor: Some(successor),
+                lost_steps: lost,
+                freed_pages: freed,
+            },
+        });
+        self.retire(job);
+        Ok(successor)
+    }
 }
 
 /// A zero-progress [`Job`] record for a job cancelled before it was
@@ -1970,6 +2305,10 @@ fn cancelled_stub(
         staging: Default::default(),
         meter: EnergyMeter::new(),
         drained: false,
+        crashed: false,
+        ckpt_steps: 0,
+        ckpt_bytes: 0,
+        lost_steps: 0,
         pending: None,
         data_cursor: 0,
         spec,
@@ -1985,6 +2324,7 @@ pub struct Fleet {
     rt: FleetRuntime,
     specs: Vec<ExperimentConfig>,
     faults: Vec<(SimTime, usize, f64)>,
+    crashes: Vec<(SimTime, usize)>,
     /// Jobs handed to the runtime so far — keeps predicted ids aligned
     /// with the runtime's assignment even across repeated `run` calls.
     submitted: u64,
@@ -1999,6 +2339,7 @@ impl Fleet {
             rt: FleetRuntime::new(cfg),
             specs: Vec::new(),
             faults: Vec::new(),
+            crashes: Vec::new(),
             submitted: 0,
         }
     }
@@ -2021,6 +2362,12 @@ impl Fleet {
         self.faults.push((at, device, factor));
     }
 
+    /// Schedule an abrupt bay crash (DESIGN.md §Crash-Recovery),
+    /// replayed as an event when `run` starts.
+    pub fn inject_crash(&mut self, at: SimTime, device: usize) {
+        self.crashes.push((at, device));
+    }
+
     /// Run every submitted job to completion; returns the fleet report.
     pub fn run(&mut self) -> Result<FleetReport> {
         for q in &self.specs {
@@ -2041,6 +2388,10 @@ impl Fleet {
             self.rt.inject_degradation(at, device, factor);
         }
         self.faults.clear();
+        for &(at, device) in &self.crashes {
+            self.rt.inject_crash(at, device);
+        }
+        self.crashes.clear();
         self.rt.run_until_idle()?;
         Ok(self.rt.report())
     }
@@ -2744,5 +3095,221 @@ mod tests {
             assert_eq!(ra.retired, rb.retired);
             assert_eq!(ra.peak_live_jobs, rb.peak_live_jobs);
         });
+    }
+
+    // ---- crash faults, checkpoint/restore, link retry ----------------
+
+    #[test]
+    fn crash_resumes_from_checkpoint_and_replaces_bay() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 3,
+            stage_io: false,
+            retain_jobs: true,
+            checkpoint: CheckpointSpec { interval_steps: 5, host_copy: false },
+            ..Default::default()
+        });
+        let a = rt.submit(job("squeezenet", 2, false, 5000));
+        // Bay 0 belongs to the job (lowest-index carve); kill it mid-run.
+        rt.inject_crash(SimTime::secs(100), 0);
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        assert_eq!(r.crashed, 1);
+        assert_eq!(r.cancelled, 1, "a crash counts as a cancel");
+        assert_eq!(r.devices_replaced, 1);
+        let find = |id: JobId| r.jobs.iter().find(|j| j.id == id).unwrap();
+        let victim = find(a);
+        assert_eq!(victim.state, JobState::Cancelled);
+        assert!(victim.crashed && !victim.drained);
+        assert!(
+            victim.steps_done >= 5,
+            "the crash must land after the first checkpoint, got {} steps",
+            victim.steps_done
+        );
+        // The checkpoint cadence pins the loss exactly: everything past
+        // the last interval boundary died with the module.
+        assert_eq!(victim.lost_steps, victim.steps_done % 5);
+        assert!(victim.checkpoint_bytes > 0, "periodic checkpoints must write flash");
+        let successor = find(JobId(1));
+        assert_eq!(successor.state, JobState::Completed);
+        assert!(!successor.crashed);
+        assert!(successor.checkpoint_bytes > 0, "the successor checkpoints too");
+        // Conservation: checkpointed prefix + successor's rerun covers
+        // the spec exactly once; the lost tail was redone.
+        assert_eq!(
+            (victim.steps_done - victim.lost_steps) + successor.steps_done,
+            5000,
+            "checkpointed steps + successor steps must cover the spec"
+        );
+        assert_eq!(r.lost_steps, victim.lost_steps);
+        assert_eq!(rt.pool.generation(0), 1, "the crashed bay was swapped");
+        let log = rt.take_log();
+        assert!(log.iter().any(|e| matches!(
+            e.event,
+            RuntimeEvent::Crashed { device: 0, job: Some(j), successor: Some(s), .. }
+                if j == a && s == JobId(1)
+        )));
+        assert!(log.iter().any(|e| matches!(
+            e.event,
+            RuntimeEvent::Checkpointed { job, .. } if job == a
+        )));
+        assert!(log.iter().any(|e| matches!(
+            e.event,
+            RuntimeEvent::Replaced { device: 0, generation: 1, .. }
+        )));
+        for e in &log {
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn crash_without_checkpoint_restarts_from_step_zero() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 3,
+            stage_io: false,
+            retain_jobs: true,
+            ..Default::default()
+        });
+        let a = rt.submit(job("squeezenet", 2, false, 5000));
+        rt.inject_crash(SimTime::secs(100), 0);
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        assert_eq!(r.crashed, 1);
+        let find = |id: JobId| r.jobs.iter().find(|j| j.id == id).unwrap();
+        let victim = find(a);
+        assert!(victim.crashed);
+        assert!(victim.steps_done > 0, "the crash must land mid-run");
+        // No checkpoint: every completed step is lost and the successor
+        // redoes the whole spec.
+        assert_eq!(victim.lost_steps, victim.steps_done);
+        assert_eq!(victim.checkpoint_bytes, 0);
+        assert_eq!(find(JobId(1)).steps_done, 5000);
+        assert_eq!(r.lost_steps, victim.steps_done);
+    }
+
+    #[test]
+    fn checkpointing_is_bit_identical_across_executors_and_costs_time() {
+        let run = |ff: bool, interval: u64| {
+            let mut fleet = Fleet::new(FleetConfig {
+                total_csds: 6,
+                stage_io: false,
+                fast_forward: ff,
+                checkpoint: CheckpointSpec { interval_steps: interval, host_copy: true },
+                ..Default::default()
+            });
+            fleet.submit(job("squeezenet", 3, false, 40));
+            fleet.submit(job("mobilenet_v2", 3, true, 25));
+            fleet.inject_degradation(SimTime::secs(100), 0, 0.7);
+            fleet.run().unwrap()
+        };
+        // The fast-forward must cap its windows at checkpoint
+        // boundaries so the periodic I/O runs as real events — the
+        // closed form stays exact, not approximate.
+        let a = run(true, 7);
+        let b = run(false, 7);
+        assert_eq!(a.makespan, b.makespan, "makespan must be bit-identical");
+        assert_eq!(a.total_images, b.total_images);
+        assert_eq!(a.link_bytes, b.link_bytes);
+        assert_eq!(a.checkpoint_bytes, b.checkpoint_bytes);
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.finished_at, y.finished_at);
+            assert_eq!(x.steps_done, y.steps_done);
+            assert_eq!(x.checkpoint_bytes, y.checkpoint_bytes);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+        assert!(a.checkpoint_bytes > 0, "both jobs checkpoint periodically");
+        assert_eq!(
+            a.checkpoint_bytes,
+            a.jobs.iter().map(|j| j.checkpoint_bytes).sum::<u64>(),
+            "the fleet total is the per-job ledger's sum"
+        );
+        // Checkpoints are real modeled I/O: flash extents + host copies
+        // cost simulated time and energy against the off baseline.
+        let off = run(true, 0);
+        assert_eq!(off.checkpoint_bytes, 0);
+        assert!(
+            a.makespan > off.makespan,
+            "checkpoint I/O must cost time: {} !> {}",
+            a.makespan,
+            off.makespan
+        );
+        assert!(a.total_energy_j > off.total_energy_j);
+    }
+
+    #[test]
+    fn crashing_an_idle_bay_swaps_it_without_stretching_the_timeline() {
+        let mut rt = FleetRuntime::new(FleetConfig {
+            total_csds: 4,
+            stage_io: false,
+            ..Default::default()
+        });
+        rt.submit(job("squeezenet", 2, false, 3));
+        // Device 3 is never carved; the crash fires long after the only
+        // job completed, on an idle fleet.
+        rt.inject_crash(SimTime::secs(1_000_000), 3);
+        rt.run_until_idle().unwrap();
+        let r = rt.report();
+        assert_eq!(r.crashed, 0, "no tenant, no crashed job");
+        assert_eq!(r.cancelled, 0);
+        assert_eq!(r.devices_replaced, 1, "the module is still swapped");
+        assert_eq!(rt.pool.generation(3), 1);
+        assert!(
+            r.makespan < SimTime::secs(1_000_000),
+            "an idle-bay crash must not stretch the timeline, got {}",
+            r.makespan
+        );
+        let log = rt.take_log();
+        assert!(log.iter().any(|e| matches!(
+            e.event,
+            RuntimeEvent::Crashed { device: 3, job: None, successor: None, .. }
+        )));
+    }
+
+    #[test]
+    fn transient_link_faults_retry_deterministically_without_escalating() {
+        // A deep ladder over a modest per-attempt failure rate: sends
+        // hit the retry path constantly but the ladder never exhausts,
+        // so no bay crashes — the run just stretches by the backoff.
+        let run = |armed: bool, ff: bool| {
+            let mut fleet = Fleet::new(FleetConfig {
+                total_csds: 2,
+                stage_io: false,
+                fast_forward: ff,
+                link_fault: if armed {
+                    LinkFaultSpec { fail_prob: 0.2, max_retries: 12, ..Default::default() }
+                } else {
+                    LinkFaultSpec::default()
+                },
+                ..Default::default()
+            });
+            fleet.submit(job("squeezenet", 2, false, 30));
+            fleet.run().unwrap()
+        };
+        let on = run(true, true);
+        assert!(on.link_retries > 0, "a 20% loss rate must exercise the ladder");
+        assert_eq!(on.crashed, 0, "a 13-rung ladder never exhausts at 20% loss");
+        assert_eq!(on.devices_replaced, 0);
+        assert_eq!(on.retired, 1);
+        // Per-link RNG forks are seeded, so the whole run — including
+        // which attempts fail and how far each backoff reaches — is
+        // reproducible to the bit, and the fast-forward disarms itself
+        // (per-send draws are stateful) so both executors agree.
+        let again = run(true, true);
+        assert_eq!(on.makespan, again.makespan);
+        assert_eq!(on.link_retries, again.link_retries);
+        assert_eq!(on.total_energy_j.to_bits(), again.total_energy_j.to_bits());
+        let per_step = run(true, false);
+        assert_eq!(on.makespan, per_step.makespan, "armed ladder must disarm fast-forward");
+        assert_eq!(on.link_retries, per_step.link_retries);
+        assert_eq!(on.total_energy_j.to_bits(), per_step.total_energy_j.to_bits());
+        // Backoff is real simulated time against the faultless baseline.
+        let off = run(false, true);
+        assert_eq!(off.link_retries, 0);
+        assert!(
+            on.makespan > off.makespan,
+            "retries must cost time: {} !> {}",
+            on.makespan,
+            off.makespan
+        );
     }
 }

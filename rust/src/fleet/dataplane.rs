@@ -84,6 +84,9 @@ pub struct DataPlaneStats {
     /// cancelled jobs' resident page counts (the per-device side of the
     /// same ledger is `FtlStats::trims`).
     pub freed_pages: u64,
+    /// Flash pages programmed by checkpoint windows
+    /// (DESIGN.md §Crash-Recovery). Always 0 with checkpointing off.
+    pub ckpt_pages: u64,
 }
 
 /// Per-step staged-I/O charge for a job's current window. Measured
@@ -340,6 +343,63 @@ impl DataPlane {
     /// `version` queries) go through the string form.
     fn resource(job: JobId) -> String {
         format!("shardmap:{job}")
+    }
+
+    /// Checkpoint window (DESIGN.md §Crash-Recovery): every group
+    /// device programs the job's model state (`param_bytes`, padded up
+    /// to whole image-sized extents) through its FTL, into slots carved
+    /// from the same per-device allocator as staged images but keyed by
+    /// pseudo-image ids from the top of the id space — disjoint from
+    /// any dataset id by construction. The first checkpoint allocates
+    /// the slots; later ones overwrite the same extents in place, so
+    /// steady-state checkpointing costs no new capacity, and the
+    /// cancel/crash teardown trims them with everything else. Returns
+    /// (completion instant, pages programmed, bytes written). No
+    /// transfer records: nothing crosses nodes here — the optional host
+    /// copy rides the tunnel in the coordinator and is booked there.
+    pub fn checkpoint(
+        &mut self,
+        job: JobId,
+        param_bytes: u64,
+        pool: &mut DevicePool,
+        now: SimTime,
+    ) -> Result<(SimTime, u64, u64)> {
+        let Some(plane) = self.jobs.get_mut(&job) else {
+            bail!("{job} was never admitted to the data plane")
+        };
+        if plane.devices.is_empty() {
+            return Ok((now, 0, 0)); // host-only group: nothing to program
+        }
+        let ppi = plane.ppi;
+        let (mut done, mut pages, mut bytes) = (now, 0u64, 0u64);
+        for i in 0..plane.devices.len() {
+            let d = plane.devices[i];
+            let page = pool.device(d).page_bytes() as u64;
+            let extents = param_bytes.div_ceil(page).max(1).div_ceil(ppi as u64) as u32;
+            for k in 0..extents {
+                let pid: ImageId = ImageId::MAX - k as ImageId;
+                let slot = match plane.slots[i].of.get(&pid) {
+                    Some(&s) => s,
+                    None => plane.slots[i].alloc(pid),
+                };
+                let end = pool.device_mut(d).write_run(slot * ppi, ppi, pid as u64, now)?;
+                done = done.max(end);
+            }
+            let dev_pages = extents as u64 * ppi as u64;
+            pages += dev_pages;
+            bytes += dev_pages * page;
+        }
+        self.stats.ckpt_pages += pages;
+        Ok((done, pages, bytes))
+    }
+
+    /// Strip every DLM hold and queued request of a dead node (crash
+    /// path; DESIGN.md §Crash-Recovery). Each stripped EX hold bumps
+    /// its resource's journal version, so survivors re-observe before
+    /// trusting their shard maps. Returns how many entries (holds +
+    /// queued requests) were stripped.
+    pub fn force_release(&mut self, tunnel: &mut Tunnel, node: NodeId, now: SimTime) -> usize {
+        self.dlm.force_release(tunnel, node, now).len()
     }
 
     /// Admission: install the physical shard map under the
@@ -984,6 +1044,7 @@ impl Auditable for DataPlane {
         h.write_u64(s.host_pushes);
         h.write_u64(s.cancels);
         h.write_u64(s.freed_pages);
+        h.write_u64(s.ckpt_pages);
         self.dlm.fingerprint(h);
     }
 }

@@ -134,6 +134,20 @@ pub(crate) struct Job {
     /// (rather than a user cancel); its remaining steps were resubmitted
     /// as a successor job. Always false with endurance off.
     pub drained: bool,
+    /// Set when the job was torn down by an abrupt bay crash
+    /// (DESIGN.md §Crash-Recovery); the checkpointed prefix of its
+    /// steps was resubmitted as a successor. Always false with the
+    /// crash pipeline off.
+    pub crashed: bool,
+    /// Steps covered by the job's last completed checkpoint (0 when
+    /// checkpointing is off or nothing has been written yet).
+    pub ckpt_steps: usize,
+    /// Bytes this job's checkpoints wrote (flash pages + optional
+    /// tunnel host copies).
+    pub ckpt_bytes: u64,
+    /// Steps that were done but not checkpointed when the job crashed
+    /// — work the successor must redo. Always 0 without a crash.
+    pub lost_steps: usize,
     pub pending: Option<PendingStep>,
     /// Rolling offset into the preloaded flash pages (mirrors the
     /// single-job scheduler's data cursor).
@@ -192,6 +206,14 @@ pub struct JobReport {
     /// and its remaining steps resubmitted as a successor job. Always
     /// false with endurance off.
     pub drained: bool,
+    /// True when this (cancelled) job died in an abrupt bay crash; its
+    /// checkpointed prefix was resubmitted as a successor. Always
+    /// false with the crash pipeline off.
+    pub crashed: bool,
+    /// Steps lost to the crash (done but past the last checkpoint).
+    pub lost_steps: usize,
+    /// Bytes the job's checkpoints wrote (flash + host copies).
+    pub checkpoint_bytes: u64,
 }
 
 /// Compact terminal record of a retired job: exactly the final
@@ -249,6 +271,9 @@ impl Job {
             lock_wait: self.lock_wait,
             retunes: self.retunes,
             drained: self.drained,
+            crashed: self.crashed,
+            lost_steps: self.lost_steps,
+            checkpoint_bytes: self.ckpt_bytes,
         }
     }
 }

@@ -428,6 +428,60 @@ mod tests {
     }
 
     #[test]
+    fn group_health_and_carve_order_recover_after_a_mid_trace_swap() {
+        let mut p = DevicePool::new(3, &endurance_cfg());
+        wear_bay(&mut p, 0);
+        p.degrade(0, 0.4).unwrap();
+        // The sick bay still carves when the group needs every device,
+        // and it gates the group's synchronous step.
+        let g = p.carve(3, JobId(0)).unwrap();
+        assert_eq!(g, vec![0, 1, 2]);
+        assert!((p.group_health(&g) - 0.4).abs() < 1e-12);
+        p.release(JobId(0));
+        // Mid-trace swap (crash or end-of-life): the fresh module wipes
+        // both the health penalty and the wear tie-break penalty, so
+        // the bay goes back to the front of the carve order.
+        p.replace(0, &endurance_cfg()).unwrap();
+        assert_eq!(p.group_health(&g), 1.0, "a fresh module restores the group gate");
+        assert_eq!(
+            p.carve(2, JobId(1)).unwrap(),
+            vec![0, 1],
+            "all-fresh ties must break to the lowest index again"
+        );
+    }
+
+    #[test]
+    fn wear_ledger_is_conserved_across_double_replacement() {
+        let mut p = DevicePool::new(2, &endurance_cfg());
+        // Two full wear-and-swap cycles on the same bay: each retired
+        // module's history leaves with the replace() return value, and
+        // nothing is double-counted or lost.
+        wear_bay(&mut p, 0);
+        let (before_first, _) = p.wear_totals();
+        let (w1, e1) = p.replace(0, &endurance_cfg()).unwrap();
+        wear_bay(&mut p, 0);
+        let (before_second, _) = p.wear_totals();
+        let (w2, e2) = p.replace(0, &endurance_cfg()).unwrap();
+        assert_eq!(p.generation(0), 2);
+        assert_eq!(p.generation(1), 0, "the untouched bay keeps its module");
+        // Conservation per swap: what the pool reported live just
+        // before the swap is exactly what the swap handed back (bay 1
+        // is never written, so the live totals are bay 0's).
+        assert_eq!(w1.retired_blocks, before_first.retired_blocks);
+        assert_eq!(w1.erases, before_first.erases);
+        assert_eq!(w2.retired_blocks, before_second.retired_blocks);
+        assert_eq!(w2.erases, before_second.erases);
+        // Both incarnations really wore out independently (the second
+        // module starts fresh and re-earns its retirement).
+        assert!(w1.retired_blocks > 0 && w2.retired_blocks > 0);
+        assert!(e1.pages > 0 && e2.pages > 0);
+        let (live, live_ecc) = p.wear_totals();
+        assert_eq!(live.retired_blocks, 0, "history leaves with the caller, twice");
+        assert_eq!(live.erases, 0);
+        assert_eq!(live_ecc.pages, 0);
+    }
+
+    #[test]
     fn group_health_is_min() {
         let mut p = DevicePool::new(3, &CsdConfig::default());
         p.degrade(1, 0.6).unwrap();

@@ -49,6 +49,8 @@ pub fn runtime_for(spec: &WorkloadSpec) -> FleetRuntime {
     cfg.csd.ftl.pe_limit = spec.endurance.pe_limit;
     cfg.csd.ftl.read_retries = spec.endurance.read_retries;
     cfg.csd.ftl.retry_step = SimTime::from_secs_f64(spec.endurance.retry_step_us * 1e-6);
+    cfg.checkpoint = spec.checkpoint;
+    cfg.link_fault = spec.link_fault;
     FleetRuntime::new(cfg)
 }
 
@@ -88,6 +90,15 @@ pub struct TraceSummary {
     /// Jobs drained off worn-out devices (each resubmitted a successor
     /// that is counted on top of `jobs`). Zero with endurance off.
     pub drained: usize,
+    /// Jobs killed by bay crashes (each resumed from its checkpoint as
+    /// a successor). Zero with no crash schedule and no link faults.
+    pub crashed: usize,
+    /// Completed-but-uncheckpointed steps lost to crashes.
+    pub lost_steps: usize,
+    /// Bytes written by checkpoint windows (flash + host copies).
+    pub checkpoint_bytes: u64,
+    /// Tunnel hops re-attempted by the link-fault retry ladder.
+    pub link_retries: u64,
     /// Device modules swapped at end-of-life across the trace.
     pub devices_replaced: usize,
     /// Fleet-wide write amplification at trace end (live devices plus
@@ -123,6 +134,10 @@ pub fn run_trace_with(
     // Health events are operator-scheduled and few: schedule up front.
     for f in &spec.faults {
         rt.inject_degradation(SimTime::from_secs_f64(f.at_secs), f.device, f.factor);
+    }
+    // Crash faults likewise (DESIGN.md §Crash-Recovery).
+    for c in &spec.crashes {
+        rt.inject_crash(SimTime::from_secs_f64(c.at_secs), c.device);
     }
     // Cancels keyed by submission index, scheduled the moment their job
     // is submitted. `validate` pinned every index below `spec.jobs`.
@@ -188,6 +203,10 @@ pub fn run_trace_with(
         job_slots: rt.job_slots(),
         log_events,
         drained: r.drained,
+        crashed: r.crashed,
+        lost_steps: r.lost_steps,
+        checkpoint_bytes: r.checkpoint_bytes,
+        link_retries: r.link_retries,
         devices_replaced: r.devices_replaced,
         waf: r.wear.waf,
         fingerprint: rt.fingerprint(),
@@ -224,6 +243,14 @@ pub struct SweepReport {
     pub cancelled: usize,
     /// Jobs drained off worn-out devices, summed across traces.
     pub drained: usize,
+    /// Jobs killed by bay crashes, summed across traces.
+    pub crashed: usize,
+    /// Steps lost to crashes, summed across traces.
+    pub lost_steps: usize,
+    /// Checkpoint bytes written, summed across traces.
+    pub checkpoint_bytes: u64,
+    /// Link-fault retries, summed across traces.
+    pub link_retries: u64,
     /// Device modules swapped at end-of-life, summed across traces.
     pub devices_replaced: usize,
     /// Max concurrently running jobs over any single trace.
@@ -281,6 +308,10 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
     let mut total_jobs = 0usize;
     let mut cancelled = 0usize;
     let mut drained = 0usize;
+    let mut crashed = 0usize;
+    let mut lost_steps = 0usize;
+    let mut checkpoint_bytes = 0u64;
+    let mut link_retries = 0u64;
     let mut devices_replaced = 0usize;
     let mut peak_live_jobs = 0usize;
     for t in &traces {
@@ -293,6 +324,10 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
         total_jobs += t.jobs;
         cancelled += t.cancelled;
         drained += t.drained;
+        crashed += t.crashed;
+        lost_steps += t.lost_steps;
+        checkpoint_bytes += t.checkpoint_bytes;
+        link_retries += t.link_retries;
         devices_replaced += t.devices_replaced;
         peak_live_jobs = peak_live_jobs.max(t.peak_live_jobs);
     }
@@ -306,6 +341,10 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
         total_jobs,
         cancelled,
         drained,
+        crashed,
+        lost_steps,
+        checkpoint_bytes,
+        link_retries,
         devices_replaced,
         peak_live_jobs,
     })
@@ -341,6 +380,9 @@ mod tests {
             cancels: vec![CancelSpec { job: 3, at_secs: 2.5 }],
             faults: vec![],
             endurance: Default::default(),
+            crashes: vec![],
+            checkpoint: Default::default(),
+            link_fault: Default::default(),
             audit: false,
         }
     }

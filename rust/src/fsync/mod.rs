@@ -72,7 +72,38 @@ pub struct DlmStats {
     pub grants: u64,
     pub queued: u64,
     pub releases: u64,
+    /// Deadline-bounded requests that gave up (DESIGN.md
+    /// §Crash-Recovery: a waiter refusing to block on a dead holder).
+    pub timeouts: u64,
+    /// Holds stripped by [`Dlm::force_release`] during crash recovery.
+    pub force_releases: u64,
 }
+
+/// Typed failure of the deadline-bounded acquisition path. The
+/// unbounded [`Dlm::request`] can wait forever behind a dead holder;
+/// callers that cannot afford that use [`Dlm::request_by`] and match
+/// on this instead of a stringly-typed `anyhow` error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DlmError {
+    /// The lock could not be granted by `deadline` — an incompatible
+    /// holder (possibly a dead node) pins the resource, or the grant
+    /// message would land too late. Nothing was enqueued: a timed-out
+    /// request leaves no FIFO residue to strand later grants on.
+    Timeout { resource: String, node: NodeId, deadline: SimTime },
+}
+
+impl std::fmt::Display for DlmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DlmError::Timeout { resource, node, deadline } => write!(
+                f,
+                "dlm: {node} timed out acquiring {resource:?} (deadline {deadline:?})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DlmError {}
 
 /// Interned DLM resource name: an index into the master's name table.
 /// Resolved once (at job admission, mirroring `perfmodel::NetId`), so
@@ -202,6 +233,115 @@ impl Dlm {
             self.stats.queued += 1;
             LockReply::Queued
         }
+    }
+
+    /// Deadline-bounded request — string shim over
+    /// [`Self::request_id_by`].
+    pub fn request_by(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        resource: &str,
+        mode: LockMode,
+        now: SimTime,
+        deadline: SimTime,
+    ) -> std::result::Result<LockReply, DlmError> {
+        let id = self.resource_id(resource);
+        self.request_id_by(tunnel, node, id, mode, now, deadline)
+    }
+
+    /// Request `mode` with a grant deadline: if the resource cannot be
+    /// granted, or the grant message would arrive after `deadline`,
+    /// the request fails with [`DlmError::Timeout`] instead of queueing
+    /// — the caller never blocks behind a dead holder. The request
+    /// message still pays its tunnel hop (it crossed the wire before
+    /// the master could say no).
+    pub fn request_id_by(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        res: ResourceId,
+        mode: LockMode,
+        now: SimTime,
+        deadline: SimTime,
+    ) -> std::result::Result<LockReply, DlmError> {
+        self.stats.requests += 1;
+        let req_arrive = match node {
+            NodeId::Host => now,
+            csd => tunnel.send(csd, NodeId::Host, self.msg_bytes, now),
+        };
+        if self.states[res.0 as usize].can_grant(mode) {
+            let version = self.states[res.0 as usize].version;
+            let granted_at = match node {
+                NodeId::Host => req_arrive,
+                csd => tunnel.send(NodeId::Host, csd, self.msg_bytes, req_arrive),
+            };
+            if granted_at <= deadline {
+                self.states[res.0 as usize].holders.push((node, mode));
+                self.stats.grants += 1;
+                return Ok(LockReply::Granted { at: granted_at, version });
+            }
+        }
+        self.stats.timeouts += 1;
+        Err(DlmError::Timeout {
+            resource: self.names[res.0 as usize].clone(),
+            node,
+            deadline,
+        })
+    }
+
+    /// Crash recovery: strip every hold and queued request of a dead
+    /// `node` across all resources. Each stripped EX hold bumps the
+    /// metadata version (the master replays the dead node's journal
+    /// before anyone else touches the resource), and freed resources
+    /// grant their FIFO-compatible waiters exactly as a voluntary
+    /// release would — including waiters that were stuck behind a dead
+    /// *queued* EX request. Returns (resource, waiter, grant time,
+    /// version) for every grant made.
+    pub fn force_release(
+        &mut self,
+        tunnel: &mut Tunnel,
+        node: NodeId,
+        now: SimTime,
+    ) -> Vec<(String, NodeId, SimTime, u64)> {
+        let mut out = Vec::new();
+        for i in 0..self.states.len() {
+            let queued_before = self.states[i].queue.len();
+            self.states[i].queue.retain(|(n, _)| *n != node);
+            let stripped_queue = self.states[i].queue.len() != queued_before;
+            let held = self.states[i].holders.iter().position(|(n, _)| *n == node);
+            if let Some(idx) = held {
+                let (_, mode) = self.states[i].holders.remove(idx);
+                if mode == LockMode::Ex {
+                    self.states[i].version += 1; // journal replay commit
+                }
+                self.stats.force_releases += 1;
+            }
+            if held.is_none() && !stripped_queue {
+                continue;
+            }
+            // FIFO grant loop, the shape of `release_id` but driven by
+            // the host-resident master at `now`: the dead node sends
+            // nothing, grants still pay the master->waiter hop.
+            loop {
+                let Some(&(waiter, wmode)) = self.states[i].queue.front() else { break };
+                if !self.states[i].holders.iter().all(|(_, m)| m.compatible(wmode)) {
+                    break;
+                }
+                self.states[i].queue.pop_front();
+                self.states[i].holders.push((waiter, wmode));
+                self.stats.grants += 1;
+                let at = match waiter {
+                    NodeId::Host => now,
+                    csd => tunnel.send(NodeId::Host, csd, self.msg_bytes, now),
+                };
+                out.push((self.names[i].clone(), waiter, at, self.states[i].version));
+                if wmode == LockMode::Ex {
+                    break; // EX admits exactly one
+                }
+            }
+        }
+        out
     }
 
     /// Release a held lock — string shim over [`Self::release_id`].
@@ -355,6 +495,8 @@ impl crate::analysis::audit::Auditable for Dlm {
         h.write_u64(self.stats.grants);
         h.write_u64(self.stats.queued);
         h.write_u64(self.stats.releases);
+        h.write_u64(self.stats.timeouts);
+        h.write_u64(self.stats.force_releases);
         h.write_usize(self.msg_bytes);
     }
 }
@@ -465,6 +607,81 @@ mod tests {
         assert!(dlm.release(&mut tun, NodeId::Host, "never", SimTime::ZERO).is_err());
         dlm.request(&mut tun, NodeId::Host, "r", LockMode::Pr, SimTime::ZERO);
         assert!(dlm.release(&mut tun, NodeId::Csd(0), "r", SimTime::ZERO).is_err());
+    }
+
+    #[test]
+    fn deadline_bounded_request_times_out_typed() {
+        let (mut dlm, mut tun) = setup();
+        dlm.request(&mut tun, NodeId::Csd(0), "r", LockMode::Ex, SimTime::ZERO);
+        // The holder never releases: the bounded path refuses to queue
+        // and surfaces a typed, matchable error.
+        let err = dlm
+            .request_by(&mut tun, NodeId::Csd(1), "r", LockMode::Pr, SimTime::ms(1), SimTime::ms(5))
+            .unwrap_err();
+        let DlmError::Timeout { resource, node, deadline } = &err;
+        assert_eq!(resource, "r");
+        assert_eq!(*node, NodeId::Csd(1));
+        assert_eq!(*deadline, SimTime::ms(5));
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert_eq!(dlm.queue_len("r"), 0, "a timed-out request leaves no FIFO residue");
+        assert_eq!(dlm.stats().timeouts, 1);
+        // An uncontended bounded request grants like the plain path.
+        match dlm
+            .request_by(&mut tun, NodeId::Csd(1), "free", LockMode::Ex, SimTime::ms(1), SimTime::secs(1))
+            .unwrap()
+        {
+            LockReply::Granted { at, .. } => assert!(at >= SimTime::ms(1)),
+            other => panic!("{other:?}"),
+        }
+        // A deadline in the past times out even on a free resource: the
+        // grant message cannot land before it.
+        assert!(dlm
+            .request_by(&mut tun, NodeId::Csd(2), "free2", LockMode::Pr, SimTime::ms(1), SimTime::ZERO)
+            .is_err());
+        dlm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn force_release_strips_dead_node_and_regrants() {
+        let (mut dlm, mut tun) = setup();
+        dlm.request(&mut tun, NodeId::Csd(0), "a", LockMode::Ex, SimTime::ZERO);
+        dlm.request(&mut tun, NodeId::Csd(0), "b", LockMode::Pr, SimTime::ZERO);
+        assert_eq!(
+            dlm.request(&mut tun, NodeId::Csd(1), "a", LockMode::Pr, SimTime::ZERO),
+            LockReply::Queued
+        );
+        let granted = dlm.force_release(&mut tun, NodeId::Csd(0), SimTime::ms(3));
+        assert_eq!(granted.len(), 1, "the stranded waiter must be granted");
+        assert_eq!(granted[0].0, "a");
+        assert_eq!(granted[0].1, NodeId::Csd(1));
+        assert_eq!(dlm.version("a"), 1, "stripping an EX hold commits the journal");
+        assert_eq!(granted[0].3, 1, "and the waiter observes the bumped version");
+        assert_eq!(dlm.version("b"), 0, "stripping a PR hold does not");
+        assert!(dlm.holders("b").is_empty());
+        assert_eq!(dlm.stats().force_releases, 2);
+        dlm.check_invariants().unwrap();
+        // Idempotent: a second strip of the same node finds nothing.
+        assert!(dlm.force_release(&mut tun, NodeId::Csd(0), SimTime::ms(4)).is_empty());
+        assert_eq!(dlm.stats().force_releases, 2);
+    }
+
+    #[test]
+    fn force_release_unblocks_waiters_behind_dead_queued_ex() {
+        let (mut dlm, mut tun) = setup();
+        // Live PR holder; a dead node's EX queues; a live PR queues
+        // behind it (FIFO forbids overtaking the dead EX).
+        dlm.request(&mut tun, NodeId::Host, "r", LockMode::Pr, SimTime::ZERO);
+        dlm.request(&mut tun, NodeId::Csd(0), "r", LockMode::Ex, SimTime::ZERO);
+        assert_eq!(
+            dlm.request(&mut tun, NodeId::Csd(1), "r", LockMode::Pr, SimTime::ZERO),
+            LockReply::Queued
+        );
+        let granted = dlm.force_release(&mut tun, NodeId::Csd(0), SimTime::ms(1));
+        assert_eq!(granted.len(), 1, "removing the dead EX frees the compatible PR");
+        assert_eq!(granted[0].1, NodeId::Csd(1));
+        assert_eq!(dlm.queue_len("r"), 0);
+        assert_eq!(dlm.version("r"), 0, "no EX hold was stripped, no journal bump");
+        dlm.check_invariants().unwrap();
     }
 
     #[test]

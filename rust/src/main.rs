@@ -17,7 +17,7 @@
 use anyhow::{bail, Result};
 
 use stannis::analysis::lint;
-use stannis::config::{ExperimentConfig, FaultSpec, FleetExperimentConfig, WorkloadSpec};
+use stannis::config::{CrashSpec, ExperimentConfig, FaultSpec, FleetExperimentConfig, WorkloadSpec};
 use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
 use stannis::fleet::{
     run_sweep, run_trace_with, Fleet, FleetConfig, FleetReport, JobReport, RuntimeEvent,
@@ -62,6 +62,12 @@ fn run() -> Result<()> {
     dispatch(&Args::from_env()?)
 }
 
+/// Every dispatchable subcommand, in help order. The usage header is
+/// built from this list and the drift-guard test walks it, so a new
+/// `dispatch` arm cannot land without its help entry (sweep and lint
+/// once did exactly that).
+const SUBCOMMANDS: [&str; 7] = ["tune", "train", "fleet", "workload", "sweep", "lint", "report"];
+
 fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     match cmd {
@@ -91,44 +97,57 @@ fn dispatch(args: &Args) -> Result<()> {
             // A bare `stannis --help` parses as the flag "help" (no
             // positional), which must keep printing usage.
             args.check_known(&["help"])?;
-            print!(
-                "{}",
-                usage(
-                    "stannis <tune|train|fleet|workload|sweep|lint|report> [options]",
-                    "STANNIS reproduction: in-storage distributed DNN training",
-                    &[
-                        OptSpec { name: "network", help: "network name", default: Some("mobilenet_v2_s") },
-                        OptSpec { name: "num-csds", help: "number of CSDs", default: Some("3") },
-                        OptSpec { name: "bs-csd", help: "CSD batch size", default: Some("4") },
-                        OptSpec { name: "bs-host", help: "host batch size", default: Some("16") },
-                        OptSpec { name: "steps", help: "training steps", default: Some("50") },
-                        OptSpec { name: "config", help: "JSON experiment config", default: None },
-                        OptSpec { name: "no-host", help: "CSD-only cluster", default: None },
-                        OptSpec { name: "total-csds", help: "fleet/workload: pool size", default: Some("12") },
-                        OptSpec { name: "jobs", help: "fleet/workload: job count", default: Some("3") },
-                        OptSpec { name: "degrade", help: "fault dev:secs:factor (repeatable; factor > 1 repairs)", default: None },
-                        OptSpec { name: "cancel", help: "workload: cancel job:secs (repeatable)", default: None },
-                        OptSpec { name: "mean-arrival", help: "workload: mean inter-arrival secs", default: Some("30") },
-                        OptSpec { name: "seed", help: "workload: arrival-process seed", default: Some("7") },
-                        OptSpec { name: "csds-per-job", help: "workload: devices per default-mix job", default: Some("3") },
-                        OptSpec { name: "no-stage-io", help: "fleet: skip legacy flash staging", default: None },
-                        OptSpec { name: "no-data-plane", help: "fleet: skip the modeled data plane (shard maps, DLM-locked rebalance movement)", default: None },
-                        OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
-                        OptSpec { name: "retain-jobs", help: "workload/sweep: keep terminal jobs in the table (retained oracle; default streams them out as retired records)", default: None },
-                        OptSpec { name: "pe-limit", help: "workload/sweep: block P/E endurance limit (0 = unlimited; worn devices drain and roll replacements)", default: Some("0") },
-                        OptSpec { name: "read-retries", help: "workload/sweep: read-retry ladder depth on uncorrectable reads", default: Some("0") },
-                        OptSpec { name: "seeds", help: "sweep: number of seeded traces (seed, seed+1, ...)", default: Some("4") },
-                        OptSpec { name: "workers", help: "sweep: worker threads (results are identical at any count)", default: Some("4") },
-                        OptSpec { name: "audit", help: "fleet/workload/sweep: run the full structural audit after every event", default: None },
-                        OptSpec { name: "src", help: "lint: scan this source dir instead of the repo's rust/src", default: None },
-                        OptSpec { name: "design", help: "lint: DESIGN.md to resolve section references against", default: None },
-                    ],
-                )
-            );
+            print!("{}", help_text());
             Ok(())
         }
-        other => bail!("unknown command {other:?}; try `stannis help`"),
+        other => bail!(
+            "unknown command {other:?}; try `stannis help` ({})",
+            SUBCOMMANDS.join("|")
+        ),
     }
+}
+
+/// The full `stannis help` output — a function (rather than inline in
+/// `dispatch`) so the drift-guard test can assert it names every
+/// dispatchable subcommand.
+fn help_text() -> String {
+    usage(
+        &format!("stannis <{}> [options]", SUBCOMMANDS.join("|")),
+        "STANNIS reproduction: in-storage distributed DNN training",
+        &[
+            OptSpec { name: "network", help: "network name", default: Some("mobilenet_v2_s") },
+            OptSpec { name: "num-csds", help: "number of CSDs", default: Some("3") },
+            OptSpec { name: "bs-csd", help: "CSD batch size", default: Some("4") },
+            OptSpec { name: "bs-host", help: "host batch size", default: Some("16") },
+            OptSpec { name: "steps", help: "training steps", default: Some("50") },
+            OptSpec { name: "config", help: "JSON experiment config", default: None },
+            OptSpec { name: "no-host", help: "CSD-only cluster", default: None },
+            OptSpec { name: "total-csds", help: "fleet/workload: pool size", default: Some("12") },
+            OptSpec { name: "jobs", help: "fleet/workload: job count", default: Some("3") },
+            OptSpec { name: "degrade", help: "fault dev:secs:factor (repeatable; factor > 1 repairs)", default: None },
+            OptSpec { name: "cancel", help: "workload: cancel job:secs (repeatable)", default: None },
+            OptSpec { name: "mean-arrival", help: "workload: mean inter-arrival secs", default: Some("30") },
+            OptSpec { name: "seed", help: "workload: arrival-process seed", default: Some("7") },
+            OptSpec { name: "csds-per-job", help: "workload: devices per default-mix job", default: Some("3") },
+            OptSpec { name: "no-stage-io", help: "fleet: skip legacy flash staging", default: None },
+            OptSpec { name: "no-data-plane", help: "fleet: skip the modeled data plane (shard maps, DLM-locked rebalance movement)", default: None },
+            OptSpec { name: "per-step", help: "fleet: disable steady-state fast-forward (reference path)", default: None },
+            OptSpec { name: "retain-jobs", help: "workload/sweep: keep terminal jobs in the table (retained oracle; default streams them out as retired records)", default: None },
+            OptSpec { name: "pe-limit", help: "workload/sweep: block P/E endurance limit (0 = unlimited; worn devices drain and roll replacements)", default: Some("0") },
+            OptSpec { name: "read-retries", help: "workload/sweep: read-retry ladder depth on uncorrectable reads", default: Some("0") },
+            OptSpec { name: "crash", help: "abrupt bay crash device:secs (repeatable; tenant resumes from its checkpoint)", default: None },
+            OptSpec { name: "checkpoint-steps", help: "steps between model-state checkpoints (0 = off)", default: Some("0") },
+            OptSpec { name: "checkpoint-host-copy", help: "also copy each checkpoint to the host over the tunnel", default: None },
+            OptSpec { name: "link-fail-prob", help: "per-hop transient tunnel failure probability (0 = off)", default: Some("0") },
+            OptSpec { name: "link-retries", help: "retry-ladder rungs before a flaky link escalates to a crash", default: Some("4") },
+            OptSpec { name: "link-backoff-us", help: "base backoff of the link retry ladder (doubles per rung)", default: Some("50") },
+            OptSpec { name: "seeds", help: "sweep: number of seeded traces (seed, seed+1, ...)", default: Some("4") },
+            OptSpec { name: "workers", help: "sweep: worker threads (results are identical at any count)", default: Some("4") },
+            OptSpec { name: "audit", help: "fleet/workload/sweep: run the full structural audit after every event", default: None },
+            OptSpec { name: "src", help: "lint: scan this source dir instead of the repo's rust/src", default: None },
+            OptSpec { name: "design", help: "lint: DESIGN.md to resolve section references against", default: None },
+        ],
+    )
 }
 
 fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
@@ -276,6 +295,13 @@ fn print_fleet_summary(r: &FleetReport) {
         r.drained,
         r.devices_replaced,
     );
+    println!(
+        "faults: {} crash(es), {} step(s) lost, {:.1} MB checkpointed, {} link retry(ies)",
+        r.crashed,
+        r.lost_steps,
+        r.checkpoint_bytes as f64 / 1e6,
+        r.link_retries,
+    );
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
@@ -284,6 +310,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "total-csds",
         "jobs",
         "degrade",
+        "crash",
+        "checkpoint-steps",
+        "checkpoint-host-copy",
+        "link-fail-prob",
+        "link-retries",
+        "link-backoff-us",
         "no-stage-io",
         "no-data-plane",
         "per-step",
@@ -314,12 +346,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     for d in args.get_all("degrade") {
         spec.faults.push(FaultSpec::parse_cli(d)?);
     }
+    for c in args.get_all("crash") {
+        spec.crashes.push(CrashSpec::parse_cli(c)?);
+    }
+    spec.checkpoint.interval_steps =
+        args.parse_or("checkpoint-steps", spec.checkpoint.interval_steps)?;
+    if args.flag("checkpoint-host-copy") {
+        spec.checkpoint.host_copy = true;
+    }
+    spec.link_fault.fail_prob = args.parse_or("link-fail-prob", spec.link_fault.fail_prob)?;
+    spec.link_fault.max_retries = args.parse_or("link-retries", spec.link_fault.max_retries)?;
+    spec.link_fault.backoff_base_us =
+        args.parse_or("link-backoff-us", spec.link_fault.backoff_base_us)?;
 
     println!(
-        "fleet: {} CSDs, {} jobs, {} fault(s), stage_io={}, data_plane={}, fast_forward={}",
+        "fleet: {} CSDs, {} jobs, {} fault(s), {} crash(es), stage_io={}, data_plane={}, fast_forward={}",
         spec.total_csds,
         spec.jobs.len(),
         spec.faults.len(),
+        spec.crashes.len(),
         spec.stage_io,
         spec.data_plane,
         spec.fast_forward
@@ -330,6 +375,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         data_plane: spec.data_plane,
         fast_forward: spec.fast_forward,
         audit: args.flag("audit"),
+        checkpoint: spec.checkpoint,
+        link_fault: spec.link_fault,
         ..Default::default()
     });
     for job in &spec.jobs {
@@ -337,6 +384,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     for fault in &spec.faults {
         fleet.inject_degradation(SimTime::from_secs_f64(fault.at_secs), fault.device, fault.factor);
+    }
+    for crash in &spec.crashes {
+        fleet.inject_crash(SimTime::from_secs_f64(crash.at_secs), crash.device);
     }
     let r = fleet.run()?;
 
@@ -354,7 +404,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 
 /// Workload flags shared by `workload` and `sweep` (both drive the
 /// streaming trace runner over a [`WorkloadSpec`]).
-const WORKLOAD_OPTS: [&str; 15] = [
+const WORKLOAD_OPTS: [&str; 21] = [
     "config",
     "audit",
     "total-csds",
@@ -364,6 +414,12 @@ const WORKLOAD_OPTS: [&str; 15] = [
     "csds-per-job",
     "cancel",
     "degrade",
+    "crash",
+    "checkpoint-steps",
+    "checkpoint-host-copy",
+    "link-fail-prob",
+    "link-retries",
+    "link-backoff-us",
     "no-stage-io",
     "no-data-plane",
     "per-step",
@@ -392,13 +448,14 @@ fn cmd_workload(args: &Args) -> Result<()> {
     let spec = workload_spec(args)?;
 
     println!(
-        "workload: {} CSDs, {} arrival(s) (mean gap {}s, seed {}), {} cancel(s), {} fault(s), data_plane={}, fast_forward={}, retain_jobs={}",
+        "workload: {} CSDs, {} arrival(s) (mean gap {}s, seed {}), {} cancel(s), {} fault(s), {} crash(es), data_plane={}, fast_forward={}, retain_jobs={}",
         spec.total_csds,
         spec.jobs,
         f(spec.mean_interarrival_secs, 1),
         spec.seed,
         spec.cancels.len(),
         spec.faults.len(),
+        spec.crashes.len(),
         spec.data_plane,
         spec.fast_forward,
         spec.retain_jobs,
@@ -485,6 +542,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 f(t.aggregate_ips, 2),
                 f(if hours > 0.0 { t.completed as f64 / hours } else { 0.0 }, 1),
                 t.drained.to_string(),
+                t.crashed.to_string(),
+                t.lost_steps.to_string(),
+                format!("{:.1}M", t.checkpoint_bytes as f64 / 1e6),
+                t.link_retries.to_string(),
                 t.devices_replaced.to_string(),
                 f(t.waf, 2),
                 t.peak_live_jobs.to_string(),
@@ -497,15 +558,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "Sweep — per-seed traces",
         &[
             "seed", "jobs", "done", "cancelled", "imgs", "img/s", "jobs/h", "drained",
-            "replaced", "waf", "peak live", "slots", "makespan",
+            "crashed", "lost", "ckpt", "retries", "replaced", "waf", "peak live", "slots",
+            "makespan",
         ],
         &rows,
     );
     println!(
-        "\nsweep: {} job(s) ({} cancelled, {} drained) across {} trace(s), {} images; mean {:.1} jobs/h, mean {:.2} img/s; queue wait mean {:.1}s max {:.1}s; peak {} live job(s); {} device(s) replaced",
+        "\nsweep: {} job(s) ({} cancelled, {} drained, {} crashed) across {} trace(s), {} images; mean {:.1} jobs/h, mean {:.2} img/s; queue wait mean {:.1}s max {:.1}s; peak {} live job(s); {} device(s) replaced; {} step(s) lost, {:.1} MB checkpointed, {} link retry(ies)",
         rep.total_jobs,
         rep.cancelled,
         rep.drained,
+        rep.crashed,
         rep.traces.len(),
         rep.total_images,
         rep.jobs_per_hour.mean(),
@@ -514,6 +577,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         rep.queue_wait.max(),
         rep.peak_live_jobs,
         rep.devices_replaced,
+        rep.lost_steps,
+        rep.checkpoint_bytes as f64 / 1e6,
+        rep.link_retries,
     );
     Ok(())
 }
@@ -691,6 +757,31 @@ mod tests {
         assert_unknown_option("help --whoops 1");
     }
 
+    /// `stannis help` / `dispatch` drift guard: every dispatchable
+    /// subcommand must appear in the help output, and everything the
+    /// guard walks must actually dispatch (sweep and lint once landed
+    /// in the table without a usage line).
+    #[test]
+    fn help_names_every_dispatchable_subcommand() {
+        let text = help_text();
+        for cmd in SUBCOMMANDS {
+            assert!(text.contains(cmd), "help output must mention the {cmd:?} subcommand");
+            // The subcommand really dispatches: probing it with a bogus
+            // flag reaches its own option gate, not the unknown-command
+            // arm.
+            let e = dispatch(&args(&format!("{cmd} --bogus-flag-for-drift-guard x")))
+                .unwrap_err()
+                .to_string();
+            assert!(
+                !e.contains("unknown command"),
+                "{cmd:?} is listed in SUBCOMMANDS but dispatch does not know it: {e}"
+            );
+        }
+        // And the arm the guard protects against still fires.
+        let e = dispatch(&args("no-such-command")).unwrap_err().to_string();
+        assert!(e.contains("unknown command"), "got: {e}");
+    }
+
     #[test]
     fn unknown_flags_are_rejected_too() {
         // A bare trailing flag (no value) goes down the flags path;
@@ -723,6 +814,19 @@ mod tests {
         dispatch(&args(
             "workload --jobs 2 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
              --seed 3 --no-stage-io --audit",
+        ))
+        .unwrap();
+        // Crash/checkpoint/link-fault knobs parse and run end to end
+        // (the bit-identity and conservation properties live in the
+        // integration suites; this smokes the CLI wiring).
+        dispatch(&args(
+            "workload --jobs 2 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
+             --seed 3 --no-stage-io --checkpoint-steps 2 --checkpoint-host-copy \
+             --crash 0:40 --audit",
+        ))
+        .unwrap();
+        dispatch(&args(
+            "fleet --jobs 1 --total-csds 2 --no-stage-io --checkpoint-steps 3 --crash 1:30",
         ))
         .unwrap();
     }

@@ -574,6 +574,139 @@ fn legacy_staged_executor_still_runs() {
     }
 }
 
+/// Crash conservation (DESIGN.md §Crash-Recovery): across random
+/// traces with scheduled bay crashes and random checkpoint cadences,
+/// every root job's step budget is covered exactly once by its
+/// crash-successor chain — checkpointed prefixes survive (always on an
+/// interval boundary), the uncheckpointed tails are ledgered as lost
+/// and redone — and the privacy invariant holds through every crash
+/// re-layout: no private image ever crosses nodes, with the full audit
+/// re-proving every component invariant after every event.
+#[test]
+fn property_crash_chains_conserve_steps_and_privacy() {
+    use stannis::config::{CheckpointSpec, CrashSpec, WeightedJob, WorkloadSpec};
+    use stannis::data::{Dataset, Visibility};
+    use stannis::fleet::{runtime_for, JobId, RuntimeEvent};
+    stannis::util::prop::check_n("crash conservation", 8, |rng| {
+        const STEPS: usize = 12;
+        let jobs = 2 + rng.usize_below(4);
+        let interval = rng.usize_below(5) as u64; // 0 = checkpointing off
+        let spec = WorkloadSpec {
+            total_csds: 4,
+            stage_io: false,
+            retain_jobs: true,
+            audit: true,
+            seed: rng.below(1 << 32),
+            jobs,
+            mean_interarrival_secs: 3.0 + rng.f64() * 10.0,
+            mix: vec![WeightedJob {
+                weight: 1.0,
+                job: ExperimentConfig {
+                    network: "squeezenet".into(),
+                    num_csds: 2,
+                    include_host: false,
+                    steps: STEPS,
+                    ..Default::default()
+                },
+            }],
+            crashes: (0..1 + rng.usize_below(3))
+                .map(|_| CrashSpec { device: rng.usize_below(4), at_secs: rng.f64() * 120.0 })
+                .collect(),
+            checkpoint: CheckpointSpec {
+                interval_steps: interval,
+                host_copy: rng.bool(0.5),
+            },
+            ..Default::default()
+        };
+        let mut rt = runtime_for(&spec);
+        rt.load_workload(&spec).expect("crash schedule replay");
+        rt.run_until_idle().expect("trace drains through the crashes");
+        let r = rt.report();
+        let log = rt.take_log();
+
+        // Successor chains from the log; every crash either kills one
+        // tenant (and resubmits it) or lands on an idle bay.
+        let mut next = std::collections::HashMap::new();
+        let (mut crash_events, mut tenant_crashes) = (0usize, 0usize);
+        for e in &log {
+            if let RuntimeEvent::Crashed { job, successor, lost_steps, .. } = &e.event {
+                crash_events += 1;
+                match (job, successor) {
+                    (Some(j), Some(s)) => {
+                        tenant_crashes += 1;
+                        next.insert(*j, (*s, *lost_steps));
+                    }
+                    (None, None) => {}
+                    _ => panic!("a crash kills a tenant and resubmits it, or neither"),
+                }
+            }
+        }
+        assert_eq!(r.crashed, tenant_crashes);
+        assert_eq!(
+            r.devices_replaced, crash_events,
+            "every crash swaps exactly one module (endurance is off)"
+        );
+
+        let find = |id: JobId| {
+            r.jobs.iter().find(|j| j.id == id).expect("retained mode keeps every job")
+        };
+        let mut total_lost = 0usize;
+        for root in 0..jobs {
+            let mut id = JobId(root as u64);
+            let mut covered = 0usize;
+            let mut hops = 0usize;
+            while let Some(&(succ, lost)) = next.get(&id) {
+                let row = find(id);
+                assert_eq!(row.state, JobState::Cancelled);
+                assert!(row.crashed);
+                assert_eq!(row.lost_steps, lost, "log and report must agree on the loss");
+                assert!(row.steps_done >= lost);
+                let credited = row.steps_done - lost;
+                if interval > 0 {
+                    assert_eq!(
+                        credited as u64 % interval,
+                        0,
+                        "a surviving prefix always ends on a checkpoint boundary"
+                    );
+                } else {
+                    assert_eq!(credited, 0, "no checkpoint, no surviving prefix");
+                }
+                covered += credited;
+                total_lost += lost;
+                id = succ;
+                hops += 1;
+                assert!(hops <= spec.crashes.len(), "chains are bounded by the schedule");
+            }
+            let last = find(id);
+            assert_eq!(last.state, JobState::Completed, "every chain ends in completion");
+            assert_eq!(last.lost_steps, 0);
+            assert_eq!(
+                covered + last.steps_done,
+                STEPS,
+                "root {root}: checkpointed prefixes + the final run must cover \
+                 the spec exactly once"
+            );
+        }
+        assert_eq!(r.lost_steps, total_lost);
+
+        // Privacy survives crash re-layout: a successor's private shard
+        // is laid out afresh through the replacement module's FTL, and
+        // nothing private ever crossed nodes on the way (all jobs share
+        // the single mix entry's dataset).
+        let d = Dataset::new(spec.mix[0].job.dataset()).unwrap();
+        for t in rt.data_plane().transfers() {
+            match d.visibility(t.image).unwrap() {
+                Visibility::Public => {}
+                Visibility::Private { csd } => panic!(
+                    "privacy violation: private image {} of csd{csd} crossed \
+                     {} -> {} in {}",
+                    t.image, t.from, t.to, t.job
+                ),
+            }
+        }
+    });
+}
+
 /// Determinism: the same submissions + fault schedule give identical
 /// reports (the fleet inherits the sim core's guarantee).
 #[test]

@@ -15,7 +15,8 @@
 //! [`load_workload`]: stannis::fleet::FleetRuntime::load_workload
 
 use stannis::config::{
-    CancelSpec, EnduranceSpec, ExperimentConfig, FaultSpec, WeightedJob, WorkloadSpec,
+    CancelSpec, CheckpointSpec, EnduranceSpec, ExperimentConfig, FaultSpec, LinkFaultSpec,
+    WeightedJob, WorkloadSpec,
 };
 use stannis::fleet::{
     run_sweep, run_trace, run_trace_with, runtime_for, FleetConfig, FleetReport, FleetRuntime,
@@ -499,6 +500,94 @@ fn unreachable_endurance_limits_are_bit_identical_to_endurance_off() {
             assert_eq!(a.ecc, b.ecc);
             assert_eq!(b.drained, 0, "nothing can drain below an unreachable limit");
             assert_eq!(b.devices_replaced, 0);
+        }
+    });
+}
+
+/// Crash-pipeline knobs that cannot fire must be invisible (DESIGN.md
+/// §Crash-Recovery, determinism contract): no crash schedule, a
+/// checkpoint interval no trace can reach, and a retry ladder whose
+/// per-attempt failure probability is effectively zero produce the
+/// *bit-identical* trace — same log stream, same summary, same report,
+/// same energy bits, same state fingerprint — as the all-defaults-off
+/// run, across random schedules, both executors, and random
+/// `run_until` slicings of the armed session. An armed ladder also
+/// disarms the fast-forward (per-send RNG draws are stateful), so this
+/// doubles as an executor-equivalence check for the armed path.
+#[test]
+fn unreachable_crash_pipeline_knobs_are_bit_identical_to_off() {
+    stannis::util::prop::check_n("crash-pipeline-off bit identity", 6, |rng| {
+        for ff in [true, false] {
+            let jobs = 2 + rng.usize_below(5);
+            let base = WorkloadSpec {
+                total_csds: 4,
+                stage_io: false,
+                fast_forward: ff,
+                seed: rng.below(1 << 32),
+                jobs,
+                mean_interarrival_secs: 4.0 + rng.f64() * 20.0,
+                mix: trace_mix(3 + rng.usize_below(5)),
+                cancels: (0..rng.usize_below(2))
+                    .map(|_| CancelSpec { job: rng.usize_below(jobs), at_secs: rng.f64() * 200.0 })
+                    .collect(),
+                faults: (0..rng.usize_below(2))
+                    .map(|_| FaultSpec {
+                        at_secs: rng.f64() * 150.0,
+                        device: rng.usize_below(4),
+                        factor: 0.4 + 0.5 * rng.f64(),
+                    })
+                    .collect(),
+                ..Default::default()
+            };
+            let mut armed = base.clone();
+            armed.checkpoint =
+                CheckpointSpec { interval_steps: 1 << 40, host_copy: true };
+            armed.link_fault =
+                LinkFaultSpec { fail_prob: 1e-300, ..Default::default() };
+
+            let mut off_log = Vec::new();
+            let (off, off_rt) = run_trace_with(&base, |e| {
+                off_log.push(format!("{:?} {:?}", e.at, e.event));
+            })
+            .expect("crash-pipeline-off trace");
+            let mut on_log = Vec::new();
+            let (on, on_rt) = run_trace_with(&armed, |e| {
+                on_log.push(format!("{:?} {:?}", e.at, e.event));
+            })
+            .expect("unreachable-knobs trace");
+
+            assert_eq!(off_log, on_log, "log streams must match to the bit");
+            assert_eq!(off, on, "trace summaries must match to the bit");
+            assert_eq!(
+                off_rt.fingerprint(),
+                on_rt.fingerprint(),
+                "state fingerprints must match"
+            );
+            let (a, b) = (off_rt.report(), on_rt.report());
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+            assert_eq!(b.crashed, 0);
+            assert_eq!(b.lost_steps, 0);
+            assert_eq!(b.checkpoint_bytes, 0, "an unreachable interval never writes");
+            assert_eq!(b.link_retries, 0, "a ~0 failure rate never climbs the ladder");
+            assert_eq!(b.devices_replaced, 0);
+
+            // The armed session sliced at random instants lands on the
+            // same final state (the fingerprint is slicing-invariant).
+            let mut cuts: Vec<u64> =
+                (0..rng.usize_below(4)).map(|_| rng.below(300_000_000_000)).collect();
+            cuts.sort_unstable();
+            let mut sliced = runtime_for(&armed);
+            sliced.load_workload(&armed).expect("armed replay");
+            for &c in &cuts {
+                sliced.run_until(SimTime::ns(c)).expect("armed slice");
+            }
+            sliced.run_until_idle().expect("armed drain");
+            assert_eq!(
+                sliced.fingerprint(),
+                on_rt.fingerprint(),
+                "the armed fingerprint must be run_until-slicing-invariant"
+            );
         }
     });
 }
