@@ -1,0 +1,190 @@
+//! Bench: the job-history ledger at fleet scale — append a synthetic
+//! one-million-record ledger, then query it three ways: a full scan
+//! (filter on a non-indexed field), a footer-pruned scan (filter on
+//! `retired_at`, where segment min/max metadata skips most of the
+//! ledger), and a keyset-paginated walk. Before recording anything the
+//! bench asserts the pruned scan returns exactly what the unpruned
+//! evaluation of the same filter returns, and that pagination over a
+//! prefix walks the total order with no duplicates or gaps.
+//!
+//! Emits machine-readable numbers to `BENCH_9.json` (section
+//! `"ledger"`).
+//!
+//! Run: `cargo bench --bench query`
+
+// Benches are wall-clock consumers by definition; the crate-wide
+// clippy gate on time sources is lifted per bench target.
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Instant;
+
+use stannis::fleet::{JobId, JobReport, JobState, RetiredRecord};
+use stannis::ledger::{aggregate, compile, decode_cursor, page, Agg, Field, Key, LedgerStore,
+    LedgerWriter};
+use stannis::metrics::{f, print_table, record_bench_json_to};
+use stannis::sim::SimTime;
+use stannis::util::rng::Rng;
+
+const RECORDS: u64 = 1_000_000;
+
+/// Deterministic synthetic retirement stream: times strictly increase
+/// (as a real run's do), ids cycle a bounded live window, energies and
+/// flags come from a seeded generator.
+fn synth(i: u64, rng: &mut Rng) -> RetiredRecord {
+    let retired_ns = 1_000_000_000 + i * 2_000_000 + rng.below(1_000_000);
+    let energy = 20.0 + rng.f64() * 400.0;
+    RetiredRecord {
+        retired_at: SimTime(retired_ns),
+        report: JobReport {
+            id: JobId(i),
+            state: if rng.bool(0.07) { JobState::Cancelled } else { JobState::Completed },
+            network: if i % 3 == 0 { "mobilenet_v2".into() } else { "squeezenet".into() },
+            devices: vec![(i % 24) as usize, ((i + 7) % 24) as usize],
+            held_host: false,
+            bs_csd: 25,
+            bs_host: 0,
+            steps_done: 20,
+            steps_per_epoch: 10,
+            images: 1000,
+            submitted_at: SimTime(i * 2_000_000),
+            admitted_at: SimTime(i * 2_000_000 + 500),
+            finished_at: SimTime(retired_ns),
+            queue_wait: SimTime(rng.below(5_000_000_000)),
+            elapsed: SimTime(retired_ns - i * 2_000_000),
+            images_per_sec: 50.0 + rng.f64() * 100.0,
+            sync_fraction: rng.f64() * 0.4,
+            energy_j: energy,
+            j_per_image: energy / 1000.0,
+            link_bytes: 1 << 22,
+            bytes_moved: 0,
+            images_moved: 0,
+            lock_wait: SimTime(0),
+            retunes: 0,
+            drained: false,
+            crashed: rng.bool(0.02),
+            lost_steps: 0,
+            checkpoint_bytes: 0,
+        },
+    }
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("stannis_bench_query_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // --- Append path ------------------------------------------------------
+    let mut w = LedgerWriter::new(dir.clone());
+    let mut rng = Rng::new(9);
+    let t0 = Instant::now();
+    for i in 0..RECORDS {
+        w.append(&synth(i, &mut rng));
+    }
+    w.finish().expect("ledger seals");
+    let append_wall = t0.elapsed().as_secs_f64();
+    let append_mb = w.bytes_written() as f64 / 1e6;
+    let append_mb_per_s = append_mb / append_wall.max(1e-9);
+
+    let store = LedgerStore::open(&dir).expect("ledger opens");
+    assert_eq!(store.records_total(), RECORDS, "every appended record is accounted for");
+    let segments = store.segments().len();
+
+    // --- Full scan: filter on a field footers cannot prune ---------------
+    let full_filter = compile("energy_j > 380 and state = done").expect("filter compiles");
+    let t0 = Instant::now();
+    let full = aggregate(&store, Some(&full_filter), &[Agg::Count, Agg::Sum(Field::EnergyJ)])
+        .expect("full scan");
+    let full_wall = t0.elapsed().as_secs_f64();
+    let full_hits = full[0].1 as u64;
+    assert!(full_hits > 0, "the energy threshold must select a non-trivial set");
+
+    // --- Pruned scan: a retired_at window covering ~1% of the ledger -----
+    // Times span [1e9, 1e9 + 2e6*RECORDS); take a 1%-wide slice from the
+    // middle. Footer min/max ranges let the store skip ~99% of segments.
+    let lo = 1.0 + 2e-3 * (RECORDS as f64) * 0.50;
+    let hi = 1.0 + 2e-3 * (RECORDS as f64) * 0.51;
+    let pruned_filter =
+        compile(&format!("retired_at >= {lo} and retired_at < {hi}")).expect("window compiles");
+    let t0 = Instant::now();
+    let pruned = aggregate(&store, Some(&pruned_filter), &[Agg::Count]).expect("pruned scan");
+    let pruned_wall = t0.elapsed().as_secs_f64();
+    let pruned_hits = pruned[0].1 as u64;
+    assert!(pruned_hits > 0, "the window must be non-empty");
+    assert!(
+        pruned_hits < RECORDS / 20,
+        "the window must be narrow enough for pruning to matter ({pruned_hits} hits)"
+    );
+    // Guard: pruning is an optimization, never a result change — the
+    // same window evaluated record-by-record over every segment (no
+    // footer skipping) must agree exactly.
+    let mut by_hand = 0u64;
+    for seg in store.segments() {
+        for (_, r) in store.read_segment(seg).expect("segment reads") {
+            let s = r.retired_at.as_secs_f64();
+            if s >= lo && s < hi {
+                by_hand += 1;
+            }
+        }
+    }
+    assert_eq!(by_hand, pruned_hits, "footer pruning changed the result set");
+
+    // --- Paginated walk over the window -----------------------------------
+    const PAGE: usize = 1000;
+    let t0 = Instant::now();
+    let mut cursor: Option<Key> = None;
+    let mut walked = 0u64;
+    let mut last: Option<Key> = None;
+    loop {
+        let p = page(&store, Some(&pruned_filter), cursor, PAGE).expect("page");
+        for (k, _) in &p.records {
+            if let Some(prev) = last {
+                assert!(prev < *k, "pagination must walk a strictly increasing key order");
+            }
+            last = Some(*k);
+        }
+        walked += p.records.len() as u64;
+        match p.next {
+            Some(c) => cursor = Some(decode_cursor(&c).expect("own cursor decodes")),
+            None => break,
+        }
+    }
+    let page_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(walked, pruned_hits, "pagination must visit exactly the match set");
+    let paged_records_per_s = walked as f64 / page_wall.max(1e-9);
+
+    print_table(
+        &format!("Ledger — {RECORDS} records, {segments} segment(s), {append_mb:.0} MB"),
+        &["phase", "wall", "result"],
+        &[
+            vec!["append".into(), format!("{append_wall:.2} s"), format!("{append_mb_per_s:.0} MB/s")],
+            vec!["full scan".into(), format!("{full_wall:.2} s"), format!("{full_hits} hit(s)")],
+            vec![
+                "pruned scan".into(),
+                format!("{pruned_wall:.3} s"),
+                format!("{pruned_hits} hit(s), {:.1}x full-scan", full_wall / pruned_wall.max(1e-9)),
+            ],
+            vec![
+                "paginate".into(),
+                format!("{page_wall:.2} s"),
+                format!("{} page(s), {paged_records_per_s:.0} rec/s", walked.div_ceil(PAGE as u64)),
+            ],
+        ],
+    );
+    println!("pruned/full wall ratio: {}", f(pruned_wall / full_wall.max(1e-9), 4));
+
+    record_bench_json_to(
+        "BENCH_9.json",
+        "ledger",
+        &[
+            ("records", RECORDS as f64),
+            ("segments", segments as f64),
+            ("ledger_mb", append_mb),
+            ("append_mb_per_s", append_mb_per_s),
+            ("full_scan_wall_s", full_wall),
+            ("pruned_scan_wall_s", pruned_wall),
+            ("pruned_over_full_wall", pruned_wall / full_wall.max(1e-9)),
+            ("paginated_records_per_s", paged_records_per_s),
+        ],
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -600,6 +600,11 @@ pub struct WorkloadSpec {
     /// are bit-identical either way — but O(state) per event, so off
     /// by default.
     pub audit: bool,
+    /// Persist every retired job to an on-disk ledger at this
+    /// directory (`--ledger DIR`, JSON `"ledger"`; DESIGN.md §Ledger).
+    /// Default off (`None`) — runs are bit-identical either way;
+    /// `run_sweep` derives one `seed-*` subdirectory per seed.
+    pub ledger: Option<std::path::PathBuf>,
 }
 
 impl Default for WorkloadSpec {
@@ -622,6 +627,7 @@ impl Default for WorkloadSpec {
             checkpoint: CheckpointSpec::default(),
             link_fault: LinkFaultSpec::default(),
             audit: false,
+            ledger: None,
         }
     }
 }
@@ -702,6 +708,9 @@ impl WorkloadSpec {
         if let Some(v) = j.get("audit") {
             out.audit = v.as_bool()?;
         }
+        if let Some(v) = j.get("ledger") {
+            out.ledger = Some(std::path::PathBuf::from(v.as_str()?));
+        }
         out.validated()
     }
 
@@ -709,7 +718,7 @@ impl WorkloadSpec {
     /// `--seed`, `--csds-per-job`, `--retain-jobs`, `--pe-limit`,
     /// `--read-retries`, `--crash`, `--checkpoint-steps`,
     /// `--checkpoint-host-copy`, `--link-fail-prob`, `--link-retries`,
-    /// `--link-backoff-us`, `--audit`).
+    /// `--link-backoff-us`, `--audit`, `--ledger`).
     pub fn apply_args(mut self, args: &Args) -> Result<Self> {
         self.total_csds = args.parse_or("total-csds", self.total_csds)?;
         self.jobs = args.parse_or("jobs", self.jobs)?;
@@ -755,6 +764,9 @@ impl WorkloadSpec {
             args.parse_or("link-retries", self.link_fault.max_retries)?;
         self.link_fault.backoff_base_us =
             args.parse_or("link-backoff-us", self.link_fault.backoff_base_us)?;
+        if let Some(dir) = args.get("ledger") {
+            self.ledger = Some(std::path::PathBuf::from(dir));
+        }
         self.validated()
     }
 

@@ -99,6 +99,7 @@ use crate::analysis::audit::{Auditable, Fnv64};
 use crate::config::{CheckpointSpec, ExperimentConfig, LinkFaultSpec, WorkloadSpec};
 use crate::coordinator::{tune, TuneConfig};
 use crate::csd::{CsdConfig, EccStats, WearReport};
+use crate::ledger::LedgerWriter;
 use crate::metrics::RunningStat;
 use crate::perfmodel::{Device, NetId, PerfModel};
 use crate::power::{EnergyMeter, PowerConfig};
@@ -177,6 +178,11 @@ pub struct FleetConfig {
     pub power: PowerConfig,
     pub tunnel: TunnelConfig,
     pub csd: CsdConfig,
+    /// Persist every retired job to an on-disk ledger at this
+    /// directory (DESIGN.md §Ledger). Defaults off (`None`): the
+    /// runtime is bit-identical with or without a ledger attached —
+    /// the writer never enters the auditable set or the fingerprint.
+    pub ledger_path: Option<std::path::PathBuf>,
 }
 
 impl FleetConfig {
@@ -205,6 +211,7 @@ impl Default for FleetConfig {
             power: PowerConfig::default(),
             tunnel: TunnelConfig::default(),
             csd: CsdConfig::default(),
+            ledger_path: None,
         }
     }
 }
@@ -763,6 +770,11 @@ pub struct FleetRuntime {
     retired_ecc: EccStats,
     /// Modules swapped at end-of-life.
     devices_replaced: usize,
+    /// On-disk job-history ledger (DESIGN.md §Ledger), armed by
+    /// `FleetConfig::ledger_path`. Deliberately NOT part of
+    /// `FleetRuntime::auditables` or the fingerprint: ledger-on and
+    /// ledger-off runs must stay bit-identical.
+    ledger: Option<LedgerWriter>,
 }
 
 impl FleetRuntime {
@@ -789,6 +801,7 @@ impl FleetRuntime {
             retired_wear: WearReport::default(),
             retired_ecc: EccStats::default(),
             devices_replaced: 0,
+            ledger: cfg.ledger_path.clone().map(LedgerWriter::new),
             cfg,
         }
     }
@@ -1101,6 +1114,12 @@ impl FleetRuntime {
             // inside an event handler, so end-of-life is only reachable
             // here — a safe point where no step booking is in flight.
             self.process_eol()?;
+            // Surface any buffered ledger write error at a
+            // deterministic point (the append itself is infallible so
+            // retirement control flow is ledger-independent).
+            if let Some(w) = &self.ledger {
+                w.check()?;
+            }
             // The guard: with `audit` on, every component re-proves its
             // invariants after every event — read-only, so the session
             // stays bit-identical to an unaudited one.
@@ -1162,6 +1181,15 @@ impl FleetRuntime {
                 format!("full audit: component '{}' failed at {}", c.component(), self.now)
             })?;
         }
+        // The ledger writer audits here but is NOT in `auditables()`:
+        // that array also feeds the fingerprint, and ledger-on/off runs
+        // must fingerprint identically. Its audit is still read-only
+        // (footer re-reads), so bit-identity holds either way.
+        if let Some(w) = &self.ledger {
+            w.audit().with_context(|| {
+                format!("full audit: component '{}' failed at {}", w.component(), self.now)
+            })?;
+        }
         // Cross-component: the live counter matches the table.
         let live = self.jobs.values().filter(|j| !j.state.is_terminal()).count();
         ensure!(
@@ -1196,7 +1224,7 @@ impl FleetRuntime {
 
     /// Deterministic FNV-1a digest of the session's observable state:
     /// the clock, the admission pipeline, the retired-job accumulators
-    /// and every registered component ([`FleetRuntime::auditables`]).
+    /// and every registered component (`FleetRuntime::auditables`).
     /// Two equivalent executions (fast-forward vs per-step, streaming
     /// vs retained at matched visibility, audit on vs off, any
     /// `run_until` slicing at the same instant) must produce the same
@@ -1309,14 +1337,29 @@ impl FleetRuntime {
         debug_assert!(job.state.is_terminal(), "retiring a non-terminal job");
         let report = job.report(&self.cfg.power);
         self.totals.absorb(&report);
-        self.log.push(LogEntry {
-            at: self.now,
-            event: RuntimeEvent::Retired {
-                record: Box::new(RetiredRecord { retired_at: self.now, report }),
-            },
-        });
+        let record = RetiredRecord { retired_at: self.now, report };
+        // Ledger append before the log push: the appended frame is a
+        // pure function of the record, and `append` is infallible
+        // (errors buffer until the next `pump` check), so control flow
+        // from here on is identical with the ledger on or off.
+        if let Some(w) = &mut self.ledger {
+            w.append(&record);
+        }
+        self.log.push(LogEntry { at: self.now, event: RuntimeEvent::Retired { record: Box::new(record) } });
         if self.cfg.retain_jobs {
             self.jobs.insert(job);
+        }
+    }
+
+    /// Seal the ledger's open tail segment so the directory is a
+    /// complete, queryable ledger (DESIGN.md §Ledger). Called by the
+    /// trace drivers and the batch [`Fleet`] façade when a session
+    /// drains; a no-op without a ledger. Sealing is a safe point, not
+    /// a terminal state — later retirements open a fresh segment.
+    pub fn seal_ledger(&mut self) -> Result<()> {
+        match &mut self.ledger {
+            Some(w) => w.finish(),
+            None => Ok(()),
         }
     }
 
@@ -2393,6 +2436,7 @@ impl Fleet {
         }
         self.crashes.clear();
         self.rt.run_until_idle()?;
+        self.rt.seal_ledger()?;
         Ok(self.rt.report())
     }
 

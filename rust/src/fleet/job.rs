@@ -233,6 +233,22 @@ pub struct RetiredRecord {
     pub report: JobReport,
 }
 
+impl JobReport {
+    /// Version of the report's field set as serialized by the ledger
+    /// codec (`ledger/codec.rs`). Bump whenever a field is added,
+    /// removed, reordered, or changes width — decoding a frame written
+    /// under a different version is a typed
+    /// [`DecodeError::UnknownVersion`](crate::ledger::DecodeError::UnknownVersion),
+    /// never a silent misread.
+    pub const SCHEMA_VERSION: u32 = 1;
+}
+
+impl RetiredRecord {
+    /// A retired record serializes as its report plus the retire
+    /// instant; the two version in lockstep.
+    pub const SCHEMA_VERSION: u32 = JobReport::SCHEMA_VERSION;
+}
+
 impl Job {
     /// Summarize for the fleet report. Link/flash traffic converts to
     /// energy here (integer counters × per-unit cost) rather than being

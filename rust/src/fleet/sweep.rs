@@ -51,6 +51,7 @@ pub fn runtime_for(spec: &WorkloadSpec) -> FleetRuntime {
     cfg.csd.ftl.retry_step = SimTime::from_secs_f64(spec.endurance.retry_step_us * 1e-6);
     cfg.checkpoint = spec.checkpoint;
     cfg.link_fault = spec.link_fault;
+    cfg.ledger_path = spec.ledger.clone();
     FleetRuntime::new(cfg)
 }
 
@@ -183,6 +184,10 @@ pub fn run_trace_with(
         }
     }
 
+    // The trace is drained: seal the ledger (no-op with none armed) so
+    // the directory is a complete, queryable set of segments.
+    rt.seal_ledger()?;
+
     let r = rt.report();
     // Endurance drains resubmit successors, so retirements can exceed
     // the spec's arrival count — never fall short of it.
@@ -280,6 +285,13 @@ pub fn run_sweep(base: &WorkloadSpec, seeds: &[u64], workers: usize) -> Result<S
                 for i in (w..seeds.len()).step_by(workers) {
                     let mut spec = base.clone();
                     spec.seed = seeds[i];
+                    // One ledger subdirectory per seed, zero-padded so
+                    // a sorted directory walk enumerates seeds in seed
+                    // order — the merged ledger is identical at any
+                    // worker count (DESIGN.md §Ledger).
+                    if let Some(dir) = &base.ledger {
+                        spec.ledger = Some(dir.join(format!("seed-{:020}", seeds[i])));
+                    }
                     if tx.send((i, run_trace(&spec))).is_err() {
                         return; // collector gone; nothing left to report to
                     }
@@ -384,6 +396,7 @@ mod tests {
             checkpoint: Default::default(),
             link_fault: Default::default(),
             audit: false,
+            ledger: None,
         }
     }
 

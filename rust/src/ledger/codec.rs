@@ -1,0 +1,456 @@
+//! Canonical versioned serialization of retired-job records
+//! (DESIGN.md §Ledger).
+//!
+//! One *frame* per record, all little-endian:
+//!
+//! ```text
+//! [u32 payload_len] [payload bytes] [u64 FNV-1a(payload)]
+//! ```
+//!
+//! The payload starts with the schema version
+//! ([`JobReport::SCHEMA_VERSION`]) followed by every field of
+//! [`RetiredRecord`] in declaration order. Floats are written as raw
+//! IEEE-754 bits ([`f64::to_bits`]) and times as integer nanoseconds,
+//! so a decode reproduces the source record *bit-identically* — the
+//! replay property the ledger integration suite pins. Strings are
+//! length-prefixed UTF-8; collections are count-prefixed.
+//!
+//! Decoding errors are the typed [`DecodeError`] rather than bare
+//! `anyhow` strings, so callers (and tests) can distinguish an unknown
+//! schema version from plain corruption. The error still converts into
+//! the crate-wide `anyhow` result at the store boundary.
+
+use std::fmt;
+
+use crate::analysis::audit::Fnv64;
+use crate::fleet::{JobId, JobReport, JobState, RetiredRecord};
+use crate::sim::SimTime;
+
+/// Version written into every payload; bump on any change to the field
+/// set, field order or field encoding below. Kept equal to
+/// [`JobReport::SCHEMA_VERSION`] — the record is exactly a report plus
+/// its retirement instant.
+pub const SCHEMA_VERSION: u32 = JobReport::SCHEMA_VERSION;
+
+/// Hard sanity cap on one frame's payload. A real record is a few
+/// hundred bytes; a corrupted length header must not trigger a
+/// gigabyte read.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+
+/// Bytes of frame overhead around the payload (length prefix +
+/// checksum suffix).
+pub const FRAME_OVERHEAD: usize = 4 + 8;
+
+/// Typed decode failure. `UnknownVersion` is the forward-compatibility
+/// contract: a newer writer's records fail loudly and specifically
+/// instead of mis-parsing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The payload declares a schema version this build cannot read.
+    UnknownVersion { found: u32 },
+    /// The buffer ends before the bytes it promises.
+    Truncated { need: usize, have: usize },
+    /// The declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized { len: u32 },
+    /// The stored FNV-1a checksum does not match the payload bytes.
+    Checksum { want: u64, got: u64 },
+    /// Lifecycle-state byte outside the encoded `0..=3` range.
+    BadState(u8),
+    /// Boolean byte other than 0 or 1.
+    BadBool(u8),
+    /// A length-prefixed string is not valid UTF-8.
+    BadUtf8,
+    /// Payload bytes remain after the last field — the frame length
+    /// and the field set disagree.
+    Trailing { extra: usize },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::UnknownVersion { found } => write!(
+                f,
+                "unknown ledger schema version {found} (this build reads version {SCHEMA_VERSION})"
+            ),
+            DecodeError::Truncated { need, have } => {
+                write!(f, "truncated record: need {need} byte(s), have {have}")
+            }
+            DecodeError::Oversized { len } => {
+                write!(f, "record payload length {len} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            DecodeError::Checksum { want, got } => {
+                write!(f, "record checksum mismatch: stored {want:#018x}, computed {got:#018x}")
+            }
+            DecodeError::BadState(b) => write!(f, "invalid job-state byte {b}"),
+            DecodeError::BadBool(b) => write!(f, "invalid boolean byte {b}"),
+            DecodeError::BadUtf8 => write!(f, "record string is not valid UTF-8"),
+            DecodeError::Trailing { extra } => {
+                write!(f, "{extra} trailing byte(s) after the last record field")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+// ---- encode ------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64_bits(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn state_code(s: JobState) -> u8 {
+    match s {
+        JobState::Queued => 0,
+        JobState::Running => 1,
+        JobState::Completed => 2,
+        JobState::Cancelled => 3,
+    }
+}
+
+fn state_from_code(b: u8) -> Result<JobState, DecodeError> {
+    match b {
+        0 => Ok(JobState::Queued),
+        1 => Ok(JobState::Running),
+        2 => Ok(JobState::Completed),
+        3 => Ok(JobState::Cancelled),
+        other => Err(DecodeError::BadState(other)),
+    }
+}
+
+/// Serialize the record's payload (version + fields, no framing).
+pub fn encode_payload(rec: &RetiredRecord, out: &mut Vec<u8>) {
+    put_u32(out, SCHEMA_VERSION);
+    put_u64(out, rec.retired_at.as_ns());
+    let r = &rec.report;
+    put_u64(out, r.id.0);
+    out.push(state_code(r.state));
+    put_str(out, &r.network);
+    put_u32(out, r.devices.len() as u32);
+    for &d in &r.devices {
+        put_u64(out, d as u64);
+    }
+    put_bool(out, r.held_host);
+    put_u64(out, r.bs_csd as u64);
+    put_u64(out, r.bs_host as u64);
+    put_u64(out, r.steps_done as u64);
+    put_u64(out, r.steps_per_epoch as u64);
+    put_u64(out, r.images as u64);
+    put_u64(out, r.submitted_at.as_ns());
+    put_u64(out, r.admitted_at.as_ns());
+    put_u64(out, r.finished_at.as_ns());
+    put_u64(out, r.queue_wait.as_ns());
+    put_u64(out, r.elapsed.as_ns());
+    put_f64_bits(out, r.images_per_sec);
+    put_f64_bits(out, r.sync_fraction);
+    put_f64_bits(out, r.energy_j);
+    put_f64_bits(out, r.j_per_image);
+    put_u64(out, r.link_bytes);
+    put_u64(out, r.bytes_moved);
+    put_u64(out, r.images_moved);
+    put_u64(out, r.lock_wait.as_ns());
+    put_u64(out, r.retunes as u64);
+    put_bool(out, r.drained);
+    put_bool(out, r.crashed);
+    put_u64(out, r.lost_steps as u64);
+    put_u64(out, r.checkpoint_bytes);
+}
+
+/// Frame one record into `out`: length prefix, payload, FNV-1a
+/// checksum. `scratch` is a reusable payload buffer (cleared here) so
+/// the writer's hot loop allocates nothing after warm-up.
+pub fn encode_frame(rec: &RetiredRecord, scratch: &mut Vec<u8>, out: &mut Vec<u8>) {
+    scratch.clear();
+    encode_payload(rec, scratch);
+    debug_assert!(scratch.len() <= MAX_PAYLOAD as usize, "record payload over the frame cap");
+    put_u32(out, scratch.len() as u32);
+    out.extend_from_slice(scratch);
+    let mut h = Fnv64::new();
+    h.write_bytes(scratch);
+    put_u64(out, h.finish());
+}
+
+// ---- decode ------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        let have = self.buf.len() - self.pos;
+        if have < n {
+            return Err(DecodeError::Truncated { need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64_bits(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn boolean(&mut self) -> Result<bool, DecodeError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(DecodeError::BadBool(other)),
+        }
+    }
+
+    fn time(&mut self) -> Result<SimTime, DecodeError> {
+        Ok(SimTime(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, DecodeError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError::BadUtf8)
+    }
+}
+
+/// Decode one payload (the bytes between a frame's length prefix and
+/// its checksum). Rejects unknown versions, malformed fields and
+/// trailing bytes.
+pub fn decode_payload(payload: &[u8]) -> Result<RetiredRecord, DecodeError> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let version = r.u32()?;
+    if version != SCHEMA_VERSION {
+        return Err(DecodeError::UnknownVersion { found: version });
+    }
+    let retired_at = r.time()?;
+    let id = JobId(r.u64()?);
+    let state = state_from_code(r.u8()?)?;
+    let network = r.string()?;
+    let n_devices = r.u32()? as usize;
+    let mut devices = Vec::with_capacity(n_devices.min(4096));
+    for _ in 0..n_devices {
+        devices.push(r.u64()? as usize);
+    }
+    let report = JobReport {
+        id,
+        state,
+        network,
+        devices,
+        held_host: r.boolean()?,
+        bs_csd: r.u64()? as usize,
+        bs_host: r.u64()? as usize,
+        steps_done: r.u64()? as usize,
+        steps_per_epoch: r.u64()? as usize,
+        images: r.u64()? as usize,
+        submitted_at: r.time()?,
+        admitted_at: r.time()?,
+        finished_at: r.time()?,
+        queue_wait: r.time()?,
+        elapsed: r.time()?,
+        images_per_sec: r.f64_bits()?,
+        sync_fraction: r.f64_bits()?,
+        energy_j: r.f64_bits()?,
+        j_per_image: r.f64_bits()?,
+        link_bytes: r.u64()?,
+        bytes_moved: r.u64()?,
+        images_moved: r.u64()?,
+        lock_wait: r.time()?,
+        retunes: r.u64()? as usize,
+        drained: r.boolean()?,
+        crashed: r.boolean()?,
+        lost_steps: r.u64()? as usize,
+        checkpoint_bytes: r.u64()?,
+    };
+    if r.pos != payload.len() {
+        return Err(DecodeError::Trailing { extra: payload.len() - r.pos });
+    }
+    Ok(RetiredRecord { retired_at, report })
+}
+
+/// Decode one frame from the front of `buf`; returns the record and
+/// the bytes consumed. Verifies the length prefix, the checksum and
+/// every field.
+pub fn decode_frame(buf: &[u8]) -> Result<(RetiredRecord, usize), DecodeError> {
+    let mut r = Reader { buf, pos: 0 };
+    let len = r.u32()?;
+    if len > MAX_PAYLOAD {
+        return Err(DecodeError::Oversized { len });
+    }
+    let payload = r.take(len as usize)?;
+    let want = r.u64()?;
+    let mut h = Fnv64::new();
+    h.write_bytes(payload);
+    let got = h.finish();
+    if want != got {
+        return Err(DecodeError::Checksum { want, got });
+    }
+    let rec = decode_payload(payload)?;
+    Ok((rec, r.pos))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A record exercising every field with non-default, asymmetric
+    /// values (including float bit patterns exact equality must keep).
+    fn sample_record(salt: u64) -> RetiredRecord {
+        RetiredRecord {
+            retired_at: SimTime(1_234_567_890 + salt),
+            report: JobReport {
+                id: JobId(42 + salt),
+                state: if salt % 2 == 0 { JobState::Completed } else { JobState::Cancelled },
+                network: format!("mobilenet_v2_{salt}"),
+                devices: vec![3, 1, 4, 1 + salt as usize % 7],
+                held_host: salt % 3 == 0,
+                bs_csd: 25,
+                bs_host: 315,
+                steps_done: 20 + salt as usize,
+                steps_per_epoch: 17,
+                images: 4321,
+                submitted_at: SimTime(7 + salt),
+                admitted_at: SimTime(1000 + salt),
+                finished_at: SimTime(1_234_567_890 + salt),
+                queue_wait: SimTime(993),
+                elapsed: SimTime(1_234_566_890),
+                images_per_sec: 123.456_789 + salt as f64 * 0.1,
+                sync_fraction: 0.062_5,
+                energy_j: -0.0, // bit pattern distinct from +0.0
+                j_per_image: f64::MIN_POSITIVE,
+                link_bytes: 9_876_543_210,
+                bytes_moved: 1 << 33,
+                images_moved: 77,
+                lock_wait: SimTime(55_000),
+                retunes: 2,
+                drained: salt % 5 == 0,
+                crashed: salt % 4 == 0,
+                lost_steps: 3,
+                checkpoint_bytes: 65_536,
+            },
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_is_bit_exact() {
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        for salt in 0..12 {
+            let rec = sample_record(salt);
+            let start = out.len();
+            encode_frame(&rec, &mut scratch, &mut out);
+            let (back, used) = decode_frame(&out[start..]).expect("frame decodes");
+            assert_eq!(used, out.len() - start, "frame is self-delimiting");
+            assert_eq!(back, rec, "decode must reproduce the record exactly");
+            // PartialEq on f64 treats -0.0 == 0.0; pin the actual bits too.
+            assert_eq!(back.report.energy_j.to_bits(), rec.report.energy_j.to_bits());
+        }
+        // Frames concatenate: decode them all back in order.
+        let mut pos = 0;
+        for salt in 0..12 {
+            let (back, used) = decode_frame(&out[pos..]).expect("stream decodes");
+            assert_eq!(back, sample_record(salt));
+            pos += used;
+        }
+        assert_eq!(pos, out.len());
+    }
+
+    #[test]
+    fn unknown_version_is_a_typed_error() {
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        encode_frame(&sample_record(0), &mut scratch, &mut out);
+        // The version is the first payload field, right after the u32
+        // length prefix; forge it and re-stamp the checksum so only the
+        // version check can fire.
+        out[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let len = u32::from_le_bytes(out[0..4].try_into().unwrap()) as usize;
+        let mut h = Fnv64::new();
+        h.write_bytes(&out[4..4 + len]);
+        let total = out.len();
+        out[total - 8..].copy_from_slice(&h.finish().to_le_bytes());
+        assert_eq!(
+            decode_frame(&out).unwrap_err(),
+            DecodeError::UnknownVersion { found: 99 },
+        );
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut scratch = Vec::new();
+        let mut frame = Vec::new();
+        encode_frame(&sample_record(1), &mut scratch, &mut frame);
+
+        // Any flipped payload byte fails the checksum.
+        let mut bad = frame.clone();
+        bad[10] ^= 0x40;
+        assert!(matches!(decode_frame(&bad).unwrap_err(), DecodeError::Checksum { .. }));
+
+        // A short buffer is a typed truncation, not a panic.
+        assert!(matches!(
+            decode_frame(&frame[..frame.len() - 3]).unwrap_err(),
+            DecodeError::Truncated { .. }
+        ));
+        assert!(matches!(decode_frame(&[1, 0]).unwrap_err(), DecodeError::Truncated { .. }));
+
+        // An absurd length prefix is rejected before any allocation.
+        let mut huge = frame.clone();
+        huge[0..4].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(
+            decode_frame(&huge).unwrap_err(),
+            DecodeError::Oversized { len: MAX_PAYLOAD + 1 },
+        );
+
+        // Bad enum/bool bytes are typed (re-stamp the checksum so the
+        // field check itself is what fires). The state byte sits right
+        // after version + retired_at + id = 4 + 20 payload bytes.
+        let mut bad_state = frame.clone();
+        bad_state[4 + 20] = 9;
+        let len = u32::from_le_bytes(bad_state[0..4].try_into().unwrap()) as usize;
+        let mut h = Fnv64::new();
+        h.write_bytes(&bad_state[4..4 + len]);
+        let total = bad_state.len();
+        bad_state[total - 8..].copy_from_slice(&h.finish().to_le_bytes());
+        assert_eq!(decode_frame(&bad_state).unwrap_err(), DecodeError::BadState(9));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut payload = Vec::new();
+        encode_payload(&sample_record(2), &mut payload);
+        payload.push(0);
+        assert_eq!(decode_payload(&payload).unwrap_err(), DecodeError::Trailing { extra: 1 });
+    }
+
+    #[test]
+    fn schema_version_consts_agree() {
+        assert_eq!(SCHEMA_VERSION, JobReport::SCHEMA_VERSION);
+        assert_eq!(SCHEMA_VERSION, RetiredRecord::SCHEMA_VERSION);
+    }
+}

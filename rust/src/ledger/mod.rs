@@ -1,0 +1,39 @@
+//! Persistent job-history ledger: the fleet control plane's
+//! storage-resident record of every retired job (DESIGN.md §Ledger).
+//!
+//! STANNIS keeps training data resident in storage and moves only
+//! what the host explicitly shares; this module applies the same
+//! posture to the simulator's own telemetry. With
+//! `FleetConfig::ledger_path` set (CLI `--ledger DIR`, workload JSON
+//! `"ledger"`), every [`RetiredRecord`](crate::fleet::RetiredRecord)
+//! that enters the runtime log is also appended — canonically encoded
+//! and checksummed — to an on-disk segment log that `stannis query`
+//! can filter, paginate, and aggregate long after the run exits.
+//!
+//! Layering (zero external deps, like `util/json`):
+//!
+//! - [`codec`] — canonical versioned record serialization; floats via
+//!   `to_bits`, FNV-1a checksum per frame, typed [`DecodeError`].
+//! - [`store`] — segmented append-only log: [`LedgerWriter`] (write
+//!   path, infallible `append` + deferred error surfacing) and
+//!   [`LedgerStore`] (read path, footer-validated open).
+//! - [`query`] — validated filter language (lex → parse → validate →
+//!   plan), footer-driven segment pruning, keyset cursor pagination,
+//!   and aggregate projections.
+//!
+//! Determinism contract: ledger-off runs are bit-identical to a build
+//! without this module (the writer never enters the runtime's
+//! auditable set or fingerprint), and ledger-on runs produce
+//! byte-identical directories across executors, `run_until` slicings,
+//! and sweep worker counts.
+
+pub mod codec;
+pub mod query;
+pub mod store;
+
+pub use codec::{decode_frame, decode_payload, encode_frame, encode_payload, DecodeError,
+    SCHEMA_VERSION};
+pub use query::{aggregate, compile, decode_cursor, encode_cursor, eval, page, parse_agg,
+    record_json, retired_at_bounds, Agg, CmpOp, Expr, Field, Key, Pred, QueryPage};
+pub use store::{LedgerStore, LedgerWriter, SegmentMeta, SegmentSummary, MAGIC,
+    SEGMENT_PAYLOAD_BYTES};

@@ -1,0 +1,937 @@
+//! Validated filter language + keyset pagination over a ledger
+//! (DESIGN.md §Ledger).
+//!
+//! The pipeline is split lex → parse → validate → plan: the lexer and
+//! parser know nothing about the schema (they produce a raw tree of
+//! `IDENT op value` comparisons under `and`/`or`), validation binds
+//! identifiers to typed [`Field`]s and rejects nonsense (`state > 3`,
+//! `crashed = banana`) with byte-positioned errors, and planning
+//! extracts `retired_at` bounds so footer metadata can prune whole
+//! segments before any frame is decoded.
+//!
+//! Results are totally ordered by `(retire_time, job_id, ordinal)` —
+//! the ordinal (global write position) breaks ties between identical
+//! `(time, job)` keys that a merged multi-seed sweep ledger can
+//! legally contain. Cursors encode that full key, checksummed, in a
+//! URL-safe base64 alphabet: any page size walks the same ordering
+//! with no duplicates or gaps, and a truncated or doctored cursor is
+//! a typed error rather than a silent reposition.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::analysis::audit::Fnv64;
+use crate::fleet::{JobState, RetiredRecord};
+use crate::metrics::percentile;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::store::{LedgerStore, SegmentMeta};
+
+// ---- schema ------------------------------------------------------------
+
+/// Typed fields the filter language can reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Field {
+    /// Terminal job state: `queued | running | done | cancelled`.
+    State,
+    /// Whether the job's chain ever crashed.
+    Crashed,
+    /// Whether the job was drained off a retiring device.
+    Drained,
+    /// Total energy in joules.
+    EnergyJ,
+    /// Queue wait in seconds.
+    QueueWaitS,
+    /// CSD index: matches if the job held that device.
+    Device,
+    /// Retirement time in seconds. Comparisons on this field prune
+    /// segments via footer min/max before any frame is read.
+    RetiredAt,
+}
+
+impl Field {
+    fn parse(name: &str) -> Option<Field> {
+        match name {
+            "state" => Some(Field::State),
+            "crashed" => Some(Field::Crashed),
+            "drained" => Some(Field::Drained),
+            "energy_j" => Some(Field::EnergyJ),
+            "queue_wait_s" => Some(Field::QueueWaitS),
+            "device" => Some(Field::Device),
+            "retired_at" => Some(Field::RetiredAt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Field::State => "state",
+            Field::Crashed => "crashed",
+            Field::Drained => "drained",
+            Field::EnergyJ => "energy_j",
+            Field::QueueWaitS => "queue_wait_s",
+            Field::Device => "device",
+            Field::RetiredAt => "retired_at",
+        }
+    }
+
+    fn is_numeric(&self) -> bool {
+        matches!(self, Field::EnergyJ | Field::QueueWaitS | Field::RetiredAt)
+    }
+
+    /// Numeric projection used by comparisons and aggregates.
+    fn numeric(&self, rec: &RetiredRecord) -> f64 {
+        match self {
+            Field::EnergyJ => rec.report.energy_j,
+            Field::QueueWaitS => rec.report.queue_wait.as_secs_f64(),
+            Field::RetiredAt => rec.retired_at.as_secs_f64(),
+            _ => unreachable!("validation admits only numeric fields here"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    fn holds_f64(&self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Ne => lhs != rhs,
+            CmpOp::Lt => lhs < rhs,
+            CmpOp::Le => lhs <= rhs,
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Ge => lhs >= rhs,
+        }
+    }
+
+    fn text(&self) -> &'static str {
+        match self {
+            CmpOp::Eq => "=",
+            CmpOp::Ne => "!=",
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+        }
+    }
+}
+
+// ---- lexer -------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(f64),
+    Op(CmpOp),
+    LParen,
+    RParen,
+    And,
+    Or,
+}
+
+struct Lexed {
+    tok: Tok,
+    /// Byte offset in the source expression, for error messages.
+    at: usize,
+}
+
+fn lex(src: &str) -> Result<Vec<Lexed>> {
+    let bytes = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                out.push(Lexed { tok: Tok::LParen, at: i });
+                i += 1;
+            }
+            b')' => {
+                out.push(Lexed { tok: Tok::RParen, at: i });
+                i += 1;
+            }
+            b'=' => {
+                // Accept both `=` and `==`.
+                let len = if bytes.get(i + 1) == Some(&b'=') { 2 } else { 1 };
+                out.push(Lexed { tok: Tok::Op(CmpOp::Eq), at: i });
+                i += len;
+            }
+            b'!' => {
+                ensure!(
+                    bytes.get(i + 1) == Some(&b'='),
+                    "byte {i}: lone `!` (use `!=`)"
+                );
+                out.push(Lexed { tok: Tok::Op(CmpOp::Ne), at: i });
+                i += 2;
+            }
+            b'<' => {
+                let (op, len) =
+                    if bytes.get(i + 1) == Some(&b'=') { (CmpOp::Le, 2) } else { (CmpOp::Lt, 1) };
+                out.push(Lexed { tok: Tok::Op(op), at: i });
+                i += len;
+            }
+            b'>' => {
+                let (op, len) =
+                    if bytes.get(i + 1) == Some(&b'=') { (CmpOp::Ge, 2) } else { (CmpOp::Gt, 1) };
+                out.push(Lexed { tok: Tok::Op(op), at: i });
+                i += len;
+            }
+            b'-' | b'0'..=b'9' | b'.' => {
+                let start = i;
+                i += 1;
+                while i < bytes.len()
+                    && matches!(bytes[i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                {
+                    // `+`/`-` only continue a number right after an exponent marker.
+                    if matches!(bytes[i], b'+' | b'-')
+                        && !matches!(bytes[i - 1], b'e' | b'E')
+                    {
+                        break;
+                    }
+                    i += 1;
+                }
+                let text = &src[start..i];
+                let n: f64 = text
+                    .parse()
+                    .with_context(|| format!("byte {start}: bad number {text:?}"))?;
+                ensure!(n.is_finite(), "byte {start}: number {text:?} is not finite");
+                out.push(Lexed { tok: Tok::Num(n), at: start });
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < bytes.len()
+                    && matches!(bytes[i], b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_')
+                {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                let tok = match word {
+                    "and" | "AND" => Tok::And,
+                    "or" | "OR" => Tok::Or,
+                    _ => Tok::Ident(word.to_string()),
+                };
+                out.push(Lexed { tok, at: start });
+            }
+            _ => bail!("byte {i}: unexpected character {:?}", src[i..].chars().next().unwrap()),
+        }
+    }
+    Ok(out)
+}
+
+// ---- raw parse ---------------------------------------------------------
+
+/// Untyped comparison as parsed: identifier, operator, and either a
+/// numeric or bareword right-hand side. Validation types it.
+#[derive(Debug)]
+enum RawValue {
+    Num(f64),
+    Word(String),
+}
+
+#[derive(Debug)]
+enum RawExpr {
+    Cmp { ident: String, at: usize, op: CmpOp, value: RawValue },
+    And(Box<RawExpr>, Box<RawExpr>),
+    Or(Box<RawExpr>, Box<RawExpr>),
+}
+
+struct Parser {
+    toks: Vec<Lexed>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|l| &l.tok)
+    }
+
+    fn at(&self) -> usize {
+        self.toks.get(self.pos).map(|l| l.at).unwrap_or(usize::MAX)
+    }
+
+    fn next(&mut self) -> Option<Lexed> {
+        let l = self.toks.get(self.pos).map(|l| Lexed { tok: l.tok.clone(), at: l.at });
+        self.pos += 1;
+        l
+    }
+
+    // Grammar: expr := and_chain ('or' and_chain)*
+    //          and_chain := atom ('and' atom)*
+    //          atom := '(' expr ')' | IDENT OP (NUM | IDENT)
+    fn expr(&mut self) -> Result<RawExpr> {
+        let mut lhs = self.and_chain()?;
+        while self.peek() == Some(&Tok::Or) {
+            self.pos += 1;
+            let rhs = self.and_chain()?;
+            lhs = RawExpr::Or(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_chain(&mut self) -> Result<RawExpr> {
+        let mut lhs = self.atom()?;
+        while self.peek() == Some(&Tok::And) {
+            self.pos += 1;
+            let rhs = self.atom()?;
+            lhs = RawExpr::And(Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn atom(&mut self) -> Result<RawExpr> {
+        match self.next() {
+            Some(Lexed { tok: Tok::LParen, at }) => {
+                let inner = self.expr()?;
+                match self.next() {
+                    Some(Lexed { tok: Tok::RParen, .. }) => Ok(inner),
+                    _ => bail!("byte {at}: unclosed `(`"),
+                }
+            }
+            Some(Lexed { tok: Tok::Ident(ident), at }) => {
+                let op = match self.next() {
+                    Some(Lexed { tok: Tok::Op(op), .. }) => op,
+                    _ => bail!("byte {at}: expected a comparison after {ident:?}"),
+                };
+                let value = match self.next() {
+                    Some(Lexed { tok: Tok::Num(n), .. }) => RawValue::Num(n),
+                    Some(Lexed { tok: Tok::Ident(w), .. }) => RawValue::Word(w),
+                    _ => bail!("byte {at}: expected a value after {ident:?} {}", op.text()),
+                };
+                Ok(RawExpr::Cmp { ident, at, op, value })
+            }
+            Some(Lexed { tok, at }) => bail!("byte {at}: expected a predicate, found {tok:?}"),
+            None => bail!("unexpected end of expression"),
+        }
+    }
+
+    fn finish(mut self) -> Result<RawExpr> {
+        ensure!(self.pos < self.toks.len() || !self.toks.is_empty(), "empty expression");
+        let e = self.expr()?;
+        ensure!(
+            self.pos == self.toks.len(),
+            "byte {}: trailing input after a complete expression",
+            self.at()
+        );
+        Ok(e)
+    }
+}
+
+// ---- validation --------------------------------------------------------
+
+/// Typed predicate after validation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pred {
+    /// `state =/!= <queued|running|done|cancelled>`
+    State { eq: bool, value: JobState },
+    /// `crashed|drained =/!= true|false`
+    Bool { field: Field, eq: bool, value: bool },
+    /// `energy_j|queue_wait_s|retired_at <op> NUM`
+    Num { field: Field, op: CmpOp, value: f64 },
+    /// `device =/!= N` — membership over the job's device set.
+    Device { eq: bool, value: usize },
+}
+
+/// Validated, evaluable filter expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Pred(Pred),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+}
+
+fn state_value(word: &str) -> Option<JobState> {
+    match word {
+        "queued" => Some(JobState::Queued),
+        "running" => Some(JobState::Running),
+        "done" => Some(JobState::Completed),
+        "cancelled" => Some(JobState::Cancelled),
+        _ => None,
+    }
+}
+
+fn validate(raw: RawExpr) -> Result<Expr> {
+    Ok(match raw {
+        RawExpr::And(a, b) => Expr::And(Box::new(validate(*a)?), Box::new(validate(*b)?)),
+        RawExpr::Or(a, b) => Expr::Or(Box::new(validate(*a)?), Box::new(validate(*b)?)),
+        RawExpr::Cmp { ident, at, op, value } => {
+            let field = Field::parse(&ident).with_context(|| {
+                format!(
+                    "byte {at}: unknown field {ident:?} (expected one of state, crashed, \
+                     drained, energy_j, queue_wait_s, device, retired_at)"
+                )
+            })?;
+            let eq = match (field.is_numeric(), op) {
+                (true, _) => true, // numeric fields accept every operator
+                (false, CmpOp::Eq) => true,
+                (false, CmpOp::Ne) => false,
+                (false, op) => bail!(
+                    "byte {at}: {} does not support `{}` (only `=`/`!=`)",
+                    field.name(),
+                    op.text()
+                ),
+            };
+            let pred = match field {
+                Field::State => match value {
+                    RawValue::Word(w) => Pred::State {
+                        eq,
+                        value: state_value(&w).with_context(|| {
+                            format!(
+                                "byte {at}: bad state {w:?} (expected queued, running, \
+                                 done, or cancelled)"
+                            )
+                        })?,
+                    },
+                    RawValue::Num(n) => bail!("byte {at}: state compares to a name, not {n}"),
+                },
+                Field::Crashed | Field::Drained => match value {
+                    RawValue::Word(w) => Pred::Bool {
+                        field,
+                        eq,
+                        value: match w.as_str() {
+                            "true" => true,
+                            "false" => false,
+                            _ => bail!("byte {at}: {} compares to true/false, not {w:?}", field.name()),
+                        },
+                    },
+                    RawValue::Num(n) => {
+                        bail!("byte {at}: {} compares to true/false, not {n}", field.name())
+                    }
+                },
+                Field::Device => match value {
+                    RawValue::Num(n) => {
+                        ensure!(
+                            n >= 0.0 && n.fract() == 0.0,
+                            "byte {at}: device index must be a non-negative integer, got {n}"
+                        );
+                        Pred::Device { eq, value: n as usize }
+                    }
+                    RawValue::Word(w) => bail!("byte {at}: device compares to an index, not {w:?}"),
+                },
+                Field::EnergyJ | Field::QueueWaitS | Field::RetiredAt => match value {
+                    RawValue::Num(n) => Pred::Num { field, op, value: n },
+                    RawValue::Word(w) => {
+                        bail!("byte {at}: {} compares to a number, not {w:?}", field.name())
+                    }
+                },
+            };
+            Expr::Pred(pred)
+        }
+    })
+}
+
+/// Lex, parse, and validate a filter expression.
+pub fn compile(src: &str) -> Result<Expr> {
+    let toks = lex(src).with_context(|| format!("in filter {src:?}"))?;
+    ensure!(!toks.is_empty(), "empty filter expression");
+    let raw = Parser { toks, pos: 0 }.finish().with_context(|| format!("in filter {src:?}"))?;
+    validate(raw).with_context(|| format!("in filter {src:?}"))
+}
+
+/// Evaluate a compiled filter against one record.
+pub fn eval(expr: &Expr, rec: &RetiredRecord) -> bool {
+    match expr {
+        Expr::And(a, b) => eval(a, rec) && eval(b, rec),
+        Expr::Or(a, b) => eval(a, rec) || eval(b, rec),
+        Expr::Pred(p) => match p {
+            Pred::State { eq, value } => (rec.report.state == *value) == *eq,
+            Pred::Bool { field, eq, value } => {
+                let got = match field {
+                    Field::Crashed => rec.report.crashed,
+                    Field::Drained => rec.report.drained,
+                    _ => unreachable!("validation admits only crashed/drained here"),
+                };
+                (got == *value) == *eq
+            }
+            Pred::Num { field, op, value } => op.holds_f64(field.numeric(rec), *value),
+            Pred::Device { eq, value } => rec.report.devices.contains(value) == *eq,
+        },
+    }
+}
+
+// ---- planning: segment pruning -----------------------------------------
+
+/// `retired_at` bounds (seconds) implied by a filter: a record can
+/// only match if its retire time lies in `[lo, hi]`. `and` intersects,
+/// `or` unions, and any predicate not on `retired_at` contributes
+/// `(-inf, +inf)` — conservative, never wrong.
+pub fn retired_at_bounds(expr: &Expr) -> (f64, f64) {
+    match expr {
+        Expr::And(a, b) => {
+            let (alo, ahi) = retired_at_bounds(a);
+            let (blo, bhi) = retired_at_bounds(b);
+            (alo.max(blo), ahi.min(bhi))
+        }
+        Expr::Or(a, b) => {
+            let (alo, ahi) = retired_at_bounds(a);
+            let (blo, bhi) = retired_at_bounds(b);
+            (alo.min(blo), ahi.max(bhi))
+        }
+        Expr::Pred(Pred::Num { field: Field::RetiredAt, op, value }) => match op {
+            CmpOp::Eq => (*value, *value),
+            CmpOp::Lt | CmpOp::Le => (f64::NEG_INFINITY, *value),
+            CmpOp::Gt | CmpOp::Ge => (*value, f64::INFINITY),
+            CmpOp::Ne => (f64::NEG_INFINITY, f64::INFINITY),
+        },
+        Expr::Pred(_) => (f64::NEG_INFINITY, f64::INFINITY),
+    }
+}
+
+/// Whether footer metadata alone rules the segment out for this
+/// filter/cursor combination. u64 ns → f64 s conversion is monotone,
+/// so comparing converted bounds needs no epsilon slop: a pruned
+/// segment provably contains no matching record.
+fn segment_pruned(seg: &SegmentMeta, bounds: (f64, f64), after: Option<&Key>) -> bool {
+    let seg_lo = crate::sim::SimTime(seg.summary.min_retired_ns).as_secs_f64();
+    let seg_hi = crate::sim::SimTime(seg.summary.max_retired_ns).as_secs_f64();
+    if seg_lo > bounds.1 || seg_hi < bounds.0 {
+        return true;
+    }
+    // Keyset resume: a segment whose newest record is older than the
+    // cursor position cannot contribute.
+    if let Some(k) = after {
+        if seg.summary.max_retired_ns < k.retired_ns {
+            return true;
+        }
+    }
+    false
+}
+
+// ---- keyset cursors ----------------------------------------------------
+
+/// Total-order key for pagination: `(retire_time, job_id, ordinal)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Key {
+    pub retired_ns: u64,
+    pub job: u64,
+    /// Global write position — breaks ties when a merged sweep ledger
+    /// holds the same `(time, job)` pair under several seeds.
+    pub ordinal: u64,
+}
+
+impl Key {
+    pub fn of(ordinal: u64, rec: &RetiredRecord) -> Key {
+        Key { retired_ns: rec.retired_at.as_ns(), job: rec.report.id.0, ordinal }
+    }
+}
+
+const CURSOR_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789-_";
+
+fn b64_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        let chars = [(n >> 18) & 63, (n >> 12) & 63, (n >> 6) & 63, n & 63];
+        for (i, c) in chars.iter().enumerate() {
+            if i <= chunk.len() {
+                out.push(CURSOR_ALPHABET[*c as usize] as char);
+            }
+        }
+    }
+    out
+}
+
+fn b64_decode(src: &str) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(src.len() * 3 / 4);
+    let mut acc = 0u32;
+    let mut bits = 0u32;
+    for ch in src.bytes() {
+        let v = CURSOR_ALPHABET
+            .iter()
+            .position(|&a| a == ch)
+            .with_context(|| format!("cursor contains invalid character {:?}", ch as char))?;
+        acc = (acc << 6) | v as u32;
+        bits += 6;
+        if bits >= 8 {
+            bits -= 8;
+            out.push((acc >> bits) as u8);
+        }
+    }
+    Ok(out)
+}
+
+/// Serialize a pagination key: 24 LE payload bytes + 8-byte FNV-1a
+/// checksum, base64 over the URL-safe alphabet.
+pub fn encode_cursor(key: &Key) -> String {
+    let mut bytes = Vec::with_capacity(32);
+    bytes.extend_from_slice(&key.retired_ns.to_le_bytes());
+    bytes.extend_from_slice(&key.job.to_le_bytes());
+    bytes.extend_from_slice(&key.ordinal.to_le_bytes());
+    let mut h = Fnv64::new();
+    h.write_bytes(&bytes);
+    let sum = h.finish();
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    b64_encode(&bytes)
+}
+
+pub fn decode_cursor(src: &str) -> Result<Key> {
+    let bytes = b64_decode(src.trim())?;
+    ensure!(bytes.len() == 32, "cursor decodes to {} byte(s), expected 32", bytes.len());
+    let word = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().expect("8 bytes"));
+    let mut h = Fnv64::new();
+    h.write_bytes(&bytes[..24]);
+    let want = word(24);
+    ensure!(h.finish() == want, "cursor checksum mismatch (truncated or edited cursor)");
+    Ok(Key { retired_ns: word(0), job: word(8), ordinal: word(16) })
+}
+
+// ---- paging ------------------------------------------------------------
+
+/// One page of query results in `(retire_time, job_id, ordinal)` order.
+#[derive(Debug)]
+pub struct QueryPage {
+    pub records: Vec<(Key, RetiredRecord)>,
+    /// Cursor for the page after this one; `None` at the end.
+    pub next: Option<String>,
+}
+
+/// Scan the ledger for records matching `filter` (all records when
+/// `None`), skip anything at or before `after`, and return the first
+/// `limit` in key order plus a resume cursor.
+///
+/// Implementation: a capacity-limited [`BTreeMap`] selection. Segments
+/// are visited in write order and each is pruned by footer when the
+/// filter bounds or the cursor allow; matching records enter the map
+/// and the largest key is evicted once it holds `limit + 1` entries —
+/// memory stays O(limit) regardless of ledger size, and keeping one
+/// extra entry tells us whether a next page exists without a second
+/// scan. No global sort order across segments is assumed (a merged
+/// sweep ledger interleaves seed streams).
+pub fn page(
+    store: &LedgerStore,
+    filter: Option<&Expr>,
+    after: Option<Key>,
+    limit: usize,
+) -> Result<QueryPage> {
+    ensure!(limit > 0, "page limit must be at least 1");
+    let bounds =
+        filter.map(retired_at_bounds).unwrap_or((f64::NEG_INFINITY, f64::INFINITY));
+    let mut best: BTreeMap<Key, RetiredRecord> = BTreeMap::new();
+    let mut overflow = false;
+    for seg in store.segments() {
+        if segment_pruned(seg, bounds, after.as_ref()) {
+            continue;
+        }
+        for (ordinal, rec) in store.read_segment(seg)? {
+            let key = Key::of(ordinal, &rec);
+            if let Some(a) = &after {
+                if key <= *a {
+                    continue;
+                }
+            }
+            if let Some(f) = filter {
+                if !eval(f, &rec) {
+                    continue;
+                }
+            }
+            if best.len() == limit + 1 {
+                let worst = *best.last_key_value().expect("non-empty").0;
+                if key >= worst {
+                    continue;
+                }
+                best.pop_last();
+                overflow = true;
+            }
+            best.insert(key, rec);
+            if best.len() > limit + 1 {
+                best.pop_last();
+                overflow = true;
+            }
+        }
+    }
+    if best.len() > limit {
+        best.pop_last();
+        overflow = true;
+    }
+    let records: Vec<(Key, RetiredRecord)> = best.into_iter().collect();
+    let next = if overflow {
+        records.last().map(|(k, _)| encode_cursor(k))
+    } else {
+        None
+    };
+    Ok(QueryPage { records, next })
+}
+
+// ---- aggregates --------------------------------------------------------
+
+/// Aggregate projections over the matching record set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Agg {
+    Count,
+    Sum(Field),
+    P50(Field),
+    P99(Field),
+}
+
+/// Parse an `--agg` spec: `count`, `sum:FIELD`, `p50:FIELD`,
+/// `p99:FIELD` — FIELD must be numeric.
+pub fn parse_agg(src: &str) -> Result<Agg> {
+    if src == "count" {
+        return Ok(Agg::Count);
+    }
+    let (kind, field) = src
+        .split_once(':')
+        .with_context(|| format!("bad aggregate {src:?} (expected count, sum:F, p50:F, p99:F)"))?;
+    let f = Field::parse(field).with_context(|| format!("unknown aggregate field {field:?}"))?;
+    ensure!(
+        f.is_numeric(),
+        "aggregate field {} is not numeric (use energy_j, queue_wait_s, or retired_at)",
+        f.name()
+    );
+    match kind {
+        "sum" => Ok(Agg::Sum(f)),
+        "p50" => Ok(Agg::P50(f)),
+        "p99" => Ok(Agg::P99(f)),
+        _ => bail!("bad aggregate kind {kind:?} (expected sum, p50, or p99)"),
+    }
+}
+
+fn agg_label(agg: &Agg) -> String {
+    match agg {
+        Agg::Count => "count".into(),
+        Agg::Sum(f) => format!("sum:{}", f.name()),
+        Agg::P50(f) => format!("p50:{}", f.name()),
+        Agg::P99(f) => format!("p99:{}", f.name()),
+    }
+}
+
+/// Single pruned scan computing every requested aggregate over the
+/// records matching `filter`. Sums accumulate in scan (ordinal) order,
+/// so a sweep ledger's `sum:energy_j` is bitwise-equal to the ordered
+/// `FleetTotals::absorb` accumulation for the same records.
+pub fn aggregate(
+    store: &LedgerStore,
+    filter: Option<&Expr>,
+    aggs: &[Agg],
+) -> Result<Vec<(String, f64)>> {
+    ensure!(!aggs.is_empty(), "no aggregates requested");
+    let bounds =
+        filter.map(retired_at_bounds).unwrap_or((f64::NEG_INFINITY, f64::INFINITY));
+    let mut count = 0u64;
+    let mut sums: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut samples: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    for (i, agg) in aggs.iter().enumerate() {
+        match agg {
+            Agg::Count => {}
+            Agg::Sum(_) => {
+                sums.insert(i, 0.0);
+            }
+            Agg::P50(_) | Agg::P99(_) => {
+                samples.insert(i, Vec::new());
+            }
+        }
+    }
+    for seg in store.segments() {
+        if segment_pruned(seg, bounds, None) {
+            continue;
+        }
+        for (_, rec) in store.read_segment(seg)? {
+            if let Some(f) = filter {
+                if !eval(f, &rec) {
+                    continue;
+                }
+            }
+            count += 1;
+            for (i, agg) in aggs.iter().enumerate() {
+                match agg {
+                    Agg::Count => {}
+                    Agg::Sum(f) => *sums.get_mut(&i).expect("seeded above") += f.numeric(&rec),
+                    Agg::P50(f) | Agg::P99(f) => {
+                        samples.get_mut(&i).expect("seeded above").push(f.numeric(&rec))
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(aggs.len());
+    for (i, agg) in aggs.iter().enumerate() {
+        let value = match agg {
+            Agg::Count => count as f64,
+            Agg::Sum(_) => sums[&i],
+            Agg::P50(_) | Agg::P99(_) => {
+                let mut v = samples[&i].clone();
+                v.sort_by(f64::total_cmp);
+                let p = if matches!(agg, Agg::P50(_)) { 0.50 } else { 0.99 };
+                percentile(&v, p)
+            }
+        };
+        out.push((agg_label(agg), value));
+    }
+    Ok(out)
+}
+
+// ---- JSON projection ---------------------------------------------------
+
+/// Project a record to a [`Json`] object for `stannis query --json`
+/// line output. Field names match the filter language where the two
+/// overlap.
+pub fn record_json(rec: &RetiredRecord) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    let r = &rec.report;
+    o.insert("job".into(), Json::Num(r.id.0 as f64));
+    o.insert("state".into(), Json::Str(r.state.to_string()));
+    o.insert("network".into(), Json::Str(r.network.clone()));
+    o.insert(
+        "devices".into(),
+        Json::Arr(r.devices.iter().map(|d| Json::Num(*d as f64)).collect()),
+    );
+    o.insert("retired_at".into(), Json::Num(rec.retired_at.as_secs_f64()));
+    o.insert("queue_wait_s".into(), Json::Num(r.queue_wait.as_secs_f64()));
+    o.insert("elapsed_s".into(), Json::Num(r.elapsed.as_secs_f64()));
+    o.insert("images".into(), Json::Num(r.images as f64));
+    o.insert("images_per_sec".into(), Json::Num(r.images_per_sec));
+    o.insert("energy_j".into(), Json::Num(r.energy_j));
+    o.insert("j_per_image".into(), Json::Num(r.j_per_image));
+    o.insert("crashed".into(), Json::Bool(r.crashed));
+    o.insert("drained".into(), Json::Bool(r.drained));
+    o.insert("lost_steps".into(), Json::Num(r.lost_steps as f64));
+    o.insert("retunes".into(), Json::Num(r.retunes as f64));
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{JobId, JobReport};
+    use crate::sim::SimTime;
+
+    fn rec(job: u64, retired_s: f64, energy: f64, crashed: bool) -> RetiredRecord {
+        RetiredRecord {
+            retired_at: SimTime::from_secs_f64(retired_s),
+            report: JobReport {
+                id: JobId(job),
+                state: if crashed { JobState::Cancelled } else { JobState::Completed },
+                network: "n".into(),
+                devices: vec![job as usize % 3],
+                held_host: false,
+                bs_csd: 1,
+                bs_host: 0,
+                steps_done: 1,
+                steps_per_epoch: 1,
+                images: 1,
+                submitted_at: SimTime(0),
+                admitted_at: SimTime(0),
+                finished_at: SimTime::from_secs_f64(retired_s),
+                queue_wait: SimTime::from_secs_f64(retired_s / 10.0),
+                elapsed: SimTime(1),
+                images_per_sec: 1.0,
+                sync_fraction: 0.0,
+                energy_j: energy,
+                j_per_image: energy,
+                link_bytes: 0,
+                bytes_moved: 0,
+                images_moved: 0,
+                lock_wait: SimTime(0),
+                retunes: 0,
+                drained: false,
+                crashed,
+                lost_steps: 0,
+                checkpoint_bytes: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn filters_compile_and_evaluate() {
+        let e = compile("state = done and energy_j > 5").unwrap();
+        assert!(eval(&e, &rec(1, 10.0, 6.0, false)));
+        assert!(!eval(&e, &rec(1, 10.0, 4.0, false)));
+        assert!(!eval(&e, &rec(1, 10.0, 6.0, true)));
+
+        let e = compile("crashed == true or queue_wait_s >= 2").unwrap();
+        assert!(eval(&e, &rec(1, 10.0, 0.0, true)));
+        assert!(eval(&e, &rec(1, 30.0, 0.0, false))); // queue_wait = 3s
+        assert!(!eval(&e, &rec(1, 10.0, 0.0, false)));
+
+        let e = compile("device = 2").unwrap();
+        assert!(eval(&e, &rec(2, 1.0, 0.0, false)));
+        assert!(!eval(&e, &rec(1, 1.0, 0.0, false)));
+
+        let e = compile("(state != cancelled) and (retired_at < 100 or retired_at >= 200)").unwrap();
+        assert!(eval(&e, &rec(1, 50.0, 0.0, false)));
+        assert!(eval(&e, &rec(1, 250.0, 0.0, false)));
+        assert!(!eval(&e, &rec(1, 150.0, 0.0, false)));
+    }
+
+    #[test]
+    fn malformed_filters_are_typed_errors() {
+        for bad in [
+            "",
+            "state",
+            "state =",
+            "state = 3",
+            "state = flying",
+            "state > done",
+            "crashed = 1",
+            "crashed = maybe",
+            "device = banana",
+            "device = -1",
+            "device = 1.5",
+            "energy_j = soup",
+            "bogus_field = 1",
+            "energy_j > 1 and",
+            "(energy_j > 1",
+            "energy_j > 1 extra",
+            "energy_j ! 1",
+            "energy_j > 1e309",
+        ] {
+            assert!(compile(bad).is_err(), "{bad:?} must not compile");
+        }
+    }
+
+    #[test]
+    fn bounds_drive_pruning_conservatively() {
+        let e = compile("retired_at >= 10 and retired_at < 20").unwrap();
+        assert_eq!(retired_at_bounds(&e), (10.0, 20.0));
+        let e = compile("retired_at < 10 or retired_at >= 20").unwrap();
+        assert_eq!(retired_at_bounds(&e), (f64::NEG_INFINITY, f64::INFINITY));
+        let e = compile("energy_j > 3").unwrap();
+        assert_eq!(retired_at_bounds(&e), (f64::NEG_INFINITY, f64::INFINITY));
+        let e = compile("retired_at = 5 and energy_j > 3").unwrap();
+        assert_eq!(retired_at_bounds(&e), (5.0, 5.0));
+    }
+
+    #[test]
+    fn cursors_roundtrip_and_reject_tampering() {
+        let k = Key { retired_ns: 123_456_789, job: 42, ordinal: 7 };
+        let c = encode_cursor(&k);
+        assert_eq!(decode_cursor(&c).unwrap(), k);
+        assert!(c.bytes().all(|b| CURSOR_ALPHABET.contains(&b)), "URL-safe alphabet only");
+
+        assert!(decode_cursor("!!!").is_err());
+        assert!(decode_cursor(&c[..c.len() - 2]).is_err());
+        let mut doctored = c.clone().into_bytes();
+        doctored[0] = if doctored[0] == b'A' { b'B' } else { b'A' };
+        assert!(decode_cursor(std::str::from_utf8(&doctored).unwrap()).is_err());
+    }
+
+    #[test]
+    fn agg_specs_parse_and_validate() {
+        assert_eq!(parse_agg("count").unwrap(), Agg::Count);
+        assert_eq!(parse_agg("sum:energy_j").unwrap(), Agg::Sum(Field::EnergyJ));
+        assert_eq!(parse_agg("p50:queue_wait_s").unwrap(), Agg::P50(Field::QueueWaitS));
+        assert_eq!(parse_agg("p99:retired_at").unwrap(), Agg::P99(Field::RetiredAt));
+        for bad in ["", "sum", "sum:", "sum:state", "sum:crashed", "max:energy_j", "p42:energy_j"] {
+            assert!(parse_agg(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+}
+
+impl fmt::Display for Field {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}

@@ -1,0 +1,708 @@
+//! Append-only segmented record log on disk (DESIGN.md §Ledger).
+//!
+//! A ledger directory holds numbered segment files (`seg-00000000.seg`,
+//! `seg-00000001.seg`, ...), each a header, a run of
+//! [`codec`](super::codec) frames, and a fixed-size sealed footer:
+//!
+//! ```text
+//! [8B magic "STNLEDG1"] [u32 version] [frame]* [52B footer]
+//! footer = [u32 sentinel] [u64 records] [u64 min_job] [u64 max_job]
+//!          [u64 min_retired_ns] [u64 max_retired_ns] [u64 FNV-1a]
+//! ```
+//!
+//! The footer carries exactly what query planning needs to *skip* a
+//! segment without reading its frames: the record count and the
+//! min/max job-id and retire-time of everything inside. A segment
+//! rotates once its frames pass [`SEGMENT_PAYLOAD_BYTES`]; the final
+//! (possibly short) segment is sealed by [`LedgerWriter::finish`],
+//! which the trace drivers and the batch façade call when a session
+//! drains — an unsealed tail fails [`LedgerStore::open`] loudly.
+//!
+//! Determinism contract: the file bytes are a pure function of the
+//! record stream (no wallclock, no pids, no map iteration order), so
+//! two bit-identical runs produce byte-identical ledgers — the
+//! property the integration suite asserts across executors and sweep
+//! worker counts.
+
+use std::fs;
+use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::analysis::audit::{Auditable, Fnv64};
+use crate::fleet::RetiredRecord;
+use crate::Result;
+
+use super::codec::{self, DecodeError};
+
+/// Leading bytes of every segment file.
+pub const MAGIC: [u8; 8] = *b"STNLEDG1";
+
+/// Segment header length: magic + schema version.
+const HEADER_LEN: u64 = 8 + 4;
+
+/// Footer length: sentinel + 5 summary words + checksum.
+const FOOTER_LEN: u64 = 4 + 5 * 8 + 8;
+
+/// Marks a sealed footer (a value no frame length prefix can take,
+/// since it is far above [`codec::MAX_PAYLOAD`]).
+const FOOTER_SENTINEL: u32 = 0xF007_F007;
+
+/// Frame bytes after which the open segment rotates. Small enough that
+/// footer pruning has real resolution over a big ledger, large enough
+/// that a million-record ledger stays in the hundreds of files.
+pub const SEGMENT_PAYLOAD_BYTES: u64 = 256 * 1024;
+
+/// Sealed-segment summary — the footer's content, in memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentSummary {
+    /// Records sealed into the segment (always ≥ 1: a segment file is
+    /// only created by the first record that lands in it).
+    pub records: u64,
+    pub min_job: u64,
+    pub max_job: u64,
+    pub min_retired_ns: u64,
+    pub max_retired_ns: u64,
+}
+
+impl SegmentSummary {
+    fn fold(&mut self, rec: &RetiredRecord) {
+        let job = rec.report.id.0;
+        let ret = rec.retired_at.as_ns();
+        if self.records == 0 {
+            *self = SegmentSummary {
+                records: 0,
+                min_job: job,
+                max_job: job,
+                min_retired_ns: ret,
+                max_retired_ns: ret,
+            };
+        }
+        self.records += 1;
+        self.min_job = self.min_job.min(job);
+        self.max_job = self.max_job.max(job);
+        self.min_retired_ns = self.min_retired_ns.min(ret);
+        self.max_retired_ns = self.max_retired_ns.max(ret);
+    }
+
+    fn empty() -> Self {
+        SegmentSummary { records: 0, min_job: 0, max_job: 0, min_retired_ns: 0, max_retired_ns: 0 }
+    }
+
+    fn checksum(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u32(FOOTER_SENTINEL);
+        h.write_u64(self.records);
+        h.write_u64(self.min_job);
+        h.write_u64(self.max_job);
+        h.write_u64(self.min_retired_ns);
+        h.write_u64(self.max_retired_ns);
+        h.finish()
+    }
+
+    fn encode(&self) -> [u8; FOOTER_LEN as usize] {
+        let mut out = [0u8; FOOTER_LEN as usize];
+        out[0..4].copy_from_slice(&FOOTER_SENTINEL.to_le_bytes());
+        out[4..12].copy_from_slice(&self.records.to_le_bytes());
+        out[12..20].copy_from_slice(&self.min_job.to_le_bytes());
+        out[20..28].copy_from_slice(&self.max_job.to_le_bytes());
+        out[28..36].copy_from_slice(&self.min_retired_ns.to_le_bytes());
+        out[36..44].copy_from_slice(&self.max_retired_ns.to_le_bytes());
+        out[44..52].copy_from_slice(&self.checksum().to_le_bytes());
+        out
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() == FOOTER_LEN as usize, "footer must be {FOOTER_LEN} bytes");
+        let word = |at: usize| u64::from_le_bytes(bytes[at..at + 8].try_into().expect("8 bytes"));
+        let sentinel = u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes"));
+        ensure!(
+            sentinel == FOOTER_SENTINEL,
+            "segment footer sentinel {sentinel:#010x} (unsealed tail segment? the \
+             writer seals on `finish`)"
+        );
+        let s = SegmentSummary {
+            records: word(4),
+            min_job: word(12),
+            max_job: word(20),
+            min_retired_ns: word(28),
+            max_retired_ns: word(36),
+        };
+        let want = word(44);
+        ensure!(
+            want == s.checksum(),
+            "segment footer checksum mismatch: stored {want:#018x}, computed {:#018x}",
+            s.checksum()
+        );
+        ensure!(s.records > 0, "sealed segment claims zero records");
+        ensure!(s.min_job <= s.max_job, "footer job range inverted");
+        ensure!(s.min_retired_ns <= s.max_retired_ns, "footer retire-time range inverted");
+        Ok(s)
+    }
+}
+
+fn segment_file_name(index: u64) -> String {
+    format!("seg-{index:08}.seg")
+}
+
+// ---- write path --------------------------------------------------------
+
+/// Bookkeeping for one segment this writer already sealed, so
+/// [`LedgerWriter::audit`] can re-verify the on-disk chain cheaply
+/// (footers only, not every frame).
+#[derive(Debug, Clone)]
+struct SealedSegment {
+    path: PathBuf,
+    bytes: u64,
+    summary: SegmentSummary,
+}
+
+/// The append side of the ledger. Construction does no I/O — the
+/// directory and first segment appear when the first record does, so a
+/// ledger-armed run that never retires a job still ends with a valid
+/// (empty) ledger directory after [`LedgerWriter::finish`].
+///
+/// [`LedgerWriter::append`] is deliberately infallible: retirement
+/// control flow must be bit-identical with the ledger on or off, so an
+/// I/O failure is buffered here and surfaced at the next deterministic
+/// checkpoint (`FleetRuntime::pump` / [`LedgerWriter::finish`])
+/// instead of rerouting the event loop.
+#[derive(Debug)]
+pub struct LedgerWriter {
+    dir: PathBuf,
+    file: Option<fs::File>,
+    /// Index of the open (or next) segment.
+    seg_index: u64,
+    /// Frame bytes written to the open segment (header excluded).
+    seg_frame_bytes: u64,
+    open_summary: SegmentSummary,
+    sealed: Vec<SealedSegment>,
+    records_total: u64,
+    bytes_total: u64,
+    /// First buffered I/O error; once set the writer goes inert.
+    err: Option<String>,
+    scratch: Vec<u8>,
+    frame: Vec<u8>,
+}
+
+impl LedgerWriter {
+    pub fn new(dir: PathBuf) -> Self {
+        LedgerWriter {
+            dir,
+            file: None,
+            seg_index: 0,
+            seg_frame_bytes: 0,
+            open_summary: SegmentSummary::empty(),
+            sealed: Vec::new(),
+            records_total: 0,
+            bytes_total: 0,
+            err: None,
+            scratch: Vec::new(),
+            frame: Vec::new(),
+        }
+    }
+
+    /// Directory this writer appends into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Records appended so far (across all segments).
+    pub fn records_written(&self) -> u64 {
+        self.records_total
+    }
+
+    /// Frame bytes appended so far (headers and footers excluded).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_total
+    }
+
+    /// Append one record. Never fails; a write error is buffered and
+    /// reported by [`LedgerWriter::check`] / [`LedgerWriter::finish`].
+    pub fn append(&mut self, rec: &RetiredRecord) {
+        if self.err.is_some() {
+            return;
+        }
+        if let Err(e) = self.try_append(rec) {
+            self.err = Some(format!("{e:#}"));
+        }
+    }
+
+    fn try_append(&mut self, rec: &RetiredRecord) -> Result<()> {
+        if self.file.is_none() {
+            self.open_segment()?;
+        }
+        self.frame.clear();
+        codec::encode_frame(rec, &mut self.scratch, &mut self.frame);
+        let file = self.file.as_mut().expect("segment opened above");
+        file.write_all(&self.frame).with_context(|| {
+            format!("ledger: appending to {}", self.dir.join(segment_file_name(self.seg_index)).display())
+        })?;
+        self.open_summary.fold(rec);
+        self.seg_frame_bytes += self.frame.len() as u64;
+        self.bytes_total += self.frame.len() as u64;
+        self.records_total += 1;
+        if self.seg_frame_bytes >= SEGMENT_PAYLOAD_BYTES {
+            self.seal_segment()?;
+        }
+        Ok(())
+    }
+
+    fn open_segment(&mut self) -> Result<()> {
+        fs::create_dir_all(&self.dir)
+            .with_context(|| format!("ledger: creating {}", self.dir.display()))?;
+        let path = self.dir.join(segment_file_name(self.seg_index));
+        // `create_new` refuses to clobber: pointing --ledger at a
+        // directory that already holds a ledger is an error, not a
+        // silent mix of two runs' histories.
+        let mut file = fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| {
+                format!(
+                    "ledger: creating segment {} (directory already holds a ledger?)",
+                    path.display()
+                )
+            })?;
+        file.write_all(&MAGIC)?;
+        file.write_all(&codec::SCHEMA_VERSION.to_le_bytes())?;
+        self.file = Some(file);
+        self.seg_frame_bytes = 0;
+        self.open_summary = SegmentSummary::empty();
+        Ok(())
+    }
+
+    fn seal_segment(&mut self) -> Result<()> {
+        let mut file = self.file.take().expect("sealing requires an open segment");
+        debug_assert!(self.open_summary.records > 0, "segments are created lazily");
+        file.write_all(&self.open_summary.encode())?;
+        file.sync_all().with_context(|| {
+            format!("ledger: sealing {}", self.dir.join(segment_file_name(self.seg_index)).display())
+        })?;
+        self.sealed.push(SealedSegment {
+            path: self.dir.join(segment_file_name(self.seg_index)),
+            bytes: HEADER_LEN + self.seg_frame_bytes + FOOTER_LEN,
+            summary: self.open_summary,
+        });
+        self.seg_index += 1;
+        self.seg_frame_bytes = 0;
+        self.open_summary = SegmentSummary::empty();
+        Ok(())
+    }
+
+    /// Surface any buffered I/O error. Cheap (no syscalls); the
+    /// runtime calls it once per pumped event.
+    pub fn check(&self) -> Result<()> {
+        match &self.err {
+            Some(e) => bail!("ledger write failed: {e}"),
+            None => Ok(()),
+        }
+    }
+
+    /// Seal the open tail segment (and create the directory even when
+    /// nothing was appended). After this the directory is a complete,
+    /// openable ledger. Appending again after `finish` starts a new
+    /// segment — sealing is a safe point, not a terminal state.
+    pub fn finish(&mut self) -> Result<()> {
+        self.check()?;
+        if self.file.is_some() {
+            if let Err(e) = self.seal_segment() {
+                self.err = Some(format!("{e:#}"));
+                return Err(e);
+            }
+        } else if self.sealed.is_empty() {
+            fs::create_dir_all(&self.dir)
+                .with_context(|| format!("ledger: creating {}", self.dir.display()))?;
+        }
+        Ok(())
+    }
+}
+
+impl Auditable for LedgerWriter {
+    fn component(&self) -> &'static str {
+        "ledger"
+    }
+
+    /// Re-verify the sealed chain on disk: contiguous indices, file
+    /// sizes, and footers that still decode to what was written.
+    /// Footer-deep only (frame checksums are verified by every read
+    /// path); with `--audit` this runs after every event, so it must
+    /// stay O(segments), not O(records).
+    fn audit(&self) -> Result<()> {
+        self.check()?;
+        for (i, seg) in self.sealed.iter().enumerate() {
+            ensure!(
+                seg.path.file_name().map(|n| n.to_string_lossy().into_owned())
+                    == Some(segment_file_name(i as u64)),
+                "sealed segment {i} is {}, breaking the chain",
+                seg.path.display()
+            );
+            let meta = fs::metadata(&seg.path)
+                .with_context(|| format!("ledger audit: {}", seg.path.display()))?;
+            ensure!(
+                meta.len() == seg.bytes,
+                "{} is {} byte(s) on disk but {} were sealed",
+                seg.path.display(),
+                meta.len(),
+                seg.bytes
+            );
+            let on_disk = read_footer(&seg.path)
+                .with_context(|| format!("ledger audit: {}", seg.path.display()))?;
+            ensure!(
+                on_disk == seg.summary,
+                "{} footer drifted from the sealed summary",
+                seg.path.display()
+            );
+        }
+        Ok(())
+    }
+
+    /// The writer is deliberately NOT registered with
+    /// `FleetRuntime::auditables()`: runtime fingerprints must stay
+    /// bit-identical with the ledger on or off. This impl hashes only
+    /// the writer's own counters for standalone use.
+    fn fingerprint(&self, h: &mut Fnv64) {
+        h.write_u64(self.records_total);
+        h.write_u64(self.bytes_total);
+        h.write_u64(self.seg_index);
+    }
+}
+
+fn read_footer(path: &Path) -> Result<SegmentSummary> {
+    let mut file = fs::File::open(path)?;
+    let len = file.metadata()?.len();
+    ensure!(
+        len >= HEADER_LEN + FOOTER_LEN,
+        "segment is {len} byte(s), shorter than header + footer"
+    );
+    file.seek(SeekFrom::End(-(FOOTER_LEN as i64)))?;
+    let mut buf = [0u8; FOOTER_LEN as usize];
+    file.read_exact(&mut buf)?;
+    SegmentSummary::decode(&buf)
+}
+
+// ---- read path ---------------------------------------------------------
+
+/// One sealed segment as seen by the reader.
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    pub path: PathBuf,
+    /// Index parsed from the file name (contiguous per directory).
+    pub index: u64,
+    pub summary: SegmentSummary,
+    /// Global ordinal of the segment's first record: segments are
+    /// discovered in sorted path order and ordinals accumulate across
+    /// them, giving every record a total-order tiebreaker that is
+    /// stable for a given directory tree (sweep seed subdirectories
+    /// sort in seed order by construction).
+    pub first_ordinal: u64,
+}
+
+/// Read side: opens a ledger directory (recursively — a sweep writes
+/// one subdirectory per seed), validates every footer, and serves
+/// whole decoded segments to the query layer.
+#[derive(Debug)]
+pub struct LedgerStore {
+    dir: PathBuf,
+    segments: Vec<SegmentMeta>,
+    records_total: u64,
+}
+
+impl LedgerStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let mut files = Vec::new();
+        collect_segment_files(dir, &mut files)
+            .with_context(|| format!("opening ledger {}", dir.display()))?;
+        let mut segments = Vec::with_capacity(files.len());
+        let mut ordinal = 0u64;
+        for path in files {
+            let summary =
+                read_footer(&path).with_context(|| format!("ledger segment {}", path.display()))?;
+            let index = parse_segment_index(&path)?;
+            segments.push(SegmentMeta { path, index, summary, first_ordinal: ordinal });
+            ordinal += summary.records;
+        }
+        Ok(LedgerStore { dir: dir.to_path_buf(), segments, records_total: ordinal })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Sealed segments in path order (== ordinal order).
+    pub fn segments(&self) -> &[SegmentMeta] {
+        &self.segments
+    }
+
+    /// Total records across every segment (from footers; no frame I/O).
+    pub fn records_total(&self) -> u64 {
+        self.records_total
+    }
+
+    /// Decode one whole segment: every frame checksum-verified, the
+    /// count and min/max ranges cross-checked against the footer.
+    /// Returns `(global ordinal, record)` pairs in write order.
+    pub fn read_segment(&self, seg: &SegmentMeta) -> Result<Vec<(u64, RetiredRecord)>> {
+        let bytes =
+            fs::read(&seg.path).with_context(|| format!("reading {}", seg.path.display()))?;
+        ensure!(
+            bytes.len() as u64 >= HEADER_LEN + FOOTER_LEN,
+            "{} is shorter than header + footer",
+            seg.path.display()
+        );
+        ensure!(bytes[..8] == MAGIC, "{} has a foreign magic header", seg.path.display());
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != codec::SCHEMA_VERSION {
+            return Err(DecodeError::UnknownVersion { found: version })
+                .with_context(|| format!("reading {}", seg.path.display()));
+        }
+        let frames = &bytes[HEADER_LEN as usize..bytes.len() - FOOTER_LEN as usize];
+        let mut out = Vec::with_capacity(seg.summary.records as usize);
+        let mut pos = 0usize;
+        let mut check = SegmentSummary::empty();
+        while pos < frames.len() {
+            let (rec, used) = codec::decode_frame(&frames[pos..]).with_context(|| {
+                format!("{} at frame offset {pos}", seg.path.display())
+            })?;
+            check.fold(&rec);
+            out.push((seg.first_ordinal + (check.records - 1), rec));
+            pos += used;
+        }
+        ensure!(
+            check == seg.summary,
+            "{}: decoded frames disagree with the sealed footer \
+             ({} record(s) decoded, footer claims {})",
+            seg.path.display(),
+            check.records,
+            seg.summary.records
+        );
+        Ok(out)
+    }
+
+    /// Every record in the ledger, in ordinal (write/path) order.
+    pub fn read_all(&self) -> Result<Vec<(u64, RetiredRecord)>> {
+        let mut out = Vec::with_capacity(self.records_total as usize);
+        for seg in &self.segments {
+            out.extend(self.read_segment(seg)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Auditable for LedgerStore {
+    fn component(&self) -> &'static str {
+        "ledger"
+    }
+
+    /// Deep verification: segment-chain continuity per directory,
+    /// footer/record agreement, and every frame checksum (via
+    /// [`LedgerStore::read_segment`]). O(ledger bytes) — the offline
+    /// counterpart of the writer's O(segments) audit.
+    fn audit(&self) -> Result<()> {
+        let mut prev_dir: Option<&Path> = None;
+        let mut expect = 0u64;
+        for seg in &self.segments {
+            let parent = seg.path.parent().unwrap_or(Path::new(""));
+            if prev_dir != Some(parent) {
+                prev_dir = Some(parent);
+                expect = 0;
+            }
+            ensure!(
+                seg.index == expect,
+                "{}: expected chain index {expect}, found {} (missing segment?)",
+                seg.path.display(),
+                seg.index
+            );
+            expect += 1;
+            self.read_segment(seg)?;
+        }
+        Ok(())
+    }
+
+    /// Content digest: every record's frame-level identity, in ordinal
+    /// order. Two ledgers fingerprint equal iff their decoded record
+    /// streams are bit-identical.
+    fn fingerprint(&self, h: &mut Fnv64) {
+        h.write_u64(self.records_total);
+        for seg in &self.segments {
+            h.write_u64(seg.summary.records);
+            h.write_u64(seg.summary.min_job);
+            h.write_u64(seg.summary.max_job);
+            h.write_u64(seg.summary.min_retired_ns);
+            h.write_u64(seg.summary.max_retired_ns);
+        }
+    }
+}
+
+/// Recursive sorted walk collecting `*.seg` files. Sorting is by file
+/// name at each level (directories and files interleaved), so a sweep
+/// ledger's zero-padded `seed-...` subdirectories enumerate in seed
+/// order at any worker count.
+fn collect_segment_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_segment_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "seg") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn parse_segment_index(path: &Path) -> Result<u64> {
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let digits = name
+        .strip_prefix("seg-")
+        .and_then(|s| s.strip_suffix(".seg"))
+        .with_context(|| format!("{name:?} is not a seg-NNNNNNNN.seg segment file"))?;
+    digits.parse::<u64>().with_context(|| format!("{name:?} has a non-numeric segment index"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{JobId, JobReport, JobState};
+    use crate::sim::SimTime;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("stannis_ledger_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn record(i: u64) -> RetiredRecord {
+        RetiredRecord {
+            retired_at: SimTime(1_000_000 * (i + 1)),
+            report: JobReport {
+                id: JobId(i),
+                state: if i % 3 == 0 { JobState::Cancelled } else { JobState::Completed },
+                network: "squeezenet".into(),
+                devices: vec![i as usize % 4, 7],
+                held_host: false,
+                bs_csd: 50,
+                bs_host: 0,
+                steps_done: 10,
+                steps_per_epoch: 5,
+                images: 500,
+                submitted_at: SimTime(i),
+                admitted_at: SimTime(i * 2),
+                finished_at: SimTime(1_000_000 * (i + 1)),
+                queue_wait: SimTime(i),
+                elapsed: SimTime(999_999),
+                images_per_sec: 10.5 + i as f64,
+                sync_fraction: 0.25,
+                energy_j: 3.75 * (i + 1) as f64,
+                j_per_image: 0.007_5,
+                link_bytes: 1 << 20,
+                bytes_moved: 0,
+                images_moved: 0,
+                lock_wait: SimTime(0),
+                retunes: 0,
+                drained: false,
+                crashed: i % 5 == 0,
+                lost_steps: 0,
+                checkpoint_bytes: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn writes_rotate_seal_and_read_back() {
+        let dir = tmp_dir("roundtrip");
+        let mut w = LedgerWriter::new(dir.clone());
+        // ~200 B/frame: 3000 records ≈ 600 KB spans ≥ 2 segments.
+        let n = 3000u64;
+        for i in 0..n {
+            w.append(&record(i));
+        }
+        w.check().expect("no buffered error");
+        w.finish().expect("seals");
+        w.audit().expect("sealed chain audits clean");
+        assert_eq!(w.records_written(), n);
+
+        let store = LedgerStore::open(&dir).expect("opens");
+        assert!(store.segments().len() >= 2, "rotation must have produced segments");
+        assert_eq!(store.records_total(), n);
+        store.audit().expect("deep audit passes");
+        let all = store.read_all().expect("reads");
+        assert_eq!(all.len(), n as usize);
+        for (i, (ordinal, rec)) in all.iter().enumerate() {
+            assert_eq!(*ordinal, i as u64, "ordinals are the write order");
+            assert_eq!(*rec, record(i as u64), "decode is bit-exact");
+        }
+        // Footer ranges really bound their segment's contents.
+        for seg in store.segments() {
+            let recs = store.read_segment(seg).unwrap();
+            assert_eq!(recs.len() as u64, seg.summary.records);
+            assert!(recs
+                .iter()
+                .all(|(_, r)| (seg.summary.min_retired_ns..=seg.summary.max_retired_ns)
+                    .contains(&r.retired_at.as_ns())));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_finish_leaves_an_openable_ledger() {
+        let dir = tmp_dir("empty");
+        let mut w = LedgerWriter::new(dir.clone());
+        w.finish().expect("finishing an empty writer still creates the dir");
+        let store = LedgerStore::open(&dir).expect("empty ledger opens");
+        assert_eq!(store.records_total(), 0);
+        assert!(store.read_all().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unsealed_tail_and_corruption_fail_open() {
+        let dir = tmp_dir("corrupt");
+        let mut w = LedgerWriter::new(dir.clone());
+        for i in 0..5 {
+            w.append(&record(i));
+        }
+        // No finish(): the tail segment has no footer.
+        drop(w);
+        let err = format!("{:#}", LedgerStore::open(&dir).unwrap_err());
+        assert!(err.contains("sentinel"), "got: {err}");
+
+        // Seal properly, then flip a frame byte: open() still succeeds
+        // (footers are fine) but reading the segment fails on checksum.
+        let mut w = LedgerWriter::new(tmp_dir("corrupt2"));
+        for i in 0..5 {
+            w.append(&record(i));
+        }
+        w.finish().unwrap();
+        let dir2 = w.dir().to_path_buf();
+        let seg = dir2.join(segment_file_name(0));
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes[HEADER_LEN as usize + 9] ^= 0x01;
+        fs::write(&seg, bytes).unwrap();
+        let store = LedgerStore::open(&dir2).expect("footers still valid");
+        let err = format!("{:#}", store.read_segment(&store.segments()[0]).unwrap_err());
+        assert!(err.contains("checksum"), "got: {err}");
+        assert!(store.audit().is_err(), "deep audit must catch the flipped byte");
+        let _ = fs::remove_dir_all(&dir);
+        let _ = fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn refuses_to_clobber_an_existing_ledger() {
+        let dir = tmp_dir("clobber");
+        let mut w = LedgerWriter::new(dir.clone());
+        w.append(&record(0));
+        w.finish().unwrap();
+        let mut w2 = LedgerWriter::new(dir.clone());
+        w2.append(&record(1));
+        let err = format!("{:#}", w2.check().unwrap_err());
+        assert!(err.contains("already holds a ledger"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

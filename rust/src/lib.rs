@@ -32,6 +32,7 @@ pub mod csd;
 pub mod data;
 pub mod fleet;
 pub mod fsync;
+pub mod ledger;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;

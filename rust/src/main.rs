@@ -6,6 +6,7 @@
 //! stannis fleet    [--jobs K --total-csds N ...]      batch multi-job coordinator
 //! stannis workload [--jobs K --mean-arrival S ...]    online arrival trace (submit/cancel/repair)
 //! stannis sweep    [--seeds N --workers W ...]        sharded multi-seed workload sweep
+//! stannis query    DIR [--where EXPR --limit N ...]   filter/paginate a job-history ledger
 //! stannis lint     [--src DIR --design FILE]          determinism source lint (CI gate)
 //! stannis report table1|fig6|fig7|table2              paper artifacts
 //! ```
@@ -22,6 +23,7 @@ use stannis::coordinator::{modeled_throughput, tune, TuneConfig};
 use stannis::fleet::{
     run_sweep, run_trace_with, Fleet, FleetConfig, FleetReport, JobReport, RuntimeEvent,
 };
+use stannis::ledger;
 use stannis::metrics::{f, print_table};
 use stannis::perfmodel::PerfModel;
 use stannis::power::PowerConfig;
@@ -66,7 +68,8 @@ fn run() -> Result<()> {
 /// built from this list and the drift-guard test walks it, so a new
 /// `dispatch` arm cannot land without its help entry (sweep and lint
 /// once did exactly that).
-const SUBCOMMANDS: [&str; 7] = ["tune", "train", "fleet", "workload", "sweep", "lint", "report"];
+const SUBCOMMANDS: [&str; 8] =
+    ["tune", "train", "fleet", "workload", "sweep", "query", "lint", "report"];
 
 fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
@@ -76,6 +79,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "fleet" => cmd_fleet(args),
         "workload" => cmd_workload(args),
         "sweep" => cmd_sweep(args),
+        "query" => cmd_query(args),
         "lint" => cmd_lint(args),
         "report" => {
             args.check_known(&[])?;
@@ -144,6 +148,12 @@ fn help_text() -> String {
             OptSpec { name: "seeds", help: "sweep: number of seeded traces (seed, seed+1, ...)", default: Some("4") },
             OptSpec { name: "workers", help: "sweep: worker threads (results are identical at any count)", default: Some("4") },
             OptSpec { name: "audit", help: "fleet/workload/sweep: run the full structural audit after every event", default: None },
+            OptSpec { name: "ledger", help: "fleet/workload/sweep: persist retired jobs to this ledger directory", default: None },
+            OptSpec { name: "where", help: "query: filter expression, e.g. 'state = done and energy_j > 100'", default: None },
+            OptSpec { name: "limit", help: "query: records per page", default: Some("20") },
+            OptSpec { name: "cursor", help: "query: resume from an opaque page cursor", default: None },
+            OptSpec { name: "agg", help: "query: aggregate instead of listing — count, sum:F, p50:F, p99:F (repeatable)", default: None },
+            OptSpec { name: "json", help: "query: emit records as JSON lines instead of a table", default: None },
             OptSpec { name: "src", help: "lint: scan this source dir instead of the repo's rust/src", default: None },
             OptSpec { name: "design", help: "lint: DESIGN.md to resolve section references against", default: None },
         ],
@@ -320,6 +330,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "no-data-plane",
         "per-step",
         "audit",
+        "ledger",
     ])?;
     let mut spec = match args.get("config") {
         Some(path) => FleetExperimentConfig::from_file(path)?,
@@ -377,6 +388,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         audit: args.flag("audit"),
         checkpoint: spec.checkpoint,
         link_fault: spec.link_fault,
+        ledger_path: args.get("ledger").map(std::path::PathBuf::from),
         ..Default::default()
     });
     for job in &spec.jobs {
@@ -404,9 +416,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 
 /// Workload flags shared by `workload` and `sweep` (both drive the
 /// streaming trace runner over a [`WorkloadSpec`]).
-const WORKLOAD_OPTS: [&str; 21] = [
+const WORKLOAD_OPTS: [&str; 22] = [
     "config",
     "audit",
+    "ledger",
     "total-csds",
     "jobs",
     "mean-arrival",
@@ -584,6 +597,65 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Inspect a job-history ledger written by `--ledger` (DESIGN.md
+/// §Ledger): validated `--where` filters, keyset pagination with
+/// opaque `--cursor` tokens, and `--agg` projections. Any malformed
+/// expression, cursor, or aggregate spec exits non-zero before a
+/// single frame is decoded.
+fn cmd_query(args: &Args) -> Result<()> {
+    // Option gate first: a typo'd flag must error as such even when
+    // the directory argument is also missing or wrong.
+    args.check_known(&["where", "limit", "cursor", "agg", "json"])?;
+    let dir = args
+        .positional()
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: stannis query <ledger-dir> [--where EXPR --limit N --cursor C --agg A --json]"))?;
+    let filter = args.get("where").map(ledger::compile).transpose()?;
+    let aggs = args
+        .get_all("agg")
+        .iter()
+        .map(|a| ledger::parse_agg(a))
+        .collect::<Result<Vec<_>>>()?;
+    let cursor = args.get("cursor").map(ledger::decode_cursor).transpose()?;
+    let limit: usize = args.parse_or("limit", 20usize)?;
+
+    let store = ledger::LedgerStore::open(std::path::Path::new(dir))?;
+    if !aggs.is_empty() {
+        anyhow::ensure!(
+            args.get("cursor").is_none(),
+            "--agg scans the full match set; it does not paginate (--cursor)"
+        );
+        let rows: Vec<Vec<String>> = ledger::aggregate(&store, filter.as_ref(), &aggs)?
+            .into_iter()
+            .map(|(label, value)| vec![label, f(value, 3)])
+            .collect();
+        print_table("Ledger — aggregates", &["aggregate", "value"], &rows);
+        return Ok(());
+    }
+
+    let page = ledger::page(&store, filter.as_ref(), cursor, limit)?;
+    if args.flag("json") {
+        for (_, rec) in &page.records {
+            println!("{}", ledger::record_json(rec));
+        }
+    } else {
+        let reports: Vec<JobReport> =
+            page.records.iter().map(|(_, r)| r.report.clone()).collect();
+        print_job_table(&reports, true);
+        println!(
+            "\nquery: {} of {} record(s) in {} ({} segment(s))",
+            page.records.len(),
+            store.records_total(),
+            dir,
+            store.segments().len(),
+        );
+    }
+    if let Some(next) = &page.next {
+        println!("next page: --cursor {next}");
+    }
+    Ok(())
+}
+
 /// Determinism lint over the crate sources (DESIGN.md
 /// §Static-Analysis): default-hasher collections, wall-clock reads,
 /// float accumulation in the report ledgers, dangling DESIGN.md
@@ -752,6 +824,7 @@ mod tests {
         assert_unknown_option("fleet --per-setp x");
         assert_unknown_option("workload --cancle 0:10");
         assert_unknown_option("sweep --workrs 2");
+        assert_unknown_option("query /tmp --wehre x");
         assert_unknown_option("lint --srcc x");
         assert_unknown_option("report --whoops 1");
         assert_unknown_option("help --whoops 1");
@@ -829,6 +902,58 @@ mod tests {
             "fleet --jobs 1 --total-csds 2 --no-stage-io --checkpoint-steps 3 --crash 1:30",
         ))
         .unwrap();
+    }
+
+    /// End-to-end ledger wiring: a workload run with `--ledger` leaves
+    /// a queryable directory; `stannis query` lists, filters,
+    /// paginates and aggregates it. (The test harness splits on
+    /// whitespace, so filters here are written space-free — the lexer
+    /// does not require spaces around operators.)
+    #[test]
+    fn ledger_flag_and_query_subcommand_work_end_to_end() {
+        let dir = std::env::temp_dir()
+            .join(format!("stannis_cli_ledger_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.display();
+        dispatch(&args(&format!(
+            "workload --jobs 3 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
+             --seed 3 --no-stage-io --ledger {d}"
+        )))
+        .unwrap();
+        dispatch(&args(&format!("query {d}"))).unwrap();
+        dispatch(&args(&format!("query {d} --limit 2"))).unwrap();
+        dispatch(&args(&format!("query {d} --where crashed=false --json"))).unwrap();
+        dispatch(&args(&format!("query {d} --agg count --agg sum:energy_j"))).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Malformed query inputs are errors before any record is decoded:
+    /// bad filter, bad cursor, bad aggregate, zero limit, missing dir.
+    #[test]
+    fn query_rejects_malformed_inputs() {
+        let dir = std::env::temp_dir()
+            .join(format!("stannis_cli_query_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.display();
+        dispatch(&args(&format!(
+            "workload --jobs 2 --total-csds 2 --csds-per-job 1 --mean-arrival 5 \
+             --seed 3 --no-stage-io --ledger {d}"
+        )))
+        .unwrap();
+        for bad in [
+            format!("query {d} --where bogus_field=1"),
+            format!("query {d} --where state=flying"),
+            format!("query {d} --where energy_j>"),
+            format!("query {d} --cursor !!!"),
+            format!("query {d} --limit 0"),
+            format!("query {d} --agg max:energy_j"),
+            format!("query {d} --agg count --cursor AAAA"),
+            "query".to_string(),
+            "query /no/such/ledger/dir".to_string(),
+        ] {
+            assert!(dispatch(&args(&bad)).is_err(), "{bad:?} must fail");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// The shipped tree lints clean through the CLI, and the seeded

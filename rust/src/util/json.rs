@@ -393,6 +393,29 @@ mod tests {
         assert_eq!(j.as_str().unwrap(), "a\"b\\c\nA😀");
     }
 
+    /// Regression (PR 10): a record name carrying control characters
+    /// must survive emit → parse bit-exactly. Every char below 0x20 is
+    /// escaped on output (`\n`/`\r`/`\t` short forms, `\u00XX`
+    /// otherwise), and the parser accepts both the escaped and the raw
+    /// form — a newline in a network name can no longer corrupt an
+    /// emitted JSON report.
+    #[test]
+    fn control_characters_roundtrip_through_display() {
+        let nasty: String =
+            (0u8..0x20).map(|b| b as char).chain("end\"\\".chars()).collect();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(nasty.clone(), Json::Str(nasty.clone()));
+        let j = Json::Obj(obj);
+        let printed = j.to_string();
+        // The emitted document is printable: no raw control bytes.
+        assert!(printed.bytes().all(|b| b >= 0x20), "raw control byte in {printed:?}");
+        let back = Json::parse(&printed).unwrap();
+        assert_eq!(back, j, "control characters must round-trip bit-exactly");
+        assert_eq!(back.field(&nasty).unwrap().as_str().unwrap(), nasty);
+        // Raw (unescaped) control chars in the input parse too.
+        assert_eq!(Json::parse("\"a\nb\tc\"").unwrap().as_str().unwrap(), "a\nb\tc");
+    }
+
     #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{").is_err());

@@ -1,0 +1,309 @@
+//! Ledger subsystem end-to-end (DESIGN.md §Ledger):
+//!
+//! * Replay fidelity — a randomized trace (cancels, crashes, faults)
+//!   written through `--ledger` decodes back bit-identical to the
+//!   in-memory retained oracle: every record field-for-field, the
+//!   ordered energy sum to the bit, and byte-identical segment files
+//!   across both executors. Ledger-off summaries are unchanged by
+//!   arming a ledger.
+//! * Keyset pagination — any page size walks the same
+//!   `(retire_time, job_id, ordinal)` total order with no duplicates
+//!   and no gaps, with and without a filter, including ledgers holding
+//!   duplicate `(time, job)` keys that only the ordinal disambiguates.
+//! * Sweep invariance — a swept ledger is byte-identical at any
+//!   worker count.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use stannis::config::{CancelSpec, CrashSpec, ExperimentConfig, FaultSpec, WeightedJob, WorkloadSpec};
+use stannis::fleet::{run_sweep, run_trace_with, JobId, JobReport, JobState, RetiredRecord, RuntimeEvent};
+use stannis::ledger::{self, Agg, Key, LedgerStore, LedgerWriter};
+use stannis::analysis::audit::Auditable;
+use stannis::sim::SimTime;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("stannis_intl_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn trace_mix() -> Vec<WeightedJob> {
+    ["mobilenet_v2", "squeezenet"]
+        .iter()
+        .map(|net| WeightedJob {
+            weight: 1.0,
+            job: ExperimentConfig {
+                network: (*net).into(),
+                num_csds: 2,
+                include_host: false,
+                steps: 5,
+                public_images: 256,
+                private_per_csd: 64,
+                ..Default::default()
+            },
+        })
+        .collect()
+}
+
+fn faulty_spec(seed: u64, ff: bool) -> WorkloadSpec {
+    WorkloadSpec {
+        total_csds: 6,
+        stage_io: false,
+        fast_forward: ff,
+        seed,
+        jobs: 12,
+        mean_interarrival_secs: 6.0,
+        mix: trace_mix(),
+        csds_per_job: 2,
+        cancels: vec![
+            CancelSpec { job: 2, at_secs: 9.0 },
+            CancelSpec { job: 7, at_secs: 55.0 },
+        ],
+        faults: vec![FaultSpec { at_secs: 25.0, device: 1, factor: 0.7 }],
+        crashes: vec![CrashSpec { at_secs: 40.0, device: 3 }],
+        ..Default::default()
+    }
+}
+
+/// Byte-compare every file under two directory trees (recursive,
+/// name-sorted — the same order `LedgerStore::open` walks).
+fn assert_trees_equal(a: &Path, b: &Path) {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(dir).unwrap().map(|e| e.unwrap().path()).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, out);
+            } else {
+                out.push(p);
+            }
+        }
+    }
+    let (mut fa, mut fb) = (Vec::new(), Vec::new());
+    walk(a, &mut fa);
+    walk(b, &mut fb);
+    let rel = |base: &Path, ps: &[PathBuf]| -> Vec<PathBuf> {
+        ps.iter().map(|p| p.strip_prefix(base).unwrap().to_path_buf()).collect()
+    };
+    assert_eq!(rel(a, &fa), rel(b, &fb), "directory shapes differ");
+    for (pa, pb) in fa.iter().zip(&fb) {
+        assert_eq!(
+            fs::read(pa).unwrap(),
+            fs::read(pb).unwrap(),
+            "{} and {} differ",
+            pa.display(),
+            pb.display()
+        );
+    }
+}
+
+/// (a) Replay fidelity: the decoded ledger IS the retained oracle's
+/// record stream — same records in the same order, every field exact,
+/// the ordered energy sum bit-equal to the summary's jobs total — and
+/// the segment bytes are executor-independent. Arming the ledger
+/// changes nothing else: the summary equals a ledger-off run's.
+#[test]
+fn ledger_replay_is_bit_identical_to_the_oracle() {
+    for (i, seed) in [3u64, 17, 90210].into_iter().enumerate() {
+        for ff in [true, false] {
+            let dir = tmp_dir(&format!("replay_{i}_{ff}"));
+            let mut spec = faulty_spec(seed, ff);
+            spec.ledger = Some(dir.clone());
+
+            // The oracle: every Retired record as it streams off the log.
+            let mut oracle: Vec<RetiredRecord> = Vec::new();
+            let (summary, _rt) = run_trace_with(&spec, |e| {
+                if let RuntimeEvent::Retired { record } = &e.event {
+                    oracle.push((**record).clone());
+                }
+            })
+            .expect("ledger-armed trace runs");
+
+            // Ledger-off control: identical trace, no ledger — the
+            // summary (incl. exact f64 fields) must not move.
+            let mut off = faulty_spec(seed, ff);
+            off.ledger = None;
+            let (off_summary, _) = run_trace_with(&off, |_| {}).expect("ledger-off trace");
+            assert_eq!(summary, off_summary, "arming a ledger changed the run (ff={ff})");
+
+            let store = LedgerStore::open(&dir).expect("sealed ledger opens");
+            store.audit().expect("deep audit passes");
+            let decoded = store.read_all().expect("decodes");
+            assert_eq!(decoded.len(), oracle.len(), "record count (ff={ff})");
+            let mut energy = 0.0f64;
+            for ((ordinal, got), want) in decoded.iter().zip(&oracle) {
+                assert_eq!(got, want, "record {ordinal} differs (ff={ff})");
+                energy += got.report.energy_j;
+            }
+            // Retirement order is the accumulation order `FleetTotals`
+            // uses, so the sums agree to the bit.
+            assert_eq!(
+                energy.to_bits(),
+                summary.jobs_energy_j.to_bits(),
+                "ordered ledger energy sum must be bitwise-equal (ff={ff})"
+            );
+            // Faults really fired (the trace is not a trivial one).
+            if i == 0 {
+                assert!(oracle.iter().any(|r| r.report.state == JobState::Cancelled));
+            }
+        }
+        // Executor independence: per-step and fast-forward wrote
+        // byte-identical segment sets.
+        assert_trees_equal(
+            &tmp_dir_existing(&format!("replay_{i}_true")),
+            &tmp_dir_existing(&format!("replay_{i}_false")),
+        );
+        for ff in [true, false] {
+            let _ = fs::remove_dir_all(tmp_dir_existing(&format!("replay_{i}_{ff}")));
+        }
+    }
+}
+
+/// `tmp_dir` without the cleanup (to reopen a dir a test just wrote).
+fn tmp_dir_existing(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("stannis_intl_{tag}_{}", std::process::id()))
+}
+
+fn synth_record(job: u64, retired_ns: u64, energy: f64, crashed: bool) -> RetiredRecord {
+    RetiredRecord {
+        retired_at: SimTime(retired_ns),
+        report: JobReport {
+            id: JobId(job),
+            state: if job % 4 == 0 { JobState::Cancelled } else { JobState::Completed },
+            network: format!("net{}", job % 3),
+            devices: vec![(job % 5) as usize],
+            held_host: false,
+            bs_csd: 8,
+            bs_host: 0,
+            steps_done: 3,
+            steps_per_epoch: 3,
+            images: 24,
+            submitted_at: SimTime(0),
+            admitted_at: SimTime(1),
+            finished_at: SimTime(retired_ns),
+            queue_wait: SimTime(job * 1_000_000),
+            elapsed: SimTime(retired_ns - 1),
+            images_per_sec: 5.0 + job as f64,
+            sync_fraction: 0.1,
+            energy_j: energy,
+            j_per_image: energy / 24.0,
+            link_bytes: 0,
+            bytes_moved: 0,
+            images_moved: 0,
+            lock_wait: SimTime(0),
+            retunes: 0,
+            drained: false,
+            crashed,
+            lost_steps: 0,
+            checkpoint_bytes: 0,
+        },
+    }
+}
+
+/// (b) Cursor pagination: walking the ledger at any page size yields
+/// exactly the full listing — no duplicates, no gaps, `next == None`
+/// only at the true end — with and without a filter. The synthesized
+/// ledger deliberately contains duplicate `(retire_time, job_id)`
+/// pairs so only the ordinal tiebreaker keeps the order total.
+#[test]
+fn pagination_walks_the_same_total_order_at_any_page_size() {
+    stannis::util::prop::check_n("ledger cursor pagination", 6, |rng| {
+        let tag = format!("page_{}", rng.below(u64::MAX));
+        let dir = tmp_dir(&tag);
+        let mut w = LedgerWriter::new(dir.clone());
+        let n = 200 + rng.usize_below(400);
+        for _ in 0..n {
+            // Coarse time buckets + small job-id range force ties.
+            let t = 1_000_000 * (1 + rng.below(40));
+            let job = rng.below(30);
+            w.append(&synth_record(job, t, rng.f64() * 50.0, rng.bool(0.2)));
+        }
+        w.finish().expect("seals");
+
+        let store = LedgerStore::open(&dir).expect("opens");
+        assert_eq!(store.records_total(), n as u64);
+
+        for filter in [
+            None,
+            Some(ledger::compile("energy_j < 25 and crashed = false").unwrap()),
+        ] {
+            // Ground truth: one giant page.
+            let full = ledger::page(&store, filter.as_ref(), None, n + 1).expect("full page");
+            assert!(full.next.is_none(), "a page holding everything has no next");
+            let want: Vec<Key> = full.records.iter().map(|(k, _)| *k).collect();
+            // The order really is total and strictly increasing.
+            assert!(want.windows(2).all(|p| p[0] < p[1]), "keys must strictly increase");
+
+            for page_size in [1usize, 2, 3, 7, 64] {
+                let mut got: Vec<Key> = Vec::new();
+                let mut cursor: Option<Key> = None;
+                loop {
+                    let p = ledger::page(&store, filter.as_ref(), cursor, page_size)
+                        .expect("page");
+                    assert!(p.records.len() <= page_size);
+                    got.extend(p.records.iter().map(|(k, _)| *k));
+                    match p.next {
+                        Some(c) => {
+                            assert_eq!(
+                                p.records.len(),
+                                page_size,
+                                "a continued page must be full"
+                            );
+                            cursor = Some(ledger::decode_cursor(&c).expect("own cursor decodes"));
+                        }
+                        None => break,
+                    }
+                }
+                assert_eq!(got, want, "page size {page_size} diverged from the full walk");
+            }
+        }
+
+        // Aggregates agree with a by-hand fold over the full listing.
+        let filter = ledger::compile("crashed = false").unwrap();
+        let full = ledger::page(&store, Some(&filter), None, n + 1).unwrap();
+        let aggs = ledger::aggregate(
+            &store,
+            Some(&filter),
+            &[Agg::Count, Agg::Sum(ledger::Field::EnergyJ)],
+        )
+        .unwrap();
+        assert_eq!(aggs[0].1 as usize, full.records.len());
+        let hand: f64 = full.records.iter().map(|(_, r)| r.report.energy_j).sum::<f64>();
+        assert!((aggs[1].1 - hand).abs() <= 1e-9 * hand.abs().max(1.0));
+
+        let _ = fs::remove_dir_all(&dir);
+    });
+}
+
+/// (c) Sweep worker-count invariance extends to the ledger: per-seed
+/// subdirectories merged in seed order are byte-identical at any
+/// worker count, and the merged store opens and audits as one ledger.
+#[test]
+fn sweep_ledgers_are_byte_identical_at_any_worker_count() {
+    let seeds: Vec<u64> = vec![11, 12, 13, 14, 15];
+    let mut dirs = Vec::new();
+    for workers in [1usize, 3] {
+        let dir = tmp_dir(&format!("sweep_{workers}"));
+        let mut base = faulty_spec(11, true);
+        base.ledger = Some(dir.clone());
+        let rep = run_sweep(&base, &seeds, workers).expect("sweep runs");
+        assert_eq!(rep.traces.len(), seeds.len());
+        dirs.push(dir);
+    }
+    assert_trees_equal(&dirs[0], &dirs[1]);
+
+    // The merged multi-seed directory is itself one queryable ledger:
+    // every per-seed subdirectory chain audits, and the record count
+    // is the sum of the traces' retirements.
+    let store = LedgerStore::open(&dirs[0]).expect("merged ledger opens");
+    store.audit().expect("merged audit passes");
+    assert!(store.segments().len() >= seeds.len(), "at least one segment per seed");
+    let all = store.read_all().expect("merged read");
+    assert_eq!(all.len() as u64, store.records_total());
+    assert!(all.len() >= seeds.len() * 12, "every trace contributed its retirements");
+    for dir in dirs {
+        let _ = fs::remove_dir_all(&dir);
+    }
+}
